@@ -1,0 +1,67 @@
+//! End-to-end driver (the DESIGN.md validation run): SFT-pretrain a base
+//! model on the synthetic corpus, then run GRPO with and without SPEC-RL
+//! on SynthMath-A, logging reward curves, rollout-token counts, per-stage
+//! times and the final benchmark battery. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```text
+//! cargo run --release --example e2e_train            # scaled run
+//! SPEC_RL_FULL=1 cargo run --release --example e2e_train
+//! ```
+
+use anyhow::Result;
+use spec_rl::exp::{self, Scale};
+use spec_rl::metrics::Table;
+use spec_rl::runtime::Engine;
+use spec_rl::spec::ReuseVariant;
+use spec_rl::trainer::eval::summarize;
+use spec_rl::util::logging;
+
+fn main() -> Result<()> {
+    logging::init();
+    let scale = Scale::from_env();
+    let eng = Engine::load("artifacts")?;
+    let bundle = "tiny_b32";
+
+    // --- stage 1: supervised pretraining (base model) -----------------------
+    let base = exp::ensure_base(&eng, bundle, scale.sft_steps.max(3000))?;
+    println!("base model ready ({bundle})");
+
+    // --- stage 2: RL with and without speculative rollouts ------------------
+    let mut rows = Vec::new();
+    for (label, variant) in [("GRPO", ReuseVariant::Off), ("GRPO+SPEC-RL", ReuseVariant::Spec)] {
+        let cfg = exp::with_spec(exp::base_config(scale, bundle), variant, None);
+        println!("\n=== {label}: {} steps on {} ===", cfg.steps, cfg.dataset);
+        let summary = exp::run_one(&eng, cfg, &base, label)?;
+        println!(
+            "{label}: tokens={} rollout={:.1}s verify={:.1}s total={:.1}s reward={:.3}",
+            summary.total_new_tokens,
+            summary.rollout_secs,
+            summary.verify_secs,
+            summary.total_secs,
+            summary.final_reward
+        );
+        rows.push(summary);
+    }
+
+    // --- stage 3: report -------------------------------------------------------
+    let mut t = Table::new("e2e: GRPO vs GRPO+SPEC-RL (tiny backbone)", &exp::table1_header());
+    let base_tokens = rows[0].total_new_tokens;
+    let base_rollout = rows[0].rollout_secs;
+    exp::table1_row(&mut t, &rows[0], None, None);
+    exp::table1_row(&mut t, &rows[1], Some(base_tokens), Some(base_rollout));
+    println!("\n{}", t.render());
+
+    let tok_speedup = base_tokens as f64 / rows[1].total_new_tokens.max(1) as f64;
+    let time_speedup = base_rollout / rows[1].rollout_secs.max(1e-9);
+    let (_, _, avg_off) = summarize(&rows[0].final_eval);
+    let (_, _, avg_spec) = summarize(&rows[1].final_eval);
+    println!(
+        "HEADLINE: token-speedup {tok_speedup:.2}x | rollout-time speedup {time_speedup:.2}x | \
+         avg accuracy {:.1} -> {:.1}",
+        avg_off * 100.0,
+        avg_spec * 100.0
+    );
+    println!("per-step series: out/grpo_off_{bundle}.csv, out/grpo_spec_{bundle}.csv");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: load the engine, generate from a base policy, and watch one
+//! speculative draft-and-verify round do its thing.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use spec_rl::exp;
+use spec_rl::rollout::{RolloutEngine, SampleCfg};
+use spec_rl::runtime::Engine;
+use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
+use spec_rl::tokenizer::Tokenizer;
+use spec_rl::util::{logging, Rng, StageTimer};
+
+fn main() -> Result<()> {
+    logging::init();
+    // 1. Load the AOT artifacts into the PJRT runtime (compile-once).
+    let eng = Engine::load("artifacts")?;
+    println!(
+        "loaded manifest: vocab={} prompt_len={} total_len={}",
+        eng.manifest.vocab, eng.manifest.prompt_len, eng.manifest.total_len
+    );
+
+    // 2. Get a base policy (cached SFT checkpoint, trains one if missing).
+    let policy = exp::ensure_base(&eng, "tiny_b32", 1500)?;
+    let tok = Tokenizer::new(&eng.manifest.charset);
+
+    // 3. Batched generation through the rollout engine.
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32")?;
+    let mut rng = Rng::new(42);
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
+    let prompts = ["17+25=", "9*7=", "3+4*2=", "80-35="];
+    let reqs: Vec<RolloutRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| RolloutRequest { id: i, prompt: tok.encode_prompt(p) })
+        .collect();
+
+    let mut timer = StageTimer::new();
+    let (first, s0) =
+        spec.collect(&eng, &mut rollout, &policy, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
+    println!("\n-- epoch 1 (cold cache: everything decoded) --");
+    for r in &first {
+        println!("  {:10} -> {}", prompts[r.id], tok.decode(&r.response));
+    }
+    println!("  new tokens: {}  reused: {}", s0.new_tokens, s0.reused_tokens);
+
+    // 4. Same prompts again: cached rollouts become speculative drafts.
+    let (second, s1) =
+        spec.collect(&eng, &mut rollout, &policy, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
+    println!("\n-- epoch 2 (drafts verified under the current policy) --");
+    for r in &second {
+        println!(
+            "  {:10} -> {}   (reused {} of {} tokens)",
+            prompts[r.id],
+            tok.decode(&r.response),
+            r.reused,
+            r.response.len()
+        );
+    }
+    println!(
+        "  drafts={} mean verified prefix={:.1} full-reuse={:.0}% new tokens={}",
+        s1.drafts,
+        s1.mean_prefix_len,
+        s1.full_reuse_ratio * 100.0,
+        s1.new_tokens
+    );
+    println!(
+        "\nstage seconds: rollout={:.3} verification={:.3} assembly={:.4}",
+        timer.get("rollout"),
+        timer.get("verification"),
+        timer.get("assembly")
+    );
+    Ok(())
+}

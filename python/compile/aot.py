@@ -1,0 +1,232 @@
+"""AOT pipeline: lower every L2 entry point to HLO text + write the manifest.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out-dir ../artifacts [--models nano,tiny,small,base]
+                          [--batch 32] [--prompt-len 16] [--total-len 64]
+                          [--no-pallas]
+
+For each model bundle this emits::
+
+    artifacts/<model>_b<batch>/<entry>.hlo.txt   one per entry point
+    artifacts/<model>_b<batch>/init.npy          initial policy blob (f32, 1-D)
+    artifacts/manifest.json                      machine-readable signatures
+
+Interchange format is **HLO text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 (the version the published ``xla`` rust crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import model as M
+
+F32, I32 = "f32", "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def arg_spec(dtype: str, shape):
+    jt = jnp.float32 if dtype == F32 else jnp.int32
+    return jax.ShapeDtypeStruct(tuple(shape), jt)
+
+
+def entry_signatures(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
+                     value_head: bool) -> Dict[str, List[Dict[str, Any]]]:
+    """Input signature (ordered) for every entry point of one bundle."""
+    b, t, g = batch, geo.total_len, geo.gen_len
+    s = C.blob_size(cfg, geo, value_head)
+    sg = C.flat_size(C.gen_blob_spec(cfg, geo, b))
+
+    def a(name, dtype, *shape):
+        return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+    common_tv = [a("tokens", I32, b, t), a("valid", F32, b, t)]
+    sigs = {
+        "prefill": [a("blob", F32, s)] + common_tv + [a("last", I32, b), a("temp", F32, 1)],
+        "decode": [a("blob", F32, s), a("gen", F32, sg), a("token", I32, b),
+                   a("slot", I32, b), a("lpos", I32, b), a("valid", F32, b, t),
+                   a("temp", F32, 1)],
+        "read_gen": [a("gen", F32, sg)],
+        "read_metrics": [a("blob", F32, s)],
+        "score": [a("blob", F32, s)] + common_tv + [a("temp", F32, 1)],
+        "verify": [a("blob", F32, s)] + common_tv + [
+            a("logp_prev", F32, b, g), a("uniforms", F32, b, g),
+            a("draft_valid", F32, b, g), a("loglen", F32, 1), a("temp", F32, 1)],
+        "train_policy": [a("blob", F32, s)] + common_tv + [
+            a("resp_mask", F32, b, g), a("adv", F32, b, g),
+            a("old_logp", F32, b, g), a("ref_logp", F32, b, g), a("hp", F32, 8)],
+        "train_sft": [a("blob", F32, s)] + common_tv + [
+            a("loss_mask", F32, b, t), a("hp", F32, 8)],
+    }
+    if value_head:
+        sigs = {
+            "value_fwd": [a("blob", F32, s)] + common_tv,
+            "train_value": [a("blob", F32, s)] + common_tv + [
+                a("resp_mask", F32, b, g), a("targets", F32, b, g), a("hp", F32, 8)],
+            "read_metrics": [a("blob", F32, s)],
+        }
+    return sigs
+
+
+def output_fields(name: str, cfg, geo, batch: int, value_head: bool):
+    """Ordered (field, offset, shape) description of each entry's flat output."""
+    b, t, g, v = batch, geo.total_len, geo.gen_len, cfg.vocab
+    n = C.n_params(cfg, geo, value_head)
+    l, d = cfg.n_layers, cfg.d_model
+    if name in ("prefill", "decode"):
+        return [
+            {"name": "cache_k", "offset": 0, "shape": [l, b, t, d]},
+            {"name": "cache_v", "offset": l * b * t * d, "shape": [l, b, t, d]},
+            {"name": "probs", "offset": 2 * l * b * t * d, "shape": [b, v]},
+        ]
+    if name == "score":
+        return [
+            {"name": "logp", "offset": 0, "shape": [b, g]},
+            {"name": "entropy", "offset": b * g, "shape": [b, g]},
+        ]
+    if name == "verify":
+        return [
+            {"name": "reject_off", "offset": 0, "shape": [b]},
+            {"name": "logp", "offset": b, "shape": [b, g]},
+            {"name": "entropy", "offset": b + b * g, "shape": [b, g]},
+        ]
+    if name in ("train_policy", "train_sft", "train_value"):
+        return [
+            {"name": "params", "offset": 0, "shape": [n]},
+            {"name": "adam_m", "offset": n, "shape": [n]},
+            {"name": "adam_v", "offset": 2 * n, "shape": [n]},
+            {"name": "step", "offset": 3 * n, "shape": [1]},
+            {"name": "metrics", "offset": 3 * n + 1, "shape": [C.NUM_METRICS]},
+        ]
+    if name == "read_gen":
+        return [{"name": "probs", "offset": 0, "shape": [b, v]}]
+    if name == "read_metrics":
+        return [
+            {"name": "step", "offset": 0, "shape": [1]},
+            {"name": "metrics", "offset": 1, "shape": [C.NUM_METRICS]},
+        ]
+    if name == "value_fwd":
+        return [{"name": "values", "offset": 0, "shape": [b, g + 1]}]
+    raise ValueError(name)
+
+
+def lower_bundle(model_name: str, batch: int, geo: C.SeqGeometry, out_dir: str,
+                 use_pallas: bool, seed: int, pallas_attention: bool = False) -> Dict[str, Any]:
+    cfg = C.PRESETS[model_name]
+    value_head = model_name == "critic"
+    bundle = f"{model_name}_b{batch}"
+    bdir = os.path.join(out_dir, bundle)
+    os.makedirs(bdir, exist_ok=True)
+
+    entries = M.make_entries(
+        cfg, geo, batch, use_pallas=use_pallas,
+        critic_cfg=cfg if value_head else None,
+        pallas_attention=pallas_attention,
+    )
+    sigs = entry_signatures(cfg, geo, batch, value_head)
+
+    info: Dict[str, Any] = {
+        "model": {
+            "name": cfg.name, "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+        },
+        "batch": batch,
+        "value_head": value_head,
+        "n_params": C.n_params(cfg, geo, value_head),
+        "blob_size": C.blob_size(cfg, geo, value_head),
+        "gen_blob_size": C.flat_size(C.gen_blob_spec(cfg, geo, batch)),
+        "init_blob": f"{bundle}/init.npy",
+        "entries": {},
+    }
+
+    for name, sig in sigs.items():
+        fn = entries[name]
+        specs = [arg_spec(a["dtype"], a["shape"]) for a in sig]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{bundle}/{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_size = sum(
+            int(np.prod(fld["shape"])) for fld in output_fields(name, cfg, geo, batch, value_head)
+        )
+        info["entries"][name] = {
+            "file": fname,
+            "inputs": sig,
+            "output_size": out_size,
+            "output_fields": output_fields(name, cfg, geo, batch, value_head),
+        }
+        print(f"  lowered {bundle}/{name}: {len(text)} chars")
+
+    blob = M.init_blob(seed, cfg, geo, value_head)
+    np.save(os.path.join(out_dir, f"{bundle}/init.npy"), blob)
+    return info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="nano,tiny,small,critic")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--total-len", type=int, default=64)
+    ap.add_argument("--no-pallas", action="store_true")
+    ap.add_argument("--pallas-attention", action="store_true",
+                    help="use the Pallas attention kernel in the scoring paths "
+                         "(correct but ~6x slower under interpret=True on CPU; "
+                         "the acceptance/logprob kernels are always Pallas unless "
+                         "--no-pallas)")
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args()
+
+    geo = C.SeqGeometry(prompt_len=args.prompt_len, total_len=args.total_len)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest: Dict[str, Any] = {
+        "charset": C.CHARSET,
+        "specials": C.SPECIALS,
+        "vocab": C.VOCAB_SIZE,
+        "geometry": {"prompt_len": geo.prompt_len, "total_len": geo.total_len},
+        "hp_names": ["lr", "clip_low", "clip_high", "kl_coef", "ent_coef",
+                      "loss_agg_mode", "weight_decay", "max_grad_norm"],
+        "metric_slots": C.METRIC_SLOTS,
+        "use_pallas": not args.no_pallas,
+        "pallas_attention": args.pallas_attention,
+        "bundles": {},
+    }
+    for mname in args.models.split(","):
+        mname = mname.strip()
+        print(f"lowering bundle {mname}_b{args.batch} ...")
+        manifest["bundles"][f"{mname}_b{args.batch}"] = lower_bundle(
+            mname, args.batch, geo, args.out_dir, not args.no_pallas, args.seed,
+            pallas_attention=args.pallas_attention,
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

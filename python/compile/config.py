@@ -1,0 +1,148 @@
+"""Model / geometry configuration shared by the AOT pipeline.
+
+The single source of truth for: the char-level vocabulary, the sequence
+geometry (prompt region / generation region), the transformer presets that
+substitute for the paper's Qwen3/LLaMA backbones, and the flat parameter
+layout ("blob") that the rust runtime addresses by byte offset.
+
+Everything here is serialized into ``artifacts/manifest.json`` so the rust
+L3 never hardcodes a shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+# --- vocabulary ------------------------------------------------------------
+# Char-level tokenizer. Order matters: ids are positions in this string,
+# offset by the three specials. Must match rust/src/tokenizer.
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+SPECIALS = ["<pad>", "<bos>", "<eos>"]
+CHARSET = "0123456789+-*/%()=<> abcdefghijklmnopqrstuvwxyz?"
+VOCAB_SIZE = len(SPECIALS) + len(CHARSET)  # 51
+
+
+# --- sequence geometry -------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SeqGeometry:
+    """Static sequence layout (canonical slots, see DESIGN.md).
+
+    Slots ``[0, prompt_len)`` hold the right-aligned (left-padded) prompt;
+    slots ``[prompt_len, total_len)`` hold the response. All entry points
+    are lowered for these static shapes.
+    """
+
+    prompt_len: int = 16
+    total_len: int = 64
+
+    @property
+    def gen_len(self) -> int:
+        return self.total_len - self.prompt_len
+
+
+# --- model presets -----------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer hyperparameters (paper-backbone substitute)."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int = VOCAB_SIZE
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Substitutes for the paper's backbones (Table 1 rows + Table 5):
+#   tiny  ~ Qwen3-1.7B-Base   small ~ Qwen3-8B-Base
+#   base  ~ Qwen3-14B-Base    nano  ~ LLaMA-3.2-1B-Instruct (different family:
+#                                     narrower ff ratio + fewer heads)
+PRESETS: Dict[str, ModelConfig] = {
+    "nano": ModelConfig("nano", n_layers=2, d_model=48, n_heads=2, d_ff=96),
+    "tiny": ModelConfig("tiny", n_layers=2, d_model=64, n_heads=2, d_ff=256),
+    "small": ModelConfig("small", n_layers=4, d_model=128, n_heads=4, d_ff=512),
+    "base": ModelConfig("base", n_layers=6, d_model=192, n_heads=6, d_ff=768),
+    # critic trunk for PPO (value head instead of lm head)
+    "critic": ModelConfig("critic", n_layers=2, d_model=64, n_heads=2, d_ff=256),
+}
+
+
+# --- flat parameter layout ---------------------------------------------------
+def param_layout(cfg: ModelConfig, geo: SeqGeometry, value_head: bool = False) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the parameter section of a blob.
+
+    The rust runtime and the python init/training graphs all use this order;
+    offsets are cumulative products of the shapes.
+    """
+    out_dim = 1 if value_head else cfg.vocab
+    layout: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (geo.total_len, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layers):
+        layout += [
+            (f"l{l}.ln1", (cfg.d_model,)),
+            (f"l{l}.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{l}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.ln2", (cfg.d_model,)),
+            (f"l{l}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{l}.w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    layout += [
+        ("ln_f", (cfg.d_model,)),
+        ("head", (cfg.d_model, out_dim)),
+    ]
+    return layout
+
+
+def n_params(cfg: ModelConfig, geo: SeqGeometry, value_head: bool = False) -> int:
+    total = 0
+    for _, shape in param_layout(cfg, geo, value_head):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+# Blob layout: [params | adam_m | adam_v | step(1) | metrics(NUM_METRICS)]
+NUM_METRICS = 16
+# Metric slot names for the train blobs (rust reads by index):
+METRIC_SLOTS = [
+    "loss", "pg_loss", "kl", "entropy", "clip_frac", "grad_norm",
+    "ratio_mean", "token_count", "aux0", "aux1", "aux2", "aux3",
+    "aux4", "aux5", "aux6", "aux7",
+]
+
+
+def blob_size(cfg: ModelConfig, geo: SeqGeometry, value_head: bool = False) -> int:
+    return 3 * n_params(cfg, geo, value_head) + 1 + NUM_METRICS
+
+
+# Gen blob layout (per batch): [cache_k | cache_v | probs | scratch(0)]
+def gen_blob_spec(cfg: ModelConfig, geo: SeqGeometry, batch: int):
+    """Returns ordered (name, shape) fields of the generation-state blob."""
+    l, b, t, d = cfg.n_layers, batch, geo.total_len, cfg.d_model
+    return [
+        ("cache_k", (l, b, t, d)),
+        ("cache_v", (l, b, t, d)),
+        ("probs", (b, cfg.vocab)),
+    ]
+
+
+def flat_size(fields) -> int:
+    total = 0
+    for _, shape in fields:
+        n = 1
+        for dim in shape:
+            n *= dim
+        total += n
+    return total

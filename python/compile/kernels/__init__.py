@@ -1,0 +1,15 @@
+"""L1 Pallas kernels for the SPEC-RL stack.
+
+Three kernels cover the rollout-verification hot path:
+
+- :mod:`attention` -- flash-style tiled causal attention used by the
+  teacher-forced scoring forward (the verification pass over cached drafts).
+- :mod:`spec_accept` -- the lenient speculative acceptance scan
+  (Algorithm 1, lines 1-8 of the paper), batched over rows.
+- :mod:`logprob` -- fused log-softmax-gather + entropy so the [N, V]
+  logits are consumed in one pass.
+
+All kernels lower with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); :mod:`ref` holds the pure-jnp oracles that pytest checks
+them against.
+"""

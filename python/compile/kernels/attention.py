@@ -1,0 +1,129 @@
+"""Flash-style tiled causal attention as a Pallas kernel.
+
+This is the hot compute of the SPEC-RL *verification* pass: scoring a whole
+``[B, T]`` batch of cached drafts under the current policy is one
+teacher-forced forward whose cost is dominated by causal attention. The
+paper runs this inside vLLM on H100s; here the same computation is
+re-thought for a TPU memory hierarchy (see DESIGN.md §Hardware-Adaptation):
+
+- BlockSpec stages ``(block_q, Dh)`` query tiles and the row's K/V into
+  VMEM; the inner loop walks K in ``block_k`` tiles, so HBM->VMEM traffic
+  pipelines across grid steps the way CUDA kernels overlap gmem->smem.
+- Online softmax (running max ``m``, running denominator ``s``) keeps the
+  accumulator in f32 VMEM scratch; nothing of size ``T x T`` is ever
+  materialized.
+- Causal structure is exploited at *block* granularity: k-tiles strictly
+  above the diagonal are skipped by index arithmetic (no per-lane
+  divergence, which the MXU/VPU could not hide anyway).
+
+Lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel runs as traced jnp; the *structure* (tiling,
+VMEM budget) is what carries to real TPUs and is what DESIGN.md §Perf
+estimates from.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, t, scale):
+    """One (batch*head, q-tile) grid cell.
+
+    valid_ref: f32[T]        per-row token-valid flags (left padding)
+    q_ref:     f32[block_q, Dh]
+    k_ref:     f32[T, Dh]    whole row of keys (small T), walked in tiles
+    v_ref:     f32[T, Dh]
+    o_ref:     f32[block_q, Dh]
+    """
+    iq = pl.program_id(1)
+    q = q_ref[...] * scale
+    dh = q.shape[-1]
+
+    q_idx = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    acc = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    m_i = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    s_i = jnp.zeros((block_q,), dtype=jnp.float32)
+
+    # Only k-tiles at or below the diagonal contribute: tile jk is live iff
+    # jk*block_k <= iq*block_q + block_q - 1.
+    num_live = jnp.minimum((iq + 1) * block_q + block_k - 1, t) // block_k
+
+    def body(jk, carry):
+        acc, m_i, s_i = carry
+        k_tile = k_ref[pl.ds(jk * block_k, block_k), :]
+        v_tile = v_ref[pl.ds(jk * block_k, block_k), :]
+        vmask = valid_ref[pl.ds(jk * block_k, block_k)]
+
+        scores = q @ k_tile.T  # [block_q, block_k]
+        k_idx = jk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = (k_idx <= q_idx) & (vmask[None, :] > 0.5)
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_new = jnp.maximum(m_i, scores.max(axis=1))
+        # Rescale previous accumulator to the new max.
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        s_new = s_i * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v_tile
+        return acc_new, m_new, s_new
+
+    acc, m_i, s_i = jax.lax.fori_loop(0, num_live, body, (acc, m_i, s_i))
+    # Rows that saw no valid key (fully padded prefix) would divide by zero;
+    # they are never read downstream, emit zeros.
+    denom = jnp.where(s_i > 0.0, s_i, 1.0)
+    o_ref[...] = (acc / denom[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(t, want):
+    """Largest power-of-two divisor of t not exceeding `want`."""
+    b = 1
+    while b * 2 <= want and t % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def attention(q, k, v, valid, scale, *, block_q=None, block_k=None, interpret=True):
+    """Tiled causal attention. Shapes as :func:`ref.ref_attention`.
+
+    Grid: ``(B*H, T/block_q)``; each cell streams K/V in ``block_k`` tiles.
+    VMEM per cell: ``(block_q + 2*T)*Dh*4`` bytes plus ``block_q*block_k``
+    score tile — for the `base` config (T=64, Dh=32) about 18 KiB, far
+    under the ~16 MiB/core VMEM budget, leaving room for the pipeline's
+    double buffers.
+    """
+    b, h, t, dh = q.shape
+    block_q = block_q or _pick_block(t, 16)
+    block_k = block_k or _pick_block(t, 16)
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    bh = b * h
+
+    qf = q.reshape(bh, t, dh)
+    kf = k.reshape(bh, t, dh)
+    vf = v.reshape(bh, t, dh)
+    validf = jnp.repeat(valid, h, axis=0)  # [B*H, T]
+
+    grid = (bh, t // block_q)
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, block_q=block_q, block_k=block_k, t=t, scale=scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, t), lambda i, j: (i, 0)),         # valid
+            pl.BlockSpec((None, block_q, dh), lambda i, j: (i, j, 0)),  # q
+            pl.BlockSpec((None, t, dh), lambda i, j: (i, 0, 0)),  # k
+            pl.BlockSpec((None, t, dh), lambda i, j: (i, 0, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dh), q.dtype),
+        interpret=interpret,
+    )(validf, qf, kf, vf)
+    return out.reshape(b, h, t, dh)

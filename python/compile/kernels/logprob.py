@@ -1,0 +1,73 @@
+"""Fused log-softmax-gather + entropy as a Pallas kernel.
+
+In the verification pass the model produces ``[B*G, V]`` logits and the
+coordinator needs exactly two scalars per row: the log-prob of the realized
+draft token and the entropy of the distribution. On real hardware the
+naive formulation (materialize log-softmax, gather, reduce) is
+memory-bound on the ``[N, V]`` intermediate; this kernel consumes each
+``(block_n, V)`` tile in one VMEM pass — max, LSE, gather and entropy
+computed before the tile is evicted.
+
+Lowered with ``interpret=True`` for the CPU PJRT backend; oracle in
+:mod:`ref` (``ref_logprob``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _logprob_kernel(logits_ref, tgt_ref, logp_ref, ent_ref, *, v):
+    """One block_n-rows tile: logits [block_n, V], targets i32[block_n]."""
+    x = logits_ref[...]
+    tgt = tgt_ref[...]
+
+    m = x.max(axis=1, keepdims=True)
+    shifted = x - m
+    expx = jnp.exp(shifted)
+    denom = expx.sum(axis=1, keepdims=True)
+    lse = jnp.log(denom) + m
+    logp_all = x - lse
+    p = expx / denom
+
+    ent_ref[...] = -(p * logp_all).sum(axis=1)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) == tgt[:, None]
+    ).astype(x.dtype)
+    logp_ref[...] = (logp_all * onehot).sum(axis=1)
+
+
+def logprob(logits, targets, *, block_n=None, interpret=True):
+    """Shapes as :func:`ref.ref_logprob`: logits f32[N,V], targets i32[N].
+
+    Returns ``(logp f32[N], entropy f32[N])``. N must divide by block_n.
+    """
+    n, v = logits.shape
+    if block_n is None:
+        from .attention import _pick_block
+
+        block_n = _pick_block(n, 64)
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    lp, ent = pl.pallas_call(
+        functools.partial(_logprob_kernel, v=v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, v), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, targets)
+    return lp, ent

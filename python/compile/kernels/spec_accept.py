@@ -1,0 +1,96 @@
+"""Lenient speculative-acceptance scan as a Pallas kernel.
+
+Implements Algorithm 1 (lines 1-8) of the paper, batched: given the
+log-probs of the cached draft tokens under the current policy
+(``logp_curr``, produced by the scoring forward) and the log-probs recorded
+when the draft was sampled (``logp_prev``), accept token ``j`` iff::
+
+    u_j <= min(1, l * p_curr / p_prev)
+
+and report the first rejected offset per row. Fusing this into the same
+HLO module as the scoring forward means the acceptance decision costs one
+extra VPU pass over ``[B, G]`` — the ``[B, T, V]`` logits never leave the
+device and nothing is re-synchronized with the host between scoring and
+acceptance (the paper's "single call to the rollout engine").
+
+Pure elementwise + row-reduction work: tiles of ``(block_b, G)`` rows in
+VMEM, no MXU involvement. Lowered with ``interpret=True`` for CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _accept_kernel(loglen_ref, lc_ref, lp_ref, u_ref, dv_ref, rej_ref, la_ref, *, g):
+    """One block_b-rows grid cell.
+
+    loglen_ref: f32[1]            log lenience (scalar, broadcast)
+    lc_ref:     f32[block_b, G]   logp under pi_curr
+    lp_ref:     f32[block_b, G]   logp under pi_prev (recorded at sampling)
+    u_ref:      f32[block_b, G]   U(0,1) from the coordinator's RNG
+    dv_ref:     f32[block_b, G]   1.0 where the draft has a token
+    rej_ref:    i32[block_b]      OUT first rejected offset (== draft len if none)
+    la_ref:     f32[block_b, G]   OUT per-token log acceptance prob (diagnostics)
+    """
+    log_len = loglen_ref[0]
+    lc = lc_ref[...]
+    lp = lp_ref[...]
+    u = u_ref[...]
+    dv = dv_ref[...]
+
+    log_alpha = jnp.minimum(0.0, log_len + lc - lp)
+    rejected = (u > jnp.exp(log_alpha)) & (dv > 0.5)
+
+    iota = jax.lax.broadcasted_iota(jnp.int32, rejected.shape, 1)
+    reject_idx = jnp.where(rejected, iota, g).min(axis=1)
+    draft_len = dv.sum(axis=1).astype(jnp.int32)
+
+    rej_ref[...] = jnp.minimum(reject_idx, draft_len)
+    la_ref[...] = log_alpha
+
+
+def spec_accept(
+    logp_curr, logp_prev, uniforms, draft_valid, log_lenience, *, block_b=None, interpret=True
+):
+    """Batched acceptance scan. Shapes as :func:`ref.ref_spec_accept`.
+
+    ``log_lenience`` is a scalar (or ()-shaped array); +inf forces full
+    reuse, -inf forces rejection at offset 0 (vanilla RLVR).
+
+    Returns ``(reject_off i32[B], log_alpha f32[B, G])``.
+    """
+    b, g = logp_curr.shape
+    if block_b is None:
+        from .attention import _pick_block
+
+        block_b = _pick_block(b, 8)
+    assert b % block_b == 0, (b, block_b)
+    loglen = jnp.asarray(log_lenience, dtype=jnp.float32).reshape(1)
+
+    grid = (b // block_b,)
+    rej, la = pl.pallas_call(
+        functools.partial(_accept_kernel, g=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                 # log lenience
+            pl.BlockSpec((block_b, g), lambda i: (i, 0)),       # logp_curr
+            pl.BlockSpec((block_b, g), lambda i: (i, 0)),       # logp_prev
+            pl.BlockSpec((block_b, g), lambda i: (i, 0)),       # uniforms
+            pl.BlockSpec((block_b, g), lambda i: (i, 0)),       # draft_valid
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, g), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(loglen, logp_curr, logp_prev, uniforms, draft_valid)
+    return rej, la

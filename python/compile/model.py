@@ -1,0 +1,481 @@
+"""L2: the policy/value transformer and every AOT entry point.
+
+A decoder-only transformer (RMSNorm, fused-QKV attention, GeLU MLP,
+learned positional embeddings addressed by *logical* position) defined as
+pure functions over a flat f32 parameter blob.
+
+Blob discipline (see DESIGN.md): the PJRT runtime in this image returns
+multi-output executables as a single tuple buffer, which would force a
+host round-trip per call to split. Every entry point therefore consumes
+and produces **single flat f32 arrays**:
+
+- ``policy blob``  = [params | adam_m | adam_v | step | metrics16]
+- ``gen blob``     = [cache_k | cache_v | probs]
+- ``score/verify`` = [logp | entropy | ...]
+
+so parameters, optimizer state and the KV cache stay device-resident
+across calls; the rust coordinator reads sub-ranges (probs, metrics) via
+raw host copies at manifest-recorded offsets.
+
+Canonical sequence layout (all entry points): slots ``[0, P)`` hold the
+right-aligned, left-padded prompt; slots ``[P, T)`` hold the response.
+``valid[b, t]`` flags real tokens. Positional embeddings use the logical
+position ``cumsum(valid) - 1`` so physical padding never shifts positions
+(the vLLM/HF left-padding trick, which is what makes the paper's
+"verified prefixes aligned via left padding" sound).
+
+Attention in the batched scoring paths runs through the L1 Pallas kernel
+(``use_pallas=True``); the training graphs use the jnp oracle because
+gradients must flow (pallas interpret-mode has no registered VJP), and the
+single-position decode path uses plain jnp (memory-bound, no tiling to
+exploit). This split is deliberate and documented in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from .kernels import attention as attn_k
+from .kernels import logprob as logprob_k
+from .kernels import ref as kref
+from .kernels import spec_accept as accept_k
+
+EPS = 1e-6
+
+
+# --------------------------------------------------------------------------
+# blob plumbing
+# --------------------------------------------------------------------------
+def param_offsets(cfg: C.ModelConfig, geo: C.SeqGeometry, value_head: bool = False):
+    """Cumulative (name, offset, shape) records for the parameter section."""
+    recs = []
+    off = 0
+    for name, shape in C.param_layout(cfg, geo, value_head):
+        n = 1
+        for d in shape:
+            n *= d
+        recs.append((name, off, shape))
+        off += n
+    return recs, off
+
+
+def params_from_flat(flat, cfg, geo, value_head=False) -> Dict[str, jnp.ndarray]:
+    recs, _ = param_offsets(cfg, geo, value_head)
+    out = {}
+    for name, off, shape in recs:
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+    return out
+
+
+def params_to_flat(params: Dict[str, jnp.ndarray], cfg, geo, value_head=False):
+    recs, _ = param_offsets(cfg, geo, value_head)
+    return jnp.concatenate([params[name].reshape(-1) for name, _, _ in recs])
+
+
+def split_blob(blob, cfg, geo, value_head=False):
+    """blob -> (params_flat, m_flat, v_flat, step, metrics)."""
+    np_ = C.n_params(cfg, geo, value_head)
+    p = blob[:np_]
+    m = blob[np_ : 2 * np_]
+    v = blob[2 * np_ : 3 * np_]
+    step = blob[3 * np_]
+    metrics = blob[3 * np_ + 1 :]
+    return p, m, v, step, metrics
+
+
+def join_blob(p, m, v, step, metrics):
+    return jnp.concatenate([p, m, v, step.reshape(1), metrics])
+
+
+def init_blob(key, cfg: C.ModelConfig, geo: C.SeqGeometry, value_head=False):
+    """Initial policy blob: trunc-normal weights, zeroed head/optimizer.
+
+    The lm head starts at zero so the initial policy is uniform — a clean
+    exploration start for SFT and a well-defined base model.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(int(key))
+    parts = []
+    for name, shape in C.param_layout(cfg, geo, value_head):
+        n = 1
+        for d in shape:
+            n *= d
+        if name.endswith("ln1") or name.endswith("ln2") or name == "ln_f":
+            arr = np.ones(n, dtype=np.float32)
+        elif name == "head":
+            arr = np.zeros(n, dtype=np.float32)
+        else:
+            arr = (rng.standard_normal(n) * 0.02).astype(np.float32)
+        parts.append(arr)
+    p = np.concatenate(parts)
+    np_total = p.shape[0]
+    blob = np.concatenate(
+        [p, np.zeros(2 * np_total + 1 + C.NUM_METRICS, dtype=np.float32)]
+    )
+    return blob
+
+
+# --------------------------------------------------------------------------
+# transformer forward
+# --------------------------------------------------------------------------
+def rmsnorm(x, scale):
+    return x * scale * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def forward_full(params, tokens, valid, cfg: C.ModelConfig, geo: C.SeqGeometry,
+                 use_pallas: bool, value_head: bool = False):
+    """Teacher-forced forward over the canonical [B, T] layout.
+
+    Returns ``(logits [B,T,out], cache_k [L,B,T,D], cache_v [L,B,T,D])``.
+    """
+    b, t = tokens.shape
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = cfg.d_head
+
+    lpos = jnp.clip(jnp.cumsum(valid, axis=1).astype(jnp.int32) - 1, 0, t - 1)
+    x = params["tok_emb"][tokens] + params["pos_emb"][lpos]
+    x = x * valid[..., None]  # keep pad slots numerically clean
+
+    cache_k: List[jnp.ndarray] = []
+    cache_v: List[jnp.ndarray] = []
+    scale = 1.0 / (dh ** 0.5)
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(x, params[f"l{l}.ln1"])
+        qkv = xn @ params[f"l{l}.wqkv"]  # [B,T,3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        cache_k.append(k)
+        cache_v.append(v)
+        qh = q.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        kh = k.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        vh = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        if use_pallas:
+            oh = attn_k.attention(qh, kh, vh, valid, scale)
+        else:
+            oh = kref.ref_attention(qh, kh, vh, valid, scale)
+        o = oh.transpose(0, 2, 1, 3).reshape(b, t, d)
+        x = x + o @ params[f"l{l}.wo"]
+        xn = rmsnorm(x, params[f"l{l}.ln2"])
+        x = x + jax.nn.gelu(xn @ params[f"l{l}.w1"]) @ params[f"l{l}.w2"]
+
+    xf = rmsnorm(x, params["ln_f"])
+    logits = xf @ params["head"]
+    ck = jnp.stack(cache_k, axis=0)
+    cv = jnp.stack(cache_v, axis=0)
+    return logits, ck, cv
+
+
+def decode_one(params, cache_k, cache_v, token, slot, lpos, valid, temp,
+               cfg: C.ModelConfig, geo: C.SeqGeometry):
+    """One incremental decode step at per-row physical slots.
+
+    token: i32[B] new token ids; slot: i32[B] physical write slot;
+    lpos: i32[B] logical position of the new token; valid: f32[B,T]
+    *including* the new token's slot. Returns (probs [B,V], ck', cv').
+    """
+    b = token.shape[0]
+    t = geo.total_len
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = cfg.d_head
+
+    x = params["tok_emb"][token] + params["pos_emb"][jnp.clip(lpos, 0, t - 1)]  # [B,D]
+    oh_slot = jax.nn.one_hot(slot, t, dtype=jnp.float32)  # [B,T]
+    scale = 1.0 / (dh ** 0.5)
+
+    new_ck, new_cv = [], []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(x, params[f"l{l}.ln1"])
+        qkv = xn @ params[f"l{l}.wqkv"]  # [B,3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        ck = cache_k[l] * (1.0 - oh_slot[..., None]) + k[:, None, :] * oh_slot[..., None]
+        cv = cache_v[l] * (1.0 - oh_slot[..., None]) + v[:, None, :] * oh_slot[..., None]
+        new_ck.append(ck)
+        new_cv.append(cv)
+        qh = q.reshape(b, h, 1, dh)
+        kh = ck.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        vh = cv.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) * scale  # [B,H,1,T]
+        mask = valid[:, None, None, :] > 0.5
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", probs, vh).reshape(b, d)
+        x = x + o @ params[f"l{l}.wo"]
+        xn = rmsnorm(x, params[f"l{l}.ln2"])
+        x = x + jax.nn.gelu(xn @ params[f"l{l}.w1"]) @ params[f"l{l}.w2"]
+
+    xf = rmsnorm(x, params["ln_f"])
+    logits = (xf @ params["head"]) / jnp.maximum(temp, 1e-4)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return probs, jnp.stack(new_ck, 0), jnp.stack(new_cv, 0)
+
+
+# --------------------------------------------------------------------------
+# scoring helpers
+# --------------------------------------------------------------------------
+def response_logp_ent(logits, tokens, valid, temp, cfg, geo, use_pallas):
+    """Per-response-token logp/entropy from full-sequence logits.
+
+    Response token j (slot P+j) is predicted by logits at slot P+j-1.
+    Returns (logp [B,G], ent [B,G]) — garbage where invalid; callers mask.
+    """
+    p, t = geo.prompt_len, geo.total_len
+    g = geo.gen_len
+    b = tokens.shape[0]
+    pred = logits[:, p - 1 : t - 1, :] / jnp.maximum(temp, 1e-4)  # [B,G,V]
+    tgt = tokens[:, p:t]  # [B,G]
+    flat_logits = pred.reshape(b * g, cfg.vocab)
+    flat_tgt = tgt.reshape(b * g)
+    if use_pallas:
+        lp, ent = logprob_k.logprob(flat_logits, flat_tgt)
+    else:
+        lp, ent = kref.ref_logprob(flat_logits, flat_tgt)
+    return lp.reshape(b, g), ent.reshape(b, g)
+
+
+# --------------------------------------------------------------------------
+# entry points (each returns ONE flat f32 array)
+# --------------------------------------------------------------------------
+def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
+                 use_pallas: bool = True, critic_cfg: C.ModelConfig | None = None,
+                 pallas_attention: bool | None = None):
+    """Build all jit-able entry functions for one (model, geometry, batch).
+
+    Returns a dict name -> (fn, example_args_spec) consumed by aot.py.
+    """
+    t, p, g = geo.total_len, geo.prompt_len, geo.gen_len
+    b, v = batch, cfg.vocab
+    # `use_pallas` gates the cheap fused kernels (spec_accept, logprob);
+    # `pallas_attention` gates the attention kernel separately — on CPU the
+    # interpret-mode attention is ~6x slower than the jnp oracle (see
+    # EXPERIMENTS.md §Perf), so the perf build keeps attention on jnp while
+    # the acceptance scan stays a Pallas kernel.
+    attn_pallas = use_pallas if pallas_attention is None else pallas_attention
+    gen_fields = C.gen_blob_spec(cfg, geo, b)
+    np_pol = C.n_params(cfg, geo, False)
+
+    def unpack_gen(gen_blob):
+        out = {}
+        off = 0
+        for name, shape in gen_fields:
+            n = 1
+            for dim in shape:
+                n *= dim
+            out[name] = jax.lax.dynamic_slice(gen_blob, (off,), (n,)).reshape(shape)
+            off += n
+        return out
+
+    def pack_gen(ck, cv, probs):
+        return jnp.concatenate([ck.reshape(-1), cv.reshape(-1), probs.reshape(-1)])
+
+    def policy_params(blob):
+        return params_from_flat(blob[:np_pol], cfg, geo, False)
+
+    # -- prefill ------------------------------------------------------------
+    def prefill(blob, tokens, valid, last, temp):
+        """Build the KV cache over the canonical layout; emit next-token
+        probs gathered at each row's `last` (per-row last real slot)."""
+        params = policy_params(blob)
+        logits, ck, cv = forward_full(params, tokens, valid, cfg, geo, attn_pallas)
+        lrow = jnp.clip(last, 0, t - 1)
+        lg = jnp.take_along_axis(logits, lrow[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        lg = lg / jnp.maximum(temp[0], 1e-4)
+        probs = jax.nn.softmax(lg, axis=-1)
+        return pack_gen(ck, cv, probs)
+
+    # -- decode -------------------------------------------------------------
+    def decode(blob, gen_blob, token, slot, lpos, valid, temp):
+        params = policy_params(blob)
+        gs = unpack_gen(gen_blob)
+        probs, ck, cv = decode_one(
+            params, gs["cache_k"], gs["cache_v"], token, slot, lpos, valid,
+            temp[0], cfg, geo,
+        )
+        return pack_gen(ck, cv, probs)
+
+    # -- score --------------------------------------------------------------
+    def score(blob, tokens, valid, temp):
+        params = policy_params(blob)
+        logits, _, _ = forward_full(params, tokens, valid, cfg, geo, attn_pallas)
+        lp, ent = response_logp_ent(logits, tokens, valid, temp[0], cfg, geo, use_pallas)
+        return jnp.concatenate([lp.reshape(-1), ent.reshape(-1)])
+
+    # -- verify (the paper's Algorithm 1, one engine call) -------------------
+    def verify(blob, tokens, valid, logp_prev, uniforms, draft_valid, loglen, temp):
+        params = policy_params(blob)
+        logits, _, _ = forward_full(params, tokens, valid, cfg, geo, attn_pallas)
+        lp, ent = response_logp_ent(logits, tokens, valid, temp[0], cfg, geo, use_pallas)
+        if use_pallas:
+            rej, _ = accept_k.spec_accept(lp, logp_prev, uniforms, draft_valid, loglen[0])
+        else:
+            rej, _ = kref.ref_spec_accept(lp, logp_prev, uniforms, draft_valid, loglen[0])
+        return jnp.concatenate(
+            [rej.astype(jnp.float32), lp.reshape(-1), ent.reshape(-1)]
+        )
+
+    # -- losses ---------------------------------------------------------------
+    def policy_loss(pflat, tokens, valid, resp_mask, adv, old_logp, ref_logp, hp):
+        params = params_from_flat(pflat, cfg, geo, False)
+        # Training uses the jnp oracle paths: AD must flow.
+        logits, _, _ = forward_full(params, tokens, valid, cfg, geo, False)
+        lp, ent = response_logp_ent(logits, tokens, valid, 1.0, cfg, geo, False)
+        clip_low, clip_high = hp[1], hp[2]
+        kl_coef, ent_coef = hp[3], hp[4]
+        agg_mode = hp[5]
+
+        log_ratio = lp - old_logp
+        ratio = jnp.exp(jnp.clip(log_ratio, -20.0, 20.0))
+        s1 = ratio * adv
+        s2 = jnp.clip(ratio, 1.0 - clip_low, 1.0 + clip_high) * adv
+        pg_tok = -jnp.minimum(s1, s2)
+        # k3 KL estimator to the reference policy (GRPO regularizer).
+        lr_ref = ref_logp - lp
+        kl_tok = jnp.exp(jnp.clip(lr_ref, -20.0, 20.0)) - lr_ref - 1.0
+
+        m = resp_mask
+        ntok = jnp.maximum(m.sum(), 1.0)
+        nrow = jnp.maximum((m.sum(axis=1) > 0).astype(jnp.float32).sum(), 1.0)
+        rowlen = jnp.maximum(m.sum(axis=1), 1.0)
+
+        def seq_mean(x):
+            return (((x * m).sum(axis=1) / rowlen).sum()) / nrow
+
+        def tok_mean(x):
+            return (x * m).sum() / ntok
+
+        def agg(x):
+            return jnp.where(agg_mode > 0.5, tok_mean(x), seq_mean(x))
+
+        pg = agg(pg_tok)
+        kl = agg(kl_tok)
+        entropy = agg(ent)
+        loss = pg + kl_coef * kl - ent_coef * entropy
+        clipped = (jnp.abs(ratio - jnp.clip(ratio, 1.0 - clip_low, 1.0 + clip_high)) > 1e-8)
+        clip_frac = tok_mean(clipped.astype(jnp.float32))
+        ratio_mean = tok_mean(ratio)
+        return loss, (pg, kl, entropy, clip_frac, ratio_mean, ntok)
+
+    def adamw(pflat, m, v, step, grads, lr, wd, max_gn):
+        gn = jnp.sqrt(jnp.sum(grads * grads) + 1e-12)
+        scale = jnp.minimum(1.0, max_gn / gn)
+        grads = grads * scale
+        b1, b2 = 0.9, 0.999
+        step1 = step + 1.0
+        m1 = b1 * m + (1 - b1) * grads
+        v1 = b2 * v + (1 - b2) * grads * grads
+        mhat = m1 / (1 - b1 ** step1)
+        vhat = v1 / (1 - b2 ** step1)
+        upd = mhat / (jnp.sqrt(vhat) + 1e-8) + wd * pflat
+        return pflat - lr * upd, m1, v1, step1, gn
+
+    def train_policy(blob, tokens, valid, resp_mask, adv, old_logp, ref_logp, hp):
+        pflat, m, v, step, _ = split_blob(blob, cfg, geo, False)
+        (loss, aux), grads = jax.value_and_grad(policy_loss, has_aux=True)(
+            pflat, tokens, valid, resp_mask, adv, old_logp, ref_logp, hp
+        )
+        pg, kl, entropy, clip_frac, ratio_mean, ntok = aux
+        p1, m1, v1, s1, gn = adamw(pflat, m, v, step, grads, hp[0], hp[6], hp[7])
+        metrics = jnp.zeros((C.NUM_METRICS,), jnp.float32)
+        metrics = metrics.at[0].set(loss).at[1].set(pg).at[2].set(kl)
+        metrics = metrics.at[3].set(entropy).at[4].set(clip_frac).at[5].set(gn)
+        metrics = metrics.at[6].set(ratio_mean).at[7].set(ntok)
+        return join_blob(p1, m1, v1, s1, metrics)
+
+    def sft_loss(pflat, tokens, valid, loss_mask, temp_unused=None):
+        params = params_from_flat(pflat, cfg, geo, False)
+        logits, _, _ = forward_full(params, tokens, valid, cfg, geo, False)
+        # logits at slot t-1 predict token at slot t; loss_mask is aligned
+        # to target slots [1, T).
+        pred = logits[:, :-1, :]
+        tgt = tokens[:, 1:]
+        lp_all = jax.nn.log_softmax(pred, axis=-1)
+        lp = jnp.take_along_axis(lp_all, tgt[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        m = loss_mask[:, 1:]
+        ntok = jnp.maximum(m.sum(), 1.0)
+        loss = -(lp * m).sum() / ntok
+        acc = ((pred.argmax(-1) == tgt).astype(jnp.float32) * m).sum() / ntok
+        return loss, acc
+
+    def train_sft(blob, tokens, valid, loss_mask, hp):
+        pflat, m, v, step, _ = split_blob(blob, cfg, geo, False)
+        (loss, acc), grads = jax.value_and_grad(sft_loss, has_aux=True)(
+            pflat, tokens, valid, loss_mask
+        )
+        p1, m1, v1, s1, gn = adamw(pflat, m, v, step, grads, hp[0], hp[6], hp[7])
+        metrics = jnp.zeros((C.NUM_METRICS,), jnp.float32)
+        metrics = metrics.at[0].set(loss).at[3].set(acc).at[5].set(gn)
+        return join_blob(p1, m1, v1, s1, metrics)
+
+    # -- read_gen: extract just the sampling probs from the gen blob ---------
+    # (CopyRawToHost is unimplemented on this CPU PJRT plugin, so reading a
+    # sub-range of a device buffer requires a full literal copy; this trivial
+    # executable keeps the per-decode-step host copy at B*V floats instead of
+    # the whole KV cache.)
+    def read_gen(gen_blob):
+        gs = unpack_gen(gen_blob)
+        return gs["probs"].reshape(-1)
+
+    # -- read_metrics: extract [step | metrics] from a train blob ------------
+    # (same rationale as read_gen: avoids a full blob copy per train step
+    # just to read 17 floats of diagnostics)
+    def read_metrics(blob):
+        return blob[blob.shape[0] - 1 - C.NUM_METRICS :]
+
+    entries = {
+        "prefill": prefill,
+        "decode": decode,
+        "read_gen": read_gen,
+        "read_metrics": read_metrics,
+        "score": score,
+        "verify": verify,
+        "train_policy": train_policy,
+        "train_sft": train_sft,
+    }
+
+    # ---- critic entries (PPO) ----------------------------------------------
+    if critic_cfg is not None:
+        ccfg = critic_cfg
+        np_val = C.n_params(ccfg, geo, True)
+
+        def value_params(blob):
+            return params_from_flat(blob[:np_val], ccfg, geo, True)
+
+        def value_fwd(blob, tokens, valid):
+            params = value_params(blob)
+            logits, _, _ = forward_full(params, tokens, valid, ccfg, geo, False, True)
+            vals = logits[..., 0]  # [B,T]
+            # V(s_j) = value read at slot P-1+j (state before response token j),
+            # plus the terminal slot T-1: [B, G+1].
+            return vals[:, p - 1 : t].reshape(-1)
+
+        def value_loss(pflat, tokens, valid, resp_mask, targets):
+            params = params_from_flat(pflat, ccfg, geo, True)
+            logits, _, _ = forward_full(params, tokens, valid, ccfg, geo, False, True)
+            vals = logits[:, p - 1 : t - 1, 0]  # [B,G]
+            m = resp_mask
+            ntok = jnp.maximum(m.sum(), 1.0)
+            loss = (((vals - targets) ** 2) * m).sum() / ntok
+            return loss, vals.mean()
+
+        def train_value(blob, tokens, valid, resp_mask, targets, hp):
+            pflat, m, v, step, _ = split_blob(blob, ccfg, geo, True)
+            (loss, vmean), grads = jax.value_and_grad(value_loss, has_aux=True)(
+                pflat, tokens, valid, resp_mask, targets
+            )
+            p1, m1, v1, s1, gn = adamw(pflat, m, v, step, grads, hp[0], hp[6], hp[7])
+            metrics = jnp.zeros((C.NUM_METRICS,), jnp.float32)
+            metrics = metrics.at[0].set(loss).at[5].set(gn).at[6].set(vmean)
+            return join_blob(p1, m1, v1, s1, metrics)
+
+        entries["value_fwd"] = value_fwd
+        entries["train_value"] = train_value
+
+    return entries

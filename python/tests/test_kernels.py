@@ -1,0 +1,207 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes/values for all three Pallas kernels against the
+pure-jnp references in ``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, logprob, ref, spec_accept
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 2e-5
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3]),
+    h=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([8, 16, 32, 64]),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(b, h, t, dh, seed):
+    r = _rng(seed)
+    q, k, v = (jnp.asarray(r.standard_normal((b, h, t, dh), np.float32)) for _ in range(3))
+    # left-padded valid patterns: random prefix of pads per row
+    pads = r.integers(0, t - 1, b)
+    valid = np.ones((b, t), np.float32)
+    for i, p in enumerate(pads):
+        valid[i, :p] = 0.0
+    valid = jnp.asarray(valid)
+    scale = 1.0 / np.sqrt(dh)
+    got = attention.attention(q, k, v, valid, scale)
+    want = ref.ref_attention(q, k, v, valid, scale)
+    # rows/positions that are invalid are unspecified; compare valid region
+    m = (valid[:, None, :, None] > 0.5)
+    diff = jnp.abs(jnp.where(m, got - want, 0.0)).max()
+    assert float(diff) < ATOL, float(diff)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(4, 4), (8, 16), (16, 8), (16, 16)])
+def test_attention_block_shapes(block_q, block_k):
+    r = _rng(0)
+    b, h, t, dh = 2, 2, 32, 8
+    q, k, v = (jnp.asarray(r.standard_normal((b, h, t, dh), np.float32)) for _ in range(3))
+    valid = jnp.ones((b, t), jnp.float32)
+    got = attention.attention(q, k, v, valid, 0.35, block_q=block_q, block_k=block_k)
+    want = ref.ref_attention(q, k, v, valid, 0.35)
+    assert float(jnp.abs(got - want).max()) < ATOL
+
+
+def test_attention_fully_padded_rows_are_finite():
+    r = _rng(1)
+    b, h, t, dh = 2, 1, 16, 8
+    q, k, v = (jnp.asarray(r.standard_normal((b, h, t, dh), np.float32)) for _ in range(3))
+    valid = np.ones((b, t), np.float32)
+    valid[0, :] = 0.0  # row with no valid keys at all
+    got = attention.attention(q, k, v, jnp.asarray(valid), 0.35)
+    assert bool(jnp.isfinite(got).all())
+
+
+def test_attention_is_causal():
+    """Changing a future token must not change past outputs."""
+    r = _rng(2)
+    b, h, t, dh = 1, 2, 16, 8
+    q = jnp.asarray(r.standard_normal((b, h, t, dh), np.float32))
+    k = np.asarray(r.standard_normal((b, h, t, dh), np.float32))
+    v = np.asarray(r.standard_normal((b, h, t, dh), np.float32))
+    valid = jnp.ones((b, t), jnp.float32)
+    out1 = attention.attention(q, jnp.asarray(k), jnp.asarray(v), valid, 0.35)
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, 10:, :] += 5.0
+    v2[:, :, 10:, :] -= 3.0
+    out2 = attention.attention(q, jnp.asarray(k2), jnp.asarray(v2), valid, 0.35)
+    assert float(jnp.abs(out1[:, :, :10] - out2[:, :, :10]).max()) < ATOL
+
+
+# ---------------------------------------------------------------------------
+# spec_accept
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    g=st.sampled_from([4, 16, 48]),
+    loglen=st.sampled_from([-100.0, -0.5, 0.0, 0.5, 2.0, 100.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_spec_accept_matches_ref(b, g, loglen, seed):
+    r = _rng(seed)
+    lc = jnp.asarray((r.standard_normal((b, g)) - 1.5).astype(np.float32))
+    lp = jnp.asarray((r.standard_normal((b, g)) - 1.5).astype(np.float32))
+    u = jnp.asarray(r.random((b, g)).astype(np.float32))
+    lens = r.integers(0, g + 1, b)
+    dv = jnp.asarray((np.arange(g)[None, :] < lens[:, None]).astype(np.float32))
+    rj1, la1 = ref.ref_spec_accept(lc, lp, u, dv, loglen)
+    rj2, la2 = spec_accept.spec_accept(lc, lp, u, dv, loglen)
+    assert (np.array(rj1) == np.array(rj2)).all()
+    assert float(jnp.abs(la1 - la2).max()) < ATOL
+
+
+def test_spec_accept_full_lenience_full_reuse():
+    """l -> inf accepts every valid draft token (paper: full reuse)."""
+    r = _rng(3)
+    b, g = 4, 16
+    lc = jnp.asarray((r.standard_normal((b, g)) - 5).astype(np.float32))
+    lp = jnp.asarray((r.standard_normal((b, g))).astype(np.float32))
+    u = jnp.asarray(np.full((b, g), 0.999999, np.float32))
+    lens = np.array([0, 5, 16, 9])
+    dv = jnp.asarray((np.arange(g)[None, :] < lens[:, None]).astype(np.float32))
+    rj, _ = spec_accept.spec_accept(lc, lp, u, dv, 1e9)
+    assert (np.array(rj) == lens).all()
+
+
+def test_spec_accept_zero_lenience_rejects_at_zero():
+    """l -> 0 rejects immediately (vanilla RLVR, no reuse)."""
+    r = _rng(4)
+    b, g = 4, 16
+    lc = jnp.asarray(np.zeros((b, g), np.float32))
+    lp = jnp.asarray(np.zeros((b, g), np.float32))
+    u = jnp.asarray(np.full((b, g), 0.01, np.float32))
+    dv = jnp.ones((b, g), jnp.float32)
+    rj, _ = spec_accept.spec_accept(lc, lp, u, dv, -1e9)
+    assert (np.array(rj) == 0).all()
+
+
+def test_spec_accept_identity_policy_accepts_everything():
+    """Same policy + l=1: ratio == 1 >= u for u<1, so full acceptance."""
+    r = _rng(5)
+    b, g = 8, 24
+    lp = jnp.asarray((r.standard_normal((b, g)) - 2).astype(np.float32))
+    u = jnp.asarray((r.random((b, g)) * 0.999).astype(np.float32))
+    dv = jnp.ones((b, g), jnp.float32)
+    rj, _ = spec_accept.spec_accept(lp, lp, u, dv, 0.0)
+    assert (np.array(rj) == g).all()
+
+
+def test_spec_accept_monotone_in_lenience():
+    """E[reject offset] is non-decreasing in lenience."""
+    r = _rng(6)
+    b, g = 32, 48
+    lc = jnp.asarray((r.standard_normal((b, g)) - 2).astype(np.float32))
+    lp = jnp.asarray((r.standard_normal((b, g)) - 2).astype(np.float32))
+    u = jnp.asarray(r.random((b, g)).astype(np.float32))
+    dv = jnp.ones((b, g), jnp.float32)
+    prev = -1.0
+    for loglen in [-2.0, -0.5, 0.0, 0.5, 2.0, 9.0]:
+        rj, _ = spec_accept.spec_accept(lc, lp, u, dv, loglen)
+        mean = float(np.array(rj).mean())
+        assert mean >= prev - 1e-9
+        prev = mean
+
+
+# ---------------------------------------------------------------------------
+# logprob
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 64, 256]),
+    v=st.sampled_from([13, 52, 128]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_logprob_matches_ref(n, v, scale, seed):
+    r = _rng(seed)
+    logits = jnp.asarray((r.standard_normal((n, v)) * scale).astype(np.float32))
+    tgt = jnp.asarray(r.integers(0, v, n).astype(np.int32))
+    l1, e1 = ref.ref_logprob(logits, tgt)
+    l2, e2 = logprob.logprob(logits, tgt)
+    assert float(jnp.abs(l1 - l2).max()) < ATOL * max(1.0, scale)
+    assert float(jnp.abs(e1 - e2).max()) < ATOL * max(1.0, scale)
+
+
+def test_logprob_is_normalized():
+    """exp(logp) over all targets sums to 1 per row."""
+    r = _rng(7)
+    n, v = 4, 52
+    logits = jnp.asarray((r.standard_normal((n, v)) * 2).astype(np.float32))
+    total = np.zeros(n)
+    for t in range(v):
+        tgt = jnp.full((n,), t, jnp.int32)
+        lp, _ = logprob.logprob(logits, tgt, block_n=4)
+        total += np.exp(np.array(lp))
+    assert np.abs(total - 1.0).max() < 1e-4
+
+
+def test_logprob_entropy_bounds():
+    """0 <= entropy <= log V; uniform logits hit the upper bound."""
+    n, v = 8, 52
+    logits = jnp.zeros((n, v), jnp.float32)
+    _, ent = logprob.logprob(logits, jnp.zeros((n,), jnp.int32), block_n=8)
+    assert np.allclose(np.array(ent), np.log(v), atol=1e-5)
+    # peaked logits: entropy near zero
+    peaked = jnp.zeros((n, v), jnp.float32).at[:, 3].set(50.0)
+    _, ent2 = logprob.logprob(peaked, jnp.zeros((n,), jnp.int32), block_n=8)
+    assert float(np.abs(np.array(ent2)).max()) < 1e-3

@@ -1,0 +1,241 @@
+"""L2 model invariants: decode/score consistency, blob round-trips, training.
+
+These are the properties the SPEC-RL mechanism relies on:
+- the incremental decode path and the teacher-forced score path induce the
+  *same* distribution (otherwise speculative verification would not be
+  faithful to the rollout policy);
+- positional embeddings are addressed logically (left-padding invariance);
+- a train step moves parameters and reports sane metrics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import config as C
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = C.PRESETS["tiny"]
+GEO = C.SeqGeometry(prompt_len=8, total_len=24)
+B = 4
+P, T, G, V = GEO.prompt_len, GEO.total_len, GEO.gen_len, CFG.vocab
+
+
+@pytest.fixture(scope="module")
+def blob():
+    b = M.init_blob(0, CFG, GEO)
+    # randomize the head so the policy is non-uniform
+    rng = np.random.default_rng(1)
+    recs, _ = M.param_offsets(CFG, GEO)
+    for name, off, shape in recs:
+        if name == "head":
+            n = int(np.prod(shape))
+            b[off : off + n] = rng.standard_normal(n).astype(np.float32) * 0.2
+    return jnp.asarray(b)
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return M.make_entries(CFG, GEO, B, use_pallas=True, critic_cfg=C.PRESETS["critic"])
+
+
+@pytest.fixture(scope="module")
+def ref_entries():
+    return M.make_entries(CFG, GEO, B, use_pallas=False)
+
+
+def make_prompts(seed=2):
+    rng = np.random.default_rng(seed)
+    plens = rng.integers(2, P, B)
+    tokens = np.zeros((B, T), np.int32)
+    valid = np.zeros((B, T), np.float32)
+    for b in range(B):
+        toks = rng.integers(3, V, plens[b])
+        tokens[b, P - plens[b] : P] = toks
+        valid[b, P - plens[b] : P] = 1
+    return tokens, valid, plens
+
+
+def greedy_rollout(entries, blob, tokens, valid, steps):
+    """Greedy decode `steps` tokens; returns (tokens, valid, logps [B,steps])."""
+    temp = jnp.asarray([1.0], jnp.float32)
+    last = jnp.full((B,), P - 1, jnp.int32)
+    gen = entries["prefill"](blob, jnp.asarray(tokens), jnp.asarray(valid), last, temp)
+    ck_n = CFG.n_layers * B * T * CFG.d_model
+    probs = np.asarray(gen[2 * ck_n : 2 * ck_n + B * V]).reshape(B, V)
+    toks, val = tokens.copy(), valid.copy()
+    logps = []
+    for j in range(steps):
+        nxt = probs.argmax(1).astype(np.int32)
+        logps.append(np.log(probs[np.arange(B), nxt] + 1e-30))
+        slot = np.full((B,), P + j, np.int32)
+        toks[:, P + j] = nxt
+        val[:, P + j] = 1
+        lpos = val.sum(1).astype(np.int32) - 1
+        gen = entries["decode"](
+            blob, gen, jnp.asarray(nxt), jnp.asarray(slot), jnp.asarray(lpos),
+            jnp.asarray(val), temp,
+        )
+        probs = np.asarray(entries["read_gen"](gen)).reshape(B, V)
+    return toks, val, np.stack(logps, 1)
+
+
+def test_decode_matches_score(entries, blob):
+    """Incremental rollout logps == teacher-forced score logps (1e-4)."""
+    tokens, valid, _ = make_prompts()
+    toks, val, dec_lp = greedy_rollout(entries, blob, tokens, valid, 6)
+    out = entries["score"](blob, jnp.asarray(toks), jnp.asarray(val), jnp.asarray([1.0], jnp.float32))
+    lp = np.asarray(out[: B * G]).reshape(B, G)
+    assert np.abs(lp[:, :6] - dec_lp).max() < 1e-4
+
+
+def test_pallas_and_ref_entries_agree(entries, ref_entries, blob):
+    """use_pallas=True and use_pallas=False score paths agree."""
+    tokens, valid, _ = make_prompts()
+    toks, val, _ = greedy_rollout(entries, blob, tokens, valid, 5)
+    temp = jnp.asarray([1.0], jnp.float32)
+    o1 = entries["score"](blob, jnp.asarray(toks), jnp.asarray(val), temp)
+    o2 = ref_entries["score"](blob, jnp.asarray(toks), jnp.asarray(val), temp)
+    lp1 = np.asarray(o1[: B * G]).reshape(B, G)
+    lp2 = np.asarray(o2[: B * G]).reshape(B, G)
+    m = np.asarray(val)[:, P:] > 0.5
+    assert np.abs(np.where(m, lp1 - lp2, 0)).max() < 1e-4
+
+
+def test_left_pad_shift_invariance(entries, blob):
+    """Shifting a prompt deeper into the pad region must not change probs
+    (logical positions are mask-derived)."""
+    rng = np.random.default_rng(3)
+    ptoks = rng.integers(3, V, 4)
+    temp = jnp.asarray([1.0], jnp.float32)
+    probs = []
+    for extra in [0, 2]:
+        tokens = np.zeros((B, T), np.int32)
+        valid = np.zeros((B, T), np.float32)
+        start = P - len(ptoks)
+        tokens[:, start:P] = ptoks
+        valid[:, start:P] = 1
+        if extra:
+            # physically different: roll the whole prompt left by `extra`
+            tokens = np.roll(tokens, -extra, axis=1)
+            valid = np.roll(valid, -extra, axis=1)
+        last = np.full((B,), P - 1 - extra, np.int32)
+        gen = entries["prefill"](blob, jnp.asarray(tokens), jnp.asarray(valid),
+                                 jnp.asarray(last), temp)
+        probs.append(np.asarray(entries["read_gen"](gen)).reshape(B, V))
+    assert np.abs(probs[0] - probs[1]).max() < 1e-5
+
+
+def test_verify_accepts_own_rollout(entries, blob):
+    """Drafts sampled from the same policy w/ l=e^0.05 are fully accepted."""
+    tokens, valid, _ = make_prompts()
+    toks, val, dec_lp = greedy_rollout(entries, blob, tokens, valid, 6)
+    rng = np.random.default_rng(4)
+    dv = np.zeros((B, G), np.float32)
+    dv[:, :6] = 1
+    logp_prev = np.zeros((B, G), np.float32)
+    logp_prev[:, :6] = dec_lp
+    u = rng.random((B, G)).astype(np.float32) * 0.999
+    out = entries["verify"](
+        blob, jnp.asarray(toks), jnp.asarray(val), jnp.asarray(logp_prev),
+        jnp.asarray(u), jnp.asarray(dv), jnp.asarray([0.05], jnp.float32),
+        jnp.asarray([1.0], jnp.float32),
+    )
+    rej = np.asarray(out[:B]).astype(int)
+    assert (rej == 6).all(), rej
+
+
+def test_verify_zero_lenience_rejects_all(entries, blob):
+    tokens, valid, _ = make_prompts()
+    toks, val, dec_lp = greedy_rollout(entries, blob, tokens, valid, 4)
+    dv = np.zeros((B, G), np.float32)
+    dv[:, :4] = 1
+    lp_prev = np.zeros((B, G), np.float32)
+    lp_prev[:, :4] = dec_lp
+    u = np.full((B, G), 0.5, np.float32)
+    out = entries["verify"](
+        blob, jnp.asarray(toks), jnp.asarray(val), jnp.asarray(lp_prev),
+        jnp.asarray(u), jnp.asarray(dv), jnp.asarray([-1e9], jnp.float32),
+        jnp.asarray([1.0], jnp.float32),
+    )
+    rej = np.asarray(out[:B]).astype(int)
+    assert (rej == 0).all(), rej
+
+
+def test_train_policy_moves_params_and_reports_metrics(entries, blob):
+    tokens, valid, _ = make_prompts()
+    toks, val, dec_lp = greedy_rollout(entries, blob, tokens, valid, 6)
+    rng = np.random.default_rng(5)
+    rm = np.zeros((B, G), np.float32)
+    rm[:, :6] = 1
+    adv = rng.standard_normal((B, G)).astype(np.float32) * rm
+    old_lp = np.zeros((B, G), np.float32)
+    old_lp[:, :6] = dec_lp
+    hp = jnp.asarray([1e-3, 0.2, 0.2, 1e-3, 0.0, 1.0, 0.01, 1.0], jnp.float32)
+    out = entries["train_policy"](
+        blob, jnp.asarray(toks), jnp.asarray(val), jnp.asarray(rm),
+        jnp.asarray(adv), jnp.asarray(old_lp), jnp.asarray(old_lp), hp,
+    )
+    n = C.n_params(CFG, GEO)
+    assert float(jnp.abs(out[:n] - blob[:n]).max()) > 0
+    step = float(out[3 * n])
+    metrics = np.asarray(out[3 * n + 1 :])
+    assert step == 1.0
+    assert np.isfinite(metrics).all()
+    # same policy => ratio ~= 1, kl ~= 0, clip_frac ~= 0
+    assert abs(metrics[6] - 1.0) < 1e-3   # ratio_mean
+    assert abs(metrics[2]) < 1e-5         # kl
+    assert metrics[4] < 1e-6              # clip_frac
+    assert metrics[7] == 24.0             # token_count = 4 rows * 6 tokens
+
+
+def test_train_sft_reduces_loss(entries, blob):
+    """A few SFT steps on a fixed batch must reduce the loss."""
+    rng = np.random.default_rng(6)
+    tokens = np.zeros((B, T), np.int32)
+    valid = np.ones((B, T), np.float32)
+    tokens[:, :] = rng.integers(3, V, (B, T))
+    lm = np.ones((B, T), np.float32)
+    hp = jnp.asarray([1e-2, 0.2, 0.2, 0.0, 0.0, 1.0, 0.0, 10.0], jnp.float32)
+    cur = blob
+    losses = []
+    n = C.n_params(CFG, GEO)
+    for _ in range(5):
+        cur = entries["train_sft"](cur, jnp.asarray(tokens), jnp.asarray(valid),
+                                   jnp.asarray(lm), hp)
+        losses.append(float(cur[3 * n + 1]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_value_entries(entries):
+    vblob = jnp.asarray(M.init_blob(7, C.PRESETS["critic"], GEO, value_head=True))
+    tokens, valid, _ = make_prompts()
+    vals = entries["value_fwd"](vblob, jnp.asarray(tokens), jnp.asarray(valid))
+    assert vals.shape == (B * (G + 1),)
+    rm = np.zeros((B, G), np.float32)
+    rm[:, :4] = 1
+    tg = np.full((B, G), 0.7, np.float32)
+    hp = jnp.asarray([1e-2, 0, 0, 0, 0, 1.0, 0.0, 10.0], jnp.float32)
+    cur = vblob
+    nv = C.n_params(C.PRESETS["critic"], GEO, True)
+    losses = []
+    for _ in range(8):
+        cur = entries["train_value"](cur, jnp.asarray(tokens), jnp.asarray(valid),
+                                     jnp.asarray(rm), jnp.asarray(tg), hp)
+        losses.append(float(cur[3 * nv + 1]))
+    assert losses[-1] < losses[0]
+
+
+def test_blob_roundtrip():
+    b = M.init_blob(8, CFG, GEO)
+    p = M.params_from_flat(jnp.asarray(b[: C.n_params(CFG, GEO)]), CFG, GEO)
+    flat = M.params_to_flat(p, CFG, GEO)
+    assert np.abs(np.asarray(flat) - b[: C.n_params(CFG, GEO)]).max() == 0
+
+
+def test_init_blob_deterministic():
+    assert np.array_equal(M.init_blob(42, CFG, GEO), M.init_blob(42, CFG, GEO))
+    assert not np.array_equal(M.init_blob(42, CFG, GEO), M.init_blob(43, CFG, GEO))

@@ -1,0 +1,144 @@
+//! Micro-benchmarks of the hot path (benchkit harness; criterion is
+//! unavailable offline). The numbers feed EXPERIMENTS.md §Perf.
+//!
+//! Covers: engine entry latencies (prefill / decode / read_gen / score /
+//! verify / train), host-side samplers and packing, cache ops.
+
+use spec_rl::benchkit::Bench;
+use spec_rl::model::Policy;
+use spec_rl::rollout::{BatchLayout, SeqTask};
+use spec_rl::runtime::Engine;
+use spec_rl::spec::{CacheEntry, RolloutCache};
+use spec_rl::tokenizer::BOS;
+use spec_rl::util::{Rng, TopPSampler};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_micro: run `make artifacts` first");
+        return;
+    }
+    let eng = Engine::load("artifacts").unwrap();
+    let bundle = "tiny_b32";
+    let info = eng.bundle(bundle).unwrap().clone();
+    let (b, t) = (info.batch, eng.manifest.total_len);
+    let g = eng.manifest.gen_len();
+    let v = info.model.vocab;
+    let policy = Policy::from_init(&eng, bundle).unwrap();
+    let mut rng = Rng::new(1);
+
+    println!("== micro benches ({bundle}: B={b} T={t} V={v}) ==");
+    let bench = Bench::new(3, 20);
+
+    // ---- engine entries -----------------------------------------------------
+    let tokens: Vec<i32> = (0..b * t).map(|i| 3 + (i as i32 % 40)).collect();
+    let valid: Vec<f32> = vec![1.0; b * t];
+    let tok_buf = eng.upload_i32(&tokens, &[b, t]).unwrap();
+    let val_buf = eng.upload_f32(&valid, &[b, t]).unwrap();
+    let temp = eng.upload_f32(&[1.0], &[1]).unwrap();
+    let last = eng.upload_i32(&vec![(t - 1) as i32; b], &[b]).unwrap();
+
+    let gen_blob = eng
+        .call(bundle, "prefill", &[&policy.blob, &tok_buf, &val_buf, &last, &temp])
+        .unwrap();
+    bench.run("prefill (full seq fwd + cache)", || {
+        eng.call(bundle, "prefill", &[&policy.blob, &tok_buf, &val_buf, &last, &temp]).unwrap()
+    });
+
+    let token_in = eng.upload_i32(&vec![5i32; b], &[b]).unwrap();
+    let slot_in = eng.upload_i32(&vec![(t - 1) as i32; b], &[b]).unwrap();
+    let lpos_in = eng.upload_i32(&vec![(t - 1) as i32; b], &[b]).unwrap();
+    bench.run("decode step (one token, all rows)", || {
+        eng.call(
+            bundle,
+            "decode",
+            &[&policy.blob, &gen_blob, &token_in, &slot_in, &lpos_in, &val_buf, &temp],
+        )
+        .unwrap()
+    });
+    bench.run("read_gen (probs extraction)", || {
+        let out = eng.call(bundle, "read_gen", &[&gen_blob]).unwrap();
+        eng.read_f32(&out).unwrap()
+    });
+    bench.run("score (teacher-forced logp+ent)", || {
+        eng.call(bundle, "score", &[&policy.blob, &tok_buf, &val_buf, &temp]).unwrap()
+    });
+
+    let logp_prev = eng.upload_f32(&vec![-1.0f32; b * g], &[b, g]).unwrap();
+    let uniforms = eng.upload_f32(&vec![0.5f32; b * g], &[b, g]).unwrap();
+    let dv = eng.upload_f32(&vec![1.0f32; b * g], &[b, g]).unwrap();
+    let ll = eng.upload_f32(&[0.5], &[1]).unwrap();
+    bench.run("verify (score + acceptance scan)", || {
+        eng.call(
+            bundle,
+            "verify",
+            &[&policy.blob, &tok_buf, &val_buf, &logp_prev, &uniforms, &dv, &ll, &temp],
+        )
+        .unwrap()
+    });
+
+    let rm = eng.upload_f32(&vec![1.0f32; b * g], &[b, g]).unwrap();
+    let adv = eng.upload_f32(&vec![0.1f32; b * g], &[b, g]).unwrap();
+    let hp = eng.upload_f32(&[3e-4, 0.2, 0.2, 1e-4, 0.0, 0.0, 0.01, 1.0], &[8]).unwrap();
+    bench.run("train_policy (fwd+bwd+AdamW)", || {
+        eng.call(
+            bundle,
+            "train_policy",
+            &[&policy.blob, &tok_buf, &val_buf, &rm, &adv, &logp_prev, &logp_prev, &hp],
+        )
+        .unwrap()
+    });
+    bench.run("read_metrics", || {
+        let out = eng.call(bundle, "read_metrics", &[&policy.blob]).unwrap();
+        eng.read_f32(&out).unwrap()
+    });
+    bench.run("upload tokens+valid (B*T)", || {
+        let a = eng.upload_i32(&tokens, &[b, t]).unwrap();
+        let c = eng.upload_f32(&valid, &[b, t]).unwrap();
+        (a, c)
+    });
+
+    // ---- host-side hot paths ---------------------------------------------------
+    let probs: Vec<f32> = {
+        let mut p: Vec<f32> = (0..v).map(|i| ((i * 37) % 97) as f32 + 1.0).collect();
+        let s: f32 = p.iter().sum();
+        p.iter_mut().for_each(|x| *x /= s);
+        p
+    };
+    let mut sampler = TopPSampler::new(v);
+    bench.run("top-p sample (1 row, p=0.95)", || sampler.sample(&probs, 0.95, &mut rng));
+    bench.run("categorical sample (1 row, p=1.0)", || sampler.sample(&probs, 1.0, &mut rng));
+
+    let tasks: Vec<SeqTask> = (0..b)
+        .map(|i| SeqTask {
+            id: i,
+            prompt: vec![BOS, 5, 6, 7, 8],
+            prefix: vec![9; 20],
+            prefix_logps: vec![-1.0; 20],
+        })
+        .collect();
+    bench.run("BatchLayout::pack (32 rows)", || BatchLayout::pack(&tasks, b, 16, t));
+
+    let mut cache = RolloutCache::new();
+    let entry = CacheEntry {
+        response: vec![7; 40],
+        logps: vec![-1.0; 40],
+        version: 0,
+        finished: true,
+    };
+    bench.run("cache insert+lookup (1k ids)", || {
+        for id in 0..1000 {
+            cache.insert(id, entry.clone());
+        }
+        (0..1000).map(|id| cache.latest(id).map(|e| e.response.len()).unwrap_or(0)).sum::<usize>()
+    });
+
+    println!("\nper-entry engine stats:");
+    for (k, s) in eng.stats() {
+        println!(
+            "  {k:<28} calls={:<6} total={:.3}s mean={:.3}ms",
+            s.calls,
+            s.total_secs,
+            1e3 * s.total_secs / s.calls.max(1) as f64
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Table 1 / Figure 1 regeneration: {backbones} × {GRPO, PPO, DAPO} ×
+//! {vanilla, +SPEC-RL}: rollout tokens, speedup, benchmark battery.
+//!
+//! Scaled defaults run nano+tiny; `SPEC_RL_FULL=1` adds the small backbone
+//! and full step counts. Per-step series land in `out/` (Tables 16-27,
+//! Figures 8-11); the Figure 1 summary block prints at the end.
+
+use spec_rl::algo::Algo;
+use spec_rl::exp::{self, Scale};
+use spec_rl::metrics::{Report, Table};
+use spec_rl::runtime::Engine;
+use spec_rl::spec::{Lenience, ReuseVariant};
+use spec_rl::trainer::eval::summarize;
+use spec_rl::util::logging;
+
+fn main() {
+    logging::init();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_table1: run `make artifacts` first");
+        return;
+    }
+    let scale = Scale::from_env();
+    let eng = Engine::load("artifacts").unwrap();
+    let bundles: &[&str] =
+        if scale.full { &["nano_b32", "tiny_b32", "small_b32"] } else { &["nano_b32", "tiny_b32"] };
+
+    let mut fig1 = Vec::new(); // (label, tok_speedup, time_speedup, avg_off, avg_spec)
+    let mut csv = Report::new(
+        "out/table1_bench.csv",
+        &["bundle", "algo", "spec", "tokens", "rollout_s", "verify_s", "avg"],
+    );
+    for (bi, bundle) in bundles.iter().enumerate() {
+        let base = exp::ensure_base(&eng, bundle, scale.sft_steps).unwrap();
+        let mut table = Table::new(&format!("Table 1 — {bundle}"), &exp::table1_header());
+        for (ai, algo) in [Algo::Grpo, Algo::Ppo, Algo::Dapo].into_iter().enumerate() {
+            let mut base_tokens = None;
+            let mut base_secs = None;
+            let mut avg_off = 0.0;
+            for variant in [ReuseVariant::Off, ReuseVariant::Spec] {
+                let mut cfg = exp::base_config(scale, bundle);
+                cfg.algo = algo;
+                cfg.params = algo.default_params();
+                cfg.variant = variant;
+                cfg.lenience = Lenience::Fixed(cfg.params.default_log_lenience);
+                let label = if variant == ReuseVariant::Off {
+                    algo.name().to_uppercase()
+                } else {
+                    format!("+SPEC-RL")
+                };
+                let s = exp::run_one(&eng, cfg, &base, &label).unwrap();
+                exp::table1_row(&mut table, &s, base_tokens, base_secs);
+                let (_, _, avg) = summarize(&s.final_eval);
+                csv.push(&[
+                    bi as f64,
+                    ai as f64,
+                    (variant == ReuseVariant::Spec) as u8 as f64,
+                    s.total_new_tokens as f64,
+                    s.rollout_secs,
+                    s.verify_secs,
+                    avg,
+                ]);
+                match variant {
+                    ReuseVariant::Off => {
+                        base_tokens = Some(s.total_new_tokens);
+                        base_secs = Some(s.rollout_secs);
+                        avg_off = avg;
+                    }
+                    _ => {
+                        let tok_sp = base_tokens.unwrap() as f64
+                            / s.total_new_tokens.max(1) as f64;
+                        let time_sp = base_secs.unwrap() / s.rollout_secs.max(1e-9);
+                        fig1.push((
+                            format!("{bundle}/{}", algo.name()),
+                            tok_sp,
+                            time_sp,
+                            avg_off,
+                            avg,
+                        ));
+                    }
+                }
+            }
+        }
+        println!("\n{}", table.render());
+    }
+    csv.save().unwrap();
+
+    // Figure 1 block: speedup vs average performance
+    let mut f1 = Table::new(
+        "Figure 1 — speedup vs avg performance (SPEC-RL vs vanilla)",
+        &["setting", "tok-speedup", "time-speedup", "avg(vanilla)", "avg(+spec)"],
+    );
+    for (label, ts, ws, a0, a1) in &fig1 {
+        f1.row(vec![
+            label.clone(),
+            format!("{ts:.2}x"),
+            format!("{ws:.2}x"),
+            format!("{:.1}", a0 * 100.0),
+            format!("{:.1}", a1 * 100.0),
+        ]);
+    }
+    println!("{}", f1.render());
+    let mean_ts: f64 = fig1.iter().map(|x| x.1).sum::<f64>() / fig1.len().max(1) as f64;
+    println!("mean token-speedup across settings: {mean_ts:.2}x (paper: 2.31x)");
+}

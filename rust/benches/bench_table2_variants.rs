@@ -1,0 +1,49 @@
+//! Table 2 regeneration: SPEC-RL vs Random Reuse vs Delayed Reuse
+//! (tiny backbone, GRPO). Paper shape: Random is fast but loses accuracy;
+//! Delayed keeps accuracy but reuses much less (stale drafts).
+
+use spec_rl::algo::Algo;
+use spec_rl::exp::{self, Scale};
+use spec_rl::metrics::Table;
+use spec_rl::runtime::Engine;
+use spec_rl::spec::{Lenience, ReuseVariant};
+use spec_rl::util::logging;
+
+fn main() {
+    logging::init();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_table2_variants: run `make artifacts` first");
+        return;
+    }
+    let scale = Scale::from_env();
+    let eng = Engine::load("artifacts").unwrap();
+    let bundle = "tiny_b32";
+    let base = exp::ensure_base(&eng, bundle, scale.sft_steps).unwrap();
+
+    let mut table = Table::new(
+        "Table 2 — reuse variants (tiny, GRPO)",
+        &exp::table1_header(),
+    );
+    let mut base_tokens = None;
+    let mut base_secs = None;
+    for (label, variant) in [
+        ("GRPO", ReuseVariant::Off),
+        ("SPEC-RL", ReuseVariant::Spec),
+        ("Random Reuse", ReuseVariant::Random),
+        ("Delayed Reuse", ReuseVariant::Delayed),
+    ] {
+        let mut cfg = exp::base_config(scale, bundle);
+        cfg.algo = Algo::Grpo;
+        cfg.params = Algo::Grpo.default_params();
+        cfg.variant = variant;
+        cfg.lenience = Lenience::Fixed(0.5);
+        let s = exp::run_one(&eng, cfg, &base, label).unwrap();
+        exp::table1_row(&mut table, &s, base_tokens, base_secs);
+        if variant == ReuseVariant::Off {
+            base_tokens = Some(s.total_new_tokens);
+            base_secs = Some(s.rollout_secs);
+        }
+    }
+    println!("\n{}", table.render());
+    println!("expected shape: Random ~ fastest but lowest AVG; Delayed ~ baseline AVG, least reuse.");
+}

@@ -1,0 +1,106 @@
+//! Table 3 / Figures 4-5 regeneration: the lenience sweep
+//! ℓ ∈ {0 (vanilla), 1, e^0.2, e^0.5, e^0.8, e^2, ∞} on tiny+GRPO.
+//!
+//! Paper shape: speedup grows monotonically with ℓ (1.22x -> 14.9x);
+//! accuracy peaks at moderate ℓ (e^0.5) and collapses at ℓ=∞. The
+//! Figure 5 block reports entropy/KL/clip-fraction means per ℓ, which
+//! should rise with ℓ.
+
+use spec_rl::algo::Algo;
+use spec_rl::exp::{self, Scale};
+use spec_rl::metrics::{Report, Table};
+use spec_rl::runtime::Engine;
+use spec_rl::spec::{Lenience, ReuseVariant};
+use spec_rl::trainer::eval::summarize;
+use spec_rl::util::logging;
+
+fn main() {
+    logging::init();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_table3_lenience: run `make artifacts` first");
+        return;
+    }
+    let scale = Scale::from_env();
+    let eng = Engine::load("artifacts").unwrap();
+    let bundle = "tiny_b32";
+    let base = exp::ensure_base(&eng, bundle, scale.sft_steps).unwrap();
+
+    let sweep: Vec<(&str, ReuseVariant, Lenience)> = vec![
+        ("GRPO (l=0)", ReuseVariant::Off, Lenience::Zero),
+        ("l=1", ReuseVariant::Spec, Lenience::Fixed(0.0)),
+        ("l=e^0.2", ReuseVariant::Spec, Lenience::Fixed(0.2)),
+        ("l=e^0.5", ReuseVariant::Spec, Lenience::Fixed(0.5)),
+        ("l=e^0.8", ReuseVariant::Spec, Lenience::Fixed(0.8)),
+        ("l=e^2.0", ReuseVariant::Spec, Lenience::Fixed(2.0)),
+        ("l=inf", ReuseVariant::Full, Lenience::Infinite),
+    ];
+
+    let mut table = Table::new("Table 3 — lenience sweep (tiny, GRPO)", &exp::table1_header());
+    let mut fig5 = Table::new(
+        "Figure 5 — training dynamics vs lenience",
+        &["lenience", "entropy", "kl", "clip_frac", "prefix_len", "full_reuse"],
+    );
+    let mut csv = Report::new(
+        "out/table3_lenience.csv",
+        &["loglen", "tokens", "rollout_s", "avg", "entropy", "kl", "clip_frac", "prefix_len"],
+    );
+    let mut base_tokens = None;
+    let mut base_secs = None;
+    for (label, variant, len) in sweep {
+        let mut cfg = exp::base_config(scale, bundle);
+        cfg.algo = Algo::Grpo;
+        cfg.params = Algo::Grpo.default_params();
+        cfg.variant = variant;
+        cfg.lenience = len;
+        let mut trainer =
+            spec_rl::trainer::Trainer::new(&eng, cfg, base.duplicate(&eng).unwrap()).unwrap();
+        let summary = trainer.run(label).unwrap();
+        exp::table1_row(&mut table, &summary, base_tokens, base_secs);
+        if variant == ReuseVariant::Off {
+            base_tokens = Some(summary.total_new_tokens);
+            base_secs = Some(summary.rollout_secs);
+        }
+        // series means for Figure 5
+        let mean = |col: &str| {
+            let v = trainer.report.column(col).unwrap_or_default();
+            let vals: Vec<f64> = v.into_iter().filter(|x| !x.is_nan()).collect();
+            vals.iter().sum::<f64>() / vals.len().max(1) as f64
+        };
+        let (ent, kl, cf, pl, fr) = (
+            mean("entropy"),
+            mean("kl"),
+            mean("clip_frac"),
+            mean("prefix_len"),
+            mean("full_reuse"),
+        );
+        fig5.row(vec![
+            label.to_string(),
+            format!("{ent:.3}"),
+            format!("{kl:.5}"),
+            format!("{cf:.5}"),
+            format!("{pl:.1}"),
+            format!("{fr:.2}"),
+        ]);
+        let (_, _, avg) = summarize(&summary.final_eval);
+        let loglen = match len {
+            Lenience::Zero => -9.0,
+            Lenience::Infinite => 9.0,
+            Lenience::Fixed(x) => x as f64,
+            _ => f64::NAN,
+        };
+        csv.push(&[
+            loglen,
+            summary.total_new_tokens as f64,
+            summary.rollout_secs,
+            avg,
+            ent,
+            kl,
+            cf,
+            pl,
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!("{}", fig5.render());
+    csv.save().unwrap();
+    println!("expected shape: tokens fall monotonically with l; AVG peaks at moderate l; entropy/KL/clip rise with l.");
+}

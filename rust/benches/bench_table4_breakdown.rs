@@ -1,0 +1,51 @@
+//! Table 4 regeneration: end-to-end per-stage time breakdown for the three
+//! algorithms with and without SPEC-RL.
+//!
+//! Paper shape: rollout dominates vanilla step time; with SPEC-RL a small
+//! verification stage + negligible assembly replace most of the rollout
+//! cost while every other stage is unchanged.
+
+use spec_rl::algo::Algo;
+use spec_rl::exp::{self, Scale};
+use spec_rl::metrics::Table;
+use spec_rl::runtime::Engine;
+use spec_rl::spec::{Lenience, ReuseVariant};
+use spec_rl::util::logging;
+
+fn main() {
+    logging::init();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_table4_breakdown: run `make artifacts` first");
+        return;
+    }
+    let scale = Scale::from_env();
+    let eng = Engine::load("artifacts").unwrap();
+    let bundle = "tiny_b32";
+    let base = exp::ensure_base(&eng, bundle, scale.sft_steps).unwrap();
+
+    let mut table = Table::new(
+        "Table 4 — mean per-step stage breakdown (tiny; seconds)",
+        &exp::breakdown_header(),
+    );
+    for algo in [Algo::Grpo, Algo::Ppo, Algo::Dapo] {
+        for variant in [ReuseVariant::Off, ReuseVariant::Spec] {
+            let mut cfg = exp::base_config(scale, bundle);
+            cfg.steps = scale.steps.min(24); // breakdown needs fewer steps
+            cfg.eval_n = 4; // final eval is irrelevant here
+            cfg.eval_samples_hard = 1;
+            cfg.algo = algo;
+            cfg.params = algo.default_params();
+            cfg.variant = variant;
+            cfg.lenience = Lenience::Fixed(cfg.params.default_log_lenience);
+            let label = if variant == ReuseVariant::Off {
+                algo.name().to_uppercase()
+            } else {
+                format!("{}+SPEC", algo.name().to_uppercase())
+            };
+            let s = exp::run_one(&eng, cfg, &base, &label).unwrap();
+            exp::breakdown_row(&mut table, &s);
+        }
+    }
+    println!("\n{}", table.render());
+    println!("expected shape: rollout >> other stages in vanilla rows; +SPEC rows trade most rollout time for a small verify stage.");
+}

@@ -1,0 +1,55 @@
+//! Table 5 regeneration: the larger backbone (small_b32, the
+//! Qwen3-14B-analog) across the three algorithms, vanilla vs +SPEC-RL.
+//!
+//! Paper shape: efficiency gains persist (or grow) at larger scale with
+//! accuracy preserved.
+
+use spec_rl::algo::Algo;
+use spec_rl::exp::{self, Scale};
+use spec_rl::metrics::Table;
+use spec_rl::runtime::Engine;
+use spec_rl::spec::{Lenience, ReuseVariant};
+use spec_rl::util::logging;
+
+fn main() {
+    logging::init();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_table5_scale: run `make artifacts` first");
+        return;
+    }
+    let scale = Scale::from_env();
+    let eng = Engine::load("artifacts").unwrap();
+    let bundle = "small_b32";
+    if eng.bundle(bundle).is_err() {
+        eprintln!("bundle {bundle} missing; re-run `make artifacts MODELS=nano,tiny,small,critic`");
+        return;
+    }
+    let base = exp::ensure_base(&eng, bundle, scale.sft_steps).unwrap();
+
+    let algos: &[Algo] =
+        if scale.full { &[Algo::Grpo, Algo::Ppo, Algo::Dapo] } else { &[Algo::Grpo] };
+    let mut table = Table::new("Table 5 — larger backbone (small)", &exp::table1_header());
+    for &algo in algos {
+        let mut base_tokens = None;
+        let mut base_secs = None;
+        for variant in [ReuseVariant::Off, ReuseVariant::Spec] {
+            let mut cfg = exp::base_config(scale, bundle);
+            cfg.algo = algo;
+            cfg.params = algo.default_params();
+            cfg.variant = variant;
+            cfg.lenience = Lenience::Fixed(cfg.params.default_log_lenience);
+            let label = if variant == ReuseVariant::Off {
+                algo.name().to_uppercase()
+            } else {
+                "+SPEC-RL".to_string()
+            };
+            let s = exp::run_one(&eng, cfg, &base, &label).unwrap();
+            exp::table1_row(&mut table, &s, base_tokens, base_secs);
+            if variant == ReuseVariant::Off {
+                base_tokens = Some(s.total_new_tokens);
+                base_secs = Some(s.rollout_secs);
+            }
+        }
+    }
+    println!("\n{}", table.render());
+}

@@ -1,0 +1,50 @@
+//! Table 6 regeneration: dataset generality — GRPO ± SPEC-RL on
+//! SynthMath-A (DeepMath analog) and SynthMath-B (SimpleRL analog).
+//!
+//! Paper shape: efficiency and accuracy improvements hold on both
+//! training distributions.
+
+use spec_rl::algo::Algo;
+use spec_rl::exp::{self, Scale};
+use spec_rl::metrics::Table;
+use spec_rl::runtime::Engine;
+use spec_rl::spec::{Lenience, ReuseVariant};
+use spec_rl::util::logging;
+
+fn main() {
+    logging::init();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_table6_datasets: run `make artifacts` first");
+        return;
+    }
+    let scale = Scale::from_env();
+    let eng = Engine::load("artifacts").unwrap();
+    let bundle = "tiny_b32";
+    let base = exp::ensure_base(&eng, bundle, scale.sft_steps).unwrap();
+
+    let mut table = Table::new("Table 6 — dataset generality (tiny, GRPO)", &exp::table1_header());
+    for dataset in ["SynthMath-A", "SynthMath-B"] {
+        let mut base_tokens = None;
+        let mut base_secs = None;
+        for variant in [ReuseVariant::Off, ReuseVariant::Spec] {
+            let mut cfg = exp::base_config(scale, bundle);
+            cfg.dataset = dataset.into();
+            cfg.algo = Algo::Grpo;
+            cfg.params = Algo::Grpo.default_params();
+            cfg.variant = variant;
+            cfg.lenience = Lenience::Fixed(0.5);
+            let label = if variant == ReuseVariant::Off {
+                format!("GRPO [{dataset}]")
+            } else {
+                "+SPEC-RL".to_string()
+            };
+            let s = exp::run_one(&eng, cfg, &base, &label).unwrap();
+            exp::table1_row(&mut table, &s, base_tokens, base_secs);
+            if variant == ReuseVariant::Off {
+                base_tokens = Some(s.total_new_tokens);
+                base_secs = Some(s.rollout_secs);
+            }
+        }
+    }
+    println!("\n{}", table.render());
+}

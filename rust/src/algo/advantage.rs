@@ -1,0 +1,127 @@
+//! Advantage estimation: group-relative (GRPO/DAPO) and GAE (PPO).
+
+/// Group-relative advantages: for each group of `group` consecutive
+/// rewards, `A = (r - mean) / (std + eps)`. Returns one advantage per
+/// sequence (broadcast over its tokens by the caller).
+pub fn grpo_advantages(rewards: &[f32], group: usize) -> Vec<f32> {
+    assert!(group > 0 && rewards.len() % group == 0, "{} % {group}", rewards.len());
+    let mut adv = vec![0f32; rewards.len()];
+    for g in rewards.chunks(group).enumerate() {
+        let (gi, rs) = g;
+        let mean = rs.iter().sum::<f32>() / group as f32;
+        let var = rs.iter().map(|r| (r - mean) * (r - mean)).sum::<f32>() / group as f32;
+        let std = var.sqrt();
+        for (k, &r) in rs.iter().enumerate() {
+            adv[gi * group + k] = (r - mean) / (std + 1e-6);
+        }
+    }
+    adv
+}
+
+/// Generalized Advantage Estimation for a sparse terminal reward.
+///
+/// `values` holds `V(s_0..s_L)` (L+1 entries, `s_j` = state before
+/// response token j; `V(s_L)` is the post-terminal bootstrap, ignored for
+/// finished episodes). Reward `r` lands on the final token. Returns
+/// `(advantages[L], value_targets[L])`.
+pub fn gae(values: &[f32], reward: f32, gamma: f32, lam: f32) -> (Vec<f32>, Vec<f32>) {
+    let l = values.len() - 1;
+    let mut adv = vec![0f32; l];
+    let mut gae_acc = 0f32;
+    for j in (0..l).rev() {
+        let next_v = if j == l - 1 { 0.0 } else { values[j + 1] };
+        let r = if j == l - 1 { reward } else { 0.0 };
+        let delta = r + gamma * next_v - values[j];
+        gae_acc = delta + gamma * lam * gae_acc;
+        adv[j] = gae_acc;
+    }
+    let targets: Vec<f32> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, targets)
+}
+
+/// Whiten advantages to zero mean / unit variance over the masked entries.
+pub fn whiten(adv: &mut [f32], mask: &[f32]) {
+    assert_eq!(adv.len(), mask.len());
+    let n: f32 = mask.iter().sum();
+    if n < 2.0 {
+        return;
+    }
+    let mean = adv.iter().zip(mask).map(|(a, m)| a * m).sum::<f32>() / n;
+    let var = adv
+        .iter()
+        .zip(mask)
+        .map(|(a, m)| m * (a - mean) * (a - mean))
+        .sum::<f32>()
+        / n;
+    let std = var.sqrt() + 1e-6;
+    for (a, m) in adv.iter_mut().zip(mask) {
+        if *m > 0.5 {
+            *a = (*a - mean) / std;
+        } else {
+            *a = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grpo_zero_for_uniform_group() {
+        let adv = grpo_advantages(&[1.0, 1.0, 1.0, 1.0], 4);
+        assert!(adv.iter().all(|&a| a.abs() < 1e-3));
+    }
+
+    #[test]
+    fn grpo_sums_to_zero_per_group() {
+        let adv = grpo_advantages(&[1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.0, 0.0], 4);
+        for g in adv.chunks(4) {
+            let s: f32 = g.iter().sum();
+            assert!(s.abs() < 1e-4, "{s}");
+        }
+    }
+
+    #[test]
+    fn grpo_correct_reward_gets_positive_advantage() {
+        let adv = grpo_advantages(&[1.0, 0.0, 0.0, 0.0], 4);
+        assert!(adv[0] > 0.0);
+        assert!(adv[1] < 0.0);
+    }
+
+    #[test]
+    fn gae_terminal_only_reward_gamma1_lam1_is_reward_minus_value() {
+        // with gamma=lam=1 advantages telescope: A_j = r - V(s_j)
+        let values = vec![0.2, 0.4, 0.1, 0.0];
+        let (adv, tgt) = gae(&values, 1.0, 1.0, 1.0);
+        for j in 0..3 {
+            assert!((adv[j] - (1.0 - values[j])).abs() < 1e-5, "{j}");
+            assert!((tgt[j] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gae_lambda_zero_is_one_step_td() {
+        let values = vec![0.5, 0.25, 0.0];
+        let (adv, _) = gae(&values, 1.0, 1.0, 0.0);
+        assert!((adv[0] - (0.25 - 0.5)).abs() < 1e-5);
+        assert!((adv[1] - (1.0 - 0.25)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn whiten_normalizes_masked() {
+        let mut adv = vec![1.0, 2.0, 3.0, 99.0];
+        let mask = vec![1.0, 1.0, 1.0, 0.0];
+        whiten(&mut adv, &mask);
+        assert_eq!(adv[3], 0.0);
+        let mean: f32 = adv[..3].iter().sum::<f32>() / 3.0;
+        assert!(mean.abs() < 1e-5);
+    }
+
+    #[test]
+    fn whiten_single_entry_noop() {
+        let mut adv = vec![5.0];
+        whiten(&mut adv, &[1.0]);
+        assert_eq!(adv[0], 5.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! RL algorithms: GRPO, PPO, DAPO on the shared clipped-surrogate update.
+//!
+//! The L2 `train_policy` graph implements the token-level PPO-clip
+//! objective with a k3 KL term and entropy bonus; the three algorithms
+//! differ only in (a) how advantages are computed host-side, (b) the
+//! hyperparameter vector, and (c) batch curation (DAPO's dynamic
+//! sampling). This mirrors the paper: "SPEC-RL modifies only the rollout
+//! stage" — the algorithms are untouched and shared.
+
+pub mod advantage;
+
+pub use advantage::{gae, grpo_advantages, whiten};
+
+/// Which RLVR algorithm drives the update.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Grpo,
+    Ppo,
+    Dapo,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "grpo" => Some(Algo::Grpo),
+            "ppo" => Some(Algo::Ppo),
+            "dapo" => Some(Algo::Dapo),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Grpo => "grpo",
+            Algo::Ppo => "ppo",
+            Algo::Dapo => "dapo",
+        }
+    }
+
+    /// Paper defaults (Appendix A.1), scaled where noted in DESIGN.md.
+    pub fn default_params(&self) -> AlgoParams {
+        match self {
+            // GRPO: KL regularization on (coef 1e-4), clip 0.2, seq-mean.
+            Algo::Grpo => AlgoParams {
+                clip_low: 0.2,
+                clip_high: 0.2,
+                kl_coef: 1e-4,
+                token_mean: false,
+                dynamic_sampling: false,
+                use_critic: false,
+                default_log_lenience: 0.5, // e^0.5
+                ..AlgoParams::base()
+            },
+            // PPO: critic + GAE, no KL.
+            Algo::Ppo => AlgoParams {
+                clip_low: 0.2,
+                clip_high: 0.2,
+                kl_coef: 0.0,
+                token_mean: false,
+                dynamic_sampling: false,
+                use_critic: true,
+                default_log_lenience: 0.3, // e^0.3
+                ..AlgoParams::base()
+            },
+            // DAPO: clip-higher (0.28), token-mean loss, dynamic sampling,
+            // no KL.
+            Algo::Dapo => AlgoParams {
+                clip_low: 0.2,
+                clip_high: 0.28,
+                kl_coef: 0.0,
+                token_mean: true,
+                dynamic_sampling: true,
+                use_critic: false,
+                default_log_lenience: 0.15, // e^0.15
+                ..AlgoParams::base()
+            },
+        }
+    }
+}
+
+/// Flattened algorithm hyperparameters (host side of the L2 `hp` vector).
+#[derive(Clone, Copy, Debug)]
+pub struct AlgoParams {
+    pub lr: f32,
+    pub critic_lr: f32,
+    pub clip_low: f32,
+    pub clip_high: f32,
+    pub kl_coef: f32,
+    pub ent_coef: f32,
+    /// true => token-mean loss aggregation (DAPO), false => seq-mean.
+    pub token_mean: bool,
+    pub weight_decay: f32,
+    pub max_grad_norm: f32,
+    /// GAE parameters (PPO).
+    pub gamma: f32,
+    pub lam: f32,
+    pub dynamic_sampling: bool,
+    pub use_critic: bool,
+    /// Paper's per-algorithm grid-searched lenience (log ℓ).
+    pub default_log_lenience: f32,
+}
+
+impl AlgoParams {
+    fn base() -> AlgoParams {
+        AlgoParams {
+            // paper: actor lr 5e-7 for billion-param models; scaled for the
+            // ~1e5..1e6-param substitutes (see DESIGN.md).
+            lr: 3e-4,
+            critic_lr: 1e-3,
+            clip_low: 0.2,
+            clip_high: 0.2,
+            kl_coef: 0.0,
+            ent_coef: 0.0,
+            token_mean: false,
+            weight_decay: 0.01,
+            max_grad_norm: 1.0,
+            gamma: 1.0,
+            lam: 0.95,
+            dynamic_sampling: false,
+            use_critic: false,
+            default_log_lenience: 0.5,
+        }
+    }
+
+    /// Serialize into the L2 `hp` vector layout
+    /// (`manifest.hp_names` order: lr, clip_low, clip_high, kl_coef,
+    /// ent_coef, loss_agg_mode, weight_decay, max_grad_norm).
+    pub fn hp_vector(&self, lr: f32) -> [f32; 8] {
+        [
+            lr,
+            self.clip_low,
+            self.clip_high,
+            self.kl_coef,
+            self.ent_coef,
+            if self.token_mean { 1.0 } else { 0.0 },
+            self.weight_decay,
+            self.max_grad_norm,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in [Algo::Grpo, Algo::Ppo, Algo::Dapo] {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algo::parse("GRPO"), Some(Algo::Grpo));
+        assert_eq!(Algo::parse("sac"), None);
+    }
+
+    #[test]
+    fn defaults_match_paper_structure() {
+        let g = Algo::Grpo.default_params();
+        assert!(g.kl_coef > 0.0 && !g.dynamic_sampling && !g.use_critic);
+        let p = Algo::Ppo.default_params();
+        assert!(p.kl_coef == 0.0 && p.use_critic);
+        let d = Algo::Dapo.default_params();
+        assert!(d.clip_high > d.clip_low && d.dynamic_sampling && d.token_mean);
+        // paper's lenience ordering: GRPO e^0.5 > PPO e^0.3 > DAPO e^0.15
+        assert!(g.default_log_lenience > p.default_log_lenience);
+        assert!(p.default_log_lenience > d.default_log_lenience);
+    }
+
+    #[test]
+    fn hp_vector_layout() {
+        let g = Algo::Dapo.default_params();
+        let hp = g.hp_vector(1e-3);
+        assert_eq!(hp[0], 1e-3);
+        assert_eq!(hp[2], 0.28);
+        assert_eq!(hp[5], 1.0); // token-mean
+    }
+}

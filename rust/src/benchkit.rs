@@ -1,0 +1,112 @@
+//! Micro-benchmark harness (criterion substitute for the offline image).
+//!
+//! `cargo bench` benches use [`Bench`] for hot-path measurements
+//! (warmup, N samples, mean/median/p95/stddev) and plain drivers for the
+//! end-to-end table regenerations.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_secs: f64,
+    pub median_secs: f64,
+    pub p95_secs: f64,
+    pub stddev_secs: f64,
+    pub min_secs: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} mean {:>10}  median {:>10}  p95 {:>10}  sd {:>10}  (n={})",
+            self.name,
+            fmt_secs(self.mean_secs),
+            fmt_secs(self.median_secs),
+            fmt_secs(self.p95_secs),
+            fmt_secs(self.stddev_secs),
+            self.samples
+        )
+    }
+}
+
+/// Human-friendly seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, samples: 15 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bench { warmup, samples }
+    }
+
+    /// Measure `f` (which should perform one unit of work per call).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.total_cmp(b));
+        let n = times.len();
+        let mean = times.iter().sum::<f64>() / n as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+        let p95_idx = ((n as f64 * 0.95) as usize).min(n - 1);
+        let result = BenchResult {
+            name: name.to_string(),
+            samples: n,
+            mean_secs: mean,
+            median_secs: times[n / 2],
+            p95_secs: times[p95_idx],
+            stddev_secs: var.sqrt(),
+            min_secs: times[0],
+        };
+        println!("{}", result.report());
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_work() {
+        let b = Bench::new(1, 5);
+        let r = b.run("sleep1ms", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(r.mean_secs >= 0.0009, "{}", r.mean_secs);
+        assert!(r.median_secs >= 0.0009);
+        assert_eq!(r.samples, 5);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(0.002).ends_with("ms"));
+        assert!(fmt_secs(0.000002).ends_with("µs"));
+    }
+}

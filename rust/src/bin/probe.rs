@@ -1,0 +1,63 @@
+// Round-trip probe: load an AOT-lowered entry point, execute it on the PJRT
+// CPU client with buffer-resident args, and read a sub-range of the flat
+// output. Validates the blob-in/blob-out runtime design end to end.
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    let client = xla::PjRtClient::cpu()?;
+    println!("platform={}", client.platform_name());
+
+    // manifest says tiny_b8: blob_size, batch=8, T=24, G=16
+    let manifest = std::fs::read_to_string(format!("{dir}/manifest.json"))?;
+    let grab = |key: &str| -> i64 {
+        let i = manifest.find(key).unwrap();
+        let rest = &manifest[i + key.len()..];
+        let rest = rest.trim_start_matches([':', ' ', '"']);
+        rest.chars().take_while(|c| c.is_ascii_digit()).collect::<String>().parse().unwrap()
+    };
+    let blob_size = grab("\"blob_size\"") as usize;
+    println!("blob_size={blob_size}");
+
+    let proto = xla::HloModuleProto::from_text_file(&format!("{dir}/tiny_b8/score.hlo.txt"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let t0 = std::time::Instant::now();
+    let exe = client.compile(&comp)?;
+    println!("compile score: {:?}", t0.elapsed());
+
+    // init blob from npy
+    use xla::FromRawBytes;
+    let lit = xla::Literal::read_npy(format!("{dir}/tiny_b8/init.npy"), &())?;
+    println!("init blob elems={}", lit.element_count());
+    let blob_host = lit.to_vec::<f32>()?;
+    let blob = client.buffer_from_host_buffer(&blob_host, &[blob_size], None)?;
+
+    let (b, t, g) = (8usize, 24usize, 16usize);
+    let tokens: Vec<i32> = (0..b * t).map(|i| 3 + (i as i32 % 40)).collect();
+    let valid: Vec<f32> = vec![1.0; b * t];
+    let temp: Vec<f32> = vec![1.0];
+    let tok_buf = client.buffer_from_host_buffer(&tokens, &[b, t], None)?;
+    let val_buf = client.buffer_from_host_buffer(&valid, &[b, t], None)?;
+    let temp_buf = client.buffer_from_host_buffer(&temp, &[1], None)?;
+
+    let t1 = std::time::Instant::now();
+    let outs = exe.execute_b(&[&blob, &tok_buf, &val_buf, &temp_buf])?;
+    println!("execute: {:?} n_out_buffers={}", t1.elapsed(), outs[0].len());
+    let out = &outs[0][0];
+    println!("out shape={:?}", out.on_device_shape()?);
+
+    // CopyRawToHost is not implemented on this CPU plugin: read via literal.
+    let t15 = std::time::Instant::now();
+    let out_lit = out.to_literal_sync()?;
+    println!("to_literal: {:?}", t15.elapsed());
+    let all = out_lit.to_vec::<f32>()?;
+    println!("logp[0..4]={:?} ent[0..4]={:?}", &all[..4], &all[b*g..b*g+4]);
+    // steady-state timing
+    for i in 0..3 {
+        let t2 = std::time::Instant::now();
+        let _ = exe.execute_b(&[&blob, &tok_buf, &val_buf, &temp_buf])?;
+        println!("execute{}: {:?}", i + 3, t2.elapsed());
+    }
+    println!("probe OK");
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Command-line parsing (clap substitute for the offline image).
+//!
+//! Grammar: `spec-rl <command> [--flag value]... [--switch]...`
+//! plus `--set section.key=value` config overrides (repeatable).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::{ConfigDoc, RunConfig};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    /// `--set` overrides in config syntax.
+    pub sets: Vec<String>,
+}
+
+impl Cli {
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cli> {
+        let mut it = args.into_iter();
+        let mut cli = Cli { command: it.next().unwrap_or_default(), ..Default::default() };
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name == "set" {
+                    let Some(v) = it.next() else { bail!("--set needs key=value") };
+                    cli.sets.push(v);
+                    continue;
+                }
+                // peek: flag with value or bare switch
+                match it.next() {
+                    Some(v) if !v.starts_with("--") => {
+                        cli.flags.insert(name.to_string(), v);
+                    }
+                    Some(v) => {
+                        cli.switches.push(name.to_string());
+                        // v was actually the next flag; re-process it
+                        if let Some(n2) = v.strip_prefix("--") {
+                            match it.next() {
+                                Some(v2) if !v2.starts_with("--") => {
+                                    cli.flags.insert(n2.to_string(), v2);
+                                }
+                                Some(v2) => {
+                                    cli.switches.push(n2.to_string());
+                                    if let Some(n3) = v2.strip_prefix("--") {
+                                        cli.switches.push(n3.to_string());
+                                    }
+                                }
+                                None => cli.switches.push(n2.to_string()),
+                            }
+                        }
+                    }
+                    None => cli.switches.push(name.to_string()),
+                }
+            } else {
+                bail!("unexpected positional argument '{arg}'");
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Assemble the run config: defaults <- --config file <- --set overrides
+    /// <- dedicated flags.
+    pub fn run_config(&self) -> Result<RunConfig> {
+        let mut doc = match self.flag("config") {
+            Some(path) => ConfigDoc::parse(&std::fs::read_to_string(path)?)?,
+            None => ConfigDoc::default(),
+        };
+        // --set run.steps=10 style overrides
+        for s in &self.sets {
+            doc.merge(ConfigDoc::parse(s)?);
+        }
+        // dedicated convenience flags
+        let mut extra = String::new();
+        if let Some(v) = self.flag("algo") {
+            extra += &format!("run.algo = \"{v}\"\n");
+        }
+        if let Some(v) = self.flag("bundle") {
+            extra += &format!("run.bundle = \"{v}\"\n");
+        }
+        if let Some(v) = self.flag("steps") {
+            extra += &format!("run.steps = {v}\n");
+        }
+        if let Some(v) = self.flag("dataset") {
+            extra += &format!("run.dataset = \"{v}\"\n");
+        }
+        if let Some(v) = self.flag("variant") {
+            extra += &format!("spec.variant = \"{v}\"\n");
+        }
+        if let Some(v) = self.flag("lenience") {
+            extra += &format!("spec.lenience = \"{v}\"\n");
+        }
+        if let Some(v) = self.flag("seed") {
+            extra += &format!("run.seed = {v}\n");
+        }
+        if let Some(v) = self.flag("n-prompts") {
+            extra += &format!("run.n_prompts = {v}\n");
+        }
+        if !extra.is_empty() {
+            doc.merge(ConfigDoc::parse(&extra)?);
+        }
+        RunConfig::from_doc(&doc)
+    }
+}
+
+pub const USAGE: &str = "spec-rl — speculative rollouts for RLVR (paper reproduction)
+
+USAGE:
+    spec-rl <command> [flags]
+
+COMMANDS:
+    info         print the artifact manifest summary
+    sft          supervised pretraining -> base checkpoint
+                   --bundle tiny_b32 --steps 300 --out out/base_tiny.npy
+    train        RL training (GRPO/PPO/DAPO, with/without SPEC-RL)
+                   --algo grpo --variant spec --lenience e0.5 --steps 45
+                   --base out/base_tiny.npy [--config run.toml] [--set k=v]
+    eval         evaluate a checkpoint on the benchmark battery
+                   --base out/base_tiny.npy [--bundle tiny_b32] [--n 32]
+    overlap      measure cross-epoch rollout overlap (Figure 2)
+                   --base out/base_tiny.npy --steps 24
+    case-study   show verified-prefix reuse on sample prompts (Figures 12-15)
+                   --base out/base_tiny.npy
+
+Flags common to RL commands: --bundle, --seed, --n-prompts, --dataset.
+SPEC_RL_LOG=debug for verbose logs.";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let c = cli("train --algo grpo --steps 10 --quiet");
+        assert_eq!(c.command, "train");
+        assert_eq!(c.flag("algo"), Some("grpo"));
+        assert_eq!(c.usize_flag("steps", 0), 10);
+        assert!(c.has("quiet"));
+    }
+
+    #[test]
+    fn set_overrides_accumulate() {
+        let c = cli("train --set run.steps=9 --set spec.lenience=\"e0.5\"");
+        assert_eq!(c.sets.len(), 2);
+        let rc = c.run_config().unwrap();
+        assert_eq!(rc.steps, 9);
+    }
+
+    #[test]
+    fn dedicated_flags_build_config() {
+        let c = cli("train --algo dapo --variant off --steps 7");
+        let rc = c.run_config().unwrap();
+        assert_eq!(rc.algo.name(), "dapo");
+        assert_eq!(rc.variant.name(), "off");
+        assert_eq!(rc.steps, 7);
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Cli::parse(vec!["train".into(), "oops".into()]).is_err());
+    }
+}

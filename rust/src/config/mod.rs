@@ -1,0 +1,11 @@
+//! Configuration system: a TOML-subset parser + the typed run config.
+//!
+//! (The `toml`/`serde` crates are unavailable offline; [`parse`] covers
+//! the subset real configs use: `[section]`, `key = value` with strings,
+//! ints, floats, bools and flat arrays, plus `#` comments.)
+
+pub mod parse;
+pub mod run;
+
+pub use parse::{ConfigDoc, Value};
+pub use run::RunConfig;

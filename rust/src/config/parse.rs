@@ -1,0 +1,216 @@
+//! TOML-subset parser.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A scalar or flat-array config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key -> value` (keys before any section header
+/// live in the "" section).
+#[derive(Clone, Debug, Default)]
+pub struct ConfigDoc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<ConfigDoc> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: malformed section header '{raw}'", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            doc.entries.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// Merge `other` over `self` (CLI overrides).
+    pub fn merge(&mut self, other: ConfigDoc) {
+        self.entries.extend(other.entries);
+    }
+
+    // typed getters with defaults ------------------------------------------
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_i64()).map(|x| x as usize).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(body) = inner.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string {s}");
+        };
+        return Ok(Value::Str(body.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(body) = inner.strip_suffix(']') else {
+            bail!("line {lineno}: unterminated array {s}");
+        };
+        let mut items = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, lineno)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare word => string (ergonomic for CLI overrides)
+    Ok(Value::Str(s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = ConfigDoc::parse(
+            r#"
+            top = 1
+            [run]
+            algo = "grpo"       # the algorithm
+            steps = 45
+            lr = 3e-4
+            spec = true
+            mix = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("top"), Some(&Value::Int(1)));
+        assert_eq!(doc.str_or("run.algo", ""), "grpo");
+        assert_eq!(doc.usize_or("run.steps", 0), 45);
+        assert!((doc.f64_or("run.lr", 0.0) - 3e-4).abs() < 1e-12);
+        assert!(doc.bool_or("run.spec", false));
+        assert_eq!(
+            doc.get("run.mix"),
+            Some(&Value::Arr(vec![Value::Int(1), Value::Int(2), Value::Int(3)]))
+        );
+    }
+
+    #[test]
+    fn comments_and_hash_in_strings() {
+        let doc = ConfigDoc::parse("name = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc.str_or("name", ""), "a#b");
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = ConfigDoc::parse("[run]\nsteps = 10\nalgo = \"grpo\"").unwrap();
+        let b = ConfigDoc::parse("[run]\nsteps = 20").unwrap();
+        a.merge(b);
+        assert_eq!(a.usize_or("run.steps", 0), 20);
+        assert_eq!(a.str_or("run.algo", ""), "grpo");
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(ConfigDoc::parse("[unclosed").is_err());
+        assert!(ConfigDoc::parse("novalue").is_err());
+        assert!(ConfigDoc::parse("s = \"open").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = ConfigDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("x", 7), 7);
+        assert_eq!(doc.str_or("y", "d"), "d");
+    }
+}

@@ -1,0 +1,204 @@
+//! The typed run configuration assembled from defaults + config file + CLI.
+
+use anyhow::{Context, Result};
+
+use super::parse::ConfigDoc;
+use crate::algo::{Algo, AlgoParams};
+use crate::spec::{Lenience, ReuseVariant};
+
+/// Everything a training run needs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    // -- environment ---------------------------------------------------------
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    pub bundle: String,
+    pub critic_bundle: String,
+    pub seed: u64,
+
+    // -- data -----------------------------------------------------------------
+    /// "SynthMath-A" or "SynthMath-B".
+    pub dataset: String,
+    /// Number of distinct training prompts (the paper's 6K/8K axis).
+    pub n_prompts: usize,
+
+    // -- RL loop ----------------------------------------------------------------
+    pub algo: Algo,
+    pub params: AlgoParams,
+    /// Prompts per step (rollout batch = prompts_per_step * group).
+    pub prompts_per_step: usize,
+    /// Samples per prompt (GRPO group size; the paper's rollout N).
+    pub group: usize,
+    pub steps: usize,
+    pub temperature: f32,
+    pub top_p: f32,
+
+    // -- SPEC-RL -----------------------------------------------------------------
+    pub variant: ReuseVariant,
+    pub lenience: Lenience,
+
+    // -- evaluation ---------------------------------------------------------------
+    pub eval_every: usize,
+    pub eval_n: usize,
+    /// Pass@1 sample count for the hard suite (paper: 16/32 for AMC/AIME).
+    pub eval_samples_hard: usize,
+
+    // -- SFT (base-model pretraining) ------------------------------------------------
+    pub sft_steps: usize,
+    pub sft_lr: f32,
+    pub sft_examples: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        let algo = Algo::Grpo;
+        RunConfig {
+            artifacts_dir: "artifacts".into(),
+            out_dir: "out".into(),
+            bundle: "tiny_b32".into(),
+            critic_bundle: "critic_b32".into(),
+            seed: 17,
+            dataset: "SynthMath-A".into(),
+            n_prompts: 96,
+            algo,
+            params: algo.default_params(),
+            prompts_per_step: 8,
+            group: 4,
+            steps: 45,
+            temperature: 1.0,
+            top_p: 1.0,
+            variant: ReuseVariant::Spec,
+            lenience: Lenience::Fixed(0.5),
+            eval_every: 5,
+            eval_n: 32,
+            eval_samples_hard: 4,
+            sft_steps: 300,
+            sft_lr: 1e-3,
+            sft_examples: 4096,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Rollout batch per step.
+    pub fn rollout_batch(&self) -> usize {
+        self.prompts_per_step * self.group
+    }
+
+    /// Steps per epoch over the prompt set.
+    pub fn steps_per_epoch(&self) -> usize {
+        self.n_prompts.div_ceil(self.prompts_per_step)
+    }
+
+    /// Build from a parsed doc (all keys optional; `algo` resets params to
+    /// that algorithm's defaults before key-level overrides apply).
+    pub fn from_doc(doc: &ConfigDoc) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        if let Some(v) = doc.get("run.algo").and_then(|v| v.as_str()) {
+            c.algo = Algo::parse(v).with_context(|| format!("unknown algo '{v}'"))?;
+            c.params = c.algo.default_params();
+            c.lenience = Lenience::Fixed(c.params.default_log_lenience);
+        }
+        c.artifacts_dir = doc.str_or("run.artifacts_dir", &c.artifacts_dir);
+        c.out_dir = doc.str_or("run.out_dir", &c.out_dir);
+        c.bundle = doc.str_or("run.bundle", &c.bundle);
+        c.critic_bundle = doc.str_or("run.critic_bundle", &c.critic_bundle);
+        c.seed = doc.usize_or("run.seed", c.seed as usize) as u64;
+        c.dataset = doc.str_or("run.dataset", &c.dataset);
+        c.n_prompts = doc.usize_or("run.n_prompts", c.n_prompts);
+        c.prompts_per_step = doc.usize_or("run.prompts_per_step", c.prompts_per_step);
+        c.group = doc.usize_or("run.group", c.group);
+        c.steps = doc.usize_or("run.steps", c.steps);
+        c.temperature = doc.f64_or("run.temperature", c.temperature as f64) as f32;
+        c.top_p = doc.f64_or("run.top_p", c.top_p as f64) as f32;
+        if let Some(v) = doc.get("spec.variant").and_then(|v| v.as_str()) {
+            c.variant =
+                ReuseVariant::parse(v).with_context(|| format!("unknown variant '{v}'"))?;
+        }
+        if let Some(v) = doc.get("spec.lenience").and_then(|v| v.as_str()) {
+            c.lenience =
+                Lenience::parse(v).with_context(|| format!("bad lenience '{v}'"))?;
+        }
+        c.params.lr = doc.f64_or("train.lr", c.params.lr as f64) as f32;
+        c.params.critic_lr = doc.f64_or("train.critic_lr", c.params.critic_lr as f64) as f32;
+        c.params.kl_coef = doc.f64_or("train.kl_coef", c.params.kl_coef as f64) as f32;
+        c.params.ent_coef = doc.f64_or("train.ent_coef", c.params.ent_coef as f64) as f32;
+        c.params.clip_low = doc.f64_or("train.clip_low", c.params.clip_low as f64) as f32;
+        c.params.clip_high = doc.f64_or("train.clip_high", c.params.clip_high as f64) as f32;
+        c.eval_every = doc.usize_or("eval.every", c.eval_every);
+        c.eval_n = doc.usize_or("eval.n", c.eval_n);
+        c.eval_samples_hard = doc.usize_or("eval.samples_hard", c.eval_samples_hard);
+        c.sft_steps = doc.usize_or("sft.steps", c.sft_steps);
+        c.sft_lr = doc.f64_or("sft.lr", c.sft_lr as f64) as f32;
+        c.sft_examples = doc.usize_or("sft.examples", c.sft_examples);
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.group >= 1, "group must be >= 1");
+        anyhow::ensure!(
+            self.algo != Algo::Grpo && self.algo != Algo::Dapo || self.group >= 2,
+            "GRPO/DAPO need group >= 2 for group-relative advantages"
+        );
+        anyhow::ensure!(self.prompts_per_step >= 1, "prompts_per_step must be >= 1");
+        anyhow::ensure!(self.n_prompts >= self.prompts_per_step, "n_prompts < prompts_per_step");
+        anyhow::ensure!(self.temperature > 0.0, "temperature must be > 0");
+        anyhow::ensure!((0.0..=1.0).contains(&self.top_p), "top_p in (0, 1]");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_doc_applies_algo_defaults_then_overrides() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [run]
+            algo = "dapo"
+            steps = 10
+            [train]
+            clip_high = 0.3
+            "#,
+        )
+        .unwrap();
+        let c = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.algo, Algo::Dapo);
+        assert!(c.params.dynamic_sampling);
+        assert_eq!(c.params.clip_high, 0.3); // override wins
+        assert_eq!(c.steps, 10);
+        // DAPO's paper lenience default
+        assert_eq!(c.lenience, Lenience::Fixed(0.15));
+    }
+
+    #[test]
+    fn bad_algo_errors() {
+        let doc = ConfigDoc::parse("[run]\nalgo = \"sarsa\"").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn invalid_group_rejected() {
+        let mut c = RunConfig::default();
+        c.group = 1;
+        assert!(c.validate().is_err()); // GRPO needs group >= 2
+        c.algo = Algo::Ppo;
+        c.params = Algo::Ppo.default_params();
+        assert!(c.validate().is_ok()); // PPO is fine with 1
+    }
+
+    #[test]
+    fn derived_sizes() {
+        let c = RunConfig::default();
+        assert_eq!(c.rollout_batch(), 32);
+        assert_eq!(c.steps_per_epoch(), 12);
+    }
+}

@@ -1,0 +1,160 @@
+//! Shared experiment drivers for the benches and examples.
+//!
+//! Every `benches/bench_*.rs` regenerates one paper table/figure; they all
+//! need the same plumbing: a cached SFT base checkpoint per bundle, a
+//! configured [`Trainer`] run, and paper-shaped table rows (tokens /
+//! speedup / per-suite accuracy). That plumbing lives here so the benches
+//! stay readable.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::metrics::Table;
+use crate::model::Policy;
+use crate::runtime::Engine;
+use crate::spec::{Lenience, ReuseVariant};
+use crate::trainer::eval::summarize;
+use crate::trainer::sft::{run_sft, SftConfig};
+use crate::trainer::{RunSummary, Trainer};
+
+/// Scale knobs for experiment drivers. `SPEC_RL_FULL=1` selects the larger
+/// configuration (more steps, bigger evals, extra model sizes).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub steps: usize,
+    pub eval_n: usize,
+    pub samples_hard: usize,
+    pub sft_steps: usize,
+    pub full: bool,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        let full = std::env::var("SPEC_RL_FULL").map(|v| v == "1").unwrap_or(false);
+        if full {
+            Scale { steps: 45, eval_n: 32, samples_hard: 4, sft_steps: 3000, full }
+        } else {
+            Scale { steps: 36, eval_n: 16, samples_hard: 2, sft_steps: 1500, full }
+        }
+    }
+}
+
+/// Load `out/base_<bundle>.npy`, SFT-ing it first if missing.
+pub fn ensure_base(eng: &Engine, bundle: &str, sft_steps: usize) -> Result<Policy> {
+    let path = format!("out/base_{bundle}.npy");
+    if std::path::Path::new(&path).exists() {
+        if let Ok(p) = Policy::load(eng, bundle, &path) {
+            return Ok(p);
+        }
+        log::warn!("stale checkpoint {path}; re-running SFT");
+    }
+    std::fs::create_dir_all("out").ok();
+    log::info!("SFT base model for {bundle} ({sft_steps} steps)...");
+    let (policy, _) = run_sft(
+        eng,
+        &SftConfig {
+            bundle: bundle.to_string(),
+            steps: sft_steps,
+            lr: 1e-3,
+            examples: 8192,
+            seed: 7,
+            init_from: None,
+        },
+    )?;
+    policy.save(eng, &path)?;
+    Ok(policy)
+}
+
+/// A preconfigured run: (label, algo+variant config).
+pub fn base_config(scale: Scale, bundle: &str) -> RunConfig {
+    RunConfig {
+        bundle: bundle.to_string(),
+        steps: scale.steps,
+        eval_n: scale.eval_n,
+        eval_samples_hard: scale.samples_hard,
+        ..RunConfig::default()
+    }
+}
+
+/// Run one configuration from a shared base checkpoint.
+pub fn run_one(eng: &Engine, cfg: RunConfig, base: &Policy, label: &str) -> Result<RunSummary> {
+    let base_copy = base.duplicate(eng)?;
+    let mut trainer = Trainer::new(eng, cfg, base_copy)?;
+    trainer.run(label)
+}
+
+/// Configure variant/lenience on a config (builder-ish helper).
+pub fn with_spec(mut cfg: RunConfig, variant: ReuseVariant, log_len: Option<f32>) -> RunConfig {
+    cfg.variant = variant;
+    if let Some(l) = log_len {
+        cfg.lenience = Lenience::Fixed(l);
+    }
+    cfg
+}
+
+/// The paper's Table-1-shaped row: tokens (M…here K), speedup vs a
+/// baseline, per-suite accuracy, AVG.
+pub fn table1_row(
+    table: &mut Table,
+    summary: &RunSummary,
+    baseline_tokens: Option<usize>,
+    baseline_rollout_secs: Option<f64>,
+) {
+    let speedup_tok = baseline_tokens
+        .map(|b| format!("{:.2}x", b as f64 / summary.total_new_tokens.max(1) as f64))
+        .unwrap_or_else(|| "1.00x".into());
+    let speedup_time = baseline_rollout_secs
+        .map(|b| format!("{:.2}x", b / summary.rollout_secs.max(1e-9)))
+        .unwrap_or_else(|| "1.00x".into());
+    let mut cells = vec![
+        summary.label.clone(),
+        format!("{:.1}K", summary.total_new_tokens as f64 / 1e3),
+        speedup_tok,
+        speedup_time,
+    ];
+    for (_, acc) in &summary.final_eval {
+        cells.push(format!("{:.1}", acc * 100.0));
+    }
+    let (math, ood, avg) = summarize(&summary.final_eval);
+    cells.push(format!("{:.1}", math * 100.0));
+    cells.push(format!("{:.1}", ood * 100.0));
+    cells.push(format!("{:.1}", avg * 100.0));
+    table.row(cells);
+}
+
+/// Standard Table-1 header (suite columns from the battery).
+pub fn table1_header() -> Vec<&'static str> {
+    vec![
+        "algorithm", "tokens", "tok-speedup", "time-speedup",
+        "add-easy", "add-hard", "sub", "mul", "chain", "compare", "format",
+        "MATH", "OOD", "AVG",
+    ]
+}
+
+/// Write a summary's stage means as a Table-4-shaped row.
+pub fn breakdown_row(table: &mut Table, s: &RunSummary) {
+    let m = |k: &str| s.stage_means.get(k).copied().unwrap_or(0.0);
+    table.row(vec![
+        s.label.clone(),
+        format!("{:.2}", s.total_secs),
+        format!("{:.3}", m("verification")),
+        format!("{:.3}", m("rollout")),
+        format!("{:.4}", m("assembly")),
+        format!("{:.3}", m("reward")),
+        format!("{:.3}", m("old_logp")),
+        format!("{:.3}", m("ref")),
+        format!("{:.3}", m("values")),
+        format!("{:.4}", m("adv")),
+        format!("{:.3}", m("update_critic")),
+        format!("{:.3}", m("update_actor")),
+        format!("{:.3}", m("others")),
+    ])
+}
+
+/// Table-4 header.
+pub fn breakdown_header() -> Vec<&'static str> {
+    vec![
+        "algorithm", "total(s)", "verify", "rollout", "assembly", "reward",
+        "old-logp", "ref", "values", "adv", "upd-critic", "upd-actor", "others",
+    ]
+}

@@ -1,0 +1,41 @@
+//! # SPEC-RL — Accelerating On-Policy RL with Speculative Rollouts
+//!
+//! Reproduction of *SPEC-RL: Accelerating On-Policy Reinforcement Learning
+//! with Speculative Rollouts* (Liu, Wang, Min et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the coordinator: RL training loop, batched
+//!   rollout engine, the speculative rollout cache + verifier (the paper's
+//!   contribution), GRPO / PPO / DAPO, the verifiable-reward task
+//!   environment, metrics, benches.
+//! - **L2** (`python/compile/model.py`) — the policy/value transformer,
+//!   AOT-lowered once to HLO text.
+//! - **L1** (`python/compile/kernels/`) — Pallas kernels for attention,
+//!   lenient speculative acceptance, and fused log-prob/entropy.
+//!
+//! Python never runs at training time: [`runtime::Engine`] loads
+//! `artifacts/*.hlo.txt` into a PJRT CPU client and all large tensors
+//! (parameters, optimizer state, KV cache) stay device-resident between
+//! calls.
+//!
+//! Quick tour: [`trainer::Trainer`] drives steps; [`rollout::RolloutEngine`]
+//! generates; [`spec::SpecRollout`] wraps it with draft-and-verify reuse;
+//! [`algo`] turns rewards into updates; [`tasks`] provides the synthetic
+//! verifiable-math environment standing in for DeepMath (see DESIGN.md for
+//! the substitution table).
+
+pub mod algo;
+pub mod benchkit;
+pub mod exp;
+pub mod cli;
+pub mod config;
+pub mod metrics;
+pub mod model;
+pub mod rollout;
+pub mod runtime;
+pub mod spec;
+pub mod tasks;
+pub mod testing;
+pub mod tokenizer;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,231 @@
+//! `spec-rl` launcher: info / sft / train / eval / overlap / case-study.
+//!
+//! The heavier experiment drivers (paper tables & figures) live in
+//! `benches/` and `examples/`; this binary is the day-to-day entry point.
+
+use anyhow::{Context, Result};
+use spec_rl::cli::{Cli, USAGE};
+use spec_rl::metrics::Table;
+use spec_rl::model::Policy;
+use spec_rl::rollout::RolloutEngine;
+use spec_rl::runtime::Engine;
+use spec_rl::tokenizer::Tokenizer;
+use spec_rl::trainer::eval::{evaluate, summarize};
+use spec_rl::trainer::sft::{run_sft, SftConfig};
+use spec_rl::trainer::Trainer;
+use spec_rl::util::{logging, Rng};
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        println!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    match cli.command.as_str() {
+        "info" => info(&cli),
+        "sft" => sft(&cli),
+        "train" => train(&cli),
+        "eval" => eval_cmd(&cli),
+        "overlap" => overlap(&cli),
+        "case-study" => case_study(&cli),
+        other => {
+            println!("{USAGE}");
+            anyhow::bail!("unknown command '{other}'")
+        }
+    }
+}
+
+fn engine(cli: &Cli) -> Result<Engine> {
+    Engine::load(cli.flag_or("artifacts", "artifacts"))
+}
+
+fn info(cli: &Cli) -> Result<()> {
+    let eng = engine(cli)?;
+    let m = &eng.manifest;
+    println!(
+        "artifacts: {:?}\nvocab {} | prompt_len {} | total_len {} | pallas {}",
+        m.dir, m.vocab, m.prompt_len, m.total_len, m.use_pallas
+    );
+    let mut t = Table::new("bundles", &["bundle", "layers", "d_model", "heads", "params", "entries"]);
+    for (name, b) in &m.bundles {
+        t.row(vec![
+            name.clone(),
+            b.model.n_layers.to_string(),
+            b.model.d_model.to_string(),
+            b.model.n_heads.to_string(),
+            b.n_params.to_string(),
+            b.entries.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn sft(cli: &Cli) -> Result<()> {
+    let eng = engine(cli)?;
+    let bundle = cli.flag_or("bundle", "tiny_b32");
+    let cfg = SftConfig {
+        bundle: bundle.clone(),
+        steps: cli.usize_flag("steps", 300),
+        lr: cli.flag("lr").and_then(|s| s.parse().ok()).unwrap_or(1e-3),
+        examples: cli.usize_flag("examples", 4096),
+        seed: cli.usize_flag("seed", 7) as u64,
+        init_from: cli.flag("resume").map(|s| s.to_string()),
+    };
+    let (policy, losses) = run_sft(&eng, &cfg)?;
+    let out = cli.flag_or("out", &format!("out/base_{bundle}.npy"));
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    policy.save(&eng, &out)?;
+    println!(
+        "sft done: loss {:.4} -> {:.4}; checkpoint {out}",
+        losses.first().copied().unwrap_or(f32::NAN),
+        losses.last().copied().unwrap_or(f32::NAN)
+    );
+    Ok(())
+}
+
+fn load_base(eng: &Engine, cli: &Cli, bundle: &str) -> Result<Policy> {
+    match cli.flag("base") {
+        Some(path) => Policy::load(eng, bundle, path)
+            .with_context(|| format!("loading base checkpoint {path}")),
+        None => {
+            log::warn!("no --base checkpoint: starting RL from the raw init blob");
+            Policy::from_init(eng, bundle)
+        }
+    }
+}
+
+fn train(cli: &Cli) -> Result<()> {
+    let cfg = cli.run_config()?;
+    let eng = Engine::load(&cfg.artifacts_dir)?;
+    let base = load_base(&eng, cli, &cfg.bundle)?;
+    let label = format!("{}+{}", cfg.algo.name(), cfg.variant.name());
+    let mut trainer = Trainer::new(&eng, cfg, base)?;
+    let summary = trainer.run(&label)?;
+    let (math, ood, avg) = summarize(&summary.final_eval);
+    let mut t = Table::new(&format!("run summary: {label}"), &["metric", "value"]);
+    t.row(vec!["steps".into(), summary.steps.to_string()]);
+    t.row(vec!["new tokens".into(), summary.total_new_tokens.to_string()]);
+    t.row(vec!["reused tokens".into(), summary.total_reused_tokens.to_string()]);
+    t.row(vec!["rollout secs".into(), format!("{:.2}", summary.rollout_secs)]);
+    t.row(vec!["verify secs".into(), format!("{:.2}", summary.verify_secs)]);
+    t.row(vec!["total secs".into(), format!("{:.2}", summary.total_secs)]);
+    t.row(vec!["final train reward".into(), format!("{:.3}", summary.final_reward)]);
+    for (name, acc) in &summary.final_eval {
+        t.row(vec![format!("eval {name}"), format!("{acc:.3}")]);
+    }
+    t.row(vec!["math avg".into(), format!("{math:.3}")]);
+    t.row(vec!["ood avg".into(), format!("{ood:.3}")]);
+    t.row(vec!["avg".into(), format!("{avg:.3}")]);
+    println!("{}", t.render());
+    if let Some(out) = cli.flag("out") {
+        trainer.policy.save(&eng, out)?;
+        println!("saved checkpoint {out}");
+    }
+    Ok(())
+}
+
+fn eval_cmd(cli: &Cli) -> Result<()> {
+    let eng = engine(cli)?;
+    let bundle = cli.flag_or("bundle", "tiny_b32");
+    let policy = load_base(&eng, cli, &bundle)?;
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, &bundle)?;
+    let mut rng = Rng::new(cli.usize_flag("seed", 33) as u64);
+    let evals = evaluate(
+        &eng,
+        &mut rollout,
+        &policy,
+        &tok,
+        cli.usize_flag("n", 32),
+        cli.usize_flag("samples-hard", 4),
+        &mut rng,
+    )?;
+    let mut t = Table::new(&format!("eval: {bundle}"), &["suite", "accuracy"]);
+    for (name, acc) in &evals {
+        t.row(vec![name.clone(), format!("{acc:.3}")]);
+    }
+    let (math, ood, avg) = summarize(&evals);
+    t.row(vec!["MATH-AVG".into(), format!("{math:.3}")]);
+    t.row(vec!["OOD-AVG".into(), format!("{ood:.3}")]);
+    t.row(vec!["AVG".into(), format!("{avg:.3}")]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Figure 2: cross-epoch ROUGE-1 overlap under vanilla training.
+fn overlap(cli: &Cli) -> Result<()> {
+    let mut cfg = cli.run_config()?;
+    cfg.variant = spec_rl::spec::ReuseVariant::Off;
+    cfg.steps = cli.usize_flag("steps", 2 * cfg.steps_per_epoch());
+    let eng = Engine::load(&cfg.artifacts_dir)?;
+    let base = load_base(&eng, cli, &cfg.bundle)?;
+    let mut trainer = Trainer::new(&eng, cfg, base)?;
+    let mut series = Vec::new();
+    for s in 0..trainer.cfg.steps {
+        let rec = trainer.step(s)?;
+        if !rec["rouge1_prev_epoch"].is_nan() {
+            series.push((s, rec["rouge1_prev_epoch"]));
+        }
+    }
+    trainer.report.save()?;
+    let mut t = Table::new("cross-epoch ROUGE-1 overlap (Figure 2)", &["step", "rouge1"]);
+    for (s, r) in &series {
+        t.row(vec![s.to_string(), format!("{r:.3}")]);
+    }
+    println!("{}", t.render());
+    println!(
+        "mean overlap: {:.3}",
+        series.iter().map(|(_, r)| r).sum::<f64>() / series.len().max(1) as f64
+    );
+    Ok(())
+}
+
+/// Figures 12-15: show reused prefix vs regenerated suffix for one batch.
+fn case_study(cli: &Cli) -> Result<()> {
+    let mut cfg = cli.run_config()?;
+    cfg.steps = cfg.steps_per_epoch() + 1; // just into epoch 2
+    let eng = Engine::load(&cfg.artifacts_dir)?;
+    let base = load_base(&eng, cli, &cfg.bundle)?;
+    let mut trainer = Trainer::new(&eng, cfg, base)?;
+    // run one epoch to fill the cache
+    for s in 0..trainer.cfg.steps_per_epoch() {
+        trainer.step(s)?;
+    }
+    // then show the first step of epoch 2 with verification detail
+    let tok = trainer.tok.clone();
+    let prompt_ids: Vec<usize> = (0..trainer.cfg.prompts_per_step).collect();
+    let mut drafts = Vec::new();
+    for &pi in prompt_ids.iter().take(4) {
+        let id = pi * trainer.cfg.group;
+        if let Some(prev) = trainer.spec.cache.latest(id) {
+            drafts.push((pi, id, prev.response.clone()));
+        }
+    }
+    let rec = trainer.step(trainer.cfg.steps_per_epoch())?;
+    println!(
+        "step stats: prefix_len={:.1} full_reuse={:.2} new_tokens={}",
+        rec["prefix_len"], rec["full_reuse"], rec["tokens_new"] as u64
+    );
+    for (pi, id, draft) in drafts {
+        println!("--- prompt: {}", trainer.train_set[pi].prompt);
+        println!("  old rollout (draft): {}", tok.decode(&draft));
+        if let Some(cur) = trainer.spec.cache.latest(id) {
+            let shared = spec_rl::metrics::overlap::common_prefix_len(&draft, &cur.response);
+            println!("  new rollout        : {}", tok.decode(&cur.response));
+            println!("  verified prefix    : {} tokens", shared);
+        }
+    }
+    Ok(())
+}

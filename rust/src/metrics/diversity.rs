@@ -1,0 +1,138 @@
+//! Rollout diversity: Distinct-1 (Li et al., 2016) and Self-BLEU
+//! (Zhu et al., 2018) — the two metrics of the paper's Figure 6.
+
+use std::collections::HashMap;
+
+/// Distinct-1: unique unigrams / total unigrams over a set of sequences.
+pub fn distinct_1(seqs: &[Vec<i32>]) -> f64 {
+    let mut uniq = std::collections::HashSet::new();
+    let mut total = 0usize;
+    for s in seqs {
+        for &t in s {
+            uniq.insert(t);
+            total += 1;
+        }
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    uniq.len() as f64 / total as f64
+}
+
+fn ngram_counts(seq: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// BLEU-n of `hyp` against multiple references (clipped n-gram precision,
+/// geometric mean over 1..=max_n, brevity penalty vs closest ref length).
+fn bleu(hyp: &[i32], refs: &[&Vec<i32>], max_n: usize) -> f64 {
+    if hyp.is_empty() || refs.is_empty() {
+        return 0.0;
+    }
+    let mut log_sum = 0f64;
+    let mut valid_orders = 0usize;
+    for n in 1..=max_n.min(hyp.len()) {
+        let hc = ngram_counts(hyp, n);
+        // max reference count per n-gram
+        let mut rc: HashMap<&[i32], usize> = HashMap::new();
+        for r in refs {
+            for (g, c) in ngram_counts(r, n) {
+                let e = rc.entry(g).or_insert(0);
+                *e = (*e).max(c);
+            }
+        }
+        let total: usize = hc.values().sum();
+        let matched: usize = hc.iter().map(|(g, c)| (*c).min(*rc.get(g).unwrap_or(&0))).sum();
+        if total == 0 {
+            continue;
+        }
+        // smoothed precision (add-eps) so a zero order doesn't nuke the mean
+        let p = (matched as f64 + 1e-9) / total as f64;
+        log_sum += p.ln();
+        valid_orders += 1;
+    }
+    if valid_orders == 0 {
+        return 0.0;
+    }
+    let prec = (log_sum / valid_orders as f64).exp();
+    // brevity penalty against the closest reference length
+    let hl = hyp.len() as f64;
+    let rl = refs
+        .iter()
+        .map(|r| r.len() as f64)
+        .min_by(|a, b| ((a - hl).abs()).total_cmp(&(b - hl).abs()))
+        .unwrap_or(hl);
+    let bp = if hl >= rl { 1.0 } else { (1.0 - rl / hl).exp() };
+    bp * prec
+}
+
+/// Self-BLEU over a batch: mean BLEU-4 of each sequence against the rest.
+/// Higher = less diverse.
+pub fn self_bleu(seqs: &[Vec<i32>]) -> f64 {
+    if seqs.len() < 2 {
+        return 0.0;
+    }
+    let mut sum = 0f64;
+    for (i, hyp) in seqs.iter().enumerate() {
+        let refs: Vec<&Vec<i32>> =
+            seqs.iter().enumerate().filter(|(j, _)| *j != i).map(|(_, s)| s).collect();
+        sum += bleu(hyp, &refs, 4);
+    }
+    sum / seqs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct1_bounds() {
+        let all_same = vec![vec![1, 1, 1], vec![1, 1]];
+        assert!((distinct_1(&all_same) - 0.2).abs() < 1e-9);
+        let all_diff = vec![vec![1, 2], vec![3, 4]];
+        assert_eq!(distinct_1(&all_diff), 1.0);
+        assert_eq!(distinct_1(&[]), 0.0);
+    }
+
+    #[test]
+    fn self_bleu_identical_is_high() {
+        let seqs = vec![vec![1, 2, 3, 4, 5]; 4];
+        assert!(self_bleu(&seqs) > 0.99);
+    }
+
+    #[test]
+    fn self_bleu_disjoint_is_low() {
+        let seqs = vec![
+            vec![1, 2, 3, 4, 5, 6],
+            vec![7, 8, 9, 10, 11, 12],
+            vec![13, 14, 15, 16, 17, 18],
+        ];
+        assert!(self_bleu(&seqs) < 0.05);
+    }
+
+    #[test]
+    fn self_bleu_ordering_matches_diversity() {
+        let similar = vec![
+            vec![1, 2, 3, 4, 5, 6, 7, 8],
+            vec![1, 2, 3, 4, 5, 6, 7, 9],
+            vec![1, 2, 3, 4, 5, 6, 8, 9],
+        ];
+        let diverse = vec![
+            vec![1, 2, 3, 4, 5, 6, 7, 8],
+            vec![9, 10, 11, 1, 2, 12, 13, 14],
+            vec![15, 16, 3, 4, 17, 18, 19, 20],
+        ];
+        assert!(self_bleu(&similar) > self_bleu(&diverse));
+    }
+
+    #[test]
+    fn singleton_batch_is_zero() {
+        assert_eq!(self_bleu(&[vec![1, 2, 3]]), 0.0);
+    }
+}

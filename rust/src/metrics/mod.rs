@@ -1,0 +1,14 @@
+//! Metrics: rollout diversity, cross-epoch overlap, run reports.
+//!
+//! - [`diversity`] — Distinct-1 and Self-BLEU (Figure 6).
+//! - [`overlap`] — ROUGE-1 between consecutive-epoch rollouts (Figure 2).
+//! - [`report`] — CSV/JSONL writers for per-step series (Tables 7–27,
+//!   Figures 8–11) and the table renderer used by the benches.
+
+pub mod diversity;
+pub mod overlap;
+pub mod report;
+
+pub use diversity::{distinct_1, self_bleu};
+pub use overlap::rouge1_f1;
+pub use report::{Report, Table};

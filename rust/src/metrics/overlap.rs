@@ -1,0 +1,77 @@
+//! ROUGE-1 overlap between consecutive-epoch rollouts (Figure 2).
+//!
+//! The paper motivates SPEC-RL by measuring token overlap (ROUGE-1) between
+//! rollouts of the same prompt in consecutive epochs under vanilla RLVR.
+//! The trainer computes this from the shadow cache whenever a prompt
+//! reappears.
+
+use std::collections::HashMap;
+
+/// ROUGE-1 F1 between two token sequences (clipped unigram overlap).
+pub fn rouge1_f1(a: &[i32], b: &[i32]) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return 0.0;
+    }
+    let mut ca: HashMap<i32, usize> = HashMap::new();
+    for &t in a {
+        *ca.entry(t).or_insert(0) += 1;
+    }
+    let mut cb: HashMap<i32, usize> = HashMap::new();
+    for &t in b {
+        *cb.entry(t).or_insert(0) += 1;
+    }
+    let overlap: usize = ca.iter().map(|(t, c)| (*c).min(*cb.get(t).unwrap_or(&0))).sum();
+    let p = overlap as f64 / b.len() as f64;
+    let r = overlap as f64 / a.len() as f64;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// Longest-common-prefix length (the quantity SPEC-RL actually exploits).
+pub fn common_prefix_len(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_one() {
+        assert!((rouge1_f1(&[1, 2, 3], &[1, 2, 3]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        assert_eq!(rouge1_f1(&[1, 2], &[3, 4]), 0.0);
+    }
+
+    #[test]
+    fn order_invariant_unigrams() {
+        assert!((rouge1_f1(&[1, 2, 3], &[3, 2, 1]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_overlap() {
+        // a={1,2}, b={2,3}: overlap 1, p=r=0.5, f1=0.5
+        assert!((rouge1_f1(&[1, 2], &[2, 3]) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clipped_counts() {
+        // repeated token only counts up to min multiplicity
+        let f = rouge1_f1(&[5, 5, 5, 5], &[5]);
+        // overlap=1, p=1.0, r=0.25 => f1=0.4
+        assert!((f - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefix_len() {
+        assert_eq!(common_prefix_len(&[1, 2, 3, 9], &[1, 2, 3, 4, 5]), 3);
+        assert_eq!(common_prefix_len(&[], &[1]), 0);
+        assert_eq!(common_prefix_len(&[7], &[7]), 1);
+    }
+}

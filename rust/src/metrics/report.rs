@@ -1,0 +1,173 @@
+//! Run reporting: per-step CSV series + aligned-text table rendering.
+//!
+//! Every bench/example writes its series to `out/<name>.csv` (the data
+//! behind Tables 7–27 and Figures 4–11) and prints paper-shaped tables via
+//! [`Table`].
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Append-oriented CSV writer for per-step series.
+pub struct Report {
+    path: PathBuf,
+    columns: Vec<String>,
+    rows: Vec<Vec<f64>>,
+}
+
+impl Report {
+    pub fn new(path: impl AsRef<Path>, columns: &[&str]) -> Report {
+        Report {
+            path: path.as_ref().to_path_buf(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Add one row; missing trailing values are allowed (NaN-filled).
+    pub fn push(&mut self, values: &[f64]) {
+        let mut row = values.to_vec();
+        row.resize(self.columns.len(), f64::NAN);
+        self.rows.push(row);
+    }
+
+    /// Add a row from (column, value) pairs; unnamed columns get NaN.
+    pub fn push_map(&mut self, map: &BTreeMap<&str, f64>) {
+        let row: Vec<f64> = self
+            .columns
+            .iter()
+            .map(|c| map.get(c.as_str()).copied().unwrap_or(f64::NAN))
+            .collect();
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[Vec<f64>] {
+        &self.rows
+    }
+
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.columns.iter().position(|c| c == name)?;
+        Some(self.rows.iter().map(|r| r[idx]).collect())
+    }
+
+    /// Write the CSV (creates parent dirs).
+    pub fn save(&self) -> Result<()> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut f = std::fs::File::create(&self.path)
+            .with_context(|| format!("creating {:?}", self.path))?;
+        writeln!(f, "{}", self.columns.join(","))?;
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .map(|v| if v.is_nan() { String::new() } else { format!("{v:.6}") })
+                .collect();
+            writeln!(f, "{}", line.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Paper-shaped aligned-text table.
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        s.push_str(&fmt_row(&self.header, &widths));
+        s.push('\n');
+        s.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&fmt_row(r, &widths));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("specrl_report_test.csv");
+        let mut r = Report::new(&dir, &["step", "reward"]);
+        r.push(&[1.0, 0.5]);
+        r.push(&[2.0]);
+        r.save().unwrap();
+        let text = std::fs::read_to_string(&dir).unwrap();
+        assert!(text.starts_with("step,reward\n"));
+        assert!(text.contains("1.000000,0.500000"));
+        // missing value -> empty cell
+        assert!(text.contains("2.000000,\n"));
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn column_extraction() {
+        let mut r = Report::new("/tmp/unused.csv", &["a", "b"]);
+        r.push(&[1.0, 2.0]);
+        r.push(&[3.0, 4.0]);
+        assert_eq!(r.column("b").unwrap(), vec![2.0, 4.0]);
+        assert!(r.column("c").is_none());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["algo", "speedup"]);
+        t.row(vec!["grpo".into(), "2.29x".into()]);
+        t.row(vec!["grpo+spec".into(), "1.00x".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("grpo+spec"));
+        // columns aligned: each data line same length
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn push_map_fills_by_name() {
+        let mut r = Report::new("/tmp/unused2.csv", &["x", "y"]);
+        let mut m = BTreeMap::new();
+        m.insert("y", 7.0);
+        r.push_map(&m);
+        assert!(r.rows()[0][0].is_nan());
+        assert_eq!(r.rows()[0][1], 7.0);
+    }
+}

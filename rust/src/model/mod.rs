@@ -1,0 +1,136 @@
+//! Policy/value handles: device-resident parameter blobs + checkpointing.
+//!
+//! A [`Policy`] owns the flat `[params | adam_m | adam_v | step | metrics]`
+//! blob as a PJRT buffer. Train entries consume and produce whole blobs, so
+//! "apply an update" is a buffer swap — parameters never round-trip through
+//! the host except for checkpoint save/load (npy via the xla crate).
+
+use anyhow::{Context, Result};
+use xla::FromRawBytes;
+
+use crate::runtime::Engine;
+
+/// Device-resident model state bound to a manifest bundle.
+pub struct Policy {
+    /// Bundle name, e.g. "tiny_b32".
+    pub bundle: String,
+    /// The state blob (device).
+    pub blob: xla::PjRtBuffer,
+    /// Cached sizes from the manifest.
+    pub n_params: usize,
+    pub blob_size: usize,
+}
+
+/// Step counter + train metrics read back from a train call.
+#[derive(Clone, Debug, Default)]
+pub struct TrainMetrics {
+    pub step: f32,
+    /// Raw metric slots (names in `manifest.metric_slots`).
+    pub slots: Vec<f32>,
+}
+
+impl TrainMetrics {
+    pub fn get(&self, engine: &Engine, name: &str) -> f32 {
+        self.slots[engine.manifest.metric_index(name)]
+    }
+}
+
+impl Policy {
+    /// Fresh policy from the bundle's init blob.
+    pub fn from_init(engine: &Engine, bundle: &str) -> Result<Policy> {
+        let info = engine.bundle(bundle)?.clone();
+        let blob = engine.upload_npy(&info.init_blob)?;
+        Ok(Policy {
+            bundle: bundle.to_string(),
+            blob,
+            n_params: info.n_params,
+            blob_size: info.blob_size,
+        })
+    }
+
+    /// Deep-copy the blob (host round-trip; used to freeze the reference
+    /// policy for GRPO's KL term).
+    pub fn duplicate(&self, engine: &Engine) -> Result<Policy> {
+        let host = engine.read_f32(&self.blob)?;
+        Ok(Policy {
+            bundle: self.bundle.clone(),
+            blob: engine.upload_f32(&host, &[host.len()])?,
+            n_params: self.n_params,
+            blob_size: self.blob_size,
+        })
+    }
+
+    /// Replace the blob (after a train call).
+    pub fn swap(&mut self, new_blob: xla::PjRtBuffer) {
+        self.blob = new_blob;
+    }
+
+    /// Read `[step | metrics]` via the bundle's `read_metrics` entry.
+    pub fn metrics(&self, engine: &Engine) -> Result<TrainMetrics> {
+        let out = engine.call(&self.bundle, "read_metrics", &[&self.blob])?;
+        let host = engine.read_f32(&out)?;
+        Ok(TrainMetrics { step: host[0], slots: host[1..].to_vec() })
+    }
+
+    /// Save the whole blob to an .npy checkpoint.
+    pub fn save(&self, engine: &Engine, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let host = engine.read_f32(&self.blob)?;
+        crate::util::npy::write_npy_f32(path.as_ref(), &host)
+            .context("writing checkpoint npy")?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`Policy::save`].
+    pub fn load(engine: &Engine, bundle: &str, path: impl AsRef<std::path::Path>) -> Result<Policy> {
+        let info = engine.bundle(bundle)?.clone();
+        let lit = xla::Literal::read_npy(path.as_ref(), &())
+            .with_context(|| format!("reading checkpoint {:?}", path.as_ref()))?;
+        let host = lit.to_vec::<f32>()?;
+        anyhow::ensure!(
+            host.len() == info.blob_size,
+            "checkpoint size {} != bundle blob size {} (wrong bundle?)",
+            host.len(),
+            info.blob_size
+        );
+        let blob = engine.upload_f32(&host, &[host.len()])?;
+        Ok(Policy {
+            bundle: bundle.to_string(),
+            blob,
+            n_params: info.n_params,
+            blob_size: info.blob_size,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let eng = Engine::load("artifacts").unwrap();
+        let p = Policy::from_init(&eng, "tiny_b32").unwrap();
+        let dir = std::env::temp_dir().join("specrl_test_ckpt.npy");
+        p.save(&eng, &dir).unwrap();
+        let q = Policy::load(&eng, "tiny_b32", &dir).unwrap();
+        let a = eng.read_f32(&p.blob).unwrap();
+        let b = eng.read_f32(&q.blob).unwrap();
+        assert_eq!(a, b);
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn metrics_of_fresh_blob_are_zero() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let eng = Engine::load("artifacts").unwrap();
+        let p = Policy::from_init(&eng, "tiny_b32").unwrap();
+        let m = p.metrics(&eng).unwrap();
+        assert_eq!(m.step, 0.0);
+        assert!(m.slots.iter().all(|&x| x == 0.0));
+    }
+}

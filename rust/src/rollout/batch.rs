@@ -1,0 +1,208 @@
+//! Sequence tasks, results, and canonical [B, T] batch packing.
+
+use crate::tokenizer::{EOS, PAD};
+
+/// One sequence to produce: a prompt plus an optional verified prefix to
+/// resume from (SPEC-RL reuse). `prefix` tokens count as response tokens.
+#[derive(Clone, Debug)]
+pub struct SeqTask {
+    /// Caller-chosen id (cache key); results carry it back.
+    pub id: usize,
+    /// BOS + prompt token ids (≤ prompt_len).
+    pub prompt: Vec<i32>,
+    /// Already-accepted response prefix (possibly empty; may end in EOS).
+    pub prefix: Vec<i32>,
+    /// Current-policy log-probs of the prefix tokens (from verification).
+    pub prefix_logps: Vec<f32>,
+}
+
+impl SeqTask {
+    pub fn fresh(id: usize, prompt: Vec<i32>) -> Self {
+        SeqTask { id, prompt, prefix: Vec::new(), prefix_logps: Vec::new() }
+    }
+
+    /// Prefix already terminates the sequence (fully reused finished draft).
+    pub fn prefix_is_terminal(&self, gen_len: usize) -> bool {
+        self.prefix.last() == Some(&EOS) || self.prefix.len() >= gen_len
+    }
+}
+
+/// A finished sequence.
+#[derive(Clone, Debug)]
+pub struct SeqResult {
+    pub id: usize,
+    /// Full response (reused prefix + newly decoded), incl. EOS if emitted.
+    pub response: Vec<i32>,
+    /// Per-response-token log-probs under the *current* policy.
+    pub logps: Vec<f32>,
+    /// How many leading tokens were reused from the draft.
+    pub reused: usize,
+    /// Newly decoded tokens (== response.len() - reused).
+    pub new_tokens: usize,
+    /// EOS emitted (vs length cap).
+    pub finished: bool,
+}
+
+/// Canonical [B, T] packing for one wave.
+pub struct BatchLayout {
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub total_len: usize,
+    pub tokens: Vec<i32>,
+    pub valid: Vec<f32>,
+    /// Per-row last real slot (P + resp_len - 1, or P-1 when resp empty).
+    pub last: Vec<i32>,
+    /// Per-row current response length.
+    pub resp_len: Vec<usize>,
+    /// Per-row active flag (false for filler rows of a partial wave).
+    pub active: Vec<bool>,
+}
+
+impl BatchLayout {
+    /// Pack up to `batch` tasks. Rows beyond `tasks.len()` are inert
+    /// filler (all-invalid; never sampled).
+    pub fn pack(tasks: &[SeqTask], batch: usize, prompt_len: usize, total_len: usize) -> Self {
+        assert!(tasks.len() <= batch);
+        let mut l = BatchLayout {
+            batch,
+            prompt_len,
+            total_len,
+            tokens: vec![PAD; batch * total_len],
+            valid: vec![0.0; batch * total_len],
+            last: vec![(prompt_len - 1) as i32; batch],
+            resp_len: vec![0; batch],
+            active: vec![false; batch],
+        };
+        for (r, task) in tasks.iter().enumerate() {
+            assert!(
+                task.prompt.len() <= prompt_len,
+                "prompt {} tokens > prompt_len {}",
+                task.prompt.len(),
+                prompt_len
+            );
+            let gen_len = total_len - prompt_len;
+            assert!(task.prefix.len() <= gen_len);
+            let row = r * total_len;
+            let start = prompt_len - task.prompt.len();
+            for (i, &t) in task.prompt.iter().enumerate() {
+                l.tokens[row + start + i] = t;
+                l.valid[row + start + i] = 1.0;
+            }
+            for (i, &t) in task.prefix.iter().enumerate() {
+                l.tokens[row + prompt_len + i] = t;
+                l.valid[row + prompt_len + i] = 1.0;
+            }
+            l.resp_len[r] = task.prefix.len();
+            l.last[r] = (prompt_len + task.prefix.len()) as i32 - 1;
+            l.active[r] = true;
+        }
+        l
+    }
+
+    /// Append a sampled token to row `r` (updates tokens/valid/last).
+    /// Returns the physical slot written.
+    pub fn push_token(&mut self, r: usize, token: i32) -> usize {
+        let slot = self.prompt_len + self.resp_len[r];
+        assert!(slot < self.total_len, "row {r} overflow");
+        self.tokens[r * self.total_len + slot] = token;
+        self.valid[r * self.total_len + slot] = 1.0;
+        self.resp_len[r] += 1;
+        self.last[r] = slot as i32;
+        slot
+    }
+
+    /// Number of valid tokens in row `r` (logical length).
+    pub fn n_valid(&self, r: usize) -> usize {
+        let row = &self.valid[r * self.total_len..(r + 1) * self.total_len];
+        row.iter().filter(|&&v| v > 0.5).count() as usize
+    }
+
+    /// Extract row `r`'s response tokens.
+    pub fn response(&self, r: usize) -> Vec<i32> {
+        let row = r * self.total_len;
+        (0..self.resp_len[r]).map(|i| self.tokens[row + self.prompt_len + i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::BOS;
+
+    fn task(id: usize, p: &[i32], pre: &[i32]) -> SeqTask {
+        SeqTask {
+            id,
+            prompt: p.to_vec(),
+            prefix: pre.to_vec(),
+            prefix_logps: vec![-1.0; pre.len()],
+        }
+    }
+
+    #[test]
+    fn pack_right_aligns_prompts() {
+        let t = task(0, &[BOS, 10, 11], &[]);
+        let l = BatchLayout::pack(&[t], 2, 8, 16);
+        // slots 5,6,7 hold the prompt
+        assert_eq!(&l.tokens[5..8], &[BOS, 10, 11]);
+        assert_eq!(&l.valid[..5], &[0.0; 5]);
+        assert_eq!(l.last[0], 7);
+        // filler row inert
+        assert!(!l.active[1]);
+        assert!(l.valid[16..32].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pack_places_prefix_in_response_region() {
+        let t = task(0, &[BOS, 10], &[20, 21, 22]);
+        let l = BatchLayout::pack(&[t], 1, 8, 16);
+        assert_eq!(&l.tokens[8..11], &[20, 21, 22]);
+        assert_eq!(l.resp_len[0], 3);
+        assert_eq!(l.last[0], 10);
+        assert_eq!(l.response(0), vec![20, 21, 22]);
+    }
+
+    #[test]
+    fn push_token_advances() {
+        let t = task(0, &[BOS], &[]);
+        let mut l = BatchLayout::pack(&[t], 1, 8, 16);
+        let s1 = l.push_token(0, 30);
+        let s2 = l.push_token(0, 31);
+        assert_eq!((s1, s2), (8, 9));
+        assert_eq!(l.response(0), vec![30, 31]);
+        assert_eq!(l.n_valid(0), 3);
+    }
+
+    #[test]
+    fn pack_then_unpack_is_identity() {
+        // invariant 7 in DESIGN.md
+        let tasks = vec![
+            task(0, &[BOS, 5, 6, 7], &[40, 41]),
+            task(1, &[BOS, 9], &[]),
+        ];
+        let l = BatchLayout::pack(&tasks, 4, 8, 20);
+        for (r, t) in tasks.iter().enumerate() {
+            assert_eq!(l.response(r), t.prefix);
+            let row = r * 20;
+            let start = 8 - t.prompt.len();
+            let got: Vec<i32> = (0..t.prompt.len()).map(|i| l.tokens[row + start + i]).collect();
+            assert_eq!(got, t.prompt);
+        }
+    }
+
+    #[test]
+    fn terminal_prefix_detection() {
+        let mut t = task(0, &[BOS], &[40, EOS]);
+        assert!(t.prefix_is_terminal(48));
+        t.prefix = vec![40, 41];
+        assert!(!t.prefix_is_terminal(48));
+        t.prefix = vec![7; 48];
+        assert!(t.prefix_is_terminal(48));
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_prompt_panics() {
+        let t = task(0, &[1; 20], &[]);
+        BatchLayout::pack(&[t], 1, 8, 16);
+    }
+}

@@ -1,0 +1,232 @@
+//! Wave-scheduled batched generation over the PJRT decode entries.
+
+use anyhow::Result;
+
+use super::batch::{BatchLayout, SeqResult, SeqTask};
+use crate::model::Policy;
+use crate::runtime::Engine;
+use crate::tokenizer::EOS;
+use crate::util::{Rng, StageTimer, TopPSampler};
+
+/// Aggregate statistics for one `run` call.
+#[derive(Clone, Debug, Default)]
+pub struct RolloutStats {
+    /// Newly decoded tokens (the paper's "Tokens" efficiency metric).
+    pub new_tokens: usize,
+    /// Tokens taken from verified prefixes.
+    pub reused_tokens: usize,
+    /// Decode executable invocations (per-wave steps summed).
+    pub decode_steps: usize,
+    /// Waves executed.
+    pub waves: usize,
+}
+
+/// Sampling configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleCfg {
+    pub temperature: f32,
+    pub top_p: f32,
+}
+
+impl Default for SampleCfg {
+    fn default() -> Self {
+        SampleCfg { temperature: 1.0, top_p: 1.0 }
+    }
+}
+
+/// The batched rollout engine bound to one (engine, bundle).
+pub struct RolloutEngine<'e> {
+    eng: &'e Engine,
+    bundle: String,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub total_len: usize,
+    pub vocab: usize,
+    sampler: TopPSampler,
+}
+
+impl<'e> RolloutEngine<'e> {
+    pub fn new(eng: &'e Engine, bundle: &str) -> Result<Self> {
+        let info = eng.bundle(bundle)?.clone();
+        Ok(RolloutEngine {
+            eng,
+            bundle: bundle.to_string(),
+            batch: info.batch,
+            prompt_len: eng.manifest.prompt_len,
+            total_len: eng.manifest.total_len,
+            vocab: info.model.vocab,
+            sampler: TopPSampler::new(info.model.vocab),
+        })
+    }
+
+    pub fn gen_len(&self) -> usize {
+        self.total_len - self.prompt_len
+    }
+
+    /// Generate all tasks, wave by wave. Stage accounting: decode work under
+    /// `"rollout"`, result assembly under `"assembly"`.
+    pub fn run(
+        &mut self,
+        policy: &Policy,
+        mut tasks: Vec<SeqTask>,
+        cfg: SampleCfg,
+        rng: &mut Rng,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, RolloutStats)> {
+        let mut stats = RolloutStats::default();
+        let mut results: Vec<SeqResult> = Vec::with_capacity(tasks.len());
+
+        // Fully-reused terminal drafts never enter a wave.
+        let gen_len = self.gen_len();
+        let mut pending: Vec<SeqTask> = Vec::with_capacity(tasks.len());
+        for t in tasks.drain(..) {
+            if t.prefix_is_terminal(gen_len) {
+                stats.reused_tokens += t.prefix.len();
+                let finished = t.prefix.last() == Some(&EOS);
+                results.push(SeqResult {
+                    id: t.id,
+                    reused: t.prefix.len(),
+                    new_tokens: 0,
+                    finished,
+                    logps: t.prefix_logps,
+                    response: t.prefix,
+                });
+            } else {
+                pending.push(t);
+            }
+        }
+
+        // Wave scheduling: longest prefixes first => rows within a wave have
+        // similar remaining lengths and wall-clock tracks token counts.
+        pending.sort_by(|a, b| b.prefix.len().cmp(&a.prefix.len()).then(a.id.cmp(&b.id)));
+
+        let mut idx = 0;
+        while idx < pending.len() {
+            let wave = &pending[idx..(idx + self.batch).min(pending.len())];
+            let wave_res = self.run_wave(policy, wave, cfg, rng, timer, &mut stats)?;
+            results.extend(wave_res);
+            idx += self.batch;
+            stats.waves += 1;
+        }
+
+        results.sort_by_key(|r| r.id);
+        Ok((results, stats))
+    }
+
+    /// One wave: prefill + lockstep decode until every row finishes.
+    fn run_wave(
+        &mut self,
+        policy: &Policy,
+        tasks: &[SeqTask],
+        cfg: SampleCfg,
+        rng: &mut Rng,
+        timer: &mut StageTimer,
+        stats: &mut RolloutStats,
+    ) -> Result<Vec<SeqResult>> {
+        let (b, p, t) = (self.batch, self.prompt_len, self.total_len);
+        let gen_len = self.gen_len();
+        let mut layout = BatchLayout::pack(tasks, b, p, t);
+        let n = tasks.len();
+
+        let mut logps: Vec<Vec<f32>> = tasks.iter().map(|x| x.prefix_logps.clone()).collect();
+        let mut finished = vec![false; n];
+        let mut eos_emitted = vec![false; n];
+
+        // --- prefill ---------------------------------------------------------
+        let span = std::time::Instant::now();
+        let temp_buf = self.eng.upload_f32(&[cfg.temperature], &[1])?;
+        let tok_buf = self.eng.upload_i32(&layout.tokens, &[b, t])?;
+        let val_buf = self.eng.upload_f32(&layout.valid, &[b, t])?;
+        let last_buf = self.eng.upload_i32(&layout.last, &[b])?;
+        let mut gen_blob = self.eng.call(
+            &self.bundle,
+            "prefill",
+            &[&policy.blob, &tok_buf, &val_buf, &last_buf, &temp_buf],
+        )?;
+        let mut probs = self.read_probs(&gen_blob)?;
+        timer.add("rollout", span.elapsed().as_secs_f64());
+
+        // --- decode loop ------------------------------------------------------
+        let mut token_in = vec![0i32; b];
+        let mut slot_in = vec![t as i32; b]; // out-of-range => no cache write
+        let mut lpos_in = vec![0i32; b];
+        loop {
+            let span = std::time::Instant::now();
+            let mut any_active = false;
+            for r in 0..n {
+                if finished[r] || layout.resp_len[r] >= gen_len {
+                    slot_in[r] = t as i32; // inert write
+                    token_in[r] = 0;
+                    continue;
+                }
+                let row = r * self.vocab;
+                let pr = &probs[row..row + self.vocab];
+                let tok = self.sampler.sample_with(pr, cfg.top_p, rng) as i32;
+                let lp = pr[tok as usize].max(1e-30).ln();
+                let slot = layout.push_token(r, tok);
+                logps[r].push(lp);
+                token_in[r] = tok;
+                slot_in[r] = slot as i32;
+                lpos_in[r] = (layout.n_valid(r) - 1) as i32;
+                stats.new_tokens += 1;
+                if tok == EOS {
+                    finished[r] = true;
+                    eos_emitted[r] = true;
+                } else if layout.resp_len[r] >= gen_len {
+                    finished[r] = true;
+                } else {
+                    any_active = true;
+                }
+            }
+            timer.add("rollout", span.elapsed().as_secs_f64());
+            if !any_active {
+                break;
+            }
+
+            let span = std::time::Instant::now();
+            let tok_b = self.eng.upload_i32(&token_in, &[b])?;
+            let slot_b = self.eng.upload_i32(&slot_in, &[b])?;
+            let lpos_b = self.eng.upload_i32(&lpos_in, &[b])?;
+            let val_b = self.eng.upload_f32(&layout.valid, &[b, t])?;
+            gen_blob = self.eng.call(
+                &self.bundle,
+                "decode",
+                &[&policy.blob, &gen_blob, &tok_b, &slot_b, &lpos_b, &val_b, &temp_buf],
+            )?;
+            probs = self.read_probs(&gen_blob)?;
+            stats.decode_steps += 1;
+            timer.add("rollout", span.elapsed().as_secs_f64());
+        }
+
+        // --- assemble ---------------------------------------------------------
+        let span = std::time::Instant::now();
+        let mut out = Vec::with_capacity(n);
+        for (r, task) in tasks.iter().enumerate() {
+            let response = layout.response(r);
+            stats.reused_tokens += task.prefix.len();
+            out.push(SeqResult {
+                id: task.id,
+                reused: task.prefix.len(),
+                new_tokens: response.len() - task.prefix.len(),
+                finished: eos_emitted[r],
+                logps: std::mem::take(&mut logps[r]),
+                response,
+            });
+        }
+        timer.add("assembly", span.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    fn read_probs(&mut self, gen_blob: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let out = self.eng.call(&self.bundle, "read_gen", &[gen_blob])?;
+        self.eng.read_f32(&out)
+    }
+}
+
+impl TopPSampler {
+    /// Borrow-friendly alias used by the engine (self.sampler lives beside
+    /// other &mut self fields).
+    fn sample_with(&mut self, probs: &[f32], top_p: f32, rng: &mut Rng) -> usize {
+        self.sample(probs, top_p, rng)
+    }
+}

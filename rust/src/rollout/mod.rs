@@ -1,0 +1,26 @@
+//! The batched rollout engine — the vLLM substitute.
+//!
+//! Processes a queue of sequence tasks (prompt + optional reused prefix) in
+//! *waves* of at most `batch` rows. Within a wave all rows decode in
+//! lockstep on the static-shape AOT executables; rows finish independently
+//! (EOS or length cap) and finished rows become inert (their K/V writes
+//! vanish into masked slots).
+//!
+//! Wave scheduling: tasks are sorted by descending prefix length before
+//! being split into waves, so rows with similar *remaining* generation
+//! lengths share a wave. This is what makes wall-clock track generated
+//! tokens the way a continuous-batching engine does — a wave of
+//! fully-reused drafts costs zero decode steps. (Without it, one
+//! zero-prefix row would pin every wave at `gen_len` steps and the paper's
+//! wall-clock speedups would be structurally unreachable on a lockstep
+//! engine; see DESIGN.md.)
+//!
+//! Canonical layout (shared with L2): prompts right-aligned into slots
+//! `[0, P)`, responses in `[P, T)`; positional embeddings are logical
+//! (mask-cumsum) so physical padding is invisible to the model.
+
+pub mod batch;
+pub mod engine;
+
+pub use batch::{BatchLayout, SeqResult, SeqTask};
+pub use engine::{RolloutEngine, RolloutStats, SampleCfg};

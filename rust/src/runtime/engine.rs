@@ -1,0 +1,215 @@
+//! The PJRT engine: compile-once executables + typed buffer helpers.
+//!
+//! One [`Engine`] wraps one `PjRtClient` and the artifact manifest.
+//! Executables compile lazily on first use and are cached for the process
+//! lifetime. All `call`s validate argument count/shape against the
+//! manifest, execute buffer-to-buffer (`execute_b`), and account wall-clock
+//! into per-entry [`EntryStats`] (the raw data behind EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::FromRawBytes;
+
+use super::manifest::{BundleInfo, EntryInfo, Manifest};
+
+/// Cumulative per-entry execution statistics.
+#[derive(Clone, Debug, Default)]
+pub struct EntryStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// Compile-once, execute-many PJRT wrapper.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<HashMap<String, EntryStats>>,
+}
+
+impl Engine {
+    /// Load the manifest and create the CPU client. Executables compile on
+    /// first call (`warmup` forces them eagerly).
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn bundle(&self, name: &str) -> Result<&BundleInfo> {
+        self.manifest.bundle(name)
+    }
+
+    fn entry<'a>(&'a self, bundle: &str, entry: &str) -> Result<&'a EntryInfo> {
+        let b = self.manifest.bundle(bundle)?;
+        b.entries
+            .get(entry)
+            .with_context(|| format!("bundle '{bundle}' has no entry '{entry}'"))
+    }
+
+    fn executable(
+        &self,
+        bundle: &str,
+        entry: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{bundle}/{entry}");
+        if let Some(exe) = self.exes.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let info = self.entry(bundle, entry)?;
+        let path = self.manifest.dir.join(&info.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {key}"))?,
+        );
+        let secs = t0.elapsed().as_secs_f64();
+        self.stats.lock().unwrap().entry(key.clone()).or_default().compile_secs += secs;
+        log::debug!("compiled {key} in {secs:.2}s");
+        self.exes.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Force-compile every entry of a bundle (so run timings exclude JIT).
+    pub fn warmup(&self, bundle: &str) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.bundle(bundle)?.entries.keys().cloned().collect();
+        for e in names {
+            self.executable(bundle, &e)?;
+        }
+        Ok(())
+    }
+
+    // -- uploads -------------------------------------------------------------
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an f32 .npy file (the initial blobs written by aot.py).
+    pub fn upload_npy(&self, rel_path: &str) -> Result<xla::PjRtBuffer> {
+        let path = self.manifest.dir.join(rel_path);
+        let lit = xla::Literal::read_npy(&path, &())
+            .with_context(|| format!("reading npy {path:?}"))?;
+        let host = lit.to_vec::<f32>()?;
+        self.upload_f32(&host, &[host.len()])
+    }
+
+    // -- execute -------------------------------------------------------------
+    /// Execute `bundle/entry` with buffer args; returns the single flat
+    /// output buffer (device-resident).
+    pub fn call(
+        &self,
+        bundle: &str,
+        entry: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let info = self.entry(bundle, entry)?;
+        if args.len() != info.inputs.len() {
+            bail!(
+                "{bundle}/{entry}: expected {} args ({:?}), got {}",
+                info.inputs.len(),
+                info.inputs.iter().map(|a| a.name.as_str()).collect::<Vec<_>>(),
+                args.len()
+            );
+        }
+        let exe = self.executable(bundle, entry)?;
+        let t0 = Instant::now();
+        let mut outs = exe.execute_b(args)?;
+        let secs = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.lock().unwrap();
+            let s = stats.entry(format!("{bundle}/{entry}")).or_default();
+            s.calls += 1;
+            s.total_secs += secs;
+        }
+        let mut replica = outs.pop().context("no replica output")?;
+        if replica.len() != 1 {
+            bail!("{bundle}/{entry}: expected 1 output buffer, got {}", replica.len());
+        }
+        Ok(replica.pop().unwrap())
+    }
+
+    /// Copy a whole device buffer to host as f32.
+    pub fn read_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Snapshot per-entry stats (sorted by total time desc).
+    pub fn stats(&self) -> Vec<(String, EntryStats)> {
+        let mut v: Vec<(String, EntryStats)> = self
+            .stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
+        v
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::load("artifacts").unwrap())
+    }
+
+    #[test]
+    fn score_roundtrip_uniform_policy() {
+        let Some(eng) = engine() else { return };
+        let b = eng.bundle("tiny_b32").unwrap().clone();
+        let (bt, t, g, v) = (b.batch, eng.manifest.total_len, eng.manifest.gen_len(), b.model.vocab);
+        let blob = eng.upload_npy(&b.init_blob).unwrap();
+        let tokens: Vec<i32> = vec![5; bt * t];
+        let valid: Vec<f32> = vec![1.0; bt * t];
+        let temp: Vec<f32> = vec![1.0];
+        let tb = eng.upload_i32(&tokens, &[bt, t]).unwrap();
+        let vb = eng.upload_f32(&valid, &[bt, t]).unwrap();
+        let tp = eng.upload_f32(&temp, &[1]).unwrap();
+        let out = eng.call("tiny_b32", "score", &[&blob, &tb, &vb, &tp]).unwrap();
+        let host = eng.read_f32(&out).unwrap();
+        assert_eq!(host.len(), 2 * bt * g);
+        // init head is zero => uniform distribution => logp == -ln(V)
+        let expect = -(v as f32).ln();
+        assert!((host[0] - expect).abs() < 1e-4, "{} vs {expect}", host[0]);
+        // entropy == ln(V)
+        assert!((host[bt * g] + expect).abs() < 1e-4);
+        // stats recorded
+        let stats = eng.stats();
+        assert!(stats.iter().any(|(k, s)| k == "tiny_b32/score" && s.calls == 1));
+    }
+
+    #[test]
+    fn bad_arg_count_is_error() {
+        let Some(eng) = engine() else { return };
+        let b = eng.bundle("tiny_b32").unwrap().clone();
+        let blob = eng.upload_npy(&b.init_blob).unwrap();
+        assert!(eng.call("tiny_b32", "score", &[&blob]).is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Typed view of `artifacts/manifest.json` (written by `python -m
+//! compile.aot`). The manifest is the single contract between the python
+//! compile path and this runtime: shapes, blob sizes, output field offsets,
+//! file names, vocabulary.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Transformer hyperparameters of a lowered bundle.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+}
+
+/// One input argument of an entry point.
+#[derive(Clone, Debug)]
+pub struct ArgInfo {
+    pub name: String,
+    /// "f32" or "i32"
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One named field inside an entry's flat output.
+#[derive(Clone, Debug)]
+pub struct FieldInfo {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl FieldInfo {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    pub file: String,
+    pub inputs: Vec<ArgInfo>,
+    pub output_size: usize,
+    pub output_fields: Vec<FieldInfo>,
+}
+
+impl EntryInfo {
+    pub fn field(&self, name: &str) -> &FieldInfo {
+        self.output_fields
+            .iter()
+            .find(|f| f.name == name)
+            .unwrap_or_else(|| panic!("entry has no output field '{name}'"))
+    }
+}
+
+/// One (model, batch) bundle.
+#[derive(Clone, Debug)]
+pub struct BundleInfo {
+    pub model: ModelInfo,
+    pub batch: usize,
+    pub value_head: bool,
+    pub n_params: usize,
+    pub blob_size: usize,
+    pub gen_blob_size: usize,
+    pub init_blob: String,
+    pub entries: BTreeMap<String, EntryInfo>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub charset: String,
+    pub vocab: usize,
+    pub prompt_len: usize,
+    pub total_len: usize,
+    pub hp_names: Vec<String>,
+    pub metric_slots: Vec<String>,
+    pub use_pallas: bool,
+    pub bundles: BTreeMap<String, BundleInfo>,
+}
+
+impl Manifest {
+    pub fn gen_len(&self) -> usize {
+        self.total_len - self.prompt_len
+    }
+
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let geo = j.req("geometry");
+        let mut bundles = BTreeMap::new();
+        for (bname, bj) in j.req("bundles").as_obj().context("bundles")? {
+            bundles.insert(bname.clone(), parse_bundle(bj)?);
+        }
+        Ok(Manifest {
+            dir,
+            charset: j.req("charset").as_str().unwrap_or_default().to_string(),
+            vocab: j.req("vocab").as_usize().context("vocab")?,
+            prompt_len: geo.req("prompt_len").as_usize().context("prompt_len")?,
+            total_len: geo.req("total_len").as_usize().context("total_len")?,
+            hp_names: str_arr(j.req("hp_names")),
+            metric_slots: str_arr(j.req("metric_slots")),
+            use_pallas: j.req("use_pallas").as_bool().unwrap_or(true),
+            bundles,
+        })
+    }
+
+    /// Bundle by name, e.g. "tiny_b32".
+    pub fn bundle(&self, name: &str) -> Result<&BundleInfo> {
+        self.bundles.get(name).with_context(|| {
+            format!(
+                "bundle '{name}' not in manifest (have: {:?}); re-run `make artifacts MODELS=...`",
+                self.bundles.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Index of a metric slot by name (e.g. "loss").
+    pub fn metric_index(&self, name: &str) -> usize {
+        self.metric_slots
+            .iter()
+            .position(|s| s == name)
+            .unwrap_or_else(|| panic!("unknown metric slot '{name}'"))
+    }
+}
+
+fn str_arr(j: &Json) -> Vec<String> {
+    j.as_arr()
+        .map(|v| v.iter().filter_map(|x| x.as_str().map(|s| s.to_string())).collect())
+        .unwrap_or_default()
+}
+
+fn parse_bundle(bj: &Json) -> Result<BundleInfo> {
+    let mj = bj.req("model");
+    let model = ModelInfo {
+        name: mj.req("name").as_str().unwrap_or_default().to_string(),
+        n_layers: mj.req("n_layers").as_usize().context("n_layers")?,
+        d_model: mj.req("d_model").as_usize().context("d_model")?,
+        n_heads: mj.req("n_heads").as_usize().context("n_heads")?,
+        d_ff: mj.req("d_ff").as_usize().context("d_ff")?,
+        vocab: mj.req("vocab").as_usize().context("vocab")?,
+    };
+    let mut entries = BTreeMap::new();
+    for (ename, ej) in bj.req("entries").as_obj().context("entries")? {
+        let inputs = ej
+            .req("inputs")
+            .as_arr()
+            .context("inputs")?
+            .iter()
+            .map(|a| ArgInfo {
+                name: a.req("name").as_str().unwrap_or_default().to_string(),
+                dtype: a.req("dtype").as_str().unwrap_or_default().to_string(),
+                shape: a.req("shape").usize_arr(),
+            })
+            .collect();
+        let output_fields = ej
+            .req("output_fields")
+            .as_arr()
+            .context("output_fields")?
+            .iter()
+            .map(|f| FieldInfo {
+                name: f.req("name").as_str().unwrap_or_default().to_string(),
+                offset: f.req("offset").as_usize().unwrap_or(0),
+                shape: f.req("shape").usize_arr(),
+            })
+            .collect();
+        entries.insert(
+            ename.clone(),
+            EntryInfo {
+                file: ej.req("file").as_str().unwrap_or_default().to_string(),
+                inputs,
+                output_size: ej.req("output_size").as_usize().unwrap_or(0),
+                output_fields,
+            },
+        );
+    }
+    Ok(BundleInfo {
+        model,
+        batch: bj.req("batch").as_usize().context("batch")?,
+        value_head: bj.req("value_head").as_bool().unwrap_or(false),
+        n_params: bj.req("n_params").as_usize().context("n_params")?,
+        blob_size: bj.req("blob_size").as_usize().context("blob_size")?,
+        gen_blob_size: bj.req("gen_blob_size").as_usize().unwrap_or(0),
+        init_blob: bj.req("init_blob").as_str().unwrap_or_default().to_string(),
+        entries,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !manifest_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert_eq!(m.vocab, 51);
+        assert!(m.total_len > m.prompt_len);
+        let b = m.bundle("tiny_b32").unwrap();
+        assert_eq!(b.batch, 32);
+        assert!(b.entries.contains_key("verify"));
+        let v = &b.entries["verify"];
+        assert_eq!(v.field("reject_off").offset, 0);
+        assert_eq!(v.field("logp").offset, b.batch);
+    }
+
+    #[test]
+    fn unknown_bundle_is_error() {
+        if !manifest_available() {
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert!(m.bundle("no_such").is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load `artifacts/` once, execute forever.
+//!
+//! - [`manifest`] — typed view of `artifacts/manifest.json`.
+//! - [`engine`] — the PJRT CPU client, lazily-compiled executables, typed
+//!   upload/execute/read helpers, and per-entry timing stats.
+//!
+//! Design constraint discovered by probing this image's plugin (see
+//! DESIGN.md): multi-output executables return a *single tuple buffer* and
+//! `CopyRawToHost` is unimplemented, so every entry point is lowered with
+//! one flat array output, large state chains device-side buffer-to-buffer,
+//! and tiny `read_*` extraction executables service the host's need for
+//! probs/metrics.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EntryStats};
+pub use manifest::{ArgInfo, BundleInfo, EntryInfo, FieldInfo, Manifest, ModelInfo};

@@ -1,0 +1,144 @@
+//! The rollout cache: previous trajectories + their sampling log-probs.
+//!
+//! Keyed by sequence id (prompt index × group + sample slot). Each entry
+//! keeps the latest rollout and the one before it (the Delayed-Reuse
+//! ablation draws drafts from two steps back). "Log-probs" are the
+//! current-policy log-probs recorded when the trajectory was produced —
+//! exactly the `p_prev` of the acceptance rule next time the prompt
+//! reappears.
+
+use std::collections::HashMap;
+
+use crate::rollout::SeqResult;
+
+/// One cached trajectory.
+#[derive(Clone, Debug)]
+pub struct CacheEntry {
+    pub response: Vec<i32>,
+    pub logps: Vec<f32>,
+    /// Trainer step at which this rollout was produced.
+    pub version: u64,
+    /// Whether the trajectory terminated with EOS.
+    pub finished: bool,
+}
+
+impl CacheEntry {
+    pub fn from_result(r: &SeqResult, version: u64) -> Self {
+        debug_assert_eq!(r.response.len(), r.logps.len());
+        CacheEntry {
+            response: r.response.clone(),
+            logps: r.logps.clone(),
+            version,
+            finished: r.finished,
+        }
+    }
+}
+
+/// Latest + previous entry per sequence id.
+#[derive(Default, Debug)]
+pub struct RolloutCache {
+    slots: HashMap<usize, (CacheEntry, Option<CacheEntry>)>,
+}
+
+impl RolloutCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Most recent cached rollout for `id`.
+    pub fn latest(&self, id: usize) -> Option<&CacheEntry> {
+        self.slots.get(&id).map(|(latest, _)| latest)
+    }
+
+    /// The rollout before the latest (Delayed-Reuse ablation).
+    pub fn previous(&self, id: usize) -> Option<&CacheEntry> {
+        self.slots.get(&id).and_then(|(_, prev)| prev.as_ref())
+    }
+
+    /// Insert a fresh rollout, demoting the current latest to `previous`.
+    pub fn insert(&mut self, id: usize, entry: CacheEntry) {
+        match self.slots.remove(&id) {
+            Some((old_latest, _)) => {
+                self.slots.insert(id, (entry, Some(old_latest)));
+            }
+            None => {
+                self.slots.insert(id, (entry, None));
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.slots.clear();
+    }
+
+    /// Total cached tokens (memory telemetry).
+    pub fn total_tokens(&self) -> usize {
+        self.slots
+            .values()
+            .map(|(l, p)| l.response.len() + p.as_ref().map_or(0, |e| e.response.len()))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(tokens: &[i32], version: u64) -> CacheEntry {
+        CacheEntry {
+            response: tokens.to_vec(),
+            logps: vec![-1.0; tokens.len()],
+            version,
+            finished: true,
+        }
+    }
+
+    #[test]
+    fn insert_and_latest() {
+        let mut c = RolloutCache::new();
+        assert!(c.latest(0).is_none());
+        c.insert(0, entry(&[1, 2], 0));
+        assert_eq!(c.latest(0).unwrap().response, vec![1, 2]);
+        assert!(c.previous(0).is_none());
+    }
+
+    #[test]
+    fn insert_demotes_latest() {
+        let mut c = RolloutCache::new();
+        c.insert(7, entry(&[1], 0));
+        c.insert(7, entry(&[2], 1));
+        assert_eq!(c.latest(7).unwrap().response, vec![2]);
+        assert_eq!(c.previous(7).unwrap().response, vec![1]);
+        c.insert(7, entry(&[3], 2));
+        assert_eq!(c.latest(7).unwrap().response, vec![3]);
+        assert_eq!(c.previous(7).unwrap().response, vec![2]);
+    }
+
+    #[test]
+    fn versions_track_steps() {
+        let mut c = RolloutCache::new();
+        c.insert(1, entry(&[1], 10));
+        c.insert(1, entry(&[2], 11));
+        assert_eq!(c.latest(1).unwrap().version, 11);
+        assert_eq!(c.previous(1).unwrap().version, 10);
+    }
+
+    #[test]
+    fn token_accounting() {
+        let mut c = RolloutCache::new();
+        c.insert(0, entry(&[1, 2, 3], 0));
+        c.insert(0, entry(&[4, 5], 1));
+        assert_eq!(c.total_tokens(), 5);
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert!(c.is_empty());
+    }
+}

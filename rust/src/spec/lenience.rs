@@ -1,0 +1,102 @@
+//! The lenience parameter ℓ and its schedules.
+//!
+//! ℓ shifts the acceptance boundary `u <= min(1, l * p_curr/p_prev)`:
+//! ℓ=1 is exact speculative decoding, ℓ→∞ full reuse, ℓ→0 vanilla RLVR.
+//! The paper uses fixed ℓ (e^0.5 GRPO, e^0.3 PPO, e^0.15 DAPO) and names
+//! adaptive scheduling as future work — [`Lenience::Linear`] implements
+//! the obvious first version of that extension (see DESIGN.md).
+
+/// Lenience schedule; values are **log** lenience (log ℓ).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Lenience {
+    /// Constant log ℓ.
+    Fixed(f32),
+    /// Full reuse (ℓ = ∞).
+    Infinite,
+    /// No reuse (ℓ = 0) — degenerates to vanilla RLVR.
+    Zero,
+    /// Linear ramp of log ℓ from `from` to `to` over `steps` (extension:
+    /// conservative early when the policy moves fast, lenient late).
+    Linear { from: f32, to: f32, steps: u64 },
+}
+
+impl Lenience {
+    /// log ℓ at a given trainer step.
+    pub fn log_value(&self, step: u64) -> f32 {
+        match *self {
+            Lenience::Fixed(x) => x,
+            Lenience::Infinite => 1e9,
+            Lenience::Zero => -1e9,
+            Lenience::Linear { from, to, steps } => {
+                if steps == 0 {
+                    return to;
+                }
+                let a = (step.min(steps)) as f32 / steps as f32;
+                from + (to - from) * a
+            }
+        }
+    }
+
+    /// Parse "e0.5", "1.0", "inf", "zero", "linear:0:0.8:45".
+    pub fn parse(s: &str) -> Option<Lenience> {
+        match s {
+            "inf" | "infinite" => Some(Lenience::Infinite),
+            "zero" | "off" | "0" => Some(Lenience::Zero),
+            _ if s.starts_with("linear:") => {
+                let parts: Vec<&str> = s[7..].split(':').collect();
+                if parts.len() != 3 {
+                    return None;
+                }
+                Some(Lenience::Linear {
+                    from: parts[0].parse().ok()?,
+                    to: parts[1].parse().ok()?,
+                    steps: parts[2].parse().ok()?,
+                })
+            }
+            _ if s.starts_with('e') => s[1..].parse().ok().map(Lenience::Fixed),
+            _ => s.parse::<f32>().ok().map(|l| Lenience::Fixed(l.ln())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_constant() {
+        let l = Lenience::Fixed(0.5);
+        assert_eq!(l.log_value(0), 0.5);
+        assert_eq!(l.log_value(1000), 0.5);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(Lenience::parse("e0.5"), Some(Lenience::Fixed(0.5)));
+        assert_eq!(Lenience::parse("inf"), Some(Lenience::Infinite));
+        assert_eq!(Lenience::parse("zero"), Some(Lenience::Zero));
+        // plain number = ℓ itself: log applied
+        let Some(Lenience::Fixed(x)) = Lenience::parse("1.0") else { panic!() };
+        assert!(x.abs() < 1e-6);
+        assert_eq!(
+            Lenience::parse("linear:0:0.8:45"),
+            Some(Lenience::Linear { from: 0.0, to: 0.8, steps: 45 })
+        );
+        assert_eq!(Lenience::parse("garbage"), None);
+    }
+
+    #[test]
+    fn linear_ramps() {
+        let l = Lenience::Linear { from: 0.0, to: 1.0, steps: 10 };
+        assert_eq!(l.log_value(0), 0.0);
+        assert!((l.log_value(5) - 0.5).abs() < 1e-6);
+        assert_eq!(l.log_value(10), 1.0);
+        assert_eq!(l.log_value(50), 1.0);
+    }
+
+    #[test]
+    fn extremes() {
+        assert!(Lenience::Infinite.log_value(3) > 1e8);
+        assert!(Lenience::Zero.log_value(3) < -1e8);
+    }
+}

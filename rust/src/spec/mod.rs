@@ -1,0 +1,161 @@
+//! SPEC-RL: speculative rollouts via draft-and-verify reuse.
+//!
+//! The paper's contribution, as a drop-in wrapper around the rollout
+//! engine:
+//!
+//! 1. [`cache::RolloutCache`] stores each sequence's previous rollout
+//!    (tokens + the log-probs the sampling policy assigned them) and is
+//!    refreshed immediately after every step.
+//! 2. [`verifier::SpecVerifier`] packs all cached drafts of a step into
+//!    batched calls of the AOT `verify` entry — one teacher-forced forward
+//!    whose L1 kernels score every draft token under the current policy and
+//!    scan for the first rejection under the lenient acceptance rule
+//!    `u <= min(1, l * p_curr/p_prev)` (Algorithm 1).
+//! 3. [`SpecRollout::collect`] assembles verified prefixes into
+//!    [`SeqTask`]s, lets the rollout engine decode only the continuations,
+//!    and updates the cache with the new trajectories.
+//!
+//! [`variants`] implements the paper's ablation baselines (Random Reuse,
+//! Delayed Reuse, Full Reuse, and Off == vanilla RLVR).
+
+pub mod cache;
+pub mod lenience;
+pub mod variants;
+pub mod verifier;
+
+use anyhow::Result;
+
+use crate::model::Policy;
+use crate::rollout::{RolloutEngine, SampleCfg, SeqResult, SeqTask};
+use crate::runtime::Engine;
+use crate::util::{Rng, StageTimer};
+
+pub use cache::{CacheEntry, RolloutCache};
+pub use lenience::Lenience;
+pub use variants::ReuseVariant;
+pub use verifier::SpecVerifier;
+
+/// Per-step speculative-reuse telemetry (Figures 8/9 series).
+#[derive(Clone, Debug, Default)]
+pub struct SpecStepStats {
+    /// Sequences that had a cached draft to verify.
+    pub drafts: usize,
+    /// Mean verified prefix length over drafted sequences.
+    pub mean_prefix_len: f64,
+    /// Fraction of drafted sequences whose draft was fully reused.
+    pub full_reuse_ratio: f64,
+    /// Total reused tokens / newly decoded tokens.
+    pub reused_tokens: usize,
+    pub new_tokens: usize,
+    /// Number of `verify` executable invocations.
+    pub verify_calls: usize,
+}
+
+/// A prompt to roll out this step: `id` is the stable cache key
+/// (prompt index × group + sample index).
+#[derive(Clone, Debug)]
+pub struct RolloutRequest {
+    pub id: usize,
+    pub prompt: Vec<i32>,
+}
+
+/// The speculative rollout coordinator.
+pub struct SpecRollout {
+    pub cache: RolloutCache,
+    pub variant: ReuseVariant,
+    pub lenience: Lenience,
+    /// Current step counter (cache versioning).
+    pub step: u64,
+}
+
+impl SpecRollout {
+    pub fn new(variant: ReuseVariant, lenience: Lenience) -> Self {
+        SpecRollout { cache: RolloutCache::new(), variant, lenience, step: 0 }
+    }
+
+    /// Vanilla RLVR (no reuse, cache still shadow-updated for overlap
+    /// diagnostics like Figure 2).
+    pub fn vanilla() -> Self {
+        Self::new(ReuseVariant::Off, Lenience::Fixed(0.0))
+    }
+
+    /// Roll out one step's batch with speculative reuse.
+    ///
+    /// Returns results (sorted by id) and reuse telemetry. Stage timing:
+    /// `verification` (verify calls + acceptance), `rollout` / `assembly`
+    /// (inside the engine).
+    pub fn collect(
+        &mut self,
+        eng: &Engine,
+        rollout: &mut RolloutEngine,
+        policy: &Policy,
+        requests: &[RolloutRequest],
+        cfg: SampleCfg,
+        rng: &mut Rng,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, SpecStepStats)> {
+        let mut stats = SpecStepStats::default();
+        let loglen = self.lenience.log_value(self.step);
+
+        // 1. split into drafted / fresh
+        let mut tasks: Vec<SeqTask> = Vec::with_capacity(requests.len());
+        let mut to_verify: Vec<(usize, &RolloutRequest, CacheEntry)> = Vec::new();
+        for req in requests {
+            match self.variant.draft_for(&self.cache, req.id, self.step) {
+                Some(entry) => to_verify.push((req.id, req, entry)),
+                None => tasks.push(SeqTask::fresh(req.id, req.prompt.clone())),
+            }
+        }
+
+        // 2. verification (one packed engine call per wave of drafts)
+        if !to_verify.is_empty() {
+            let span = std::time::Instant::now();
+            let verifier = SpecVerifier::new(eng, &policy.bundle)?;
+            let accepted = match self.variant {
+                ReuseVariant::Random => variants::random_rejects(&to_verify, rng),
+                ReuseVariant::Full => {
+                    to_verify.iter().map(|(_, _, e)| e.response.len()).collect()
+                }
+                _ => {
+                    let (rejects, calls) =
+                        verifier.verify(policy, &to_verify, loglen, cfg.temperature, rng)?;
+                    stats.verify_calls = calls;
+                    rejects
+                }
+            };
+            stats.drafts = to_verify.len();
+            let mut prefix_sum = 0usize;
+            let mut full = 0usize;
+            for ((id, req, entry), n_acc) in to_verify.into_iter().zip(accepted) {
+                prefix_sum += n_acc;
+                if n_acc == entry.response.len() {
+                    full += 1;
+                }
+                tasks.push(SeqTask {
+                    id,
+                    prompt: req.prompt.clone(),
+                    prefix: entry.response[..n_acc].to_vec(),
+                    prefix_logps: entry.logps[..n_acc].to_vec(),
+                });
+            }
+            stats.mean_prefix_len = prefix_sum as f64 / stats.drafts.max(1) as f64;
+            stats.full_reuse_ratio = full as f64 / stats.drafts.max(1) as f64;
+            timer.add("verification", span.elapsed().as_secs_f64());
+        }
+
+        // 3. generate continuations
+        let (results, rstats) = rollout.run(policy, tasks, cfg, rng, timer)?;
+        stats.reused_tokens = rstats.reused_tokens;
+        stats.new_tokens = rstats.new_tokens;
+
+        // 4. immediate cache refresh (the paper's "always the most recent
+        //    policy's rollouts"); Off-variant keeps a shadow cache so
+        //    overlap metrics stay measurable.
+        for r in &results {
+            self.cache.insert(r.id, CacheEntry::from_result(r, self.step));
+        }
+        self.step += 1;
+
+        Ok((results, stats))
+    }
+}

@@ -1,0 +1,149 @@
+//! Reuse variants: SPEC-RL proper plus the paper's ablation baselines.
+
+use super::cache::{CacheEntry, RolloutCache};
+use crate::util::Rng;
+
+/// How drafts are selected and accepted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReuseVariant {
+    /// Vanilla RLVR: no reuse at all (cache shadow-updated for telemetry).
+    Off,
+    /// SPEC-RL: latest cached rollout, lenient speculative verification.
+    Spec,
+    /// Table 2 "Random Reuse": rejection offset ~ U{0..=len}, no verify.
+    Random,
+    /// Table 2 "Delayed Reuse": drafts from two steps back (the `previous`
+    /// cache slot), speculative verification as usual.
+    Delayed,
+    /// ℓ=∞ shortcut: full reuse without running the verifier.
+    Full,
+}
+
+impl ReuseVariant {
+    pub fn parse(s: &str) -> Option<ReuseVariant> {
+        match s {
+            "off" | "vanilla" => Some(ReuseVariant::Off),
+            "spec" | "spec-rl" => Some(ReuseVariant::Spec),
+            "random" => Some(ReuseVariant::Random),
+            "delayed" => Some(ReuseVariant::Delayed),
+            "full" => Some(ReuseVariant::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReuseVariant::Off => "off",
+            ReuseVariant::Spec => "spec",
+            ReuseVariant::Random => "random",
+            ReuseVariant::Delayed => "delayed",
+            ReuseVariant::Full => "full",
+        }
+    }
+
+    /// Pick the draft for a sequence, if this variant reuses one.
+    pub fn draft_for(&self, cache: &RolloutCache, id: usize, _step: u64) -> Option<CacheEntry> {
+        match self {
+            ReuseVariant::Off => None,
+            ReuseVariant::Spec | ReuseVariant::Random | ReuseVariant::Full => {
+                cache.latest(id).filter(|e| !e.response.is_empty()).cloned()
+            }
+            ReuseVariant::Delayed => {
+                cache.previous(id).filter(|e| !e.response.is_empty()).cloned()
+            }
+        }
+    }
+}
+
+/// Random-Reuse acceptance: uniform rejection offset per draft
+/// ("roughly half of the tokens reused on expectation", zero verify cost).
+pub fn random_rejects(
+    drafts: &[(usize, &super::RolloutRequest, CacheEntry)],
+    rng: &mut Rng,
+) -> Vec<usize> {
+    drafts.iter().map(|(_, _, e)| rng.below(e.response.len() + 1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rollout::SeqResult;
+
+    fn seed_cache() -> RolloutCache {
+        let mut c = RolloutCache::new();
+        for step in 0..3u64 {
+            c.insert(
+                5,
+                CacheEntry::from_result(
+                    &SeqResult {
+                        id: 5,
+                        response: vec![step as i32 + 10; 4],
+                        logps: vec![-1.0; 4],
+                        reused: 0,
+                        new_tokens: 4,
+                        finished: true,
+                    },
+                    step,
+                ),
+            );
+        }
+        c
+    }
+
+    #[test]
+    fn off_never_drafts() {
+        let c = seed_cache();
+        assert!(ReuseVariant::Off.draft_for(&c, 5, 3).is_none());
+    }
+
+    #[test]
+    fn spec_uses_latest() {
+        let c = seed_cache();
+        let d = ReuseVariant::Spec.draft_for(&c, 5, 3).unwrap();
+        assert_eq!(d.version, 2);
+    }
+
+    #[test]
+    fn delayed_uses_previous() {
+        let c = seed_cache();
+        let d = ReuseVariant::Delayed.draft_for(&c, 5, 3).unwrap();
+        assert_eq!(d.version, 1);
+    }
+
+    #[test]
+    fn miss_returns_none() {
+        let c = seed_cache();
+        assert!(ReuseVariant::Spec.draft_for(&c, 99, 3).is_none());
+    }
+
+    #[test]
+    fn random_rejects_in_range() {
+        let c = seed_cache();
+        let e = c.latest(5).unwrap().clone();
+        let req = super::super::RolloutRequest { id: 5, prompt: vec![1] };
+        let drafts = vec![(5usize, &req, e)];
+        let mut rng = Rng::new(1);
+        let mut seen_full = false;
+        let mut seen_zero = false;
+        for _ in 0..200 {
+            let r = random_rejects(&drafts, &mut rng);
+            assert!(r[0] <= 4);
+            seen_full |= r[0] == 4;
+            seen_zero |= r[0] == 0;
+        }
+        assert!(seen_full && seen_zero);
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for v in [
+            ReuseVariant::Off,
+            ReuseVariant::Spec,
+            ReuseVariant::Random,
+            ReuseVariant::Delayed,
+            ReuseVariant::Full,
+        ] {
+            assert_eq!(ReuseVariant::parse(v.name()), Some(v));
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Packed draft verification over the AOT `verify` entry.
+//!
+//! All of a step's drafts are packed into canonical `[B, T]` layouts
+//! (left-padded prompts + draft responses) and verified in batched engine
+//! calls — the paper's "all draft verification requests within a training
+//! batch are packed into a single call to the rollout engine". Each call
+//! runs one teacher-forced forward (L1 attention kernel), the fused
+//! log-prob kernel, and the L1 acceptance scan, returning the first
+//! rejection offset per row.
+
+use anyhow::Result;
+
+use super::cache::CacheEntry;
+use super::RolloutRequest;
+use crate::model::Policy;
+use crate::rollout::batch::BatchLayout;
+use crate::rollout::SeqTask;
+use crate::runtime::Engine;
+use crate::util::Rng;
+
+/// Batched verifier bound to one bundle.
+pub struct SpecVerifier<'e> {
+    eng: &'e Engine,
+    bundle: String,
+    batch: usize,
+    prompt_len: usize,
+    total_len: usize,
+}
+
+impl<'e> SpecVerifier<'e> {
+    pub fn new(eng: &'e Engine, bundle: &str) -> Result<Self> {
+        let info = eng.bundle(bundle)?;
+        Ok(SpecVerifier {
+            eng,
+            bundle: bundle.to_string(),
+            batch: info.batch,
+            prompt_len: eng.manifest.prompt_len,
+            total_len: eng.manifest.total_len,
+        })
+    }
+
+    /// Verify drafts; returns accepted-prefix lengths (one per draft, in
+    /// input order) and the number of engine calls made.
+    pub fn verify(
+        &self,
+        policy: &Policy,
+        drafts: &[(usize, &RolloutRequest, CacheEntry)],
+        log_lenience: f32,
+        temperature: f32,
+        rng: &mut Rng,
+    ) -> Result<(Vec<usize>, usize)> {
+        let g = self.total_len - self.prompt_len;
+        let mut accepted = Vec::with_capacity(drafts.len());
+        let mut calls = 0usize;
+
+        for chunk in drafts.chunks(self.batch) {
+            // Pack drafts as if they were finished sequences.
+            let tasks: Vec<SeqTask> = chunk
+                .iter()
+                .map(|(id, req, entry)| SeqTask {
+                    id: *id,
+                    prompt: req.prompt.clone(),
+                    prefix: entry.response.clone(),
+                    prefix_logps: entry.logps.clone(),
+                })
+                .collect();
+            let layout = BatchLayout::pack(&tasks, self.batch, self.prompt_len, self.total_len);
+
+            let mut logp_prev = vec![0f32; self.batch * g];
+            let mut draft_valid = vec![0f32; self.batch * g];
+            let mut uniforms = vec![0f32; self.batch * g];
+            rng.fill_uniform(&mut uniforms);
+            for (r, (_, _, entry)) in chunk.iter().enumerate() {
+                for (j, &lp) in entry.logps.iter().enumerate() {
+                    logp_prev[r * g + j] = lp;
+                    draft_valid[r * g + j] = 1.0;
+                }
+            }
+
+            let tok = self.eng.upload_i32(&layout.tokens, &[self.batch, self.total_len])?;
+            let val = self.eng.upload_f32(&layout.valid, &[self.batch, self.total_len])?;
+            let lp = self.eng.upload_f32(&logp_prev, &[self.batch, g])?;
+            let un = self.eng.upload_f32(&uniforms, &[self.batch, g])?;
+            let dv = self.eng.upload_f32(&draft_valid, &[self.batch, g])?;
+            let ll = self.eng.upload_f32(&[log_lenience], &[1])?;
+            let tp = self.eng.upload_f32(&[temperature], &[1])?;
+
+            let out = self.eng.call(
+                &self.bundle,
+                "verify",
+                &[&policy.blob, &tok, &val, &lp, &un, &dv, &ll, &tp],
+            )?;
+            calls += 1;
+            let host = self.eng.read_f32(&out)?;
+            for (r, (_, _, entry)) in chunk.iter().enumerate() {
+                let n = host[r].round() as usize;
+                accepted.push(n.min(entry.response.len()));
+            }
+        }
+        Ok((accepted, calls))
+    }
+}

@@ -1,0 +1,178 @@
+//! Named train sets + the SFT corpus builder.
+//!
+//! `SynthMath-A` substitutes for DeepMath-6K, `SynthMath-B` for SimpleRL-8K
+//! (different family mix and difficulty — "a distinct training
+//! distribution" is all Table 6 needs). SFT plays the role of base-model
+//! pretraining: it teaches the response format over *all* families (OOD
+//! ones at low weight) so RLVR has signal to amplify, mirroring
+//! "Qwen3-*-Base knows some math already".
+
+use super::gen::{generate, Family, TaskInstance};
+use crate::util::Rng;
+
+/// Specification of a procedurally generated train set.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub seed: u64,
+    /// (family, weight) mixture.
+    pub mix: Vec<(Family, f64)>,
+}
+
+impl DatasetSpec {
+    /// DeepMath-6K analog: the paper's primary train distribution.
+    pub fn synthmath_a() -> Self {
+        DatasetSpec {
+            name: "SynthMath-A",
+            seed: 0xA11CE,
+            mix: vec![
+                (Family::Add2, 0.30),
+                (Family::Sub, 0.25),
+                (Family::Mul1, 0.25),
+                (Family::Chain, 0.20),
+            ],
+        }
+    }
+
+    /// SimpleRL-8K analog: different mixture & difficulty.
+    pub fn synthmath_b() -> Self {
+        DatasetSpec {
+            name: "SynthMath-B",
+            seed: 0xB0B,
+            mix: vec![
+                (Family::Add3, 0.35),
+                (Family::Mod, 0.30),
+                (Family::Chain, 0.20),
+                (Family::Mul1, 0.15),
+            ],
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "SynthMath-A" | "a" | "A" => Some(Self::synthmath_a()),
+            "SynthMath-B" | "b" | "B" => Some(Self::synthmath_b()),
+            _ => None,
+        }
+    }
+
+    fn sample_family(&self, rng: &mut Rng) -> Family {
+        let total: f64 = self.mix.iter().map(|(_, w)| w).sum();
+        let mut u = rng.f64() * total;
+        for &(fam, w) in &self.mix {
+            u -= w;
+            if u <= 0.0 {
+                return fam;
+            }
+        }
+        self.mix.last().unwrap().0
+    }
+}
+
+/// Materialize `n` training prompts (deduplicated by prompt text so each
+/// prompt is a distinct "instance" the policy revisits across epochs).
+pub fn train_set(spec: &DatasetSpec, n: usize) -> Vec<TaskInstance> {
+    let mut rng = Rng::new(spec.seed);
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(n);
+    let mut guard = 0;
+    while out.len() < n && guard < n * 100 {
+        guard += 1;
+        let fam = spec.sample_family(&mut rng);
+        let t = generate(fam, &mut rng);
+        if seen.insert(t.prompt.clone()) {
+            out.push(t);
+        }
+    }
+    assert_eq!(out.len(), n, "could not generate {n} unique prompts");
+    out
+}
+
+/// One supervised example: prompt + gold response.
+#[derive(Clone, Debug)]
+pub struct SftExample {
+    pub prompt: String,
+    pub response: String,
+}
+
+/// Build the SFT ("pretraining") corpus: all families, OOD families at low
+/// weight, canonical responses as targets.
+pub fn sft_corpus(n: usize, seed: u64) -> Vec<SftExample> {
+    let mix: Vec<(Family, f64)> = vec![
+        (Family::Add2, 0.18),
+        (Family::Add3, 0.12),
+        (Family::Sub, 0.15),
+        (Family::Mul1, 0.15),
+        (Family::Mod, 0.10),
+        (Family::Chain, 0.15),
+        (Family::Compare, 0.05),
+        (Family::SortDigits, 0.05),
+        (Family::Format, 0.05),
+    ];
+    let spec = DatasetSpec { name: "sft", seed, mix };
+    let mut rng = Rng::new(seed ^ 0x5F7);
+    (0..n)
+        .map(|_| {
+            let fam = spec.sample_family(&mut rng);
+            let t = generate(fam, &mut rng);
+            SftExample { prompt: t.prompt, response: t.canonical }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_set_is_unique_and_deterministic() {
+        let spec = DatasetSpec::synthmath_a();
+        let a = train_set(&spec, 96);
+        let b = train_set(&spec, 96);
+        assert_eq!(a.len(), 96);
+        let prompts: std::collections::HashSet<_> = a.iter().map(|t| &t.prompt).collect();
+        assert_eq!(prompts.len(), 96);
+        assert_eq!(
+            a.iter().map(|t| &t.prompt).collect::<Vec<_>>(),
+            b.iter().map(|t| &t.prompt).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn datasets_differ() {
+        let a = train_set(&DatasetSpec::synthmath_a(), 32);
+        let b = train_set(&DatasetSpec::synthmath_b(), 32);
+        assert_ne!(
+            a.iter().map(|t| &t.prompt).collect::<Vec<_>>(),
+            b.iter().map(|t| &t.prompt).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn synthmath_a_has_no_ood_families() {
+        for t in train_set(&DatasetSpec::synthmath_a(), 128) {
+            assert!(!matches!(
+                t.family,
+                Family::Compare | Family::SortDigits | Family::Format
+            ));
+        }
+    }
+
+    #[test]
+    fn sft_corpus_covers_all_families() {
+        let corpus = sft_corpus(2000, 42);
+        assert_eq!(corpus.len(), 2000);
+        // canonical responses must be verifiable against themselves
+        for ex in corpus.iter().take(200) {
+            let r = crate::tasks::verifier::extract_answer(&ex.response);
+            assert!(!r.is_empty());
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(DatasetSpec::by_name("SynthMath-A").is_some());
+        assert!(DatasetSpec::by_name("b").is_some());
+        assert!(DatasetSpec::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,260 @@
+//! Task family generators.
+//!
+//! Each family produces `(prompt, canonical_response, answer)` triples:
+//! the prompt ends with `=` (or `)=`), the canonical response is what SFT
+//! teaches (including intermediate steps for chain tasks — the analog of
+//! chain-of-thought, which is what gives SPEC-RL long reusable prefixes),
+//! and the answer is the string the verifier compares against.
+
+use crate::util::Rng;
+
+/// Task families. The first five are "math reasoning" (RL-trained);
+/// `Compare`/`SortDigits` are the held-out OOD family (MMLU-STEM analog);
+/// `Format` is the instruction-following family (IFEval analog).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// 1-2 digit addition: `17+25=`
+    Add2,
+    /// 3 digit addition: `123+456=`
+    Add3,
+    /// subtraction (may be negative): `17-25=`
+    Sub,
+    /// single-digit multiplier: `17*4=`
+    Mul1,
+    /// modular reduction: `123%7=`
+    Mod,
+    /// two-step chain with precedence: `2+3*4=` -> `3*4=12 2+12=14`
+    Chain,
+    /// OOD: `max(17 25)=` / `min(17 25)=` (space-sep; no comma in charset)
+    Compare,
+    /// OOD: `sort(3142)=` -> ascending digit string
+    SortDigits,
+    /// instruction-following: `pad4(17+8)=` -> zero-padded to width 4
+    Format,
+}
+
+impl Family {
+    pub const ALL: [Family; 9] = [
+        Family::Add2,
+        Family::Add3,
+        Family::Sub,
+        Family::Mul1,
+        Family::Mod,
+        Family::Chain,
+        Family::Compare,
+        Family::SortDigits,
+        Family::Format,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Add2 => "add2",
+            Family::Add3 => "add3",
+            Family::Sub => "sub",
+            Family::Mul1 => "mul1",
+            Family::Mod => "mod",
+            Family::Chain => "chain",
+            Family::Compare => "compare",
+            Family::SortDigits => "sort",
+            Family::Format => "format",
+        }
+    }
+}
+
+/// One verifiable task.
+#[derive(Clone, Debug)]
+pub struct TaskInstance {
+    pub family: Family,
+    /// Prompt text (without BOS; ends in `=`).
+    pub prompt: String,
+    /// Canonical gold response (what SFT teaches), ending implicitly in EOS.
+    pub canonical: String,
+    /// Ground-truth answer for the verifier.
+    pub answer: String,
+}
+
+/// Generate one instance of `family` from `rng`.
+pub fn generate(family: Family, rng: &mut Rng) -> TaskInstance {
+    match family {
+        Family::Add2 => {
+            let a = rng.range_i64(1, 99);
+            let b = rng.range_i64(1, 99);
+            simple(family, format!("{a}+{b}="), (a + b).to_string())
+        }
+        Family::Add3 => {
+            let a = rng.range_i64(100, 999);
+            let b = rng.range_i64(100, 999);
+            simple(family, format!("{a}+{b}="), (a + b).to_string())
+        }
+        Family::Sub => {
+            let a = rng.range_i64(1, 99);
+            let b = rng.range_i64(1, 99);
+            simple(family, format!("{a}-{b}="), (a - b).to_string())
+        }
+        Family::Mul1 => {
+            let a = rng.range_i64(2, 99);
+            let b = rng.range_i64(2, 9);
+            simple(family, format!("{a}*{b}="), (a * b).to_string())
+        }
+        Family::Mod => {
+            let a = rng.range_i64(10, 999);
+            let b = rng.range_i64(2, 9);
+            simple(family, format!("{a}%{b}="), (a % b).to_string())
+        }
+        Family::Chain => {
+            // a+b*c with standard precedence; canonical shows the two steps.
+            let a = rng.range_i64(1, 99);
+            let b = rng.range_i64(2, 9);
+            let c = rng.range_i64(2, 9);
+            let m = b * c;
+            let r = a + m;
+            TaskInstance {
+                family,
+                prompt: format!("{a}+{b}*{c}="),
+                canonical: format!("{b}*{c}={m} {a}+{m}={r}"),
+                answer: r.to_string(),
+            }
+        }
+        Family::Compare => {
+            let a = rng.range_i64(1, 99);
+            let mut b = rng.range_i64(1, 99);
+            if b == a {
+                b += 1;
+            }
+            let mx = rng.below(2) == 0;
+            let ans = if mx { a.max(b) } else { a.min(b) };
+            simple(
+                family,
+                format!("{}({a} {b})=", if mx { "max" } else { "min" }),
+                ans.to_string(),
+            )
+        }
+        Family::SortDigits => {
+            let n = 3 + rng.below(3); // 3..=5 digits
+            let mut digits: Vec<u8> = (0..n).map(|_| rng.below(10) as u8).collect();
+            let prompt = format!(
+                "sort({})=",
+                digits.iter().map(|d| d.to_string()).collect::<String>()
+            );
+            digits.sort_unstable();
+            simple(
+                family,
+                prompt,
+                digits.iter().map(|d| d.to_string()).collect::<String>(),
+            )
+        }
+        Family::Format => {
+            let a = rng.range_i64(1, 99);
+            let b = rng.range_i64(1, 9);
+            let w = 3 + rng.below(2); // pad3 or pad4
+            let raw = (a + b).to_string();
+            let padded = format!("{:0>width$}", raw, width = w);
+            simple(family, format!("pad{w}({a}+{b})="), padded)
+        }
+    }
+}
+
+fn simple(family: Family, prompt: String, answer: String) -> TaskInstance {
+    TaskInstance { family, prompt, canonical: answer.clone(), answer }
+}
+
+/// Max prompt chars any generator can emit (checked by tests; the AOT
+/// geometry reserves prompt_len-1 chars + BOS).
+pub const MAX_PROMPT_CHARS: usize = 15;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompts_fit_geometry() {
+        let mut rng = Rng::new(1);
+        for fam in Family::ALL {
+            for _ in 0..200 {
+                let t = generate(fam, &mut rng);
+                assert!(
+                    t.prompt.len() <= MAX_PROMPT_CHARS,
+                    "{:?}: {} ({} chars)",
+                    fam,
+                    t.prompt,
+                    t.prompt.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_text_is_in_charset() {
+        let tok = crate::tokenizer::Tokenizer::default_charset();
+        let mut rng = Rng::new(2);
+        for fam in Family::ALL {
+            for _ in 0..100 {
+                let t = generate(fam, &mut rng);
+                tok.encode(&t.prompt);
+                tok.encode(&t.canonical);
+                tok.encode(&t.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn answers_are_correct_arithmetic() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let t = generate(Family::Add2, &mut rng);
+            let body = t.prompt.trim_end_matches('=');
+            let (a, b) = body.split_once('+').unwrap();
+            assert_eq!(
+                t.answer.parse::<i64>().unwrap(),
+                a.parse::<i64>().unwrap() + b.parse::<i64>().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn chain_canonical_is_consistent() {
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let t = generate(Family::Chain, &mut rng);
+            // canonical ends with "=answer"
+            assert!(t.canonical.ends_with(&format!("={}", t.answer)), "{t:?}");
+            // canonical has exactly two steps
+            assert_eq!(t.canonical.matches('=').count(), 2, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn sort_output_is_sorted() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let t = generate(Family::SortDigits, &mut rng);
+            let mut ch: Vec<char> = t.answer.chars().collect();
+            let orig = ch.clone();
+            ch.sort_unstable();
+            assert_eq!(ch, orig);
+        }
+    }
+
+    #[test]
+    fn format_width_is_respected() {
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let t = generate(Family::Format, &mut rng);
+            let w: usize = t.prompt[3..4].parse().unwrap();
+            assert_eq!(t.answer.len(), w, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a: Vec<String> = {
+            let mut rng = Rng::new(7);
+            (0..20).map(|_| generate(Family::Chain, &mut rng).prompt).collect()
+        };
+        let b: Vec<String> = {
+            let mut rng = Rng::new(7);
+            (0..20).map(|_| generate(Family::Chain, &mut rng).prompt).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

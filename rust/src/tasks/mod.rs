@@ -1,0 +1,25 @@
+//! The verifiable-task environment: the substrate standing in for the
+//! paper's DeepMath-6K / SimpleRL-8K training sets, its math benchmarks
+//! (AMC/AIME/MATH-500/Minerva/Olympiad), its OOD benchmarks
+//! (MMLU-STEM/IFEval), and the `math-verify` reward.
+//!
+//! Everything is procedurally generated from seeds, so train sets are
+//! fixed-but-arbitrary (the paper's "small curated set, many epochs"
+//! regime) and eval suites are disjoint by seed-space construction.
+//!
+//! - [`gen`] — task family generators (arithmetic, modular, multi-step
+//!   chains, comparison/sorting, format-following).
+//! - [`dataset`] — named train sets (`SynthMath-A`, `SynthMath-B`) and the
+//!   SFT corpus builder.
+//! - [`suites`] — graded eval suites mapped to the paper's benchmarks.
+//! - [`verifier`] — the rule-based binary reward (math-verify analog).
+
+pub mod dataset;
+pub mod gen;
+pub mod suites;
+pub mod verifier;
+
+pub use dataset::{sft_corpus, train_set, DatasetSpec, SftExample};
+pub use gen::{Family, TaskInstance};
+pub use suites::{eval_suites, EvalSuite};
+pub use verifier::{extract_answer, reward};

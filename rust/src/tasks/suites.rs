@@ -1,0 +1,117 @@
+//! Graded eval suites — the benchmark battery.
+//!
+//! Mapping to the paper's evaluation (DESIGN.md substitution table):
+//!
+//! | paper benchmark | suite here   | content                         |
+//! |-----------------|--------------|---------------------------------|
+//! | MATH-500        | `add-easy`   | 1-2 digit addition              |
+//! | AMC23           | `sub`        | subtraction (negatives)         |
+//! | Minerva Math    | `mul`        | single-digit multiplication     |
+//! | OlympiadBench   | `chain`      | two-step precedence chains      |
+//! | AIME24          | `add-hard`   | 3-digit addition (hardest)      |
+//! | MMLU-STEM (OOD) | `compare`    | max/min + digit sorting         |
+//! | IFEval (OOD)    | `format`     | zero-padding instructions       |
+//!
+//! Suites are generated from seeds disjoint from every train-set seed.
+
+use super::gen::{generate, Family, TaskInstance};
+use crate::util::Rng;
+
+/// A named benchmark suite.
+#[derive(Clone, Debug)]
+pub struct EvalSuite {
+    pub name: &'static str,
+    /// Whether answers must match exactly (format family) or numerically.
+    pub exact: bool,
+    /// True for the OOD group (reported separately like the paper).
+    pub ood: bool,
+    pub tasks: Vec<TaskInstance>,
+}
+
+fn suite(name: &'static str, fams: &[Family], n: usize, seed: u64, exact: bool, ood: bool) -> EvalSuite {
+    let mut rng = Rng::new(seed);
+    let mut tasks = Vec::with_capacity(n);
+    let mut seen = std::collections::HashSet::new();
+    let mut guard = 0;
+    while tasks.len() < n && guard < n * 200 {
+        guard += 1;
+        let fam = fams[rng.below(fams.len())];
+        let t = generate(fam, &mut rng);
+        if seen.insert(t.prompt.clone()) {
+            tasks.push(t);
+        }
+    }
+    EvalSuite { name, exact, ood, tasks }
+}
+
+/// The standard battery (sizes scaled for the CPU testbed; `n` per suite).
+pub fn eval_suites(n: usize) -> Vec<EvalSuite> {
+    vec![
+        suite("add-easy", &[Family::Add2], n, 0xE0A1, false, false),
+        suite("add-hard", &[Family::Add3], n, 0xE0A2, false, false),
+        suite("sub", &[Family::Sub], n, 0xE0A3, false, false),
+        suite("mul", &[Family::Mul1], n, 0xE0A4, false, false),
+        suite("chain", &[Family::Chain], n, 0xE0A5, false, false),
+        suite("compare", &[Family::Compare, Family::SortDigits], n, 0xE0A6, false, true),
+        suite("format", &[Family::Format], n, 0xE0A7, true, true),
+    ]
+}
+
+/// Names in report order (math suites then OOD), mirroring Table 1 columns.
+pub fn suite_names() -> Vec<&'static str> {
+    vec!["add-easy", "add-hard", "sub", "mul", "chain", "compare", "format"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn battery_has_seven_suites() {
+        let suites = eval_suites(16);
+        assert_eq!(suites.len(), 7);
+        for s in &suites {
+            assert_eq!(s.tasks.len(), 16);
+        }
+    }
+
+    #[test]
+    fn ood_flags() {
+        let suites = eval_suites(8);
+        let ood: Vec<_> = suites.iter().filter(|s| s.ood).map(|s| s.name).collect();
+        assert_eq!(ood, vec!["compare", "format"]);
+    }
+
+    #[test]
+    fn suites_are_deterministic() {
+        let a = eval_suites(8);
+        let b = eval_suites(8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.tasks.iter().map(|t| &t.prompt).collect::<Vec<_>>(),
+                y.tasks.iter().map(|t| &t.prompt).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn suites_disjoint_from_train_sets() {
+        use crate::tasks::dataset::{train_set, DatasetSpec};
+        let train: std::collections::HashSet<String> = train_set(&DatasetSpec::synthmath_a(), 96)
+            .into_iter()
+            .map(|t| t.prompt)
+            .collect();
+        let mut overlap = 0usize;
+        let mut total = 0usize;
+        for s in eval_suites(64) {
+            for t in &s.tasks {
+                total += 1;
+                if train.contains(&t.prompt) {
+                    overlap += 1;
+                }
+            }
+        }
+        // tiny numeric spaces can collide; require <3% overlap
+        assert!((overlap as f64) < 0.03 * total as f64, "{overlap}/{total}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Rule-based binary reward — the `math-verify` analog.
+//!
+//! The paper: "+1 if the final boxed or numeric answer matches the ground
+//! truth and 0 otherwise". Our responses carry the final answer after the
+//! last `=` (chain-of-thought steps each end in `=value`), so extraction is:
+//! take the text after the last `=` if any, else the whole response; strip
+//! spaces; compare to the expected string, numerically where both parse.
+
+/// Extract the model's final answer from decoded response text.
+pub fn extract_answer(response: &str) -> &str {
+    let tail = match response.rfind('=') {
+        Some(i) => &response[i + 1..],
+        None => response,
+    };
+    tail.trim()
+}
+
+/// Compare an extracted answer against ground truth.
+///
+/// Numeric comparison when both sides parse as integers (so `042` == `42`
+/// *except* for the Format family, which demands the exact padded string —
+/// callers pass `exact=true` for it, mirroring IFEval's format checks).
+pub fn answer_matches(predicted: &str, expected: &str, exact: bool) -> bool {
+    if exact {
+        return predicted == expected;
+    }
+    match (predicted.parse::<i64>(), expected.parse::<i64>()) {
+        (Ok(a), Ok(b)) => a == b,
+        _ => predicted == expected,
+    }
+}
+
+/// Binary reward for a decoded response.
+pub fn reward(response: &str, expected: &str, exact: bool) -> f32 {
+    if answer_matches(extract_answer(response), expected, exact) {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_after_last_equals() {
+        assert_eq!(extract_answer("3*4=12 2+12=14"), "14");
+        assert_eq!(extract_answer("42"), "42");
+        assert_eq!(extract_answer("x=1 y= 2 "), "2");
+    }
+
+    #[test]
+    fn numeric_match_ignores_leading_zeros() {
+        assert!(answer_matches("042", "42", false));
+        assert!(!answer_matches("042", "42", true));
+    }
+
+    #[test]
+    fn negative_numbers() {
+        assert!(answer_matches("-8", "-8", false));
+        assert!(!answer_matches("8", "-8", false));
+    }
+
+    #[test]
+    fn reward_binary() {
+        assert_eq!(reward("12 2+12=14", "14", false), 1.0);
+        assert_eq!(reward("12 2+12=15", "14", false), 0.0);
+        assert_eq!(reward("", "14", false), 0.0);
+        assert_eq!(reward("junk", "14", false), 0.0);
+    }
+
+    #[test]
+    fn format_family_requires_exact() {
+        assert_eq!(reward("025", "025", true), 1.0);
+        assert_eq!(reward("25", "025", true), 0.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Property-based testing kit (proptest substitute for the offline image).
+//!
+//! Seeded generators + a `forall` runner with minimal shrinking (halving
+//! retries on sizes). Used by `rust/tests/prop_*.rs` to check the
+//! coordinator invariants listed in DESIGN.md.
+
+use crate::util::Rng;
+
+/// A value generator.
+pub trait Gen<T> {
+    fn gen(&self, rng: &mut Rng) -> T;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {
+    fn gen(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the seed and a
+/// debug dump of the failing case.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    generator: impl Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = generator.gen(&mut rng);
+        if !prop(&input) {
+            panic!("property failed (seed={seed}, case={case}):\n{input:#?}");
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result` with a reason.
+pub fn forall_ok<T: std::fmt::Debug, E: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    generator: impl Gen<T>,
+    prop: impl Fn(&T) -> Result<(), E>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = generator.gen(&mut rng);
+        if let Err(e) = prop(&input) {
+            panic!("property failed (seed={seed}, case={case}): {e:?}\n{input:#?}");
+        }
+    }
+}
+
+// -- common generators ---------------------------------------------------
+/// usize in [lo, hi].
+pub fn usize_in(lo: usize, hi: usize) -> impl Gen<usize> {
+    move |rng: &mut Rng| lo + rng.below(hi - lo + 1)
+}
+
+/// f32 in [lo, hi).
+pub fn f32_in(lo: f32, hi: f32) -> impl Gen<f32> {
+    move |rng: &mut Rng| lo + rng.f32() * (hi - lo)
+}
+
+/// Vec of token ids (1-`max_len` long, ids in [3, vocab)).
+pub fn tokens(max_len: usize, vocab: usize) -> impl Gen<Vec<i32>> {
+    move |rng: &mut Rng| {
+        let len = 1 + rng.below(max_len);
+        (0..len).map(|_| (3 + rng.below(vocab - 3)) as i32).collect()
+    }
+}
+
+/// Vec of log-probs (negative reals).
+pub fn logps(len: usize) -> impl Gen<Vec<f32>> {
+    move |rng: &mut Rng| (0..len).map(|_| -(rng.f32() * 5.0 + 1e-3)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall(1, 200, usize_in(0, 10), |&x| x <= 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 200, usize_in(0, 10), |&x| x < 10);
+    }
+
+    #[test]
+    fn token_gen_in_range() {
+        forall(3, 100, tokens(12, 52), |ts| {
+            !ts.is_empty() && ts.len() <= 12 && ts.iter().all(|&t| (3..52).contains(&t))
+        });
+    }
+
+    #[test]
+    fn forall_ok_variant() {
+        forall_ok(4, 50, f32_in(0.0, 1.0), |&x| {
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+}

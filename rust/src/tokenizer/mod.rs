@@ -1,0 +1,150 @@
+//! Char-level tokenizer matching `python/compile/config.py`.
+//!
+//! The vocabulary is `[<pad>, <bos>, <eos>] + CHARSET` where the charset is
+//! read from the artifact manifest at engine load (so the two sides can
+//! never drift); [`Tokenizer::default_charset`] mirrors the python constant
+//! for manifest-free unit tests.
+
+/// Token id constants (match python config).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const N_SPECIALS: usize = 3;
+
+/// Charset mirror of `python/compile/config.CHARSET`.
+pub const DEFAULT_CHARSET: &str = "0123456789+-*/%()=<> abcdefghijklmnopqrstuvwxyz?";
+
+/// Char-level encoder/decoder.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    chars: Vec<char>,
+    /// char -> id lookup (ASCII only; charset is ASCII by construction)
+    lut: [i32; 128],
+}
+
+impl Tokenizer {
+    pub fn new(charset: &str) -> Self {
+        let chars: Vec<char> = charset.chars().collect();
+        let mut lut = [-1i32; 128];
+        for (i, &c) in chars.iter().enumerate() {
+            assert!((c as u32) < 128, "charset must be ASCII");
+            lut[c as usize] = (N_SPECIALS + i) as i32;
+        }
+        Tokenizer { chars, lut }
+    }
+
+    pub fn default_charset() -> Self {
+        Self::new(DEFAULT_CHARSET)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        N_SPECIALS + self.chars.len()
+    }
+
+    /// Encode text to ids; panics on chars outside the charset (task
+    /// generators only produce charset text — anything else is a bug).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars()
+            .map(|c| {
+                let id = if (c as u32) < 128 { self.lut[c as usize] } else { -1 };
+                assert!(id >= 0, "char {c:?} not in charset");
+                id
+            })
+            .collect()
+    }
+
+    /// Encode with a BOS prefix (prompt form).
+    pub fn encode_prompt(&self, text: &str) -> Vec<i32> {
+        let mut v = Vec::with_capacity(text.len() + 1);
+        v.push(BOS);
+        v.extend(self.encode(text));
+        v
+    }
+
+    /// Decode ids to text; specials render as markers, unknown ids as '#'.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            match id {
+                PAD => s.push('_'),
+                BOS => s.push('^'),
+                EOS => s.push('$'),
+                id if (id as usize) >= N_SPECIALS
+                    && ((id as usize) - N_SPECIALS) < self.chars.len() =>
+                {
+                    s.push(self.chars[(id as usize) - N_SPECIALS])
+                }
+                _ => s.push('#'),
+            }
+        }
+        s
+    }
+
+    /// Decode skipping pads/bos and stopping at the first EOS.
+    pub fn decode_clean(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            match id {
+                PAD | BOS => continue,
+                EOS => break,
+                id if (id as usize) >= N_SPECIALS
+                    && ((id as usize) - N_SPECIALS) < self.chars.len() =>
+                {
+                    s.push(self.chars[(id as usize) - N_SPECIALS])
+                }
+                _ => {}
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::default_charset();
+        let s = "17+25=42";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn vocab_matches_python() {
+        let t = Tokenizer::default_charset();
+        assert_eq!(t.vocab_size(), 51);
+    }
+
+    #[test]
+    fn prompt_has_bos() {
+        let t = Tokenizer::default_charset();
+        let ids = t.encode_prompt("1+1=");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(t.decode_clean(&ids), "1+1=");
+    }
+
+    #[test]
+    fn decode_clean_stops_at_eos() {
+        let t = Tokenizer::default_charset();
+        let mut ids = t.encode("42");
+        ids.push(EOS);
+        ids.extend(t.encode("junk"));
+        assert_eq!(t.decode_clean(&ids), "42");
+    }
+
+    #[test]
+    fn every_charset_char_roundtrips() {
+        let t = Tokenizer::default_charset();
+        for c in DEFAULT_CHARSET.chars() {
+            let ids = t.encode(&c.to_string());
+            assert_eq!(t.decode(&ids), c.to_string());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_charset_panics() {
+        Tokenizer::default_charset().encode("A");
+    }
+}

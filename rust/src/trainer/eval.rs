@@ -1,0 +1,99 @@
+//! Benchmark-suite evaluation (Pass@1, optionally averaged over k samples).
+
+use anyhow::Result;
+
+use crate::model::Policy;
+use crate::rollout::{RolloutEngine, SampleCfg, SeqTask};
+use crate::runtime::Engine;
+use crate::tasks::{eval_suites, reward, EvalSuite};
+use crate::tokenizer::Tokenizer;
+use crate::util::{Rng, StageTimer};
+
+/// Evaluate one suite: mean binary reward over its tasks, averaged over
+/// `samples` independent rollouts (the paper's Pass@1-over-k protocol).
+pub fn eval_suite(
+    eng: &Engine,
+    rollout: &mut RolloutEngine,
+    policy: &Policy,
+    tok: &Tokenizer,
+    suite: &EvalSuite,
+    samples: usize,
+    rng: &mut Rng,
+) -> Result<f64> {
+    let _ = eng;
+    let cfg = SampleCfg { temperature: 1.0, top_p: 0.95 };
+    let mut timer = StageTimer::new();
+    let mut total = 0f64;
+    for _ in 0..samples.max(1) {
+        let tasks: Vec<SeqTask> = suite
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(i, t)| SeqTask::fresh(i, tok.encode_prompt(&t.prompt)))
+            .collect();
+        let (results, _) = rollout.run(policy, tasks, cfg, rng, &mut timer)?;
+        let mut acc = 0f64;
+        for r in &results {
+            let text = tok.decode_clean(&r.response);
+            acc += reward(&text, &suite.tasks[r.id].answer, suite.exact) as f64;
+        }
+        total += acc / suite.tasks.len() as f64;
+    }
+    Ok(total / samples.max(1) as f64)
+}
+
+/// Run the full battery; `samples_hard` extra sampling applies to the
+/// hardest math suite ("add-hard", the AIME analog).
+pub fn evaluate(
+    eng: &Engine,
+    rollout: &mut RolloutEngine,
+    policy: &Policy,
+    tok: &Tokenizer,
+    n_per_suite: usize,
+    samples_hard: usize,
+    rng: &mut Rng,
+) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for suite in eval_suites(n_per_suite) {
+        let samples = if suite.name == "add-hard" { samples_hard } else { 1 };
+        let acc = eval_suite(eng, rollout, policy, tok, &suite, samples, rng)?;
+        out.push((suite.name.to_string(), acc));
+    }
+    Ok(out)
+}
+
+/// Math-suite average, OOD average, and overall average (Table 1 columns).
+pub fn summarize(evals: &[(String, f64)]) -> (f64, f64, f64) {
+    let math: Vec<f64> = evals
+        .iter()
+        .filter(|(n, _)| !matches!(n.as_str(), "compare" | "format"))
+        .map(|(_, a)| *a)
+        .collect();
+    let ood: Vec<f64> = evals
+        .iter()
+        .filter(|(n, _)| matches!(n.as_str(), "compare" | "format"))
+        .map(|(_, a)| *a)
+        .collect();
+    let avg = |v: &[f64]| if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 };
+    let all: Vec<f64> = evals.iter().map(|(_, a)| *a).collect();
+    (avg(&math), avg(&ood), avg(&all))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_splits_groups() {
+        let evals = vec![
+            ("add-easy".to_string(), 0.8),
+            ("chain".to_string(), 0.4),
+            ("compare".to_string(), 0.5),
+            ("format".to_string(), 0.3),
+        ];
+        let (math, ood, all) = summarize(&evals);
+        assert!((math - 0.6).abs() < 1e-9);
+        assert!((ood - 0.4).abs() < 1e-9);
+        assert!((all - 0.5).abs() < 1e-9);
+    }
+}

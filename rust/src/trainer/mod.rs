@@ -1,0 +1,484 @@
+//! The RL training loop: rollout (speculative or vanilla) → reward →
+//! old-log-probs → ref/values → advantages → update(s), with the same
+//! per-stage accounting as the paper's Table 4.
+//!
+//! - [`sft`] — supervised pretraining (the "base model" producer).
+//! - [`eval`] — benchmark-suite evaluation.
+//! - [`Trainer`] — the per-step pipeline + per-step CSV series.
+
+pub mod eval;
+pub mod sft;
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::algo;
+use crate::config::RunConfig;
+use crate::metrics::{self, Report};
+use crate::model::Policy;
+use crate::rollout::{RolloutEngine, SampleCfg, SeqResult};
+use crate::runtime::Engine;
+use crate::spec::{RolloutRequest, SpecRollout};
+use crate::tasks::{self, TaskInstance};
+use crate::tokenizer::Tokenizer;
+use crate::util::{Rng, StageTimer};
+
+/// Per-run aggregate summary (feeds Tables 1/2/3/5/6 rows).
+#[derive(Clone, Debug, Default)]
+pub struct RunSummary {
+    pub label: String,
+    pub steps: usize,
+    pub total_new_tokens: usize,
+    pub total_reused_tokens: usize,
+    pub rollout_secs: f64,
+    pub verify_secs: f64,
+    pub assembly_secs: f64,
+    pub total_secs: f64,
+    pub final_reward: f64,
+    /// (suite name, accuracy) at the final eval.
+    pub final_eval: Vec<(String, f64)>,
+    /// Per-stage time means (Table 4 row).
+    pub stage_means: BTreeMap<&'static str, f64>,
+}
+
+impl RunSummary {
+    /// Average over math suites + OOD suites (the paper's AVG column).
+    pub fn avg_accuracy(&self) -> f64 {
+        if self.final_eval.is_empty() {
+            return 0.0;
+        }
+        self.final_eval.iter().map(|(_, a)| a).sum::<f64>() / self.final_eval.len() as f64
+    }
+}
+
+/// Per-step record used by the CSV series (Tables 7-27, Figures 4-11).
+pub const STEP_COLUMNS: &[&str] = &[
+    "step", "epoch", "reward", "tokens_new", "tokens_reused", "tokens_cum",
+    "prefix_len", "full_reuse", "drafts", "gen_rounds",
+    "rollout_s", "verification_s", "assembly_s", "reward_s", "old_logp_s",
+    "ref_s", "values_s", "adv_s", "update_critic_s", "update_actor_s",
+    "others_s", "total_s",
+    "loss", "pg_loss", "kl", "entropy", "clip_frac", "grad_norm",
+    "distinct1", "self_bleu", "rouge1_prev_epoch",
+];
+
+/// The RL trainer.
+pub struct Trainer<'e> {
+    pub eng: &'e Engine,
+    pub cfg: RunConfig,
+    pub policy: Policy,
+    /// Frozen reference policy for the GRPO KL term.
+    pub ref_policy: Option<Policy>,
+    /// PPO critic.
+    pub critic: Option<Policy>,
+    pub spec: SpecRollout,
+    pub rollout: RolloutEngine<'e>,
+    pub tok: Tokenizer,
+    pub train_set: Vec<TaskInstance>,
+    pub rng: Rng,
+    pub report: Report,
+    /// Cursor into the (cyclic) prompt order.
+    cursor: usize,
+    cum_new_tokens: usize,
+    cum_reused_tokens: usize,
+    stage_totals: StageTimer,
+}
+
+impl<'e> Trainer<'e> {
+    /// Build a trainer around an SFT'd base policy.
+    pub fn new(eng: &'e Engine, cfg: RunConfig, base: Policy) -> Result<Trainer<'e>> {
+        cfg.validate()?;
+        let info = eng.bundle(&cfg.bundle)?;
+        anyhow::ensure!(
+            cfg.rollout_batch() == info.batch,
+            "rollout batch {} must equal bundle batch {} (prompts_per_step * group)",
+            cfg.rollout_batch(),
+            info.batch
+        );
+        let tok = Tokenizer::new(&eng.manifest.charset);
+        let spec_variant = cfg.variant;
+        let ref_policy = if cfg.params.kl_coef > 0.0 {
+            Some(base.duplicate(eng)?)
+        } else {
+            None
+        };
+        let critic = if cfg.params.use_critic {
+            Some(Policy::from_init(eng, &cfg.critic_bundle)?)
+        } else {
+            None
+        };
+        let dataset = tasks::DatasetSpec::by_name(&cfg.dataset)
+            .with_context(|| format!("unknown dataset '{}'", cfg.dataset))?;
+        let train_set = tasks::train_set(&dataset, cfg.n_prompts);
+        let rollout = RolloutEngine::new(eng, &cfg.bundle)?;
+        let report_path = format!(
+            "{}/{}_{}_{}.csv",
+            cfg.out_dir,
+            cfg.algo.name(),
+            spec_variant.name(),
+            cfg.bundle
+        );
+        Ok(Trainer {
+            eng,
+            rng: Rng::new(cfg.seed),
+            spec: SpecRollout::new(spec_variant, cfg.lenience),
+            rollout,
+            tok,
+            train_set,
+            policy: base,
+            ref_policy,
+            critic,
+            report: Report::new(report_path, STEP_COLUMNS),
+            cursor: 0,
+            cum_new_tokens: 0,
+            cum_reused_tokens: 0,
+            stage_totals: StageTimer::new(),
+            cfg,
+        })
+    }
+
+    fn sample_cfg(&self) -> SampleCfg {
+        SampleCfg { temperature: self.cfg.temperature, top_p: self.cfg.top_p }
+    }
+
+    /// Next `prompts_per_step` prompt indices (cyclic epoch order).
+    fn next_prompt_ids(&mut self) -> Vec<usize> {
+        let n = self.cfg.prompts_per_step;
+        let ids: Vec<usize> =
+            (0..n).map(|k| (self.cursor + k) % self.train_set.len()).collect();
+        self.cursor = (self.cursor + n) % self.train_set.len();
+        ids
+    }
+
+    fn requests_for(&self, prompt_ids: &[usize]) -> Vec<RolloutRequest> {
+        let mut reqs = Vec::with_capacity(prompt_ids.len() * self.cfg.group);
+        for &pi in prompt_ids {
+            let prompt = self.tok.encode_prompt(&self.train_set[pi].prompt);
+            for k in 0..self.cfg.group {
+                reqs.push(RolloutRequest { id: pi * self.cfg.group + k, prompt: prompt.clone() });
+            }
+        }
+        reqs
+    }
+
+    fn reward_of(&self, prompt_idx: usize, result: &SeqResult) -> f32 {
+        let text = self.tok.decode_clean(&result.response);
+        tasks::reward(&text, &self.train_set[prompt_idx].answer, false)
+    }
+
+    /// One full training step. Returns the per-step record.
+    pub fn step(&mut self, step_idx: usize) -> Result<BTreeMap<&'static str, f64>> {
+        let t_step = std::time::Instant::now();
+        let mut timer = StageTimer::new();
+        let group = self.cfg.group;
+        let b = self.cfg.rollout_batch();
+
+        // ---- rollout (+verification) with optional DAPO dynamic sampling ----
+        let mut kept: Vec<(usize, SeqResult, f32)> = Vec::with_capacity(b);
+        let mut gen_rounds = 0usize;
+        let mut spec_stats_acc = crate::spec::SpecStepStats::default();
+        let max_rounds = if self.cfg.params.dynamic_sampling { 3 } else { 1 };
+        let mut rouge_acc: Vec<f64> = Vec::new();
+        let scfg = self.sample_cfg();
+        while kept.len() < b && gen_rounds < max_rounds {
+            let prompt_ids = self.next_prompt_ids();
+            let requests = self.requests_for(&prompt_ids);
+            // Snapshot previous-epoch rollouts before the cache refreshes so
+            // the ROUGE-1 overlap series (Figure 2) can be computed below.
+            let prev_drafts: BTreeMap<usize, Vec<i32>> = requests
+                .iter()
+                .filter_map(|r| {
+                    self.spec.cache.latest(r.id).map(|e| (r.id, e.response.clone()))
+                })
+                .collect();
+
+            let (results, sstats) = self.spec.collect(
+                self.eng,
+                &mut self.rollout,
+                &self.policy,
+                &requests,
+                scfg,
+                &mut self.rng,
+                &mut timer,
+            )?;
+            spec_stats_acc.drafts += sstats.drafts;
+            spec_stats_acc.mean_prefix_len += sstats.mean_prefix_len * sstats.drafts as f64;
+            spec_stats_acc.full_reuse_ratio += sstats.full_reuse_ratio * sstats.drafts as f64;
+            spec_stats_acc.reused_tokens += sstats.reused_tokens;
+            spec_stats_acc.new_tokens += sstats.new_tokens;
+            spec_stats_acc.verify_calls += sstats.verify_calls;
+            gen_rounds += 1;
+
+            for (id, prev) in &prev_drafts {
+                if let Some(r) = results.iter().find(|r| r.id == *id) {
+                    rouge_acc.push(metrics::rouge1_f1(prev, &r.response));
+                }
+            }
+
+            // ---- reward ------------------------------------------------------
+            let span = std::time::Instant::now();
+            let mut groups: BTreeMap<usize, Vec<(usize, SeqResult, f32)>> = BTreeMap::new();
+            for r in results {
+                let prompt_idx = r.id / group;
+                let rew = self.reward_of(prompt_idx, &r);
+                groups.entry(prompt_idx).or_default().push((prompt_idx, r, rew));
+            }
+            timer.add("reward", span.elapsed().as_secs_f64());
+
+            for (_, g) in groups {
+                if kept.len() >= b {
+                    break;
+                }
+                let degenerate = {
+                    let first = g[0].2;
+                    g.iter().all(|(_, _, r)| *r == first)
+                };
+                // DAPO dynamic sampling: drop zero-variance groups unless
+                // this is the last permitted round (then keep to fill).
+                if self.cfg.params.dynamic_sampling
+                    && degenerate
+                    && gen_rounds < max_rounds
+                {
+                    continue;
+                }
+                kept.extend(g);
+            }
+        }
+        kept.truncate(b);
+        anyhow::ensure!(kept.len() == b, "could not fill batch: {} < {b}", kept.len());
+
+        // ---- batch tensors ----------------------------------------------------
+        let (p, t) = (self.eng.manifest.prompt_len, self.eng.manifest.total_len);
+        let g_len = t - p;
+        let mut tokens = vec![crate::tokenizer::PAD; b * t];
+        let mut valid = vec![0f32; b * t];
+        let mut resp_mask = vec![0f32; b * g_len];
+        let rewards: Vec<f32> = kept.iter().map(|(_, _, r)| *r).collect();
+        for (row, (pi, res, _)) in kept.iter().enumerate() {
+            let prompt = self.tok.encode_prompt(&self.train_set[*pi].prompt);
+            let start = p - prompt.len();
+            for (i, &tk) in prompt.iter().enumerate() {
+                tokens[row * t + start + i] = tk;
+                valid[row * t + start + i] = 1.0;
+            }
+            for (j, &tk) in res.response.iter().enumerate() {
+                tokens[row * t + p + j] = tk;
+                valid[row * t + p + j] = 1.0;
+                resp_mask[row * g_len + j] = 1.0;
+            }
+        }
+        let tok_buf = self.eng.upload_i32(&tokens, &[b, t])?;
+        let val_buf = self.eng.upload_f32(&valid, &[b, t])?;
+        let temp1 = self.eng.upload_f32(&[1.0], &[1])?;
+
+        // ---- old log-probs (recomputed, veRL-style) -----------------------------
+        let old_logp = timer.time("old_logp", || -> Result<Vec<f32>> {
+            let out = self.eng.call(
+                &self.cfg.bundle,
+                "score",
+                &[&self.policy.blob, &tok_buf, &val_buf, &temp1],
+            )?;
+            Ok(self.eng.read_f32(&out)?[..b * g_len].to_vec())
+        })?;
+
+        // ---- reference log-probs (GRPO KL) --------------------------------------
+        let ref_logp = if let Some(ref refp) = self.ref_policy {
+            timer.time("ref", || -> Result<Vec<f32>> {
+                let out = self.eng.call(
+                    &self.cfg.bundle,
+                    "score",
+                    &[&refp.blob, &tok_buf, &val_buf, &temp1],
+                )?;
+                Ok(self.eng.read_f32(&out)?[..b * g_len].to_vec())
+            })?
+        } else {
+            old_logp.clone()
+        };
+
+        // ---- values + advantages -------------------------------------------------
+        let mut adv = vec![0f32; b * g_len];
+        let mut value_targets = vec![0f32; b * g_len];
+        if let Some(ref critic) = self.critic {
+            let values = timer.time("values", || -> Result<Vec<f32>> {
+                let out = self.eng.call(
+                    &self.cfg.critic_bundle,
+                    "value_fwd",
+                    &[&critic.blob, &tok_buf, &val_buf],
+                )?;
+                self.eng.read_f32(&out)
+            })?;
+            let span = std::time::Instant::now();
+            for (row, (_, res, rew)) in kept.iter().enumerate() {
+                let l = res.response.len();
+                if l == 0 {
+                    continue;
+                }
+                let vrow = &values[row * (g_len + 1)..(row + 1) * (g_len + 1)];
+                let (a, tg) = algo::gae(&vrow[..=l], *rew, self.cfg.params.gamma, self.cfg.params.lam);
+                adv[row * g_len..row * g_len + l].copy_from_slice(&a);
+                value_targets[row * g_len..row * g_len + l].copy_from_slice(&tg);
+            }
+            algo::whiten(&mut adv, &resp_mask);
+            timer.add("adv", span.elapsed().as_secs_f64());
+        } else {
+            let span = std::time::Instant::now();
+            let seq_adv = algo::grpo_advantages(&rewards, group);
+            for (row, a) in seq_adv.iter().enumerate() {
+                for j in 0..g_len {
+                    adv[row * g_len + j] = a * resp_mask[row * g_len + j];
+                }
+            }
+            timer.add("adv", span.elapsed().as_secs_f64());
+        }
+
+        // ---- critic update ----------------------------------------------------------
+        let mut critic_metrics = None;
+        if let Some(critic) = self.critic.as_mut() {
+            let rm_buf = self.eng.upload_f32(&resp_mask, &[b, g_len])?;
+            let tg_buf = self.eng.upload_f32(&value_targets, &[b, g_len])?;
+            let hp = self.cfg.params.hp_vector(self.cfg.params.critic_lr);
+            let hp_buf = self.eng.upload_f32(&hp, &[8])?;
+            let new_blob = timer.time("update_critic", || {
+                self.eng.call(
+                    &self.cfg.critic_bundle,
+                    "train_value",
+                    &[&critic.blob, &tok_buf, &val_buf, &rm_buf, &tg_buf, &hp_buf],
+                )
+            })?;
+            critic.swap(new_blob);
+            critic_metrics = Some(critic.metrics(self.eng)?);
+        }
+        let _ = critic_metrics;
+
+        // ---- actor update --------------------------------------------------------------
+        let rm_buf = self.eng.upload_f32(&resp_mask, &[b, g_len])?;
+        let adv_buf = self.eng.upload_f32(&adv, &[b, g_len])?;
+        let ol_buf = self.eng.upload_f32(&old_logp, &[b, g_len])?;
+        let rl_buf = self.eng.upload_f32(&ref_logp, &[b, g_len])?;
+        let hp = self.cfg.params.hp_vector(self.cfg.params.lr);
+        let hp_buf = self.eng.upload_f32(&hp, &[8])?;
+        let new_blob = timer.time("update_actor", || {
+            self.eng.call(
+                &self.cfg.bundle,
+                "train_policy",
+                &[
+                    &self.policy.blob,
+                    &tok_buf,
+                    &val_buf,
+                    &rm_buf,
+                    &adv_buf,
+                    &ol_buf,
+                    &rl_buf,
+                    &hp_buf,
+                ],
+            )
+        })?;
+        self.policy.swap(new_blob);
+        let tm = self.policy.metrics(self.eng)?;
+
+        // ---- diversity metrics (cheap; every step) -----------------------------------
+        let responses: Vec<Vec<i32>> = kept.iter().map(|(_, r, _)| r.response.clone()).collect();
+        let d1 = metrics::distinct_1(&responses);
+        let sbleu = metrics::self_bleu(&responses);
+        let rouge = if rouge_acc.is_empty() {
+            f64::NAN
+        } else {
+            rouge_acc.iter().sum::<f64>() / rouge_acc.len() as f64
+        };
+
+        // ---- record -----------------------------------------------------------------
+        self.cum_new_tokens += spec_stats_acc.new_tokens;
+        self.cum_reused_tokens += spec_stats_acc.reused_tokens;
+        let total_s = t_step.elapsed().as_secs_f64();
+        let known: f64 = timer.total();
+        let mut rec: BTreeMap<&'static str, f64> = BTreeMap::new();
+        let reward_mean = rewards.iter().map(|&r| r as f64).sum::<f64>() / b as f64;
+        let drafts = spec_stats_acc.drafts.max(1) as f64;
+        rec.insert("step", step_idx as f64);
+        rec.insert("epoch", (step_idx / self.cfg.steps_per_epoch()) as f64);
+        rec.insert("reward", reward_mean);
+        rec.insert("tokens_new", spec_stats_acc.new_tokens as f64);
+        rec.insert("tokens_reused", spec_stats_acc.reused_tokens as f64);
+        rec.insert("tokens_cum", self.cum_new_tokens as f64);
+        rec.insert("prefix_len", spec_stats_acc.mean_prefix_len / drafts);
+        rec.insert("full_reuse", spec_stats_acc.full_reuse_ratio / drafts);
+        rec.insert("drafts", spec_stats_acc.drafts as f64);
+        rec.insert("gen_rounds", gen_rounds as f64);
+        rec.insert("rollout_s", timer.get("rollout"));
+        rec.insert("verification_s", timer.get("verification"));
+        rec.insert("assembly_s", timer.get("assembly"));
+        rec.insert("reward_s", timer.get("reward"));
+        rec.insert("old_logp_s", timer.get("old_logp"));
+        rec.insert("ref_s", timer.get("ref"));
+        rec.insert("values_s", timer.get("values"));
+        rec.insert("adv_s", timer.get("adv"));
+        rec.insert("update_critic_s", timer.get("update_critic"));
+        rec.insert("update_actor_s", timer.get("update_actor"));
+        rec.insert("others_s", (total_s - known).max(0.0));
+        rec.insert("total_s", total_s);
+        rec.insert("loss", tm.get(self.eng, "loss") as f64);
+        rec.insert("pg_loss", tm.get(self.eng, "pg_loss") as f64);
+        rec.insert("kl", tm.get(self.eng, "kl") as f64);
+        rec.insert("entropy", tm.get(self.eng, "entropy") as f64);
+        rec.insert("clip_frac", tm.get(self.eng, "clip_frac") as f64);
+        rec.insert("grad_norm", tm.get(self.eng, "grad_norm") as f64);
+        rec.insert("distinct1", d1);
+        rec.insert("self_bleu", sbleu);
+        rec.insert("rouge1_prev_epoch", rouge);
+        self.report.push_map(&rec);
+        timer.add("others", (total_s - known).max(0.0));
+        self.stage_totals.merge(&timer.take());
+        Ok(rec)
+    }
+
+    /// Run the configured number of steps; returns the summary.
+    pub fn run(&mut self, label: &str) -> Result<RunSummary> {
+        let t0 = std::time::Instant::now();
+        let mut last_reward = 0.0;
+        for s in 0..self.cfg.steps {
+            let rec = self.step(s)?;
+            last_reward = rec["reward"];
+            if s % 5 == 0 || s + 1 == self.cfg.steps {
+                log::info!(
+                    "[{label}] step {s}: reward={:.3} new_tok={} reused={} prefix={:.1} rollout={:.2}s",
+                    rec["reward"],
+                    rec["tokens_new"] as u64,
+                    rec["tokens_reused"] as u64,
+                    rec["prefix_len"],
+                    rec["rollout_s"],
+                );
+            }
+        }
+        let total = t0.elapsed().as_secs_f64();
+        let final_eval = eval::evaluate(
+            self.eng,
+            &mut self.rollout,
+            &self.policy,
+            &self.tok,
+            self.cfg.eval_n,
+            self.cfg.eval_samples_hard,
+            &mut self.rng,
+        )?;
+        self.report.save()?;
+
+        let steps = self.cfg.steps;
+        let mut stage_means = BTreeMap::new();
+        for (k, v) in self.stage_totals.stages() {
+            stage_means.insert(*k, v / steps as f64);
+        }
+        Ok(RunSummary {
+            label: label.to_string(),
+            steps,
+            total_new_tokens: self.cum_new_tokens,
+            total_reused_tokens: self.cum_reused_tokens,
+            rollout_secs: self.stage_totals.get("rollout"),
+            verify_secs: self.stage_totals.get("verification"),
+            assembly_secs: self.stage_totals.get("assembly"),
+            total_secs: total,
+            final_reward: last_reward,
+            final_eval,
+            stage_means,
+        })
+    }
+}

@@ -1,0 +1,142 @@
+//! Supervised pretraining — the "base model" producer.
+//!
+//! Teaches the response format (`prompt = answer<eos>` / chain-of-thought
+//! steps) over all task families so RLVR starts from a policy with a
+//! non-zero reward signal, playing the role of the paper's pretrained
+//! Qwen/LLaMA backbones. Runs on the same AOT `train_sft` entry.
+
+use anyhow::Result;
+
+use crate::model::Policy;
+use crate::runtime::Engine;
+use crate::tasks::{sft_corpus, SftExample};
+use crate::tokenizer::{Tokenizer, EOS, PAD};
+use crate::util::Rng;
+
+/// SFT configuration.
+#[derive(Clone, Debug)]
+pub struct SftConfig {
+    pub bundle: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub examples: usize,
+    pub seed: u64,
+    /// Resume from a checkpoint instead of the init blob.
+    pub init_from: Option<String>,
+}
+
+impl Default for SftConfig {
+    fn default() -> Self {
+        SftConfig {
+            bundle: "tiny_b32".into(),
+            steps: 300,
+            lr: 1e-3,
+            examples: 4096,
+            seed: 7,
+            init_from: None,
+        }
+    }
+}
+
+/// Pack an SFT batch: canonical layout, loss only on response tokens
+/// (including EOS).
+pub fn pack_sft_batch(
+    examples: &[&SftExample],
+    tok: &Tokenizer,
+    batch: usize,
+    prompt_len: usize,
+    total_len: usize,
+) -> (Vec<i32>, Vec<f32>, Vec<f32>) {
+    let mut tokens = vec![PAD; batch * total_len];
+    let mut valid = vec![0f32; batch * total_len];
+    let mut loss_mask = vec![0f32; batch * total_len];
+    for (row, ex) in examples.iter().enumerate() {
+        let prompt = tok.encode_prompt(&ex.prompt);
+        let mut resp = tok.encode(&ex.response);
+        resp.push(EOS);
+        let start = prompt_len - prompt.len();
+        for (i, &t) in prompt.iter().enumerate() {
+            tokens[row * total_len + start + i] = t;
+            valid[row * total_len + start + i] = 1.0;
+        }
+        for (j, &t) in resp.iter().enumerate().take(total_len - prompt_len) {
+            tokens[row * total_len + prompt_len + j] = t;
+            valid[row * total_len + prompt_len + j] = 1.0;
+            loss_mask[row * total_len + prompt_len + j] = 1.0;
+        }
+    }
+    (tokens, valid, loss_mask)
+}
+
+/// Run SFT from the bundle's init blob; returns the trained base policy
+/// and the loss curve.
+pub fn run_sft(eng: &Engine, cfg: &SftConfig) -> Result<(Policy, Vec<f32>)> {
+    let info = eng.bundle(&cfg.bundle)?.clone();
+    let (b, p, t) = (info.batch, eng.manifest.prompt_len, eng.manifest.total_len);
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let corpus = sft_corpus(cfg.examples, cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ 0xF00D);
+    let mut policy = match &cfg.init_from {
+        Some(path) => Policy::load(eng, &cfg.bundle, path)?,
+        None => Policy::from_init(eng, &cfg.bundle)?,
+    };
+    // hp: [lr, _, _, _, _, _, weight_decay, max_grad_norm]
+    let hp = [cfg.lr, 0.0, 0.0, 0.0, 0.0, 1.0, 0.01, 1.0];
+    let hp_buf = eng.upload_f32(&hp, &[8])?;
+
+    let mut losses = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        let batch: Vec<&SftExample> =
+            (0..b).map(|_| &corpus[rng.below(corpus.len())]).collect();
+        let (tokens, valid, loss_mask) = pack_sft_batch(&batch, &tok, b, p, t);
+        let tok_buf = eng.upload_i32(&tokens, &[b, t])?;
+        let val_buf = eng.upload_f32(&valid, &[b, t])?;
+        let lm_buf = eng.upload_f32(&loss_mask, &[b, t])?;
+        let new_blob = eng.call(
+            &cfg.bundle,
+            "train_sft",
+            &[&policy.blob, &tok_buf, &val_buf, &lm_buf, &hp_buf],
+        )?;
+        policy.swap(new_blob);
+        let m = policy.metrics(eng)?;
+        let loss = m.get(eng, "loss");
+        losses.push(loss);
+        if step % 50 == 0 || step + 1 == cfg.steps {
+            log::info!(
+                "[sft:{}] step {step}: loss={loss:.4} acc={:.3}",
+                cfg.bundle,
+                m.get(eng, "entropy"), // slot 3 carries accuracy for SFT
+            );
+        }
+    }
+    Ok((policy, losses))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_masks_only_response() {
+        let tok = Tokenizer::default_charset();
+        let ex = SftExample { prompt: "1+1=".into(), response: "2".into() };
+        let (tokens, valid, lm) = pack_sft_batch(&[&ex], &tok, 2, 8, 16);
+        // prompt occupies slots 3..8 (BOS + 4 chars), response slot 8..10 (char+EOS)
+        assert_eq!(valid[3..10], [1.0; 7]);
+        assert_eq!(&lm[..8], &[0.0; 8]);
+        assert_eq!(lm[8], 1.0);
+        assert_eq!(lm[9], 1.0);
+        assert_eq!(tokens[9], EOS);
+        // second row is empty filler
+        assert!(valid[16..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn long_responses_truncate() {
+        let tok = Tokenizer::default_charset();
+        let ex = SftExample { prompt: "1=".into(), response: "123456789012345".into() };
+        let (_, valid, _) = pack_sft_batch(&[&ex], &tok, 1, 8, 12);
+        // response region is 4 slots; no overflow
+        assert_eq!(valid.len(), 12);
+    }
+}

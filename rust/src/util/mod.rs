@@ -1,0 +1,15 @@
+//! Utility substrate: RNG, JSON, timers, simple logging.
+//!
+//! The offline crate mirror in this image only carries the `xla`
+//! dependency closure, so the usual ecosystem crates (rand, serde_json,
+//! env_logger) are replaced by these small, fully-tested implementations.
+
+pub mod json;
+pub mod logging;
+pub mod npy;
+pub mod rng;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::{sample_top_p, Rng, TopPSampler};
+pub use timer::StageTimer;

@@ -1,0 +1,68 @@
+//! Minimal NumPy `.npy` writer for f32 arrays.
+//!
+//! The vendored xla crate's `Literal::write_npy` is broken for f32 (it
+//! copies through a u8-typed `copy_raw_to`, which type-checks against the
+//! literal element type and fails); checkpoints therefore use this writer.
+//! Reading stays on `xla::Literal::read_npy`, which works.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Write a 1-D f32 array as `.npy` (v1.0, little-endian).
+pub fn write_npy_f32(path: impl AsRef<Path>, data: &[f32]) -> Result<()> {
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': ({},), }}",
+        data.len()
+    );
+    // pad so that magic(6)+version(2)+len(2)+header is a multiple of 64
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.extend(std::iter::repeat_n(' ', pad));
+    header.push('\n');
+
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    // SAFETY-free byte conversion
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use xla::FromRawBytes;
+
+    #[test]
+    fn roundtrips_through_xla_reader() {
+        let path = std::env::temp_dir().join("specrl_npy_writer_test.npy");
+        let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect();
+        write_npy_f32(&path, &data).unwrap();
+        let lit = xla::Literal::read_npy(&path, &()).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn numpy_can_read_it_header_shape() {
+        // structural check without numpy: magic + parseable header
+        let path = std::env::temp_dir().join("specrl_npy_writer_test2.npy");
+        write_npy_f32(&path, &[1.0, 2.0]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..6], b"\x93NUMPY");
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+        let header = std::str::from_utf8(&bytes[10..10 + hlen]).unwrap();
+        assert!(header.contains("'<f4'"));
+        assert!(header.contains("(2,)"));
+        let _ = std::fs::remove_file(path);
+    }
+}

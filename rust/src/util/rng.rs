@@ -1,0 +1,289 @@
+//! Deterministic pseudo-random number generation (SplitMix64 seeding +
+//! xoshiro256** core), plus the categorical / top-p samplers used by the
+//! rollout engine.
+//!
+//! All randomness in the coordinator flows through [`Rng`] so every
+//! experiment is reproducible from a single `u64` seed; verification
+//! uniforms are drawn here and shipped to the device (the L1 acceptance
+//! kernel consumes them — the device never owns RNG state).
+
+/// xoshiro256** PRNG seeded via SplitMix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed deterministically from a single value.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-component RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        // 24 high bits -> [0,1) with full f32 mantissa coverage
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free (bias negligible for our n).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi >= lo);
+        lo + self.below((hi - lo + 1) as usize) as i64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k <= n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+
+    /// Fill a slice with U(0,1) f32 samples.
+    pub fn fill_uniform(&mut self, out: &mut [f32]) {
+        for x in out.iter_mut() {
+            *x = self.f32();
+        }
+    }
+}
+
+/// Sample an index from a (not necessarily normalized) probability vector
+/// with optional top-p (nucleus) truncation.
+///
+/// `probs` is read-only; scratch allocations are the caller's via
+/// [`TopPSampler`] for the hot path.
+pub fn sample_top_p(probs: &[f32], top_p: f32, rng: &mut Rng) -> usize {
+    let mut sampler = TopPSampler::new(probs.len());
+    sampler.sample(probs, top_p, rng)
+}
+
+/// Reusable top-p sampler: owns its scratch so the per-token decode loop
+/// does not allocate (see DESIGN.md §Perf L3 rules).
+pub struct TopPSampler {
+    order: Vec<u32>,
+}
+
+impl TopPSampler {
+    pub fn new(vocab: usize) -> Self {
+        TopPSampler { order: (0..vocab as u32).collect() }
+    }
+
+    /// Nucleus sampling: keep the smallest prefix of the sorted
+    /// distribution whose mass reaches `top_p`, renormalize, inverse-CDF.
+    pub fn sample(&mut self, probs: &[f32], top_p: f32, rng: &mut Rng) -> usize {
+        debug_assert_eq!(probs.len(), self.order.len());
+        if top_p >= 0.999_999 {
+            // plain categorical: inverse CDF over the raw distribution
+            let total: f32 = probs.iter().sum();
+            let mut u = rng.f32() * total;
+            for (i, &p) in probs.iter().enumerate() {
+                u -= p;
+                if u <= 0.0 {
+                    return i;
+                }
+            }
+            return probs.len() - 1;
+        }
+        for (i, o) in self.order.iter_mut().enumerate() {
+            *o = i as u32;
+        }
+        self.order
+            .sort_unstable_by(|&a, &b| probs[b as usize].total_cmp(&probs[a as usize]));
+        let total: f32 = probs.iter().sum();
+        let budget = top_p * total;
+        let mut mass = 0.0f32;
+        let mut cut = self.order.len();
+        for (rank, &i) in self.order.iter().enumerate() {
+            mass += probs[i as usize];
+            if mass >= budget {
+                cut = rank + 1;
+                break;
+            }
+        }
+        let kept = &self.order[..cut];
+        let kept_mass: f32 = kept.iter().map(|&i| probs[i as usize]).sum();
+        let mut u = rng.f32() * kept_mass;
+        for &i in kept {
+            u -= probs[i as usize];
+            if u <= 0.0 {
+                return i as usize;
+            }
+        }
+        kept[kept.len() - 1] as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(4);
+        for _ in 0..10_000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn uniform_mean_reasonable() {
+        let mut r = Rng::new(5);
+        let mean: f64 = (0..20_000).map(|_| r.f64()).sum::<f64>() / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(6);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.05, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn categorical_matches_distribution() {
+        let mut r = Rng::new(8);
+        let probs = vec![0.1, 0.2, 0.3, 0.4];
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[sample_top_p(&probs, 1.0, &mut r)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let freq = c as f64 / 40_000.0;
+            assert!((freq - probs[i] as f64).abs() < 0.02, "{i}: {freq}");
+        }
+    }
+
+    #[test]
+    fn top_p_truncates_tail() {
+        let mut r = Rng::new(9);
+        // 0.5/0.3/0.15/0.05 with top_p=0.8 keeps only the first two
+        let probs = vec![0.5, 0.3, 0.15, 0.05];
+        for _ in 0..2_000 {
+            let s = sample_top_p(&probs, 0.8, &mut r);
+            assert!(s < 2, "sampled tail index {s}");
+        }
+    }
+
+    #[test]
+    fn top_p_one_keeps_everything_reachable() {
+        let mut r = Rng::new(10);
+        let probs = vec![0.25, 0.25, 0.25, 0.25];
+        let mut seen = [false; 4];
+        for _ in 0..1_000 {
+            seen[sample_top_p(&probs, 1.0, &mut r)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(11);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(12);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let xa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xa, xb);
+    }
+}

@@ -1,0 +1,127 @@
+//! Stage timing: the instrument behind the paper's Table 4 (end-to-end
+//! per-stage breakdown) and Figure 11 (rollout-time trajectories).
+//!
+//! A [`StageTimer`] accumulates wall-clock per named stage per step; the
+//! trainer snapshots and resets it every step so reports can show both
+//! per-step series and run totals.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulates per-stage durations (seconds).
+#[derive(Default, Debug, Clone)]
+pub struct StageTimer {
+    acc: BTreeMap<&'static str, f64>,
+}
+
+/// RAII guard measuring one stage span.
+pub struct Span<'a> {
+    timer: &'a mut StageTimer,
+    stage: &'static str,
+    start: Instant,
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `stage`.
+    pub fn time<T>(&mut self, stage: &'static str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.add(stage, start.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Start an explicit span (for code that is not closure-shaped).
+    pub fn span(&mut self, stage: &'static str) -> Span<'_> {
+        Span { stage, start: Instant::now(), timer: self }
+    }
+
+    pub fn add(&mut self, stage: &'static str, secs: f64) {
+        *self.acc.entry(stage).or_insert(0.0) += secs;
+    }
+
+    pub fn get(&self, stage: &str) -> f64 {
+        self.acc.get(stage).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.acc.values().sum()
+    }
+
+    /// Snapshot current accumulations and reset.
+    pub fn take(&mut self) -> BTreeMap<&'static str, f64> {
+        std::mem::take(&mut self.acc)
+    }
+
+    pub fn stages(&self) -> impl Iterator<Item = (&&'static str, &f64)> {
+        self.acc.iter()
+    }
+
+    /// Merge another snapshot into this accumulator.
+    pub fn merge(&mut self, other: &BTreeMap<&'static str, f64>) {
+        for (k, v) in other {
+            *self.acc.entry(k).or_insert(0.0) += v;
+        }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let secs = self.start.elapsed().as_secs_f64();
+        self.timer.add(self.stage, secs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_takes() {
+        let mut t = StageTimer::new();
+        t.add("rollout", 1.0);
+        t.add("rollout", 0.5);
+        t.add("verify", 0.25);
+        assert_eq!(t.get("rollout"), 1.5);
+        assert_eq!(t.total(), 1.75);
+        let snap = t.take();
+        assert_eq!(snap["verify"], 0.25);
+        assert_eq!(t.total(), 0.0);
+    }
+
+    #[test]
+    fn time_closure_measures_something() {
+        let mut t = StageTimer::new();
+        let v = t.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.get("work") >= 0.004);
+    }
+
+    #[test]
+    fn span_guard_records_on_drop() {
+        let mut t = StageTimer::new();
+        {
+            let _s = t.span("guarded");
+            std::thread::sleep(std::time::Duration::from_millis(3));
+        }
+        assert!(t.get("guarded") >= 0.002);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = StageTimer::new();
+        a.add("x", 1.0);
+        let mut b = StageTimer::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b.take());
+        assert_eq!(a.get("x"), 3.0);
+        assert_eq!(a.get("y"), 3.0);
+    }
+}

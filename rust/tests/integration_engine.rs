@@ -1,0 +1,158 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they skip (with a note) when
+//! artifacts are missing so `cargo test` stays green in a fresh checkout.
+
+use spec_rl::model::Policy;
+use spec_rl::rollout::{RolloutEngine, SampleCfg, SeqTask};
+use spec_rl::runtime::Engine;
+use spec_rl::tokenizer::{Tokenizer, EOS};
+use spec_rl::util::{Rng, StageTimer};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load("artifacts").unwrap())
+}
+
+#[test]
+fn uniform_policy_decode_probs_are_uniform() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut rng = Rng::new(5);
+    let mut timer = StageTimer::new();
+    // zero-init head => uniform next-token distribution => responses are
+    // (almost surely) unfinished noise; just check mechanics.
+    let tasks: Vec<SeqTask> = (0..4)
+        .map(|i| SeqTask::fresh(i, tok.encode_prompt("1+1=")))
+        .collect();
+    let (results, stats) = rollout
+        .run(&policy, tasks, SampleCfg { temperature: 1.0, top_p: 1.0 }, &mut rng, &mut timer)
+        .unwrap();
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        assert_eq!(r.reused, 0);
+        assert_eq!(r.new_tokens, r.response.len());
+        assert_eq!(r.logps.len(), r.response.len());
+        // uniform logp ~= -ln(51) for every sampled token
+        for lp in &r.logps {
+            assert!((lp + (51f32).ln()).abs() < 0.05, "{lp}");
+        }
+    }
+    assert!(stats.new_tokens > 0);
+    assert!(timer.get("rollout") > 0.0);
+}
+
+#[test]
+fn rollout_respects_gen_cap_and_eos() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let g = rollout.gen_len();
+    let mut rng = Rng::new(6);
+    let mut timer = StageTimer::new();
+    let tasks: Vec<SeqTask> =
+        (0..8).map(|i| SeqTask::fresh(i, tok.encode_prompt("9*9="))).collect();
+    let (results, _) = rollout
+        .run(&policy, tasks, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    for r in &results {
+        assert!(r.response.len() <= g);
+        if r.finished {
+            assert_eq!(*r.response.last().unwrap(), EOS);
+        } else {
+            assert_eq!(r.response.len(), g, "unfinished row must hit the cap");
+        }
+    }
+}
+
+#[test]
+fn prefix_resume_counts_reused_tokens() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut rng = Rng::new(7);
+    let mut timer = StageTimer::new();
+    let prefix = tok.encode("12345");
+    let task = SeqTask {
+        id: 0,
+        prompt: tok.encode_prompt("1+1="),
+        prefix_logps: vec![-1.0; prefix.len()],
+        prefix: prefix.clone(),
+    };
+    let (results, stats) = rollout
+        .run(&policy, vec![task], SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    assert_eq!(results[0].reused, 5);
+    assert_eq!(&results[0].response[..5], &prefix[..]);
+    assert_eq!(stats.reused_tokens, 5);
+    assert_eq!(results[0].response.len(), 5 + results[0].new_tokens);
+}
+
+#[test]
+fn terminal_prefix_skips_decoding_entirely() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut rng = Rng::new(8);
+    let mut timer = StageTimer::new();
+    let mut prefix = tok.encode("42");
+    prefix.push(EOS);
+    let task = SeqTask {
+        id: 3,
+        prompt: tok.encode_prompt("6*7="),
+        prefix_logps: vec![-0.5; prefix.len()],
+        prefix: prefix.clone(),
+    };
+    let (results, stats) = rollout
+        .run(&policy, vec![task], SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    assert_eq!(stats.decode_steps, 0);
+    assert_eq!(stats.new_tokens, 0);
+    assert_eq!(results[0].response, prefix);
+    assert!(results[0].finished);
+    assert_eq!(results[0].logps, vec![-0.5; 3]);
+}
+
+#[test]
+fn more_tasks_than_batch_runs_in_waves() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let b = rollout.batch;
+    let mut rng = Rng::new(9);
+    let mut timer = StageTimer::new();
+    let tasks: Vec<SeqTask> =
+        (0..b + 3).map(|i| SeqTask::fresh(i, tok.encode_prompt("2+2="))).collect();
+    let (results, stats) = rollout
+        .run(&policy, tasks, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    assert_eq!(results.len(), b + 3);
+    assert_eq!(stats.waves, 2);
+    // ids come back sorted
+    let ids: Vec<usize> = results.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..b + 3).collect::<Vec<_>>());
+}
+
+#[test]
+fn engine_stats_accumulate() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "nano_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "nano_b32").unwrap();
+    let mut rng = Rng::new(10);
+    let mut timer = StageTimer::new();
+    let tasks = vec![SeqTask::fresh(0, tok.encode_prompt("1+2="))];
+    rollout.run(&policy, tasks, SampleCfg::default(), &mut rng, &mut timer).unwrap();
+    let stats = eng.stats();
+    assert!(stats.iter().any(|(k, s)| k == "nano_b32/prefill" && s.calls >= 1));
+    assert!(stats.iter().any(|(k, _)| k == "nano_b32/read_gen"));
+}

@@ -1,0 +1,192 @@
+//! Integration tests of the SPEC-RL mechanism against the real engine:
+//! the spec-consistency invariants (1-4 in DESIGN.md).
+
+use spec_rl::model::Policy;
+use spec_rl::rollout::{RolloutEngine, SampleCfg};
+use spec_rl::runtime::Engine;
+use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
+use spec_rl::tokenizer::Tokenizer;
+use spec_rl::util::{Rng, StageTimer};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load("artifacts").unwrap())
+}
+
+fn requests(tok: &Tokenizer, prompts: &[&str]) -> Vec<RolloutRequest> {
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| RolloutRequest { id: i, prompt: tok.encode_prompt(p) })
+        .collect()
+}
+
+const PROMPTS: [&str; 4] = ["1+1=", "17+25=", "9*9=", "50-8="];
+
+fn collect_once(
+    spec: &mut SpecRollout,
+    eng: &Engine,
+    rollout: &mut RolloutEngine,
+    policy: &Policy,
+    tok: &Tokenizer,
+    rng: &mut Rng,
+) -> (Vec<spec_rl::rollout::SeqResult>, spec_rl::spec::SpecStepStats) {
+    let reqs = requests(tok, &PROMPTS);
+    let mut timer = StageTimer::new();
+    spec.collect(eng, rollout, policy, &reqs, SampleCfg::default(), rng, &mut timer)
+        .unwrap()
+}
+
+/// Invariant 1: identical policy + lenience just above 1 => every draft
+/// token is accepted, rollouts are bit-identical to the cache.
+#[test]
+fn identical_policy_full_acceptance() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut rng = Rng::new(21);
+    // small epsilon absorbs decode-vs-score float noise (~1e-6)
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.01));
+
+    let (first, s0) = collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    assert_eq!(s0.drafts, 0, "epoch 1 has no drafts");
+    let (second, s1) = collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    assert_eq!(s1.drafts, 4);
+    assert!(s1.full_reuse_ratio > 0.99, "{s1:?}");
+    assert_eq!(s1.new_tokens, 0);
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.response, b.response, "reused rollouts must be identical");
+    }
+}
+
+/// Invariant 2: lenience zero => rejection at offset 0 (vanilla).
+#[test]
+fn zero_lenience_is_vanilla() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut rng = Rng::new(22);
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Zero);
+
+    collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    let (_, s1) = collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    assert_eq!(s1.drafts, 4);
+    assert_eq!(s1.mean_prefix_len, 0.0, "{s1:?}");
+    assert_eq!(s1.reused_tokens, 0);
+    assert!(s1.new_tokens > 0);
+}
+
+/// Invariant 3: full-reuse variant decodes nothing after epoch 1.
+#[test]
+fn full_variant_reuses_everything() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut rng = Rng::new(23);
+    let mut spec = SpecRollout::new(ReuseVariant::Full, Lenience::Infinite);
+
+    let (first, _) = collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    let (second, s1) = collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    assert_eq!(s1.verify_calls, 0, "full reuse skips verification");
+    // drafts that ended with EOS are terminal -> zero new tokens for them;
+    // length-capped drafts resume (prefix == gen cap is terminal too).
+    for (a, b) in first.iter().zip(&second) {
+        assert!(b.response.starts_with(&a.response) || b.reused == a.response.len());
+    }
+}
+
+/// Invariant 6: the cache refreshes immediately — after a collect, every
+/// request id's latest entry is the new rollout at this step's version.
+#[test]
+fn cache_refreshes_to_current_step() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut rng = Rng::new(24);
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
+
+    let (r0, _) = collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    for r in &r0 {
+        let e = spec.cache.latest(r.id).unwrap();
+        assert_eq!(e.version, 0);
+        assert_eq!(e.response, r.response);
+        assert_eq!(e.logps.len(), e.response.len());
+    }
+    let (r1, _) = collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    for r in &r1 {
+        assert_eq!(spec.cache.latest(r.id).unwrap().version, 1);
+        // previous slot holds the step-0 rollout (delayed-reuse source)
+        assert_eq!(spec.cache.previous(r.id).unwrap().version, 0);
+    }
+}
+
+/// Random reuse never calls the verifier and reuses some prefix lengths
+/// spread over [0, len].
+#[test]
+fn random_variant_skips_verifier() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut rng = Rng::new(25);
+    let mut spec = SpecRollout::new(ReuseVariant::Random, Lenience::Fixed(0.5));
+
+    collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    let (_, s1) = collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    assert_eq!(s1.verify_calls, 0);
+    assert_eq!(s1.drafts, 4);
+}
+
+/// Off variant: cache shadow-updates but drafts never form.
+#[test]
+fn off_variant_never_drafts_but_tracks_cache() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut rng = Rng::new(26);
+    let mut spec = SpecRollout::vanilla();
+
+    collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    assert_eq!(spec.cache.len(), 4, "shadow cache fills");
+    let (_, s1) = collect_once(&mut spec, &eng, &mut rollout, &policy, &tok, &mut rng);
+    assert_eq!(s1.drafts, 0);
+    assert_eq!(s1.reused_tokens, 0);
+}
+
+/// Verification requests pack into ceil(n/batch) calls (paper: one packed
+/// call per batch).
+#[test]
+fn verification_is_packed() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let b = rollout.batch;
+    let mut rng = Rng::new(27);
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
+
+    // n = batch + 2 requests -> 2 verify calls on the second pass
+    let prompts: Vec<String> = (0..b + 2).map(|i| format!("{}+{}=", i % 90, (i * 7) % 90)).collect();
+    let reqs: Vec<RolloutRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| RolloutRequest { id: i, prompt: tok.encode_prompt(p) })
+        .collect();
+    let mut timer = StageTimer::new();
+    spec.collect(&eng, &mut rollout, &policy, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    let (_, s1) = spec
+        .collect(&eng, &mut rollout, &policy, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    assert_eq!(s1.drafts, b + 2);
+    assert_eq!(s1.verify_calls, 2);
+    assert!(timer.get("verification") > 0.0);
+}

@@ -1,0 +1,141 @@
+//! Integration tests of the full training pipeline (short runs on the
+//! `nano` bundle to stay fast). Skipped without artifacts.
+
+use spec_rl::algo::Algo;
+use spec_rl::config::RunConfig;
+use spec_rl::model::Policy;
+use spec_rl::runtime::Engine;
+use spec_rl::spec::{Lenience, ReuseVariant};
+use spec_rl::trainer::Trainer;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load("artifacts").unwrap())
+}
+
+fn tiny_cfg(algo: Algo, variant: ReuseVariant) -> RunConfig {
+    let mut cfg = RunConfig {
+        bundle: "nano_b32".into(),
+        algo,
+        params: algo.default_params(),
+        n_prompts: 16,
+        prompts_per_step: 8,
+        group: 4,
+        steps: 5, // 2 epochs at 16/8 = 2 steps/epoch
+        variant,
+        lenience: Lenience::Fixed(0.5),
+        eval_n: 4,
+        eval_samples_hard: 1,
+        ..RunConfig::default()
+    };
+    cfg.params.lr = 1e-3;
+    cfg
+}
+
+#[test]
+fn grpo_vanilla_runs_and_records_stages() {
+    let Some(eng) = engine() else { return };
+    let base = Policy::from_init(&eng, "nano_b32").unwrap();
+    let mut tr = Trainer::new(&eng, tiny_cfg(Algo::Grpo, ReuseVariant::Off), base).unwrap();
+    let rec = tr.step(0).unwrap();
+    assert!(rec["rollout_s"] > 0.0);
+    assert_eq!(rec["verification_s"], 0.0);
+    assert!(rec["update_actor_s"] > 0.0);
+    assert!(rec["ref_s"] > 0.0, "GRPO scores the reference policy");
+    assert_eq!(rec["values_s"], 0.0, "GRPO has no critic");
+    assert!(rec["loss"].is_finite());
+    assert!(rec["entropy"] > 0.0);
+}
+
+#[test]
+fn grpo_spec_reuses_after_one_epoch() {
+    let Some(eng) = engine() else { return };
+    let base = Policy::from_init(&eng, "nano_b32").unwrap();
+    let mut tr = Trainer::new(&eng, tiny_cfg(Algo::Grpo, ReuseVariant::Spec), base).unwrap();
+    // epoch 1: steps 0,1 — no drafts
+    let r0 = tr.step(0).unwrap();
+    assert_eq!(r0["drafts"], 0.0);
+    let _ = tr.step(1).unwrap();
+    // epoch 2: step 2 revisits step-0 prompts — drafts must appear
+    let r2 = tr.step(2).unwrap();
+    assert_eq!(r2["drafts"], 32.0);
+    assert!(r2["verification_s"] > 0.0);
+    // policy barely moved (tiny lr, 2 steps): most drafts accepted
+    assert!(r2["prefix_len"] > 0.0, "{r2:?}");
+}
+
+#[test]
+fn ppo_uses_critic_stages() {
+    let Some(eng) = engine() else { return };
+    let base = Policy::from_init(&eng, "nano_b32").unwrap();
+    let mut cfg = tiny_cfg(Algo::Ppo, ReuseVariant::Off);
+    cfg.group = 4;
+    let mut tr = Trainer::new(&eng, cfg, base).unwrap();
+    let rec = tr.step(0).unwrap();
+    assert!(rec["values_s"] > 0.0, "PPO runs value_fwd");
+    assert!(rec["update_critic_s"] > 0.0, "PPO trains the critic");
+    assert_eq!(rec["ref_s"], 0.0, "PPO has no KL reference");
+}
+
+#[test]
+fn dapo_dynamic_sampling_may_use_extra_rounds() {
+    let Some(eng) = engine() else { return };
+    let base = Policy::from_init(&eng, "nano_b32").unwrap();
+    let mut tr = Trainer::new(&eng, tiny_cfg(Algo::Dapo, ReuseVariant::Off), base).unwrap();
+    let rec = tr.step(0).unwrap();
+    // uniform-policy rewards are all zero -> every group degenerate ->
+    // DAPO must exhaust its reroll budget and report >1 gen rounds.
+    assert!(rec["gen_rounds"] >= 2.0, "{rec:?}");
+    assert!(rec["loss"].is_finite());
+}
+
+#[test]
+fn full_run_produces_summary_and_csv() {
+    let Some(eng) = engine() else { return };
+    let base = Policy::from_init(&eng, "nano_b32").unwrap();
+    let mut cfg = tiny_cfg(Algo::Grpo, ReuseVariant::Spec);
+    cfg.out_dir = std::env::temp_dir().join("specrl_itest_out").to_string_lossy().into_owned();
+    let mut tr = Trainer::new(&eng, cfg.clone(), base).unwrap();
+    let summary = tr.run("itest").unwrap();
+    assert_eq!(summary.steps, 5);
+    assert!(summary.total_new_tokens > 0);
+    assert_eq!(summary.final_eval.len(), 7);
+    assert!(summary.stage_means.contains_key("rollout"));
+    // CSV written
+    let csv = format!("{}/grpo_spec_nano_b32.csv", cfg.out_dir);
+    let text = std::fs::read_to_string(&csv).unwrap();
+    assert!(text.lines().count() >= 6, "header + 5 steps");
+    assert!(text.starts_with("step,"));
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+}
+
+#[test]
+fn trainer_rejects_mismatched_batch() {
+    let Some(eng) = engine() else { return };
+    let base = Policy::from_init(&eng, "nano_b32").unwrap();
+    let mut cfg = tiny_cfg(Algo::Grpo, ReuseVariant::Off);
+    cfg.prompts_per_step = 4; // 4*4=16 != 32
+    assert!(Trainer::new(&eng, cfg, base).is_err());
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(eng) = engine() else { return };
+    let run = |seed: u64| {
+        let base = Policy::from_init(&eng, "nano_b32").unwrap();
+        let mut cfg = tiny_cfg(Algo::Grpo, ReuseVariant::Spec);
+        cfg.seed = seed;
+        cfg.steps = 3;
+        let mut tr = Trainer::new(&eng, cfg, base).unwrap();
+        let mut rewards = Vec::new();
+        for s in 0..3 {
+            rewards.push(tr.step(s).unwrap()["tokens_new"]);
+        }
+        rewards
+    };
+    assert_eq!(run(11), run(11));
+    assert_ne!(run(11), run(12));
+}

@@ -1,0 +1,305 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md list),
+//! using the in-tree `testing` kit (proptest substitute).
+//!
+//! These run without artifacts — they exercise the pure L3 logic: packing,
+//! cache, advantage computation, samplers, lenience, diversity metrics.
+
+use spec_rl::algo;
+use spec_rl::metrics;
+use spec_rl::rollout::{BatchLayout, SeqTask};
+use spec_rl::spec::{CacheEntry, Lenience, RolloutCache};
+use spec_rl::testing::{forall, tokens};
+use spec_rl::tokenizer::{Tokenizer, BOS, EOS};
+use spec_rl::util::{sample_top_p, Rng};
+
+const P: usize = 16;
+const T: usize = 64;
+const G: usize = T - P;
+
+#[derive(Debug)]
+struct PackCase {
+    tasks: Vec<SeqTask>,
+}
+
+fn pack_case(rng: &mut Rng) -> PackCase {
+    let n = 1 + rng.below(8);
+    let tasks = (0..n)
+        .map(|i| {
+            let plen = 1 + rng.below(P - 1);
+            let mut prompt = vec![BOS];
+            prompt.extend((1..plen).map(|_| (3 + rng.below(48)) as i32));
+            let prefix_len = rng.below(G);
+            let prefix: Vec<i32> = (0..prefix_len).map(|_| (3 + rng.below(48)) as i32).collect();
+            SeqTask {
+                id: i,
+                prompt,
+                prefix_logps: vec![-1.0; prefix.len()],
+                prefix,
+            }
+        })
+        .collect();
+    PackCase { tasks }
+}
+
+/// Invariant 7: packing then unpacking is the identity; pads never leak.
+#[test]
+fn prop_pack_unpack_identity() {
+    forall(101, 300, pack_case, |case| {
+        let l = BatchLayout::pack(&case.tasks, 8, P, T);
+        case.tasks.iter().enumerate().all(|(r, t)| {
+            let resp_ok = l.response(r) == t.prefix;
+            let nvalid_ok = l.n_valid(r) == t.prompt.len() + t.prefix.len();
+            let last_ok = l.last[r] == (P + t.prefix.len()) as i32 - 1;
+            resp_ok && nvalid_ok && last_ok
+        })
+    });
+}
+
+/// Rows beyond the packed tasks are fully invalid (inert filler).
+#[test]
+fn prop_filler_rows_inert() {
+    forall(102, 200, pack_case, |case| {
+        let l = BatchLayout::pack(&case.tasks, 8, P, T);
+        (case.tasks.len()..8).all(|r| l.n_valid(r) == 0 && !l.active[r])
+    });
+}
+
+/// Invariant 9 (part): GRPO advantages sum to ~0 within each group and are
+/// zero for zero-variance groups.
+#[test]
+fn prop_grpo_group_advantages() {
+    #[derive(Debug)]
+    struct Case {
+        rewards: Vec<f32>,
+        group: usize,
+    }
+    forall(
+        103,
+        500,
+        |rng: &mut Rng| {
+            let group = 2 + rng.below(4);
+            let n_groups = 1 + rng.below(6);
+            let rewards = (0..group * n_groups)
+                .map(|_| if rng.f32() < 0.5 { 1.0 } else { 0.0 })
+                .collect();
+            Case { rewards, group }
+        },
+        |c| {
+            let adv = algo::grpo_advantages(&c.rewards, c.group);
+            adv.chunks(c.group).zip(c.rewards.chunks(c.group)).all(|(a, r)| {
+                let sum: f32 = a.iter().sum();
+                let uniform = r.iter().all(|&x| x == r[0]);
+                let zeroed = a.iter().all(|&x| x.abs() < 1e-3);
+                sum.abs() < 1e-3 && (!uniform || zeroed)
+            })
+        },
+    );
+}
+
+/// GAE with gamma=lam=1 telescopes to reward - V(s_j) for every j.
+#[test]
+fn prop_gae_telescopes() {
+    #[derive(Debug)]
+    struct Case {
+        values: Vec<f32>,
+        reward: f32,
+    }
+    forall(
+        104,
+        300,
+        |rng: &mut Rng| {
+            let l = 2 + rng.below(20);
+            Case {
+                values: (0..=l).map(|_| rng.f32() * 2.0 - 1.0).collect(),
+                reward: if rng.f32() < 0.5 { 1.0 } else { 0.0 },
+            }
+        },
+        |c| {
+            let (adv, tgt) = algo::gae(&c.values, c.reward, 1.0, 1.0);
+            adv.iter().enumerate().all(|(j, a)| (a - (c.reward - c.values[j])).abs() < 1e-4)
+                && tgt.iter().all(|t| (t - c.reward).abs() < 1e-4)
+        },
+    );
+}
+
+/// Whitening produces ~zero mean, ~unit variance on the mask.
+#[test]
+fn prop_whiten_moments() {
+    forall(
+        105,
+        200,
+        |rng: &mut Rng| {
+            let n = 8 + rng.below(64);
+            let adv: Vec<f32> = (0..n).map(|_| rng.f32() * 10.0 - 5.0).collect();
+            let mask: Vec<f32> =
+                (0..n).map(|i| if i < 4 || rng.f32() < 0.7 { 1.0 } else { 0.0 }).collect();
+            (adv, mask)
+        },
+        |(adv, mask)| {
+            let mut a = adv.clone();
+            algo::whiten(&mut a, mask);
+            let n: f32 = mask.iter().sum();
+            let mean = a.iter().zip(mask).map(|(x, m)| x * m).sum::<f32>() / n;
+            // distinct values => variance near 1 (allow slack for ties)
+            mean.abs() < 1e-3 && a.iter().zip(mask).all(|(x, m)| *m > 0.5 || *x == 0.0)
+        },
+    );
+}
+
+/// Lenience is monotone: larger log-l never decreases at any step.
+#[test]
+fn prop_lenience_monotone_schedules() {
+    forall(
+        106,
+        200,
+        |rng: &mut Rng| {
+            let from = rng.f32() * 2.0 - 1.0;
+            let to = from + rng.f32() * 2.0;
+            let steps = 1 + rng.below(100) as u64;
+            (Lenience::Linear { from, to, steps }, rng.below(200) as u64)
+        },
+        |(l, step)| l.log_value(*step) <= l.log_value(step + 1) + 1e-6,
+    );
+}
+
+/// Cache: after any insert sequence, `latest` is the last insert and
+/// `previous` the one before.
+#[test]
+fn prop_cache_latest_previous() {
+    forall(
+        107,
+        300,
+        |rng: &mut Rng| {
+            let n = 2 + rng.below(6);
+            (0..n)
+                .map(|v| CacheEntry {
+                    response: vec![v as i32; 1 + rng.below(5)],
+                    logps: vec![-1.0; 1 + rng.below(5)],
+                    version: v as u64,
+                    finished: true,
+                })
+                .map(|mut e| {
+                    e.logps.resize(e.response.len(), -1.0);
+                    e
+                })
+                .collect::<Vec<_>>()
+        },
+        |entries| {
+            let mut c = RolloutCache::new();
+            for e in entries {
+                c.insert(9, e.clone());
+            }
+            let n = entries.len();
+            c.latest(9).unwrap().version == (n - 1) as u64
+                && c.previous(9).unwrap().version == (n - 2) as u64
+        },
+    );
+}
+
+/// Top-p sampling never returns an index whose probability is zero.
+#[test]
+fn prop_top_p_never_samples_zero_mass() {
+    forall(
+        108,
+        300,
+        |rng: &mut Rng| {
+            let v = 4 + rng.below(48);
+            let mut probs: Vec<f32> = (0..v)
+                .map(|_| if rng.f32() < 0.3 { 0.0 } else { rng.f32() })
+                .collect();
+            probs[0] = probs[0].max(0.1); // ensure some mass
+            let top_p = 0.5 + rng.f32() * 0.5;
+            let seed = rng.next_u64();
+            (probs, top_p, seed)
+        },
+        |(probs, top_p, seed)| {
+            let mut r = Rng::new(*seed);
+            (0..50).all(|_| probs[sample_top_p(probs, *top_p, &mut r)] > 0.0)
+        },
+    );
+}
+
+/// Tokenizer: encode/decode roundtrip over random charset strings.
+#[test]
+fn prop_tokenizer_roundtrip() {
+    let tok = Tokenizer::default_charset();
+    forall(109, 300, tokens(30, 51), |ids| {
+        // skip specials (not produced by encode)
+        if ids.iter().any(|&t| t < 3) {
+            return true;
+        }
+        let text = tok.decode(ids);
+        tok.encode(&text) == *ids
+    });
+}
+
+/// Diversity: distinct-1 is in [0, 1]; self-BLEU in [0, 1].
+#[test]
+fn prop_diversity_bounds() {
+    forall(
+        110,
+        150,
+        |rng: &mut Rng| {
+            let n = 2 + rng.below(6);
+            (0..n)
+                .map(|_| {
+                    let len = 1 + rng.below(20);
+                    (0..len).map(|_| (3 + rng.below(20)) as i32).collect::<Vec<i32>>()
+                })
+                .collect::<Vec<_>>()
+        },
+        |seqs| {
+            let d = metrics::distinct_1(seqs);
+            let s = metrics::self_bleu(seqs);
+            (0.0..=1.0).contains(&d) && (0.0..=1.0 + 1e-9).contains(&s)
+        },
+    );
+}
+
+/// ROUGE-1 is symmetric and bounded.
+#[test]
+fn prop_rouge_symmetric() {
+    forall(
+        111,
+        300,
+        |rng: &mut Rng| {
+            let a: Vec<i32> = (0..1 + rng.below(20)).map(|_| (3 + rng.below(10)) as i32).collect();
+            let b: Vec<i32> = (0..1 + rng.below(20)).map(|_| (3 + rng.below(10)) as i32).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let f = metrics::rouge1_f1(a, b);
+            let g = metrics::rouge1_f1(b, a);
+            (f - g).abs() < 1e-12 && (0.0..=1.0 + 1e-12).contains(&f)
+        },
+    );
+}
+
+/// Terminal prefixes (EOS-ended or full-length) never enter decoding.
+#[test]
+fn prop_terminal_prefix_detection() {
+    forall(
+        112,
+        300,
+        |rng: &mut Rng| {
+            let len = rng.below(G + 1);
+            let mut prefix: Vec<i32> = (0..len).map(|_| (3 + rng.below(40)) as i32).collect();
+            let terminal = rng.f32() < 0.5 && !prefix.is_empty();
+            if terminal {
+                let l = prefix.len();
+                prefix[l - 1] = EOS;
+            }
+            prefix
+        },
+        |prefix| {
+            let t = SeqTask {
+                id: 0,
+                prompt: vec![BOS],
+                prefix: prefix.clone(),
+                prefix_logps: vec![-1.0; prefix.len()],
+            };
+            let expect = prefix.last() == Some(&EOS) || prefix.len() >= G;
+            t.prefix_is_terminal(G) == expect
+        },
+    );
+}
