@@ -64,9 +64,13 @@ def entry_signatures(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
     common_tv = [a("tokens", I32, b, t), a("valid", F32, b, t)]
     sigs = {
         "prefill": [a("blob", F32, s)] + common_tv + [a("last", I32, b), a("temp", F32, 1)],
+        # decode carries no [B, T] valid arg: the mask lives in `gen` and is
+        # extended device-side from `slot` (see config.gen_blob_spec).
         "decode": [a("blob", F32, s), a("gen", F32, sg), a("token", I32, b),
-                   a("slot", I32, b), a("lpos", I32, b), a("valid", F32, b, t),
-                   a("temp", F32, 1)],
+                   a("slot", I32, b), a("lpos", I32, b), a("temp", F32, 1)],
+        # masked per-row re-prefill for continuous-batching slot refills
+        "refill": [a("blob", F32, s), a("gen", F32, sg)] + common_tv + [
+            a("rowmask", F32, b), a("last", I32, b), a("temp", F32, 1)],
         "read_gen": [a("gen", F32, sg)],
         "read_metrics": [a("blob", F32, s)],
         "score": [a("blob", F32, s)] + common_tv + [a("temp", F32, 1)],
@@ -94,11 +98,12 @@ def output_fields(name: str, cfg, geo, batch: int, value_head: bool):
     b, t, g, v = batch, geo.total_len, geo.gen_len, cfg.vocab
     n = C.n_params(cfg, geo, value_head)
     l, d = cfg.n_layers, cfg.d_model
-    if name in ("prefill", "decode"):
+    if name in ("prefill", "decode", "refill"):
         return [
             {"name": "cache_k", "offset": 0, "shape": [l, b, t, d]},
             {"name": "cache_v", "offset": l * b * t * d, "shape": [l, b, t, d]},
-            {"name": "probs", "offset": 2 * l * b * t * d, "shape": [b, v]},
+            {"name": "valid", "offset": 2 * l * b * t * d, "shape": [b, t]},
+            {"name": "probs", "offset": 2 * l * b * t * d + b * t, "shape": [b, v]},
         ]
     if name == "score":
         return [

@@ -127,13 +127,18 @@ def blob_size(cfg: ModelConfig, geo: SeqGeometry, value_head: bool = False) -> i
     return 3 * n_params(cfg, geo, value_head) + 1 + NUM_METRICS
 
 
-# Gen blob layout (per batch): [cache_k | cache_v | probs | scratch(0)]
+# Gen blob layout (per batch): [cache_k | cache_v | valid | probs].
+# The [B, T] valid mask is part of the device-resident generation state:
+# prefill seeds it, decode extends it in place via a one-hot slot write,
+# refill replaces it for masked rows. The host never re-uploads it per
+# decode step (see rust/src/rollout/sched.rs for the full contract).
 def gen_blob_spec(cfg: ModelConfig, geo: SeqGeometry, batch: int):
     """Returns ordered (name, shape) fields of the generation-state blob."""
     l, b, t, d = cfg.n_layers, batch, geo.total_len, cfg.d_model
     return [
         ("cache_k", (l, b, t, d)),
         ("cache_v", (l, b, t, d)),
+        ("valid", (b, t)),
         ("probs", (b, cfg.vocab)),
     ]
 

@@ -10,7 +10,7 @@ host round-trip per call to split. Every entry point therefore consumes
 and produces **single flat f32 arrays**:
 
 - ``policy blob``  = [params | adam_m | adam_v | step | metrics16]
-- ``gen blob``     = [cache_k | cache_v | probs]
+- ``gen blob``     = [cache_k | cache_v | valid | probs]
 - ``score/verify`` = [logp | entropy | ...]
 
 so parameters, optimizer state and the KV cache stay device-resident
@@ -273,33 +273,64 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
             off += n
         return out
 
-    def pack_gen(ck, cv, probs):
-        return jnp.concatenate([ck.reshape(-1), cv.reshape(-1), probs.reshape(-1)])
+    def pack_gen(ck, cv, valid, probs):
+        return jnp.concatenate(
+            [ck.reshape(-1), cv.reshape(-1), valid.reshape(-1), probs.reshape(-1)]
+        )
 
     def policy_params(blob):
         return params_from_flat(blob[:np_pol], cfg, geo, False)
 
-    # -- prefill ------------------------------------------------------------
-    def prefill(blob, tokens, valid, last, temp):
-        """Build the KV cache over the canonical layout; emit next-token
-        probs gathered at each row's `last` (per-row last real slot)."""
-        params = policy_params(blob)
-        logits, ck, cv = forward_full(params, tokens, valid, cfg, geo, attn_pallas)
+    def gather_last_probs(logits, last, temp):
+        """Next-token probs gathered at each row's `last` real slot."""
         lrow = jnp.clip(last, 0, t - 1)
         lg = jnp.take_along_axis(logits, lrow[:, None, None].astype(jnp.int32), axis=1)[:, 0]
         lg = lg / jnp.maximum(temp[0], 1e-4)
-        probs = jax.nn.softmax(lg, axis=-1)
-        return pack_gen(ck, cv, probs)
+        return jax.nn.softmax(lg, axis=-1)
+
+    # -- prefill ------------------------------------------------------------
+    def prefill(blob, tokens, valid, last, temp):
+        """Build the KV cache over the canonical layout and seed the
+        device-side valid mask; emit next-token probs at each row's `last`
+        (per-row last real slot). This is the only [B, T] mask upload of a
+        generation — decode maintains the mask on device."""
+        params = policy_params(blob)
+        logits, ck, cv = forward_full(params, tokens, valid, cfg, geo, attn_pallas)
+        probs = gather_last_probs(logits, last, temp)
+        return pack_gen(ck, cv, valid, probs)
 
     # -- decode -------------------------------------------------------------
-    def decode(blob, gen_blob, token, slot, lpos, valid, temp):
+    def decode(blob, gen_blob, token, slot, lpos, temp):
+        """One incremental step. The valid mask lives in the gen blob and is
+        extended here by a one-hot write at `slot` (an out-of-range slot is
+        an inert row: `one_hot` yields a zero row, nothing changes)."""
         params = policy_params(blob)
         gs = unpack_gen(gen_blob)
+        oh_slot = jax.nn.one_hot(slot, t, dtype=jnp.float32)  # [B,T]
+        valid = jnp.maximum(gs["valid"], oh_slot)
         probs, ck, cv = decode_one(
             params, gs["cache_k"], gs["cache_v"], token, slot, lpos, valid,
             temp[0], cfg, geo,
         )
-        return pack_gen(ck, cv, probs)
+        return pack_gen(ck, cv, valid, probs)
+
+    # -- refill: masked per-row (re)prefill into live generation state ------
+    def refill(blob, gen_blob, tokens, valid, rowmask, last, temp):
+        """Recompute cache/valid/probs for the rows flagged by `rowmask`
+        (several freed slots batch into one call); untouched rows keep
+        their state bit-for-bit. This is how the continuous scheduler
+        re-seats a finished slot without stalling its neighbours."""
+        params = policy_params(blob)
+        gs = unpack_gen(gen_blob)
+        logits, ck_new, cv_new = forward_full(params, tokens, valid, cfg, geo, attn_pallas)
+        probs_new = gather_last_probs(logits, last, temp)
+        m_row = rowmask[:, None]                 # [B,1]
+        m_cache = rowmask[None, :, None, None]   # [1,B,1,1] over [L,B,T,D]
+        ck = gs["cache_k"] * (1.0 - m_cache) + ck_new * m_cache
+        cv = gs["cache_v"] * (1.0 - m_cache) + cv_new * m_cache
+        vmask = gs["valid"] * (1.0 - m_row) + valid * m_row
+        probs = gs["probs"] * (1.0 - m_row) + probs_new * m_row
+        return pack_gen(ck, cv, vmask, probs)
 
     # -- score --------------------------------------------------------------
     def score(blob, tokens, valid, temp):
@@ -432,6 +463,7 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
     entries = {
         "prefill": prefill,
         "decode": decode,
+        "refill": refill,
         "read_gen": read_gen,
         "read_metrics": read_metrics,
         "score": score,

@@ -24,8 +24,8 @@ def test_entry_signatures_cover_all_entries():
     cfg = C.PRESETS["nano"]
     sigs = aot.entry_signatures(cfg, GEO, 4, value_head=False)
     assert set(sigs) == {
-        "prefill", "decode", "read_gen", "read_metrics", "score", "verify",
-        "train_policy", "train_sft",
+        "prefill", "decode", "refill", "read_gen", "read_metrics", "score",
+        "verify", "train_policy", "train_sft",
     }
     # every signature starts with the policy blob
     for name, sig in sigs.items():
@@ -42,7 +42,7 @@ def test_critic_signatures():
 
 def test_output_fields_offsets_are_contiguous():
     cfg = C.PRESETS["nano"]
-    for entry in ["prefill", "decode", "score", "verify", "train_policy"]:
+    for entry in ["prefill", "decode", "refill", "score", "verify", "train_policy"]:
         fields = aot.output_fields(entry, cfg, GEO, 4, False)
         off = 0
         for f in fields:

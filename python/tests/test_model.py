@@ -60,12 +60,17 @@ def make_prompts(seed=2):
 
 
 def greedy_rollout(entries, blob, tokens, valid, steps):
-    """Greedy decode `steps` tokens; returns (tokens, valid, logps [B,steps])."""
+    """Greedy decode `steps` tokens; returns (tokens, valid, logps [B,steps]).
+
+    The decode entry carries no [B, T] valid arg: the mask lives in the gen
+    blob, extended device-side from `slot` (the host copy here only serves
+    the teacher-forced cross-checks)."""
     temp = jnp.asarray([1.0], jnp.float32)
     last = jnp.full((B,), P - 1, jnp.int32)
     gen = entries["prefill"](blob, jnp.asarray(tokens), jnp.asarray(valid), last, temp)
     ck_n = CFG.n_layers * B * T * CFG.d_model
-    probs = np.asarray(gen[2 * ck_n : 2 * ck_n + B * V]).reshape(B, V)
+    probs = np.asarray(entries["read_gen"](gen)).reshape(B, V)
+    assert gen.shape[0] == 2 * ck_n + B * T + B * V  # [ck | cv | valid | probs]
     toks, val = tokens.copy(), valid.copy()
     logps = []
     for j in range(steps):
@@ -76,9 +81,11 @@ def greedy_rollout(entries, blob, tokens, valid, steps):
         val[:, P + j] = 1
         lpos = val.sum(1).astype(np.int32) - 1
         gen = entries["decode"](
-            blob, gen, jnp.asarray(nxt), jnp.asarray(slot), jnp.asarray(lpos),
-            jnp.asarray(val), temp,
+            blob, gen, jnp.asarray(nxt), jnp.asarray(slot), jnp.asarray(lpos), temp,
         )
+        # device-side mask must track the host-side one exactly
+        dev_valid = np.asarray(gen[2 * ck_n : 2 * ck_n + B * T]).reshape(B, T)
+        assert np.array_equal(dev_valid, val)
         probs = np.asarray(entries["read_gen"](gen)).reshape(B, V)
     return toks, val, np.stack(logps, 1)
 
@@ -127,6 +134,59 @@ def test_left_pad_shift_invariance(entries, blob):
                                  jnp.asarray(last), temp)
         probs.append(np.asarray(entries["read_gen"](gen)).reshape(B, V))
     assert np.abs(probs[0] - probs[1]).max() < 1e-5
+
+
+def unpack_gen_np(gen):
+    """Split a flat gen blob into (ck, cv, valid, probs) numpy views."""
+    ck_n = CFG.n_layers * B * T * CFG.d_model
+    ck = np.asarray(gen[:ck_n]).reshape(CFG.n_layers, B, T, CFG.d_model)
+    cv = np.asarray(gen[ck_n : 2 * ck_n]).reshape(CFG.n_layers, B, T, CFG.d_model)
+    vm = np.asarray(gen[2 * ck_n : 2 * ck_n + B * T]).reshape(B, T)
+    pr = np.asarray(gen[2 * ck_n + B * T :]).reshape(B, V)
+    return ck, cv, vm, pr
+
+
+def test_refill_rebuilds_masked_rows_and_preserves_live_rows(entries, blob):
+    """refill == prefill for masked rows, bit-identical no-op for others."""
+    tokens_a, valid_a, _ = make_prompts(seed=2)
+    tokens_b, valid_b, _ = make_prompts(seed=9)
+    temp = jnp.asarray([1.0], jnp.float32)
+    last = jnp.full((B,), P - 1, jnp.int32)
+    gen_a = entries["prefill"](blob, jnp.asarray(tokens_a), jnp.asarray(valid_a), last, temp)
+    gen_b = entries["prefill"](blob, jnp.asarray(tokens_b), jnp.asarray(valid_b), last, temp)
+    rowmask = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+    gen_r = entries["refill"](
+        blob, gen_a, jnp.asarray(tokens_b), jnp.asarray(valid_b),
+        jnp.asarray(rowmask), last, temp,
+    )
+    a = unpack_gen_np(gen_a)
+    bb = unpack_gen_np(gen_b)
+    rr = unpack_gen_np(gen_r)
+    for r in range(B):
+        want = bb if rowmask[r] > 0.5 else a
+        assert np.array_equal(rr[0][:, r], want[0][:, r]), f"cache_k row {r}"
+        assert np.array_equal(rr[1][:, r], want[1][:, r]), f"cache_v row {r}"
+        assert np.array_equal(rr[2][r], want[2][r]), f"valid row {r}"
+        assert np.array_equal(rr[3][r], want[3][r]), f"probs row {r}"
+
+
+def test_decode_out_of_range_slot_is_inert(entries, blob):
+    """slot == T must leave a row's device-side valid mask untouched."""
+    tokens, valid, _ = make_prompts()
+    temp = jnp.asarray([1.0], jnp.float32)
+    last = jnp.full((B,), P - 1, jnp.int32)
+    gen = entries["prefill"](blob, jnp.asarray(tokens), jnp.asarray(valid), last, temp)
+    nxt = np.full((B,), 5, np.int32)
+    slot = np.array([P, T, P, T], np.int32)  # rows 1 and 3 inert
+    lpos = valid.sum(1).astype(np.int32)
+    gen2 = entries["decode"](
+        blob, gen, jnp.asarray(nxt), jnp.asarray(slot), jnp.asarray(lpos), temp,
+    )
+    _, _, vm, _ = unpack_gen_np(gen2)
+    expect = valid.copy()
+    expect[0, P] = 1
+    expect[2, P] = 1
+    assert np.array_equal(vm, expect)
 
 
 def test_verify_accepts_own_rollout(entries, blob):

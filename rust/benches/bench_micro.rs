@@ -47,11 +47,21 @@ fn main() {
     let token_in = eng.upload_i32(&vec![5i32; b], &[b]).unwrap();
     let slot_in = eng.upload_i32(&vec![(t - 1) as i32; b], &[b]).unwrap();
     let lpos_in = eng.upload_i32(&vec![(t - 1) as i32; b], &[b]).unwrap();
+    // the decode entry carries no [B,T] valid arg: mask lives device-side
     bench.run("decode step (one token, all rows)", || {
         eng.call(
             bundle,
             "decode",
-            &[&policy.blob, &gen_blob, &token_in, &slot_in, &lpos_in, &val_buf, &temp],
+            &[&policy.blob, &gen_blob, &token_in, &slot_in, &lpos_in, &temp],
+        )
+        .unwrap()
+    });
+    let rowmask = eng.upload_f32(&vec![1.0f32; b], &[b]).unwrap();
+    bench.run("refill (masked per-row prefill)", || {
+        eng.call(
+            bundle,
+            "refill",
+            &[&policy.blob, &gen_blob, &tok_buf, &val_buf, &rowmask, &last, &temp],
         )
         .unwrap()
     });

@@ -1,0 +1,113 @@
+//! Scheduler bench: lockstep waves vs continuous batching on a
+//! skewed-length workload, at equal outputs (per-task RNG streams make the
+//! two paths produce identical tokens).
+//!
+//! Runs against the in-tree mock backend, so it needs no artifacts and
+//! measures pure scheduling efficiency: decode-executable invocations,
+//! slot-idle fraction, and host-side wall-clock. Writes
+//! `bench_sched.json` next to the working directory for machine diffing.
+
+use spec_rl::benchkit::{fmt_secs, Bench, JsonReport};
+use spec_rl::rollout::{RolloutEngine, SampleCfg, SeqTask};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::tokenizer::BOS;
+use spec_rl::util::{Rng, StageTimer};
+
+const B: usize = 8;
+const P: usize = 16;
+const T: usize = 64;
+const V: usize = 51;
+const N_TASKS: usize = 40;
+
+/// Skewed workload: remaining lengths spread from 1 token to the full
+/// generation region (reuse-heavy rows next to fresh rows, the shape
+/// SPEC-RL produces after its first epoch).
+fn skewed_tasks() -> Vec<SeqTask> {
+    let gen_len = T - P;
+    (0..N_TASKS)
+        .map(|i| {
+            let prefix_len = (i * (gen_len - 1) / N_TASKS).min(gen_len - 1);
+            SeqTask {
+                id: i,
+                prompt: vec![BOS, 3 + (i as i32 % 40), 5],
+                prefix: (0..prefix_len).map(|j| 3 + ((i + j) as i32 % 40)).collect(),
+                prefix_logps: vec![-1.0; prefix_len],
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut mock = MockEngine::new(B, P, T, V);
+    mock.eos_bias = 0.0; // length skew comes from the prefixes: deterministic
+    let blob = mock.blob();
+    let mut eng = RolloutEngine::new(&mock, "mock").unwrap();
+    let cfg = SampleCfg::default();
+
+    println!("== scheduler bench (mock backend: B={B} T={T}, {N_TASKS} skewed tasks) ==");
+    let bench = Bench::new(2, 10);
+
+    let mut timer = StageTimer::new();
+    let r_cont = bench.run("continuous batching (slot refill)", || {
+        let mut rng = Rng::new(7);
+        eng.run(&blob, skewed_tasks(), cfg, &mut rng, &mut timer).unwrap()
+    });
+    let r_lock = bench.run("lockstep waves (baseline)", || {
+        let mut rng = Rng::new(7);
+        eng.run_lockstep(&blob, skewed_tasks(), cfg, &mut rng, &mut timer).unwrap()
+    });
+
+    // one measured pass each for the step/idle stats + output equivalence
+    let mut rng = Rng::new(7);
+    let (cont_res, cont) = eng.run(&blob, skewed_tasks(), cfg, &mut rng, &mut timer).unwrap();
+    let mut rng = Rng::new(7);
+    let (lock_res, lock) =
+        eng.run_lockstep(&blob, skewed_tasks(), cfg, &mut rng, &mut timer).unwrap();
+    assert_eq!(cont_res.len(), lock_res.len());
+    for (c, l) in cont_res.iter().zip(&lock_res) {
+        assert_eq!((c.id, &c.response), (l.id, &l.response), "outputs must be equal");
+    }
+    assert!(
+        cont.decode_steps < lock.decode_steps,
+        "continuous must strictly reduce decode steps ({} vs {})",
+        cont.decode_steps,
+        lock.decode_steps
+    );
+
+    println!("\n                      continuous    lockstep");
+    println!("decode_steps        {:>10}  {:>10}", cont.decode_steps, lock.decode_steps);
+    println!(
+        "slot idle fraction  {:>10.3}  {:>10.3}",
+        cont.slot_idle_fraction(B),
+        lock.slot_idle_fraction(B)
+    );
+    println!("prefills (waves)    {:>10}  {:>10}", cont.waves, lock.waves);
+    println!("refills             {:>10}  {:>10}", cont.refills, lock.refills);
+    println!(
+        "wall-clock (median) {:>10}  {:>10}",
+        fmt_secs(r_cont.median_secs),
+        fmt_secs(r_lock.median_secs)
+    );
+    println!(
+        "\nspeedup: {:.2}x fewer decode steps, {:.2}x wall-clock",
+        lock.decode_steps as f64 / cont.decode_steps as f64,
+        r_lock.median_secs / r_cont.median_secs.max(1e-12)
+    );
+
+    let mut j = JsonReport::new();
+    j.int("batch", B)
+        .int("tasks", N_TASKS)
+        .int("continuous_decode_steps", cont.decode_steps)
+        .int("lockstep_decode_steps", lock.decode_steps)
+        .num("continuous_slot_idle_fraction", cont.slot_idle_fraction(B))
+        .num("lockstep_slot_idle_fraction", lock.slot_idle_fraction(B))
+        .int("continuous_refills", cont.refills)
+        .int("continuous_new_tokens", cont.new_tokens)
+        .int("lockstep_new_tokens", lock.new_tokens)
+        .bench("continuous", &r_cont)
+        .bench("lockstep", &r_lock);
+    println!("\n{}", j.render());
+    if let Err(e) = j.save("bench_sched.json") {
+        eprintln!("could not write bench_sched.json: {e}");
+    }
+}

@@ -90,9 +90,78 @@ impl Bench {
     }
 }
 
+/// Minimal machine-readable bench output (serde is unavailable offline):
+/// an ordered flat JSON object of numbers/strings, written to stdout
+/// and/or a file so CI and plots can diff bench runs.
+#[derive(Default)]
+pub struct JsonReport {
+    pairs: Vec<(String, String)>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn num(&mut self, key: &str, v: f64) -> &mut Self {
+        let rendered = if v.is_finite() { format!("{v}") } else { "null".to_string() };
+        self.pairs.push((key.to_string(), rendered));
+        self
+    }
+
+    pub fn int(&mut self, key: &str, v: usize) -> &mut Self {
+        self.pairs.push((key.to_string(), format!("{v}")));
+        self
+    }
+
+    pub fn text(&mut self, key: &str, v: &str) -> &mut Self {
+        let mut escaped = String::with_capacity(v.len() + 2);
+        for c in v.chars() {
+            match c {
+                '\\' => escaped.push_str("\\\\"),
+                '"' => escaped.push_str("\\\""),
+                '\n' => escaped.push_str("\\n"),
+                '\r' => escaped.push_str("\\r"),
+                '\t' => escaped.push_str("\\t"),
+                c if (c as u32) < 0x20 => escaped.push_str(&format!("\\u{:04x}", c as u32)),
+                c => escaped.push(c),
+            }
+        }
+        self.pairs.push((key.to_string(), format!("\"{escaped}\"")));
+        self
+    }
+
+    /// Record a [`BenchResult`]'s headline numbers under `<prefix>_*`.
+    pub fn bench(&mut self, prefix: &str, r: &BenchResult) -> &mut Self {
+        self.num(&format!("{prefix}_mean_secs"), r.mean_secs)
+            .num(&format!("{prefix}_median_secs"), r.median_secs)
+            .num(&format!("{prefix}_p95_secs"), r.p95_secs)
+    }
+
+    pub fn render(&self) -> String {
+        let body: Vec<String> =
+            self.pairs.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        format!("{{{}}}", body.join(", "))
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.render() + "\n")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_report_renders_flat_object() {
+        let mut j = JsonReport::new();
+        j.int("steps", 12).num("secs", 0.5).text("name", "a \"b\"");
+        assert_eq!(
+            j.render(),
+            "{\"steps\": 12, \"secs\": 0.5, \"name\": \"a \\\"b\\\"\"}"
+        );
+    }
 
     #[test]
     fn measures_work() {

@@ -43,7 +43,13 @@ pub struct SeqResult {
     pub finished: bool,
 }
 
-/// Canonical [B, T] packing for one wave.
+/// Canonical [B, T] packing for one batch of rows.
+///
+/// Logical length is tracked incrementally per row (`prompt_tokens` +
+/// `resp_len`), so [`BatchLayout::n_valid`] is O(1) — the decode loop calls
+/// it per row per step and must not rescan the `[B, T]` mask. Rows are
+/// individually resettable ([`BatchLayout::set_row`]) so the continuous
+/// scheduler can refill one slot without disturbing its neighbours.
 pub struct BatchLayout {
     pub batch: usize,
     pub prompt_len: usize,
@@ -54,16 +60,16 @@ pub struct BatchLayout {
     pub last: Vec<i32>,
     /// Per-row current response length.
     pub resp_len: Vec<usize>,
-    /// Per-row active flag (false for filler rows of a partial wave).
+    /// Per-row prompt token count (logical prompt length).
+    pub prompt_tokens: Vec<usize>,
+    /// Per-row active flag (false for filler rows of a partial batch).
     pub active: Vec<bool>,
 }
 
 impl BatchLayout {
-    /// Pack up to `batch` tasks. Rows beyond `tasks.len()` are inert
-    /// filler (all-invalid; never sampled).
-    pub fn pack(tasks: &[SeqTask], batch: usize, prompt_len: usize, total_len: usize) -> Self {
-        assert!(tasks.len() <= batch);
-        let mut l = BatchLayout {
+    /// All-inert layout (every row filler).
+    pub fn new(batch: usize, prompt_len: usize, total_len: usize) -> Self {
+        BatchLayout {
             batch,
             prompt_len,
             total_len,
@@ -71,32 +77,69 @@ impl BatchLayout {
             valid: vec![0.0; batch * total_len],
             last: vec![(prompt_len - 1) as i32; batch],
             resp_len: vec![0; batch],
+            prompt_tokens: vec![0; batch],
             active: vec![false; batch],
-        };
+        }
+    }
+
+    /// Pack up to `batch` tasks. Rows beyond `tasks.len()` are inert
+    /// filler (all-invalid; never sampled).
+    pub fn pack(tasks: &[SeqTask], batch: usize, prompt_len: usize, total_len: usize) -> Self {
+        assert!(tasks.len() <= batch);
+        let mut l = BatchLayout::new(batch, prompt_len, total_len);
         for (r, task) in tasks.iter().enumerate() {
-            assert!(
-                task.prompt.len() <= prompt_len,
-                "prompt {} tokens > prompt_len {}",
-                task.prompt.len(),
-                prompt_len
-            );
-            let gen_len = total_len - prompt_len;
-            assert!(task.prefix.len() <= gen_len);
-            let row = r * total_len;
-            let start = prompt_len - task.prompt.len();
-            for (i, &t) in task.prompt.iter().enumerate() {
-                l.tokens[row + start + i] = t;
-                l.valid[row + start + i] = 1.0;
-            }
-            for (i, &t) in task.prefix.iter().enumerate() {
-                l.tokens[row + prompt_len + i] = t;
-                l.valid[row + prompt_len + i] = 1.0;
-            }
-            l.resp_len[r] = task.prefix.len();
-            l.last[r] = (prompt_len + task.prefix.len()) as i32 - 1;
-            l.active[r] = true;
+            l.set_row(r, &task.prompt, &task.prefix);
         }
         l
+    }
+
+    /// Reset every row to inert filler, keeping the allocations.
+    pub fn clear(&mut self) {
+        self.tokens.fill(PAD);
+        self.valid.fill(0.0);
+        self.last.fill((self.prompt_len - 1) as i32);
+        self.resp_len.fill(0);
+        self.prompt_tokens.fill(0);
+        self.active.fill(false);
+    }
+
+    /// Reset row `r` to inert filler.
+    pub fn clear_row(&mut self, r: usize) {
+        let row = r * self.total_len;
+        self.tokens[row..row + self.total_len].fill(PAD);
+        self.valid[row..row + self.total_len].fill(0.0);
+        self.last[r] = (self.prompt_len - 1) as i32;
+        self.resp_len[r] = 0;
+        self.prompt_tokens[r] = 0;
+        self.active[r] = false;
+    }
+
+    /// (Re)pack row `r` from a prompt + response prefix, replacing whatever
+    /// occupied it. The per-row reset path behind slot refills.
+    pub fn set_row(&mut self, r: usize, prompt: &[i32], prefix: &[i32]) {
+        assert!(
+            prompt.len() <= self.prompt_len,
+            "prompt {} tokens > prompt_len {}",
+            prompt.len(),
+            self.prompt_len
+        );
+        let gen_len = self.total_len - self.prompt_len;
+        assert!(prefix.len() <= gen_len);
+        self.clear_row(r);
+        let row = r * self.total_len;
+        let start = self.prompt_len - prompt.len();
+        for (i, &t) in prompt.iter().enumerate() {
+            self.tokens[row + start + i] = t;
+            self.valid[row + start + i] = 1.0;
+        }
+        for (i, &t) in prefix.iter().enumerate() {
+            self.tokens[row + self.prompt_len + i] = t;
+            self.valid[row + self.prompt_len + i] = 1.0;
+        }
+        self.prompt_tokens[r] = prompt.len();
+        self.resp_len[r] = prefix.len();
+        self.last[r] = (self.prompt_len + prefix.len()) as i32 - 1;
+        self.active[r] = true;
     }
 
     /// Append a sampled token to row `r` (updates tokens/valid/last).
@@ -111,10 +154,10 @@ impl BatchLayout {
         slot
     }
 
-    /// Number of valid tokens in row `r` (logical length).
+    /// Number of valid tokens in row `r` (logical length). O(1): tracked
+    /// incrementally, never rescanned from the mask.
     pub fn n_valid(&self, r: usize) -> usize {
-        let row = &self.valid[r * self.total_len..(r + 1) * self.total_len];
-        row.iter().filter(|&&v| v > 0.5).count() as usize
+        self.prompt_tokens[r] + self.resp_len[r]
     }
 
     /// Extract row `r`'s response tokens.
@@ -187,6 +230,47 @@ mod tests {
             let got: Vec<i32> = (0..t.prompt.len()).map(|i| l.tokens[row + start + i]).collect();
             assert_eq!(got, t.prompt);
         }
+    }
+
+    #[test]
+    fn n_valid_matches_mask_scan() {
+        let tasks = vec![
+            task(0, &[BOS, 5, 6], &[40, 41, 42]),
+            task(1, &[BOS], &[]),
+        ];
+        let mut l = BatchLayout::pack(&tasks, 3, 8, 20);
+        l.push_token(0, 7);
+        l.push_token(1, 9);
+        for r in 0..3 {
+            let scanned = l.valid[r * 20..(r + 1) * 20].iter().filter(|&&v| v > 0.5).count();
+            assert_eq!(l.n_valid(r), scanned, "row {r}");
+        }
+    }
+
+    #[test]
+    fn set_row_replaces_occupant_completely() {
+        let mut l = BatchLayout::pack(&[task(0, &[BOS, 4, 5], &[30, 31])], 2, 8, 16);
+        l.push_token(0, 32);
+        l.set_row(0, &[BOS, 9], &[]);
+        assert_eq!(l.n_valid(0), 2);
+        assert_eq!(l.resp_len[0], 0);
+        assert_eq!(l.last[0], 7);
+        assert_eq!(l.response(0), Vec::<i32>::new());
+        // no stale tokens/valid anywhere in the row
+        let scanned = l.valid[..16].iter().filter(|&&v| v > 0.5).count();
+        assert_eq!(scanned, 2);
+        assert_eq!(&l.tokens[6..8], &[BOS, 9]);
+        assert!(l.tokens[8..16].iter().all(|&t| t == PAD));
+    }
+
+    #[test]
+    fn clear_keeps_capacity_and_inerts_rows() {
+        let mut l = BatchLayout::pack(&[task(0, &[BOS, 4], &[30])], 2, 8, 16);
+        l.clear();
+        assert!(!l.active[0]);
+        assert_eq!(l.n_valid(0), 0);
+        assert!(l.valid.iter().all(|&v| v == 0.0));
+        assert_eq!(l.tokens.len(), 32);
     }
 
     #[test]

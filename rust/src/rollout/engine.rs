@@ -1,10 +1,25 @@
-//! Wave-scheduled batched generation over the PJRT decode entries.
+//! Continuous-batching generation over the PJRT decode entries.
+//!
+//! [`RolloutEngine::run`] drives the slot scheduler: one prefill for the
+//! initial batch, then a decode loop in which finished rows are refilled
+//! from the pending queue via the `refill` entry (a masked per-row
+//! prefill) without stalling live rows. [`RolloutEngine::run_lockstep`]
+//! preserves the old wave discipline — same results, more decode steps —
+//! for equivalence tests and the `bench_sched` comparison.
+//!
+//! Host↔device traffic per decode step is three `[B]` i32 vectors; the
+//! `[B, T]` valid mask lives device-side in the generation blob and is
+//! extended there by the decode entry (see `rollout/sched.rs` for the full
+//! contract). All host scratch (layout, step vectors, probs readback,
+//! sampler order) is allocated once per engine and reused across runs.
+
+use std::time::Instant;
 
 use anyhow::Result;
 
 use super::batch::{BatchLayout, SeqResult, SeqTask};
-use crate::model::Policy;
-use crate::runtime::Engine;
+use super::sched::SlotScheduler;
+use crate::runtime::{Backend, Engine};
 use crate::tokenizer::EOS;
 use crate::util::{Rng, StageTimer, TopPSampler};
 
@@ -15,10 +30,26 @@ pub struct RolloutStats {
     pub new_tokens: usize,
     /// Tokens taken from verified prefixes.
     pub reused_tokens: usize,
-    /// Decode executable invocations (per-wave steps summed).
+    /// Decode executable invocations.
     pub decode_steps: usize,
-    /// Waves executed.
+    /// Prefill batches executed (lockstep: one per wave; continuous: 1).
     pub waves: usize,
+    /// Refill executable invocations (continuous scheduler only).
+    pub refills: usize,
+    /// Sum over decode steps of rows that did not advance a sequence —
+    /// the utilization gap continuous batching exists to close.
+    pub slot_idle_steps: usize,
+}
+
+impl RolloutStats {
+    /// Fraction of row-steps wasted on idle slots (0 = perfectly packed).
+    pub fn slot_idle_fraction(&self, batch: usize) -> f64 {
+        let total = self.decode_steps * batch;
+        if total == 0 {
+            return 0.0;
+        }
+        self.slot_idle_steps as f64 / total as f64
+    }
 }
 
 /// Sampling configuration.
@@ -34,28 +65,78 @@ impl Default for SampleCfg {
     }
 }
 
-/// The batched rollout engine bound to one (engine, bundle).
-pub struct RolloutEngine<'e> {
-    eng: &'e Engine,
-    bundle: String,
+/// Per-task RNG stream: sampling depends only on (run nonce, task id), so
+/// results are invariant to slot assignment and scheduling order — the
+/// property the lockstep-vs-continuous equivalence tests pin down.
+fn task_rng(nonce: u64, id: usize) -> Rng {
+    Rng::new(nonce ^ (id as u64).wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Live occupant of one scheduler slot.
+struct SlotState {
+    id: usize,
+    reused: usize,
+    logps: Vec<f32>,
+    rng: Rng,
+}
+
+impl SlotState {
+    fn new(task: SeqTask, nonce: u64) -> SlotState {
+        SlotState {
+            rng: task_rng(nonce, task.id),
+            id: task.id,
+            reused: task.prefix.len(),
+            logps: task.prefix_logps,
+        }
+    }
+}
+
+/// The batched rollout engine bound to one (backend, bundle).
+pub struct RolloutEngine<'e, B: Backend = Engine> {
+    eng: &'e B,
     pub batch: usize,
     pub prompt_len: usize,
     pub total_len: usize,
     pub vocab: usize,
     sampler: TopPSampler,
+    // Pre-resolved entry handles: zero lookups in the decode loop.
+    h_prefill: B::Entry,
+    h_decode: B::Entry,
+    h_read_gen: B::Entry,
+    h_refill: B::Entry,
+    // Persistent host scratch, reused across runs: the decode loop
+    // allocates nothing per step.
+    layout: BatchLayout,
+    token_in: Vec<i32>,
+    slot_in: Vec<i32>,
+    lpos_in: Vec<i32>,
+    rowmask: Vec<f32>,
+    probs: Vec<f32>,
+    /// Cached temperature scalar buffer, keyed by bit pattern.
+    temp_buf: Option<(u32, B::Buf)>,
 }
 
-impl<'e> RolloutEngine<'e> {
-    pub fn new(eng: &'e Engine, bundle: &str) -> Result<Self> {
-        let info = eng.bundle(bundle)?.clone();
+impl<'e, B: Backend> RolloutEngine<'e, B> {
+    pub fn new(eng: &'e B, bundle: &str) -> Result<Self> {
+        let shape = eng.shape(bundle)?;
         Ok(RolloutEngine {
             eng,
-            bundle: bundle.to_string(),
-            batch: info.batch,
-            prompt_len: eng.manifest.prompt_len,
-            total_len: eng.manifest.total_len,
-            vocab: info.model.vocab,
-            sampler: TopPSampler::new(info.model.vocab),
+            batch: shape.batch,
+            prompt_len: shape.prompt_len,
+            total_len: shape.total_len,
+            vocab: shape.vocab,
+            sampler: TopPSampler::new(shape.vocab),
+            h_prefill: eng.resolve(bundle, "prefill")?,
+            h_decode: eng.resolve(bundle, "decode")?,
+            h_read_gen: eng.resolve(bundle, "read_gen")?,
+            h_refill: eng.resolve(bundle, "refill")?,
+            layout: BatchLayout::new(shape.batch, shape.prompt_len, shape.total_len),
+            token_in: vec![0; shape.batch],
+            slot_in: vec![shape.total_len as i32; shape.batch],
+            lpos_in: vec![0; shape.batch],
+            rowmask: vec![0.0; shape.batch],
+            probs: vec![0.0; shape.batch * shape.vocab],
+            temp_buf: None,
         })
     }
 
@@ -63,23 +144,31 @@ impl<'e> RolloutEngine<'e> {
         self.total_len - self.prompt_len
     }
 
-    /// Generate all tasks, wave by wave. Stage accounting: decode work under
-    /// `"rollout"`, result assembly under `"assembly"`.
-    pub fn run(
-        &mut self,
-        policy: &Policy,
-        mut tasks: Vec<SeqTask>,
-        cfg: SampleCfg,
-        rng: &mut Rng,
-        timer: &mut StageTimer,
-    ) -> Result<(Vec<SeqResult>, RolloutStats)> {
-        let mut stats = RolloutStats::default();
-        let mut results: Vec<SeqResult> = Vec::with_capacity(tasks.len());
+    /// Prime the cached temperature buffer for this run's config.
+    fn ensure_temp(&mut self, temperature: f32) -> Result<()> {
+        let bits = temperature.to_bits();
+        if !matches!(&self.temp_buf, Some((b, _)) if *b == bits) {
+            let buf = self.eng.upload_f32(&[temperature], &[1])?;
+            self.temp_buf = Some((bits, buf));
+        }
+        Ok(())
+    }
 
-        // Fully-reused terminal drafts never enter a wave.
+    fn temp_ref(&self) -> &B::Buf {
+        &self.temp_buf.as_ref().expect("ensure_temp not called").1
+    }
+
+    /// Pull fully-reused terminal drafts straight into results; return the
+    /// tasks that actually need decode slots.
+    fn split_terminal(
+        &self,
+        tasks: Vec<SeqTask>,
+        results: &mut Vec<SeqResult>,
+        stats: &mut RolloutStats,
+    ) -> Vec<SeqTask> {
         let gen_len = self.gen_len();
-        let mut pending: Vec<SeqTask> = Vec::with_capacity(tasks.len());
-        for t in tasks.drain(..) {
+        let mut pending = Vec::with_capacity(tasks.len());
+        for t in tasks {
             if t.prefix_is_terminal(gen_len) {
                 stats.reused_tokens += t.prefix.len();
                 let finished = t.prefix.last() == Some(&EOS);
@@ -95,116 +184,277 @@ impl<'e> RolloutEngine<'e> {
                 pending.push(t);
             }
         }
+        pending
+    }
 
-        // Wave scheduling: longest prefixes first => rows within a wave have
-        // similar remaining lengths and wall-clock tracks token counts.
+    /// Refresh `self.probs` from the generation blob.
+    fn read_probs(&mut self, gen: &B::Buf) -> Result<()> {
+        let out = self.eng.call_entry(&self.h_read_gen, &[gen])?;
+        self.eng.read_f32_into(&out, &mut self.probs)
+    }
+
+    /// Generate all tasks with the continuous-batching slot scheduler.
+    /// Stage accounting: device work under `"rollout"`, result assembly
+    /// under `"assembly"`. Results are id-sorted.
+    pub fn run(
+        &mut self,
+        blob: &B::Buf,
+        tasks: Vec<SeqTask>,
+        cfg: SampleCfg,
+        rng: &mut Rng,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, RolloutStats)> {
+        let mut stats = RolloutStats::default();
+        let mut results: Vec<SeqResult> = Vec::with_capacity(tasks.len());
+        let pending = self.split_terminal(tasks, &mut results, &mut stats);
+        let run_nonce = rng.next_u64();
+        if pending.is_empty() {
+            results.sort_by_key(|r| r.id);
+            return Ok((results, stats));
+        }
+
+        let (b, t, v) = (self.batch, self.total_len, self.vocab);
+        let gen_len = self.gen_len();
+        let mut sched = SlotScheduler::new(b, pending);
+        let mut slots: Vec<Option<SlotState>> = (0..b).map(|_| None).collect();
+        self.ensure_temp(cfg.temperature)?;
+
+        // --- initial fill + prefill -------------------------------------
+        let span = Instant::now();
+        self.layout.clear();
+        for (slot, task) in sched.fill() {
+            self.layout.set_row(slot, &task.prompt, &task.prefix);
+            slots[slot] = Some(SlotState::new(task, run_nonce));
+        }
+        let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
+        let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
+        let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
+        let mut gen = self.eng.call_entry(
+            &self.h_prefill,
+            &[blob, &tok_b, &val_b, &last_b, self.temp_ref()],
+        )?;
+        stats.waves += 1;
+        self.read_probs(&gen)?;
+        timer.add("rollout", span.elapsed().as_secs_f64());
+
+        // --- decode loop -------------------------------------------------
+        loop {
+            let span = Instant::now();
+            // 1. sample one token for every occupied slot
+            let mut writes = 0usize;
+            for r in 0..b {
+                self.token_in[r] = 0;
+                self.slot_in[r] = t as i32; // out-of-range => no cache write
+                self.lpos_in[r] = 0;
+                if slots[r].is_none() {
+                    continue;
+                }
+                let row = r * v;
+                let tok = {
+                    let st = slots[r].as_mut().unwrap();
+                    self.sampler.sample(&self.probs[row..row + v], cfg.top_p, &mut st.rng)
+                        as i32
+                };
+                let lp = self.probs[row + tok as usize].max(1e-30).ln();
+                let slot_pos = self.layout.push_token(r, tok);
+                stats.new_tokens += 1;
+                let done_eos = tok == EOS;
+                let done = done_eos || self.layout.resp_len[r] >= gen_len;
+                if done {
+                    let mut st = slots[r].take().unwrap();
+                    st.logps.push(lp);
+                    let response = self.layout.response(r);
+                    stats.reused_tokens += st.reused;
+                    results.push(SeqResult {
+                        id: st.id,
+                        reused: st.reused,
+                        new_tokens: response.len() - st.reused,
+                        finished: done_eos,
+                        logps: st.logps,
+                        response,
+                    });
+                    sched.release(r);
+                } else {
+                    slots[r].as_mut().unwrap().logps.push(lp);
+                    self.token_in[r] = tok;
+                    self.slot_in[r] = slot_pos as i32;
+                    self.lpos_in[r] = (self.layout.n_valid(r) - 1) as i32;
+                    writes += 1;
+                }
+            }
+
+            // 2. advance surviving rows: three [B] uploads, no [B,T] mask
+            if sched.busy() > 0 {
+                let tok_b = self.eng.upload_i32(&self.token_in, &[b])?;
+                let slot_b = self.eng.upload_i32(&self.slot_in, &[b])?;
+                let lpos_b = self.eng.upload_i32(&self.lpos_in, &[b])?;
+                gen = self.eng.call_entry(
+                    &self.h_decode,
+                    &[blob, &gen, &tok_b, &slot_b, &lpos_b, self.temp_ref()],
+                )?;
+                stats.decode_steps += 1;
+                stats.slot_idle_steps += b - writes;
+            }
+
+            // 3. refill freed slots (after the decode so refill probs are
+            //    the freshest state for the next sampling round)
+            let fills = sched.fill();
+            if !fills.is_empty() {
+                for (slot, task) in fills {
+                    self.layout.set_row(slot, &task.prompt, &task.prefix);
+                    self.rowmask[slot] = 1.0;
+                    slots[slot] = Some(SlotState::new(task, run_nonce));
+                }
+                let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
+                let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
+                let rm_b = self.eng.upload_f32(&self.rowmask, &[b])?;
+                let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
+                gen = self.eng.call_entry(
+                    &self.h_refill,
+                    &[blob, &gen, &tok_b, &val_b, &rm_b, &last_b, self.temp_ref()],
+                )?;
+                stats.refills += 1;
+                self.rowmask.fill(0.0);
+            }
+
+            if sched.is_done() {
+                timer.add("rollout", span.elapsed().as_secs_f64());
+                break;
+            }
+            self.read_probs(&gen)?;
+            timer.add("rollout", span.elapsed().as_secs_f64());
+        }
+
+        let span = Instant::now();
+        results.sort_by_key(|r| r.id);
+        timer.add("assembly", span.elapsed().as_secs_f64());
+        Ok((results, stats))
+    }
+
+    /// The pre-scheduler wave discipline: tasks bind to slots in waves of
+    /// `batch`, every wave decodes in lockstep until its slowest row
+    /// finishes. Byte-identical outputs to [`RolloutEngine::run`] (same
+    /// per-task RNG streams); kept as the equivalence oracle and the
+    /// `bench_sched` baseline.
+    pub fn run_lockstep(
+        &mut self,
+        blob: &B::Buf,
+        tasks: Vec<SeqTask>,
+        cfg: SampleCfg,
+        rng: &mut Rng,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, RolloutStats)> {
+        let mut stats = RolloutStats::default();
+        let mut results: Vec<SeqResult> = Vec::with_capacity(tasks.len());
+        let mut pending = self.split_terminal(tasks, &mut results, &mut stats);
+        let run_nonce = rng.next_u64();
+
+        // Longest prefixes first => rows within a wave have similar
+        // remaining lengths (the old scheduler's only lever).
         pending.sort_by(|a, b| b.prefix.len().cmp(&a.prefix.len()).then(a.id.cmp(&b.id)));
 
         let mut idx = 0;
         while idx < pending.len() {
             let wave = &pending[idx..(idx + self.batch).min(pending.len())];
-            let wave_res = self.run_wave(policy, wave, cfg, rng, timer, &mut stats)?;
-            results.extend(wave_res);
+            self.run_wave(blob, wave, cfg, run_nonce, timer, &mut stats, &mut results)?;
             idx += self.batch;
             stats.waves += 1;
         }
-
+        let span = Instant::now();
         results.sort_by_key(|r| r.id);
+        timer.add("assembly", span.elapsed().as_secs_f64());
         Ok((results, stats))
     }
 
-    /// One wave: prefill + lockstep decode until every row finishes.
+    /// One lockstep wave: prefill + decode until every row finishes.
+    #[allow(clippy::too_many_arguments)]
     fn run_wave(
         &mut self,
-        policy: &Policy,
+        blob: &B::Buf,
         tasks: &[SeqTask],
         cfg: SampleCfg,
-        rng: &mut Rng,
+        run_nonce: u64,
         timer: &mut StageTimer,
         stats: &mut RolloutStats,
-    ) -> Result<Vec<SeqResult>> {
-        let (b, p, t) = (self.batch, self.prompt_len, self.total_len);
+        results: &mut Vec<SeqResult>,
+    ) -> Result<()> {
+        let (b, t, v) = (self.batch, self.total_len, self.vocab);
         let gen_len = self.gen_len();
-        let mut layout = BatchLayout::pack(tasks, b, p, t);
         let n = tasks.len();
+        self.ensure_temp(cfg.temperature)?;
 
+        let span = Instant::now();
+        self.layout.clear();
+        for (r, task) in tasks.iter().enumerate() {
+            self.layout.set_row(r, &task.prompt, &task.prefix);
+        }
         let mut logps: Vec<Vec<f32>> = tasks.iter().map(|x| x.prefix_logps.clone()).collect();
+        let mut rngs: Vec<Rng> = tasks.iter().map(|x| task_rng(run_nonce, x.id)).collect();
         let mut finished = vec![false; n];
         let mut eos_emitted = vec![false; n];
 
-        // --- prefill ---------------------------------------------------------
-        let span = std::time::Instant::now();
-        let temp_buf = self.eng.upload_f32(&[cfg.temperature], &[1])?;
-        let tok_buf = self.eng.upload_i32(&layout.tokens, &[b, t])?;
-        let val_buf = self.eng.upload_f32(&layout.valid, &[b, t])?;
-        let last_buf = self.eng.upload_i32(&layout.last, &[b])?;
-        let mut gen_blob = self.eng.call(
-            &self.bundle,
-            "prefill",
-            &[&policy.blob, &tok_buf, &val_buf, &last_buf, &temp_buf],
+        let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
+        let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
+        let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
+        let mut gen = self.eng.call_entry(
+            &self.h_prefill,
+            &[blob, &tok_b, &val_b, &last_b, self.temp_ref()],
         )?;
-        let mut probs = self.read_probs(&gen_blob)?;
+        self.read_probs(&gen)?;
         timer.add("rollout", span.elapsed().as_secs_f64());
 
-        // --- decode loop ------------------------------------------------------
-        let mut token_in = vec![0i32; b];
-        let mut slot_in = vec![t as i32; b]; // out-of-range => no cache write
-        let mut lpos_in = vec![0i32; b];
         loop {
-            let span = std::time::Instant::now();
-            let mut any_active = false;
-            for r in 0..n {
-                if finished[r] || layout.resp_len[r] >= gen_len {
-                    slot_in[r] = t as i32; // inert write
-                    token_in[r] = 0;
+            let span = Instant::now();
+            let mut writes = 0usize;
+            for r in 0..b {
+                self.token_in[r] = 0;
+                self.slot_in[r] = t as i32; // inert write
+                self.lpos_in[r] = 0;
+                if r >= n || finished[r] || self.layout.resp_len[r] >= gen_len {
                     continue;
                 }
-                let row = r * self.vocab;
-                let pr = &probs[row..row + self.vocab];
-                let tok = self.sampler.sample_with(pr, cfg.top_p, rng) as i32;
-                let lp = pr[tok as usize].max(1e-30).ln();
-                let slot = layout.push_token(r, tok);
+                let row = r * v;
+                let tok =
+                    self.sampler.sample(&self.probs[row..row + v], cfg.top_p, &mut rngs[r])
+                        as i32;
+                let lp = self.probs[row + tok as usize].max(1e-30).ln();
+                let slot_pos = self.layout.push_token(r, tok);
                 logps[r].push(lp);
-                token_in[r] = tok;
-                slot_in[r] = slot as i32;
-                lpos_in[r] = (layout.n_valid(r) - 1) as i32;
                 stats.new_tokens += 1;
                 if tok == EOS {
                     finished[r] = true;
                     eos_emitted[r] = true;
-                } else if layout.resp_len[r] >= gen_len {
+                } else if self.layout.resp_len[r] >= gen_len {
                     finished[r] = true;
                 } else {
-                    any_active = true;
+                    self.token_in[r] = tok;
+                    self.slot_in[r] = slot_pos as i32;
+                    self.lpos_in[r] = (self.layout.n_valid(r) - 1) as i32;
+                    writes += 1;
                 }
             }
-            timer.add("rollout", span.elapsed().as_secs_f64());
-            if !any_active {
+            if writes == 0 {
+                timer.add("rollout", span.elapsed().as_secs_f64());
                 break;
             }
-
-            let span = std::time::Instant::now();
-            let tok_b = self.eng.upload_i32(&token_in, &[b])?;
-            let slot_b = self.eng.upload_i32(&slot_in, &[b])?;
-            let lpos_b = self.eng.upload_i32(&lpos_in, &[b])?;
-            let val_b = self.eng.upload_f32(&layout.valid, &[b, t])?;
-            gen_blob = self.eng.call(
-                &self.bundle,
-                "decode",
-                &[&policy.blob, &gen_blob, &tok_b, &slot_b, &lpos_b, &val_b, &temp_buf],
+            let tok_b = self.eng.upload_i32(&self.token_in, &[b])?;
+            let slot_b = self.eng.upload_i32(&self.slot_in, &[b])?;
+            let lpos_b = self.eng.upload_i32(&self.lpos_in, &[b])?;
+            gen = self.eng.call_entry(
+                &self.h_decode,
+                &[blob, &gen, &tok_b, &slot_b, &lpos_b, self.temp_ref()],
             )?;
-            probs = self.read_probs(&gen_blob)?;
             stats.decode_steps += 1;
+            stats.slot_idle_steps += b - writes;
+            self.read_probs(&gen)?;
             timer.add("rollout", span.elapsed().as_secs_f64());
         }
 
-        // --- assemble ---------------------------------------------------------
-        let span = std::time::Instant::now();
-        let mut out = Vec::with_capacity(n);
+        let span = Instant::now();
         for (r, task) in tasks.iter().enumerate() {
-            let response = layout.response(r);
+            let response = self.layout.response(r);
             stats.reused_tokens += task.prefix.len();
-            out.push(SeqResult {
+            results.push(SeqResult {
                 id: task.id,
                 reused: task.prefix.len(),
                 new_tokens: response.len() - task.prefix.len(),
@@ -214,19 +464,6 @@ impl<'e> RolloutEngine<'e> {
             });
         }
         timer.add("assembly", span.elapsed().as_secs_f64());
-        Ok(out)
-    }
-
-    fn read_probs(&mut self, gen_blob: &xla::PjRtBuffer) -> Result<Vec<f32>> {
-        let out = self.eng.call(&self.bundle, "read_gen", &[gen_blob])?;
-        self.eng.read_f32(&out)
-    }
-}
-
-impl TopPSampler {
-    /// Borrow-friendly alias used by the engine (self.sampler lives beside
-    /// other &mut self fields).
-    fn sample_with(&mut self, probs: &[f32], top_p: f32, rng: &mut Rng) -> usize {
-        self.sample(probs, top_p, rng)
+        Ok(())
     }
 }

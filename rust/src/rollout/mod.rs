@@ -1,19 +1,18 @@
 //! The batched rollout engine — the vLLM substitute.
 //!
-//! Processes a queue of sequence tasks (prompt + optional reused prefix) in
-//! *waves* of at most `batch` rows. Within a wave all rows decode in
-//! lockstep on the static-shape AOT executables; rows finish independently
-//! (EOS or length cap) and finished rows become inert (their K/V writes
-//! vanish into masked slots).
+//! Processes a queue of sequence tasks (prompt + optional reused prefix)
+//! with a **continuous-batching slot scheduler** ([`sched`]): all `batch`
+//! physical rows stay busy, a finished row's slot is refilled with the
+//! next pending task via the masked `refill` entry, and per-decode-step
+//! host→device traffic is three `[B]` vectors (the `[B, T]` valid mask is
+//! maintained device-side inside the generation blob — contract in
+//! `sched.rs`). A wave-lockstep path ([`engine::RolloutEngine::run_lockstep`])
+//! is retained as the equivalence oracle and scheduler baseline; per-task
+//! RNG streams make the two produce byte-identical results.
 //!
-//! Wave scheduling: tasks are sorted by descending prefix length before
-//! being split into waves, so rows with similar *remaining* generation
-//! lengths share a wave. This is what makes wall-clock track generated
-//! tokens the way a continuous-batching engine does — a wave of
-//! fully-reused drafts costs zero decode steps. (Without it, one
-//! zero-prefix row would pin every wave at `gen_len` steps and the paper's
-//! wall-clock speedups would be structurally unreachable on a lockstep
-//! engine; see DESIGN.md.)
+//! Fully-reused terminal drafts (SPEC-RL full reuse) never occupy a slot —
+//! they bypass decode entirely, which is what makes the paper's wall-clock
+//! speedups reachable.
 //!
 //! Canonical layout (shared with L2): prompts right-aligned into slots
 //! `[0, P)`, responses in `[P, T)`; positional embeddings are logical
@@ -21,6 +20,8 @@
 
 pub mod batch;
 pub mod engine;
+pub mod sched;
 
 pub use batch::{BatchLayout, SeqResult, SeqTask};
 pub use engine::{RolloutEngine, RolloutStats, SampleCfg};
+pub use sched::SlotScheduler;

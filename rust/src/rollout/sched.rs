@@ -1,0 +1,187 @@
+//! Continuous-batching slot scheduler.
+//!
+//! The rollout engine owns `B` physical rows ("slots") of the static-shape
+//! AOT executables. The old wave loop bound a *set* of tasks to the slots
+//! for the lifetime of the longest member: one slow row pinned the whole
+//! wave while finished rows idled as inert filler. [`SlotScheduler`] keeps
+//! the binding dynamic instead — the moment a slot's occupant finishes
+//! (EOS or length cap), the slot is released and the next pending task is
+//! assigned to it, so all `B` rows stay busy until the queue drains.
+//!
+//! Refilled rows re-enter via the `refill` AOT entry (see the decode-entry
+//! contract below): a *batched per-row prefill* that recomputes the KV
+//! cache, device-side valid mask, and next-token probs for exactly the
+//! rows named by a `[B]` row mask, blending them into the persistent
+//! generation blob without disturbing live neighbours. Several slots
+//! freeing in the same step refill in one call.
+//!
+//! ## Decode-entry contract (shared with `python/compile`)
+//!
+//! The generation blob is `[cache_k | cache_v | valid | probs]` — the
+//! `[B, T]` valid mask lives *device-side* and is maintained incrementally:
+//!
+//! - `prefill(blob, tokens, valid, last, temp)` uploads the mask once and
+//!   seeds the blob;
+//! - `decode(blob, gen, token, slot, lpos, temp)` extends the mask on
+//!   device via a one-hot write at `slot` (out-of-range slot == inert row,
+//!   no write) — the per-step host→device traffic is three `[B]` i32
+//!   vectors, never the `[B, T]` mask;
+//! - `refill(blob, gen, tokens, valid, rowmask, last, temp)` replaces the
+//!   mask (and cache/probs) for masked rows only.
+//!
+//! Scheduling order is deterministic: tasks are sorted by **ascending
+//! verified-prefix length** (then ascending id) — i.e. longest *remaining*
+//! generation first, the LPT rule — so long fresh rows start early and the
+//! short reuse-heavy tail packs into slots as they free, minimizing
+//! makespan. Free slots are refilled in ascending slot order from the
+//! front of the queue. Sampling uses per-task RNG streams, making results
+//! invariant to slot assignment and bit-identical to the lockstep engine's
+//! output for the same seed (which sorts the *opposite* way for wave
+//! homogeneity — the orders differ, the outputs cannot).
+
+use std::collections::VecDeque;
+
+use super::batch::SeqTask;
+
+/// Dynamic task→slot binding for one rollout run.
+pub struct SlotScheduler {
+    batch: usize,
+    pending: VecDeque<SeqTask>,
+    occupied: Vec<bool>,
+}
+
+impl SlotScheduler {
+    /// Queue `tasks` (sorted: longest remaining generation first — i.e.
+    /// ascending prefix length — ties by id) over `batch` initially-free
+    /// slots.
+    pub fn new(batch: usize, mut tasks: Vec<SeqTask>) -> Self {
+        tasks.sort_by(|a, b| a.prefix.len().cmp(&b.prefix.len()).then(a.id.cmp(&b.id)));
+        SlotScheduler {
+            batch,
+            pending: tasks.into(),
+            occupied: vec![false; batch],
+        }
+    }
+
+    /// Assign pending tasks to every free slot, in ascending slot order.
+    /// Returns the (slot, task) assignments made; empty when no slot is
+    /// free or the queue is drained.
+    pub fn fill(&mut self) -> Vec<(usize, SeqTask)> {
+        let mut out = Vec::new();
+        for slot in 0..self.batch {
+            if self.occupied[slot] {
+                continue;
+            }
+            let Some(task) = self.pending.pop_front() else { break };
+            self.occupied[slot] = true;
+            out.push((slot, task));
+        }
+        out
+    }
+
+    /// Release a slot whose occupant finished.
+    pub fn release(&mut self, slot: usize) {
+        debug_assert!(self.occupied[slot], "releasing a free slot");
+        self.occupied[slot] = false;
+    }
+
+    /// Occupied slot count.
+    pub fn busy(&self) -> usize {
+        self.occupied.iter().filter(|&&o| o).count()
+    }
+
+    /// Tasks not yet assigned to a slot.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Slots currently free.
+    pub fn free(&self) -> usize {
+        self.batch - self.busy()
+    }
+
+    /// Nothing running, nothing queued.
+    pub fn is_done(&self) -> bool {
+        self.busy() == 0 && self.pending.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: usize, prefix_len: usize) -> SeqTask {
+        SeqTask {
+            id,
+            prompt: vec![1],
+            prefix: vec![7; prefix_len],
+            prefix_logps: vec![-1.0; prefix_len],
+        }
+    }
+
+    #[test]
+    fn initial_fill_orders_longest_remaining_first() {
+        let mut s = SlotScheduler::new(2, vec![task(0, 1), task(1, 5), task(2, 3)]);
+        let fills = s.fill();
+        let got: Vec<usize> = fills.iter().map(|(_, t)| t.id).collect();
+        assert_eq!(got, vec![0, 2], "shortest prefixes (longest remaining) go first");
+        assert_eq!(fills[0].0, 0);
+        assert_eq!(fills[1].0, 1);
+        assert_eq!(s.pending(), 1);
+        assert_eq!(s.busy(), 2);
+    }
+
+    #[test]
+    fn ties_break_by_id() {
+        let mut s = SlotScheduler::new(4, vec![task(3, 2), task(1, 2), task(2, 2)]);
+        let ids: Vec<usize> = s.fill().into_iter().map(|(_, t)| t.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn release_then_fill_reuses_the_slot() {
+        let mut s = SlotScheduler::new(2, (0..5).map(|i| task(i, 0)).collect());
+        s.fill();
+        s.release(1);
+        let fills = s.fill();
+        assert_eq!(fills.len(), 1);
+        assert_eq!(fills[0].0, 1);
+        assert_eq!(fills[0].1.id, 2);
+        assert_eq!(s.pending(), 2);
+    }
+
+    #[test]
+    fn multiple_frees_batch_into_one_fill() {
+        let mut s = SlotScheduler::new(3, (0..6).map(|i| task(i, 0)).collect());
+        s.fill();
+        s.release(0);
+        s.release(2);
+        let fills = s.fill();
+        let slots: Vec<usize> = fills.iter().map(|(sl, _)| *sl).collect();
+        let ids: Vec<usize> = fills.iter().map(|(_, t)| t.id).collect();
+        assert_eq!(slots, vec![0, 2], "ascending slot order");
+        assert_eq!(ids, vec![3, 4], "queue order");
+    }
+
+    #[test]
+    fn drains_to_done() {
+        let mut s = SlotScheduler::new(2, (0..3).map(|i| task(i, 0)).collect());
+        assert!(!s.is_done());
+        s.fill();
+        s.release(0);
+        s.release(1);
+        s.fill();
+        assert_eq!(s.busy(), 1);
+        s.release(0);
+        assert!(s.is_done());
+        assert!(s.fill().is_empty());
+    }
+
+    #[test]
+    fn fill_with_no_pending_is_empty() {
+        let mut s = SlotScheduler::new(2, vec![task(0, 0)]);
+        s.fill();
+        assert!(s.fill().is_empty());
+        assert_eq!(s.free(), 1);
+    }
+}

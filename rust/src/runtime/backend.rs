@@ -1,0 +1,63 @@
+//! The device abstraction the rollout layer is generic over.
+//!
+//! [`Backend`] is the narrow waist between the coordinator's hot loops
+//! (rollout scheduler, spec verifier) and whatever executes the AOT
+//! entries: the real PJRT [`super::Engine`], or the in-tree mock
+//! ([`crate::testing::mock::MockEngine`]) that lets scheduler invariants,
+//! decode-traffic budgets, and lockstep-vs-continuous equivalence run as
+//! plain unit tests with no built `artifacts/`.
+//!
+//! Entry points are pre-resolved to [`Backend::Entry`] handles once at
+//! engine construction, so the per-decode-step path does no string
+//! formatting, no map lookups, and (for the PJRT engine) no lock
+//! acquisitions.
+
+use anyhow::Result;
+
+/// Static geometry of one bundle (from the manifest).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchShape {
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub total_len: usize,
+    pub vocab: usize,
+}
+
+impl BatchShape {
+    pub fn gen_len(&self) -> usize {
+        self.total_len - self.prompt_len
+    }
+}
+
+/// Executes AOT entries over opaque device buffers.
+pub trait Backend {
+    /// Device buffer handle.
+    type Buf;
+    /// Pre-resolved entry-point handle (cheap to clone, lock-free to call).
+    type Entry: Clone;
+
+    /// Resolve `bundle/entry` once; the returned handle is used for every
+    /// subsequent call.
+    fn resolve(&self, bundle: &str, entry: &str) -> Result<Self::Entry>;
+
+    /// Execute a pre-resolved entry.
+    fn call_entry(&self, entry: &Self::Entry, args: &[&Self::Buf]) -> Result<Self::Buf>;
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Self::Buf>;
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Self::Buf>;
+
+    fn read_f32(&self, buf: &Self::Buf) -> Result<Vec<f32>>;
+
+    /// Read into a caller-owned scratch vec (decode hot loop: no per-step
+    /// allocation beyond what the transport itself requires).
+    fn read_f32_into(&self, buf: &Self::Buf, out: &mut Vec<f32>) -> Result<()> {
+        let v = self.read_f32(buf)?;
+        out.clear();
+        out.extend_from_slice(&v);
+        Ok(())
+    }
+
+    /// Bundle geometry (batch rows, sequence slots, vocabulary).
+    fn shape(&self, bundle: &str) -> Result<BatchShape>;
+}

@@ -1,18 +1,23 @@
 //! The PJRT engine: compile-once executables + typed buffer helpers.
 //!
-//! One [`Engine`] wraps one `PjRtClient` and the artifact manifest.
-//! Executables compile lazily on first use and are cached for the process
-//! lifetime. All `call`s validate argument count/shape against the
-//! manifest, execute buffer-to-buffer (`execute_b`), and account wall-clock
-//! into per-entry [`EntryStats`] (the raw data behind EXPERIMENTS.md §Perf).
+//! One [`Engine`] wraps one `PjRtClient` and the artifact manifest. Entry
+//! points are interned into [`EntryHandle`]s: resolving takes the registry
+//! lock once and clones an `Arc`; *calling* through a handle takes no lock
+//! at all (executable via `OnceLock`, stats via atomics). The string-keyed
+//! [`Engine::call`] remains as a convenience wrapper that resolves and
+//! calls — exactly one lock per call — but hot loops (rollout decode, spec
+//! verify) hold pre-resolved handles instead.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 use xla::FromRawBytes;
 
+use super::backend::{Backend, BatchShape};
 use super::manifest::{BundleInfo, EntryInfo, Manifest};
 
 /// Cumulative per-entry execution statistics.
@@ -23,12 +28,43 @@ pub struct EntryStats {
     pub compile_secs: f64,
 }
 
+/// Interned per-entry state: manifest signature, lazily-compiled
+/// executable, and lock-free counters.
+struct EntryState {
+    /// "bundle/entry", for reporting.
+    key: String,
+    info: EntryInfo,
+    file: PathBuf,
+    exe: OnceLock<Arc<xla::PjRtLoadedExecutable>>,
+    calls: AtomicU64,
+    exec_nanos: AtomicU64,
+    compile_nanos: AtomicU64,
+}
+
+/// A pre-resolved entry point. Cloning is an `Arc` bump; calling through it
+/// takes no locks.
+#[derive(Clone)]
+pub struct EntryHandle(Arc<EntryState>);
+
+impl EntryHandle {
+    /// "bundle/entry".
+    pub fn key(&self) -> &str {
+        &self.0.key
+    }
+
+    /// Manifest signature of this entry.
+    pub fn info(&self) -> &EntryInfo {
+        &self.0.info
+    }
+}
+
 /// Compile-once, execute-many PJRT wrapper.
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    stats: Mutex<HashMap<String, EntryStats>>,
+    entries: Mutex<HashMap<String, Arc<EntryState>>>,
+    upload_calls: AtomicU64,
+    upload_elems: AtomicU64,
 }
 
 impl Engine {
@@ -40,8 +76,9 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            exes: Mutex::new(HashMap::new()),
-            stats: Mutex::new(HashMap::new()),
+            entries: Mutex::new(HashMap::new()),
+            upload_calls: AtomicU64::new(0),
+            upload_elems: AtomicU64::new(0),
         })
     }
 
@@ -49,36 +86,53 @@ impl Engine {
         self.manifest.bundle(name)
     }
 
-    fn entry<'a>(&'a self, bundle: &str, entry: &str) -> Result<&'a EntryInfo> {
+    fn entry_info<'a>(&'a self, bundle: &str, entry: &str) -> Result<&'a EntryInfo> {
         let b = self.manifest.bundle(bundle)?;
         b.entries
             .get(entry)
             .with_context(|| format!("bundle '{bundle}' has no entry '{entry}'"))
     }
 
-    fn executable(
-        &self,
-        bundle: &str,
-        entry: &str,
-    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+    /// Intern `bundle/entry` into a reusable handle (one registry lock).
+    pub fn handle(&self, bundle: &str, entry: &str) -> Result<EntryHandle> {
         let key = format!("{bundle}/{entry}");
-        if let Some(exe) = self.exes.lock().unwrap().get(&key) {
+        let mut map = self.entries.lock().unwrap();
+        if let Some(st) = map.get(&key) {
+            return Ok(EntryHandle(st.clone()));
+        }
+        let info = self.entry_info(bundle, entry)?.clone();
+        let file = self.manifest.dir.join(&info.file);
+        let st = Arc::new(EntryState {
+            key: key.clone(),
+            info,
+            file,
+            exe: OnceLock::new(),
+            calls: AtomicU64::new(0),
+            exec_nanos: AtomicU64::new(0),
+            compile_nanos: AtomicU64::new(0),
+        });
+        map.insert(key, st.clone());
+        Ok(EntryHandle(st))
+    }
+
+    /// The executable behind a handle, compiling on first use (racing
+    /// resolvers may compile twice; the first `set` wins).
+    fn ensure_exe(&self, st: &EntryState) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = st.exe.get() {
             return Ok(exe.clone());
         }
-        let info = self.entry(bundle, entry)?;
-        let path = self.manifest.dir.join(&info.file);
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&st.file)
+            .with_context(|| format!("parsing HLO text {:?}", st.file))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
-            self.client.compile(&comp).with_context(|| format!("compiling {key}"))?,
+        let exe = Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {}", st.key))?,
         );
-        let secs = t0.elapsed().as_secs_f64();
-        self.stats.lock().unwrap().entry(key.clone()).or_default().compile_secs += secs;
-        log::debug!("compiled {key} in {secs:.2}s");
-        self.exes.lock().unwrap().insert(key, exe.clone());
-        Ok(exe)
+        let nanos = t0.elapsed().as_nanos() as u64;
+        st.compile_nanos.fetch_add(nanos, Ordering::Relaxed);
+        log::debug!("compiled {} in {:.2}s", st.key, nanos as f64 / 1e9);
+        let _ = st.exe.set(exe);
+        Ok(st.exe.get().expect("exe just set").clone())
     }
 
     /// Force-compile every entry of a bundle (so run timings exclude JIT).
@@ -86,17 +140,25 @@ impl Engine {
         let names: Vec<String> =
             self.manifest.bundle(bundle)?.entries.keys().cloned().collect();
         for e in names {
-            self.executable(bundle, &e)?;
+            let h = self.handle(bundle, &e)?;
+            self.ensure_exe(&h.0)?;
         }
         Ok(())
     }
 
     // -- uploads -------------------------------------------------------------
+    fn count_upload(&self, elems: usize) {
+        self.upload_calls.fetch_add(1, Ordering::Relaxed);
+        self.upload_elems.fetch_add(elems as u64, Ordering::Relaxed);
+    }
+
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.count_upload(data.len());
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.count_upload(data.len());
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
@@ -109,39 +171,55 @@ impl Engine {
         self.upload_f32(&host, &[host.len()])
     }
 
+    /// (host→device transfer count, total elements) since the last reset —
+    /// the raw data behind the decode-traffic acceptance tests.
+    pub fn upload_stats(&self) -> (u64, u64) {
+        (
+            self.upload_calls.load(Ordering::Relaxed),
+            self.upload_elems.load(Ordering::Relaxed),
+        )
+    }
+
     // -- execute -------------------------------------------------------------
-    /// Execute `bundle/entry` with buffer args; returns the single flat
-    /// output buffer (device-resident).
+    /// Execute through a pre-resolved handle: zero locks, zero string
+    /// formatting. Returns the single flat output buffer (device-resident).
+    pub fn call_handle(
+        &self,
+        h: &EntryHandle,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let st = &*h.0;
+        if args.len() != st.info.inputs.len() {
+            bail!(
+                "{}: expected {} args ({:?}), got {}",
+                st.key,
+                st.info.inputs.len(),
+                st.info.inputs.iter().map(|a| a.name.as_str()).collect::<Vec<_>>(),
+                args.len()
+            );
+        }
+        let exe = self.ensure_exe(st)?;
+        let t0 = Instant::now();
+        let mut outs = exe.execute_b(args)?;
+        st.calls.fetch_add(1, Ordering::Relaxed);
+        st.exec_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let mut replica = outs.pop().context("no replica output")?;
+        if replica.len() != 1 {
+            bail!("{}: expected 1 output buffer, got {}", st.key, replica.len());
+        }
+        Ok(replica.pop().unwrap())
+    }
+
+    /// Execute `bundle/entry` with buffer args (resolve + call: exactly one
+    /// registry lock). Hot loops should pre-resolve via [`Engine::handle`].
     pub fn call(
         &self,
         bundle: &str,
         entry: &str,
         args: &[&xla::PjRtBuffer],
     ) -> Result<xla::PjRtBuffer> {
-        let info = self.entry(bundle, entry)?;
-        if args.len() != info.inputs.len() {
-            bail!(
-                "{bundle}/{entry}: expected {} args ({:?}), got {}",
-                info.inputs.len(),
-                info.inputs.iter().map(|a| a.name.as_str()).collect::<Vec<_>>(),
-                args.len()
-            );
-        }
-        let exe = self.executable(bundle, entry)?;
-        let t0 = Instant::now();
-        let mut outs = exe.execute_b(args)?;
-        let secs = t0.elapsed().as_secs_f64();
-        {
-            let mut stats = self.stats.lock().unwrap();
-            let s = stats.entry(format!("{bundle}/{entry}")).or_default();
-            s.calls += 1;
-            s.total_secs += secs;
-        }
-        let mut replica = outs.pop().context("no replica output")?;
-        if replica.len() != 1 {
-            bail!("{bundle}/{entry}: expected 1 output buffer, got {}", replica.len());
-        }
-        Ok(replica.pop().unwrap())
+        let h = self.handle(bundle, entry)?;
+        self.call_handle(&h, args)
     }
 
     /// Copy a whole device buffer to host as f32.
@@ -152,19 +230,75 @@ impl Engine {
 
     /// Snapshot per-entry stats (sorted by total time desc).
     pub fn stats(&self) -> Vec<(String, EntryStats)> {
-        let mut v: Vec<(String, EntryStats)> = self
-            .stats
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, s)| (k.clone(), s.clone()))
+        let map = self.entries.lock().unwrap();
+        let mut v: Vec<(String, EntryStats)> = map
+            .values()
+            .map(|st| {
+                (
+                    st.key.clone(),
+                    EntryStats {
+                        calls: st.calls.load(Ordering::Relaxed),
+                        total_secs: st.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+                        compile_secs: st.compile_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+                    },
+                )
+            })
             .collect();
         v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
         v
     }
 
     pub fn reset_stats(&self) {
-        self.stats.lock().unwrap().clear();
+        for st in self.entries.lock().unwrap().values() {
+            st.calls.store(0, Ordering::Relaxed);
+            st.exec_nanos.store(0, Ordering::Relaxed);
+            st.compile_nanos.store(0, Ordering::Relaxed);
+        }
+        self.upload_calls.store(0, Ordering::Relaxed);
+        self.upload_elems.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Backend for Engine {
+    type Buf = xla::PjRtBuffer;
+    type Entry = EntryHandle;
+
+    fn resolve(&self, bundle: &str, entry: &str) -> Result<EntryHandle> {
+        self.handle(bundle, entry)
+    }
+
+    fn call_entry(&self, entry: &EntryHandle, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        self.call_handle(entry, args)
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Engine::upload_f32(self, data, dims)
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Engine::upload_i32(self, data, dims)
+    }
+
+    fn read_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        Engine::read_f32(self, buf)
+    }
+
+    fn read_f32_into(&self, buf: &xla::PjRtBuffer, out: &mut Vec<f32>) -> Result<()> {
+        // One transport allocation is forced by the literal API; moving the
+        // vec in avoids the trait default's second copy.
+        let lit = buf.to_literal_sync()?;
+        *out = lit.to_vec::<f32>()?;
+        Ok(())
+    }
+
+    fn shape(&self, bundle: &str) -> Result<BatchShape> {
+        let info = self.manifest.bundle(bundle)?;
+        Ok(BatchShape {
+            batch: info.batch,
+            prompt_len: self.manifest.prompt_len,
+            total_len: self.manifest.total_len,
+            vocab: info.model.vocab,
+        })
     }
 }
 
@@ -211,5 +345,29 @@ mod tests {
         let b = eng.bundle("tiny_b32").unwrap().clone();
         let blob = eng.upload_npy(&b.init_blob).unwrap();
         assert!(eng.call("tiny_b32", "score", &[&blob]).is_err());
+    }
+
+    #[test]
+    fn handles_are_interned() {
+        let Some(eng) = engine() else { return };
+        let h1 = eng.handle("tiny_b32", "score").unwrap();
+        let h2 = eng.handle("tiny_b32", "score").unwrap();
+        assert_eq!(h1.key(), "tiny_b32/score");
+        assert!(Arc::ptr_eq(&h1.0, &h2.0), "same entry must intern to one state");
+    }
+
+    #[test]
+    fn unknown_entry_handle_is_error() {
+        let Some(eng) = engine() else { return };
+        assert!(eng.handle("tiny_b32", "no_such_entry").is_err());
+    }
+
+    #[test]
+    fn upload_stats_count_calls_and_elems() {
+        let Some(eng) = engine() else { return };
+        eng.reset_stats();
+        let _ = eng.upload_f32(&[0.0; 8], &[8]).unwrap();
+        let _ = eng.upload_i32(&[0; 4], &[4]).unwrap();
+        assert_eq!(eng.upload_stats(), (2, 12));
     }
 }

@@ -2,6 +2,14 @@
 //! compile.aot`). The manifest is the single contract between the python
 //! compile path and this runtime: shapes, blob sizes, output field offsets,
 //! file names, vocabulary.
+//!
+//! Decode-entry contract (since the continuous-batching scheduler): the
+//! generation blob is `[cache_k | cache_v | valid | probs]` — the `[B, T]`
+//! valid mask is device-resident state. `prefill` seeds it, `decode`
+//! extends it from the per-step `slot` vector (no mask upload per step),
+//! and the `refill` entry re-seats a masked subset of rows. The full
+//! contract is documented in `rollout/sched.rs`; bundles lowered before
+//! this contract lack the `refill` entry and must be re-exported.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

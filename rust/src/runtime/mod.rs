@@ -11,8 +11,10 @@
 //! and tiny `read_*` extraction executables service the host's need for
 //! probs/metrics.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, EntryStats};
+pub use backend::{Backend, BatchShape};
+pub use engine::{Engine, EntryHandle, EntryStats};
 pub use manifest::{ArgInfo, BundleInfo, EntryInfo, FieldInfo, Manifest, ModelInfo};

@@ -118,7 +118,7 @@ impl SpecRollout {
                 }
                 _ => {
                     let (rejects, calls) =
-                        verifier.verify(policy, &to_verify, loglen, cfg.temperature, rng)?;
+                        verifier.verify(&policy.blob, &to_verify, loglen, cfg.temperature, rng)?;
                     stats.verify_calls = calls;
                     rejects
                 }
@@ -143,8 +143,8 @@ impl SpecRollout {
             timer.add("verification", span.elapsed().as_secs_f64());
         }
 
-        // 3. generate continuations
-        let (results, rstats) = rollout.run(policy, tasks, cfg, rng, timer)?;
+        // 3. generate continuations (continuous-batching scheduler)
+        let (results, rstats) = rollout.run(&policy.blob, tasks, cfg, rng, timer)?;
         stats.reused_tokens = rstats.reused_tokens;
         stats.new_tokens = rstats.new_tokens;
 

@@ -7,35 +7,39 @@
 //! runs one teacher-forced forward (L1 attention kernel), the fused
 //! log-prob kernel, and the L1 acceptance scan, returning the first
 //! rejection offset per row.
+//!
+//! Packing writes prompt/response slices straight into one reused
+//! [`BatchLayout`] scratch (no intermediate `SeqTask` clones), the side
+//! vectors (`logp_prev`/`uniforms`/`draft_valid`) are allocated once per
+//! verify call and reused across chunks, and the scalar lenience /
+//! temperature buffers upload once per call rather than once per chunk.
 
 use anyhow::Result;
 
 use super::cache::CacheEntry;
 use super::RolloutRequest;
-use crate::model::Policy;
 use crate::rollout::batch::BatchLayout;
-use crate::rollout::SeqTask;
-use crate::runtime::Engine;
+use crate::runtime::{Backend, Engine};
 use crate::util::Rng;
 
 /// Batched verifier bound to one bundle.
-pub struct SpecVerifier<'e> {
-    eng: &'e Engine,
-    bundle: String,
+pub struct SpecVerifier<'e, B: Backend = Engine> {
+    eng: &'e B,
+    h_verify: B::Entry,
     batch: usize,
     prompt_len: usize,
     total_len: usize,
 }
 
-impl<'e> SpecVerifier<'e> {
-    pub fn new(eng: &'e Engine, bundle: &str) -> Result<Self> {
-        let info = eng.bundle(bundle)?;
+impl<'e, B: Backend> SpecVerifier<'e, B> {
+    pub fn new(eng: &'e B, bundle: &str) -> Result<Self> {
+        let shape = eng.shape(bundle)?;
         Ok(SpecVerifier {
             eng,
-            bundle: bundle.to_string(),
-            batch: info.batch,
-            prompt_len: eng.manifest.prompt_len,
-            total_len: eng.manifest.total_len,
+            h_verify: eng.resolve(bundle, "verify")?,
+            batch: shape.batch,
+            prompt_len: shape.prompt_len,
+            total_len: shape.total_len,
         })
     }
 
@@ -43,52 +47,47 @@ impl<'e> SpecVerifier<'e> {
     /// input order) and the number of engine calls made.
     pub fn verify(
         &self,
-        policy: &Policy,
+        blob: &B::Buf,
         drafts: &[(usize, &RolloutRequest, CacheEntry)],
         log_lenience: f32,
         temperature: f32,
         rng: &mut Rng,
     ) -> Result<(Vec<usize>, usize)> {
-        let g = self.total_len - self.prompt_len;
+        let (b, t) = (self.batch, self.total_len);
+        let g = t - self.prompt_len;
         let mut accepted = Vec::with_capacity(drafts.len());
         let mut calls = 0usize;
 
-        for chunk in drafts.chunks(self.batch) {
-            // Pack drafts as if they were finished sequences.
-            let tasks: Vec<SeqTask> = chunk
-                .iter()
-                .map(|(id, req, entry)| SeqTask {
-                    id: *id,
-                    prompt: req.prompt.clone(),
-                    prefix: entry.response.clone(),
-                    prefix_logps: entry.logps.clone(),
-                })
-                .collect();
-            let layout = BatchLayout::pack(&tasks, self.batch, self.prompt_len, self.total_len);
+        // One scratch set reused across chunks.
+        let mut layout = BatchLayout::new(b, self.prompt_len, t);
+        let mut logp_prev = vec![0f32; b * g];
+        let mut draft_valid = vec![0f32; b * g];
+        let mut uniforms = vec![0f32; b * g];
+        let ll = self.eng.upload_f32(&[log_lenience], &[1])?;
+        let tp = self.eng.upload_f32(&[temperature], &[1])?;
 
-            let mut logp_prev = vec![0f32; self.batch * g];
-            let mut draft_valid = vec![0f32; self.batch * g];
-            let mut uniforms = vec![0f32; self.batch * g];
+        for chunk in drafts.chunks(b) {
+            layout.clear();
+            logp_prev.fill(0.0);
+            draft_valid.fill(0.0);
             rng.fill_uniform(&mut uniforms);
-            for (r, (_, _, entry)) in chunk.iter().enumerate() {
+            for (r, (_, req, entry)) in chunk.iter().enumerate() {
+                layout.set_row(r, &req.prompt, &entry.response);
                 for (j, &lp) in entry.logps.iter().enumerate() {
                     logp_prev[r * g + j] = lp;
                     draft_valid[r * g + j] = 1.0;
                 }
             }
 
-            let tok = self.eng.upload_i32(&layout.tokens, &[self.batch, self.total_len])?;
-            let val = self.eng.upload_f32(&layout.valid, &[self.batch, self.total_len])?;
-            let lp = self.eng.upload_f32(&logp_prev, &[self.batch, g])?;
-            let un = self.eng.upload_f32(&uniforms, &[self.batch, g])?;
-            let dv = self.eng.upload_f32(&draft_valid, &[self.batch, g])?;
-            let ll = self.eng.upload_f32(&[log_lenience], &[1])?;
-            let tp = self.eng.upload_f32(&[temperature], &[1])?;
+            let tok = self.eng.upload_i32(&layout.tokens, &[b, t])?;
+            let val = self.eng.upload_f32(&layout.valid, &[b, t])?;
+            let lp = self.eng.upload_f32(&logp_prev, &[b, g])?;
+            let un = self.eng.upload_f32(&uniforms, &[b, g])?;
+            let dv = self.eng.upload_f32(&draft_valid, &[b, g])?;
 
-            let out = self.eng.call(
-                &self.bundle,
-                "verify",
-                &[&policy.blob, &tok, &val, &lp, &un, &dv, &ll, &tp],
+            let out = self.eng.call_entry(
+                &self.h_verify,
+                &[blob, &tok, &val, &lp, &un, &dv, &ll, &tp],
             )?;
             calls += 1;
             let host = self.eng.read_f32(&out)?;

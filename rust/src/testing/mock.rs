@@ -1,0 +1,330 @@
+//! In-process mock of the decode-entry contract.
+//!
+//! [`MockEngine`] implements [`Backend`] with a tiny deterministic "model":
+//! each row's next-token distribution is a pure function of that row's
+//! logical token content (a hash seeds an [`Rng`]), with EOS mass growing
+//! with row length so sequences terminate at varied, content-dependent
+//! points. Because probs depend only on row content — exactly the
+//! independence property the real per-row-masked transformer has — the
+//! mock lets the scheduler invariants run as plain unit tests with no
+//! built `artifacts/`:
+//!
+//! - lockstep vs continuous byte-equivalence,
+//! - per-decode-step upload accounting (no `[B, T]` mask traffic),
+//! - refill ordering determinism and slot-idle stats.
+//!
+//! It also *enforces* the contract: argument counts and shapes are checked
+//! on every call (a decode carrying a stale `[B, T]` valid arg fails
+//! loudly), and the generation state carries its valid mask device-side,
+//! updated incrementally from `slot` writes like the real lowered entry.
+
+use std::cell::RefCell;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::runtime::{Backend, BatchShape};
+use crate::tokenizer::{BOS, EOS, PAD};
+use crate::util::Rng;
+
+/// One row of mock generation state.
+#[derive(Clone, Debug, Default)]
+struct RowState {
+    /// Logical token sequence (prompt + response, valid slots in order) —
+    /// the mock's stand-in for KV cache + device-side valid mask.
+    toks: Vec<i32>,
+    /// Next-token distribution for this row.
+    probs: Vec<f32>,
+}
+
+/// Mock generation blob (the `gen` buffer chained through decode calls).
+#[derive(Clone, Debug, Default)]
+pub struct GenState {
+    rows: Vec<RowState>,
+}
+
+/// A mock device buffer.
+#[derive(Clone, Debug)]
+pub enum MockBuf {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    Gen(GenState),
+}
+
+impl MockBuf {
+    fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            MockBuf::F32(v, _) => Ok(v),
+            _ => bail!("expected f32 buffer"),
+        }
+    }
+
+    fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            MockBuf::I32(v, _) => Ok(v),
+            _ => bail!("expected i32 buffer"),
+        }
+    }
+
+    fn gen(&self) -> Result<&GenState> {
+        match self {
+            MockBuf::Gen(g) => Ok(g),
+            _ => bail!("expected gen-state buffer"),
+        }
+    }
+
+    fn dims(&self) -> &[usize] {
+        match self {
+            MockBuf::F32(_, d) | MockBuf::I32(_, d) => d,
+            MockBuf::Gen(_) => &[],
+        }
+    }
+}
+
+/// Per-engine call/upload telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct MockCounters {
+    /// Dims of every host→device upload, in order.
+    pub uploads: Vec<Vec<usize>>,
+    /// Entry names of every call, in order.
+    pub calls: Vec<String>,
+}
+
+/// Deterministic mock rollout backend.
+pub struct MockEngine {
+    pub shape: BatchShape,
+    /// EOS mass per unit of row length: 0.0 = rows always run to the cap,
+    /// larger = shorter, more length-skewed rollouts.
+    pub eos_bias: f32,
+    counters: RefCell<MockCounters>,
+}
+
+impl MockEngine {
+    pub fn new(batch: usize, prompt_len: usize, total_len: usize, vocab: usize) -> Self {
+        MockEngine {
+            shape: BatchShape { batch, prompt_len, total_len, vocab },
+            eos_bias: 0.6,
+            counters: RefCell::new(MockCounters::default()),
+        }
+    }
+
+    /// Policy blob stand-in (contents irrelevant to the mock model).
+    pub fn blob(&self) -> MockBuf {
+        MockBuf::F32(vec![0.0], vec![1])
+    }
+
+    pub fn counters(&self) -> MockCounters {
+        self.counters.borrow().clone()
+    }
+
+    pub fn reset_counters(&self) {
+        *self.counters.borrow_mut() = MockCounters::default();
+    }
+
+    /// Uploads whose dims match exactly.
+    pub fn uploads_with_dims(&self, dims: &[usize]) -> usize {
+        self.counters.borrow().uploads.iter().filter(|d| d.as_slice() == dims).count()
+    }
+
+    /// Calls of one entry.
+    pub fn calls_of(&self, entry: &str) -> usize {
+        self.counters.borrow().calls.iter().filter(|c| c.as_str() == entry).count()
+    }
+
+    /// Next-token distribution as a pure function of row content.
+    fn row_probs(&self, toks: &[i32]) -> Vec<f32> {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &t in toks {
+            h = (h ^ t as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let mut r = Rng::new(h);
+        let v = self.shape.vocab;
+        let mut p: Vec<f32> = (0..v).map(|_| 0.05 + r.f32()).collect();
+        p[PAD as usize] = 0.0;
+        p[BOS as usize] = 0.0;
+        p[EOS as usize] = self.eos_bias * toks.len() as f32;
+        let s: f32 = p.iter().sum();
+        p.iter_mut().for_each(|x| *x /= s);
+        p
+    }
+
+    /// Rebuild one row from an uploaded [B,T] tokens/valid pair.
+    fn row_from_layout(&self, tokens: &[i32], valid: &[f32], r: usize) -> RowState {
+        let t = self.shape.total_len;
+        let toks: Vec<i32> = (0..t)
+            .filter(|&j| valid[r * t + j] > 0.5)
+            .map(|j| tokens[r * t + j])
+            .collect();
+        let probs = self.row_probs(&toks);
+        RowState { toks, probs }
+    }
+}
+
+impl Backend for MockEngine {
+    type Buf = MockBuf;
+    type Entry = String;
+
+    fn resolve(&self, _bundle: &str, entry: &str) -> Result<String> {
+        match entry {
+            "prefill" | "decode" | "read_gen" | "refill" => Ok(entry.to_string()),
+            other => bail!("mock backend has no entry '{other}'"),
+        }
+    }
+
+    fn call_entry(&self, entry: &String, args: &[&MockBuf]) -> Result<MockBuf> {
+        self.counters.borrow_mut().calls.push(entry.clone());
+        let (b, t) = (self.shape.batch, self.shape.total_len);
+        match entry.as_str() {
+            "prefill" => {
+                // (blob, tokens[B,T], valid[B,T], last[B], temp[1])
+                ensure!(args.len() == 5, "prefill: expected 5 args, got {}", args.len());
+                let tokens = args[1].i32s()?;
+                let valid = args[2].f32s()?;
+                ensure!(args[1].dims() == [b, t], "prefill: tokens dims {:?}", args[1].dims());
+                ensure!(args[2].dims() == [b, t], "prefill: valid dims {:?}", args[2].dims());
+                ensure!(args[3].dims() == [b], "prefill: last dims {:?}", args[3].dims());
+                let rows = (0..b).map(|r| self.row_from_layout(tokens, valid, r)).collect();
+                Ok(MockBuf::Gen(GenState { rows }))
+            }
+            "decode" => {
+                // (blob, gen, token[B], slot[B], lpos[B], temp[1]) — a 7th
+                // [B,T] valid arg is a contract violation.
+                ensure!(args.len() == 6, "decode: expected 6 args, got {}", args.len());
+                let mut gen = args[1].gen()?.clone();
+                let token = args[2].i32s()?;
+                let slot = args[3].i32s()?;
+                ensure!(args[2].dims() == [b], "decode: token dims {:?}", args[2].dims());
+                ensure!(args[3].dims() == [b], "decode: slot dims {:?}", args[3].dims());
+                ensure!(args[4].dims() == [b], "decode: lpos dims {:?}", args[4].dims());
+                for r in 0..b {
+                    ensure!(
+                        (0..=t as i32).contains(&slot[r]),
+                        "decode: slot {} out of range for row {r}",
+                        slot[r]
+                    );
+                    if (slot[r] as usize) < t {
+                        // in-range slot: cache + device-side valid write
+                        gen.rows[r].toks.push(token[r]);
+                        gen.rows[r].probs = self.row_probs(&gen.rows[r].toks);
+                    }
+                }
+                Ok(MockBuf::Gen(gen))
+            }
+            "refill" => {
+                // (blob, gen, tokens[B,T], valid[B,T], rowmask[B], last[B], temp[1])
+                ensure!(args.len() == 7, "refill: expected 7 args, got {}", args.len());
+                let mut gen = args[1].gen()?.clone();
+                let tokens = args[2].i32s()?;
+                let valid = args[3].f32s()?;
+                let rowmask = args[4].f32s()?;
+                ensure!(args[2].dims() == [b, t], "refill: tokens dims {:?}", args[2].dims());
+                ensure!(args[3].dims() == [b, t], "refill: valid dims {:?}", args[3].dims());
+                ensure!(args[4].dims() == [b], "refill: rowmask dims {:?}", args[4].dims());
+                ensure!(args[5].dims() == [b], "refill: last dims {:?}", args[5].dims());
+                for r in 0..b {
+                    if rowmask[r] > 0.5 {
+                        gen.rows[r] = self.row_from_layout(tokens, valid, r);
+                    }
+                }
+                Ok(MockBuf::Gen(gen))
+            }
+            "read_gen" => {
+                ensure!(args.len() == 1, "read_gen: expected 1 arg, got {}", args.len());
+                let gen = args[0].gen()?;
+                let v = self.shape.vocab;
+                let mut out = Vec::with_capacity(b * v);
+                for r in 0..b {
+                    if gen.rows[r].probs.is_empty() {
+                        out.extend(std::iter::repeat(1.0 / v as f32).take(v));
+                    } else {
+                        out.extend_from_slice(&gen.rows[r].probs);
+                    }
+                }
+                Ok(MockBuf::F32(out, vec![b, v]))
+            }
+            other => bail!("mock backend cannot execute '{other}'"),
+        }
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<MockBuf> {
+        ensure!(dims.iter().product::<usize>() == data.len(), "upload_f32 dims mismatch");
+        self.counters.borrow_mut().uploads.push(dims.to_vec());
+        Ok(MockBuf::F32(data.to_vec(), dims.to_vec()))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<MockBuf> {
+        ensure!(dims.iter().product::<usize>() == data.len(), "upload_i32 dims mismatch");
+        self.counters.borrow_mut().uploads.push(dims.to_vec());
+        Ok(MockBuf::I32(data.to_vec(), dims.to_vec()))
+    }
+
+    fn read_f32(&self, buf: &MockBuf) -> Result<Vec<f32>> {
+        Ok(buf.f32s()?.to_vec())
+    }
+
+    fn shape(&self, _bundle: &str) -> Result<BatchShape> {
+        Ok(self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probs_depend_only_on_row_content() {
+        let m = MockEngine::new(2, 4, 12, 10);
+        let a = m.row_probs(&[BOS, 5, 6]);
+        let b = m.row_probs(&[BOS, 5, 6]);
+        let c = m.row_probs(&[BOS, 5, 7]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!((a.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert_eq!(a[PAD as usize], 0.0);
+        assert_eq!(a[BOS as usize], 0.0);
+    }
+
+    #[test]
+    fn decode_appends_only_in_range_slots() {
+        let m = MockEngine::new(2, 2, 6, 8);
+        let blob = m.blob();
+        let tokens = m.upload_i32(&[0, 1, 3, 0, 1, 4, 0, 0, 1, 5, 6, 7], &[2, 6]).unwrap();
+        let valid = m
+            .upload_f32(&[0., 1., 1., 0., 1., 1., 0., 0., 1., 1., 1., 1.], &[2, 6])
+            .unwrap();
+        let last = m.upload_i32(&[2, 5], &[2]).unwrap();
+        let temp = m.upload_f32(&[1.0], &[1]).unwrap();
+        let pre = m.resolve("x", "prefill").unwrap();
+        let dec = m.resolve("x", "decode").unwrap();
+        let gen = m.call_entry(&pre, &[&blob, &tokens, &valid, &last, &temp]).unwrap();
+        let tok = m.upload_i32(&[5, 0], &[2]).unwrap();
+        let slot = m.upload_i32(&[3, 6], &[2]).unwrap(); // row 1 inert
+        let lpos = m.upload_i32(&[3, 0], &[2]).unwrap();
+        let gen2 = m.call_entry(&dec, &[&blob, &gen, &tok, &slot, &lpos, &temp]).unwrap();
+        let g2 = gen2.gen().unwrap();
+        assert_eq!(g2.rows[0].toks, vec![1, 3, 1, 4, 5]);
+        assert_eq!(g2.rows[1].toks, vec![1, 5, 6, 7]);
+    }
+
+    #[test]
+    fn decode_with_valid_mask_arg_is_rejected() {
+        let m = MockEngine::new(1, 2, 4, 8);
+        let blob = m.blob();
+        let dec = m.resolve("x", "decode").unwrap();
+        let g = MockBuf::Gen(GenState { rows: vec![RowState::default()] });
+        let tok = m.upload_i32(&[5], &[1]).unwrap();
+        let slot = m.upload_i32(&[2], &[1]).unwrap();
+        let lpos = m.upload_i32(&[2], &[1]).unwrap();
+        let stale_valid = m.upload_f32(&[1.0; 4], &[1, 4]).unwrap();
+        let temp = m.upload_f32(&[1.0], &[1]).unwrap();
+        let err = m
+            .call_entry(&dec, &[&blob, &g, &tok, &slot, &lpos, &stale_valid, &temp])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("expected 6 args"));
+    }
+
+    #[test]
+    fn unknown_entry_is_error() {
+        let m = MockEngine::new(1, 2, 4, 8);
+        assert!(m.resolve("x", "train_policy").is_err());
+    }
+}

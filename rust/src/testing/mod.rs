@@ -4,6 +4,8 @@
 //! retries on sizes). Used by `rust/tests/prop_*.rs` to check the
 //! coordinator invariants listed in DESIGN.md.
 
+pub mod mock;
+
 use crate::util::Rng;
 
 /// A value generator.

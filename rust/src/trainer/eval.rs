@@ -31,7 +31,7 @@ pub fn eval_suite(
             .enumerate()
             .map(|(i, t)| SeqTask::fresh(i, tok.encode_prompt(&t.prompt)))
             .collect();
-        let (results, _) = rollout.run(policy, tasks, cfg, rng, &mut timer)?;
+        let (results, _) = rollout.run(&policy.blob, tasks, cfg, rng, &mut timer)?;
         let mut acc = 0f64;
         for r in &results {
             let text = tok.decode_clean(&r.response);

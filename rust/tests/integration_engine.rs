@@ -31,7 +31,7 @@ fn uniform_policy_decode_probs_are_uniform() {
         .map(|i| SeqTask::fresh(i, tok.encode_prompt("1+1=")))
         .collect();
     let (results, stats) = rollout
-        .run(&policy, tasks, SampleCfg { temperature: 1.0, top_p: 1.0 }, &mut rng, &mut timer)
+        .run(&policy.blob, tasks, SampleCfg { temperature: 1.0, top_p: 1.0 }, &mut rng, &mut timer)
         .unwrap();
     assert_eq!(results.len(), 4);
     for r in &results {
@@ -59,7 +59,7 @@ fn rollout_respects_gen_cap_and_eos() {
     let tasks: Vec<SeqTask> =
         (0..8).map(|i| SeqTask::fresh(i, tok.encode_prompt("9*9="))).collect();
     let (results, _) = rollout
-        .run(&policy, tasks, SampleCfg::default(), &mut rng, &mut timer)
+        .run(&policy.blob, tasks, SampleCfg::default(), &mut rng, &mut timer)
         .unwrap();
     for r in &results {
         assert!(r.response.len() <= g);
@@ -87,7 +87,7 @@ fn prefix_resume_counts_reused_tokens() {
         prefix: prefix.clone(),
     };
     let (results, stats) = rollout
-        .run(&policy, vec![task], SampleCfg::default(), &mut rng, &mut timer)
+        .run(&policy.blob, vec![task], SampleCfg::default(), &mut rng, &mut timer)
         .unwrap();
     assert_eq!(results[0].reused, 5);
     assert_eq!(&results[0].response[..5], &prefix[..]);
@@ -112,7 +112,7 @@ fn terminal_prefix_skips_decoding_entirely() {
         prefix: prefix.clone(),
     };
     let (results, stats) = rollout
-        .run(&policy, vec![task], SampleCfg::default(), &mut rng, &mut timer)
+        .run(&policy.blob, vec![task], SampleCfg::default(), &mut rng, &mut timer)
         .unwrap();
     assert_eq!(stats.decode_steps, 0);
     assert_eq!(stats.new_tokens, 0);
@@ -122,7 +122,7 @@ fn terminal_prefix_skips_decoding_entirely() {
 }
 
 #[test]
-fn more_tasks_than_batch_runs_in_waves() {
+fn more_tasks_than_batch_refills_slots() {
     let Some(eng) = engine() else { return };
     let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
     let tok = Tokenizer::new(&eng.manifest.charset);
@@ -133,13 +133,42 @@ fn more_tasks_than_batch_runs_in_waves() {
     let tasks: Vec<SeqTask> =
         (0..b + 3).map(|i| SeqTask::fresh(i, tok.encode_prompt("2+2="))).collect();
     let (results, stats) = rollout
-        .run(&policy, tasks, SampleCfg::default(), &mut rng, &mut timer)
+        .run(&policy.blob, tasks, SampleCfg::default(), &mut rng, &mut timer)
         .unwrap();
     assert_eq!(results.len(), b + 3);
-    assert_eq!(stats.waves, 2);
+    // continuous batching: one prefill, overflow enters via slot refills
+    assert_eq!(stats.waves, 1);
+    assert!(stats.refills >= 1, "{stats:?}");
     // ids come back sorted
     let ids: Vec<usize> = results.iter().map(|r| r.id).collect();
     assert_eq!(ids, (0..b + 3).collect::<Vec<_>>());
+}
+
+#[test]
+fn lockstep_and_continuous_agree_on_real_engine() {
+    let Some(eng) = engine() else { return };
+    let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
+    let tok = Tokenizer::new(&eng.manifest.charset);
+    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let b = rollout.batch;
+    let mut timer = StageTimer::new();
+    let mk_tasks = || -> Vec<SeqTask> {
+        (0..b + 5).map(|i| SeqTask::fresh(i, tok.encode_prompt("7*6="))).collect()
+    };
+    let mut rng_a = Rng::new(77);
+    let (cont, _) = rollout
+        .run(&policy.blob, mk_tasks(), SampleCfg::default(), &mut rng_a, &mut timer)
+        .unwrap();
+    let mut rng_b = Rng::new(77);
+    let (lock, _) = rollout
+        .run_lockstep(&policy.blob, mk_tasks(), SampleCfg::default(), &mut rng_b, &mut timer)
+        .unwrap();
+    assert_eq!(cont.len(), lock.len());
+    for (c, l) in cont.iter().zip(&lock) {
+        assert_eq!(c.id, l.id);
+        assert_eq!(c.response, l.response, "id {}", c.id);
+        assert_eq!(c.logps, l.logps, "id {}", c.id);
+    }
 }
 
 #[test]
@@ -151,7 +180,7 @@ fn engine_stats_accumulate() {
     let mut rng = Rng::new(10);
     let mut timer = StageTimer::new();
     let tasks = vec![SeqTask::fresh(0, tok.encode_prompt("1+2="))];
-    rollout.run(&policy, tasks, SampleCfg::default(), &mut rng, &mut timer).unwrap();
+    rollout.run(&policy.blob, tasks, SampleCfg::default(), &mut rng, &mut timer).unwrap();
     let stats = eng.stats();
     assert!(stats.iter().any(|(k, s)| k == "nano_b32/prefill" && s.calls >= 1));
     assert!(stats.iter().any(|(k, _)| k == "nano_b32/read_gen"));

@@ -1,0 +1,243 @@
+//! Continuous-batching scheduler invariants, runnable without artifacts:
+//! the mock backend (testing::mock) implements the decode-entry contract
+//! with a deterministic content-hashed model, so lockstep-vs-continuous
+//! equivalence, upload-traffic budgets, and slot accounting are all plain
+//! unit tests.
+
+use spec_rl::rollout::{RolloutEngine, SampleCfg, SeqTask};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::tokenizer::{BOS, EOS};
+use spec_rl::util::{Rng, StageTimer};
+
+/// Geometry used by the deterministic-count tests.
+const B: usize = 2;
+const P: usize = 8;
+const T: usize = 16;
+const V: usize = 16;
+
+fn fresh(id: usize, seed: i32) -> SeqTask {
+    SeqTask::fresh(id, vec![BOS, 3 + (seed % 9), 4 + (seed % 7)])
+}
+
+fn with_prefix(id: usize, prefix_len: usize) -> SeqTask {
+    SeqTask {
+        id,
+        prompt: vec![BOS, 5, 6],
+        prefix: (0..prefix_len).map(|j| 3 + (j as i32 % 9)).collect(),
+        prefix_logps: vec![-1.0; prefix_len],
+    }
+}
+
+/// Deterministic skewed workload: remaining lengths 1, 4 and 8 over 2
+/// slots (eos_bias = 0 => every row runs exactly to the cap).
+fn skewed_tasks() -> Vec<SeqTask> {
+    vec![with_prefix(0, 7), with_prefix(1, 4), with_prefix(2, 0)]
+}
+
+fn no_eos_engine() -> MockEngine {
+    let mut m = MockEngine::new(B, P, T, V);
+    m.eos_bias = 0.0;
+    m
+}
+
+#[test]
+fn continuous_strictly_reduces_decode_steps_on_skew() {
+    let m = no_eos_engine();
+    let blob = m.blob();
+    let mut timer = StageTimer::new();
+
+    let mut rng = Rng::new(11);
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let (cont, cstats) = eng
+        .run(&blob, skewed_tasks(), SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+
+    let mut rng = Rng::new(11);
+    let (lock, lstats) = eng
+        .run_lockstep(&blob, skewed_tasks(), SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+
+    // Hand-derived schedule: chains of 1/4/8 samples over 2 slots, LPT
+    // order (id2 rem=8 and id1 rem=4 start; id0 rem=1 refills id1's slot).
+    assert_eq!(cstats.decode_steps, 7, "{cstats:?}");
+    assert_eq!(lstats.decode_steps, 10, "{lstats:?}");
+    assert!(cstats.decode_steps < lstats.decode_steps);
+    assert_eq!(cstats.waves, 1);
+    assert_eq!(cstats.refills, 1);
+    assert_eq!(lstats.waves, 2);
+    assert_eq!(lstats.refills, 0);
+    // Slot-idle accounting: continuous wastes 4 row-steps, lockstep 10.
+    assert_eq!(cstats.slot_idle_steps, 4);
+    assert_eq!(lstats.slot_idle_steps, 10);
+    assert!(
+        cstats.slot_idle_fraction(B) < lstats.slot_idle_fraction(B),
+        "{} vs {}",
+        cstats.slot_idle_fraction(B),
+        lstats.slot_idle_fraction(B)
+    );
+
+    // Equal outputs at equal seeds: same tokens, same logps, same flags.
+    assert_eq!(cont.len(), lock.len());
+    for (c, l) in cont.iter().zip(&lock) {
+        assert_eq!(c.id, l.id);
+        assert_eq!(c.response, l.response, "id {}", c.id);
+        assert_eq!(c.logps, l.logps, "id {}", c.id);
+        assert_eq!(c.reused, l.reused);
+        assert_eq!(c.new_tokens, l.new_tokens);
+        assert_eq!(c.finished, l.finished);
+    }
+    // token accounting identical
+    assert_eq!(cstats.new_tokens, lstats.new_tokens);
+    assert_eq!(cstats.new_tokens, 13); // 1 + 4 + 8
+    assert_eq!(cstats.reused_tokens, 11); // 7 + 4 + 0
+}
+
+#[test]
+fn no_per_step_bt_mask_traffic() {
+    let m = no_eos_engine();
+    let blob = m.blob();
+    m.reset_counters();
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let mut timer = StageTimer::new();
+    let mut rng = Rng::new(3);
+    let (_, stats) = eng
+        .run(&blob, skewed_tasks(), SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+
+    // [B,T]-shaped uploads happen only at prefill (tokens+valid) and at
+    // each refill (tokens+valid) — never per decode step.
+    let bt_uploads = m.uploads_with_dims(&[B, T]);
+    assert_eq!(bt_uploads, 2 * (stats.waves + stats.refills), "{stats:?}");
+    assert!(
+        stats.decode_steps > bt_uploads,
+        "decode steps ({}) must dominate [B,T] uploads ({bt_uploads})",
+        stats.decode_steps
+    );
+    // decode itself ships exactly three [B] i32 vectors per step (plus one
+    // [B] last + one [B] f32 rowmask per refill, one [B] last at prefill).
+    let b_uploads = m.uploads_with_dims(&[B]);
+    assert_eq!(b_uploads, 3 * stats.decode_steps + stats.waves + 2 * stats.refills);
+    // temperature is cached: a single [1] upload for the whole run.
+    assert_eq!(m.uploads_with_dims(&[1]), 1);
+}
+
+#[test]
+fn equivalence_holds_with_content_dependent_lengths() {
+    // EOS pressure on: lengths vary by sampled content, scheduling is
+    // irregular, outputs must still match lockstep byte-for-byte.
+    let m = MockEngine::new(4, P, T, V);
+    let blob = m.blob();
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let mut timer = StageTimer::new();
+    let tasks = || -> Vec<SeqTask> {
+        (0..11)
+            .map(|i| if i % 3 == 0 { with_prefix(i, (i * 2) % 7) } else { fresh(i, i as i32) })
+            .collect()
+    };
+
+    let mut rng = Rng::new(42);
+    let (cont, cstats) = eng.run(&blob, tasks(), SampleCfg::default(), &mut rng, &mut timer).unwrap();
+    let mut rng = Rng::new(42);
+    let (lock, lstats) =
+        eng.run_lockstep(&blob, tasks(), SampleCfg::default(), &mut rng, &mut timer).unwrap();
+
+    let ids: Vec<usize> = cont.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..11).collect::<Vec<_>>(), "results id-sorted");
+    for (c, l) in cont.iter().zip(&lock) {
+        assert_eq!((c.id, &c.response, &c.logps), (l.id, &l.response, &l.logps));
+        assert_eq!(c.finished, l.finished);
+    }
+    assert!(cstats.decode_steps <= lstats.decode_steps, "{cstats:?} vs {lstats:?}");
+    for r in &cont {
+        assert!(r.response.len() <= T - P);
+        if r.finished {
+            assert_eq!(*r.response.last().unwrap(), EOS);
+        }
+    }
+}
+
+#[test]
+fn same_seed_same_schedule_same_results() {
+    let m = MockEngine::new(3, P, T, V);
+    let blob = m.blob();
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let mut timer = StageTimer::new();
+    let tasks = || (0..8).map(|i| fresh(i, i as i32 * 5)).collect::<Vec<_>>();
+
+    let mut rng = Rng::new(9);
+    let (a, astats) = eng.run(&blob, tasks(), SampleCfg::default(), &mut rng, &mut timer).unwrap();
+    let mut rng = Rng::new(9);
+    let (b, bstats) = eng.run(&blob, tasks(), SampleCfg::default(), &mut rng, &mut timer).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!((x.id, &x.response, &x.logps), (y.id, &y.response, &y.logps));
+    }
+    assert_eq!(astats.decode_steps, bstats.decode_steps);
+    assert_eq!(astats.refills, bstats.refills);
+    assert_eq!(astats.slot_idle_steps, bstats.slot_idle_steps);
+}
+
+#[test]
+fn terminal_drafts_bypass_the_device_entirely() {
+    let m = MockEngine::new(B, P, T, V);
+    let blob = m.blob();
+    m.reset_counters();
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let mut timer = StageTimer::new();
+    let gen_len = T - P;
+
+    let mut eos_prefix = vec![4, 5, 6];
+    eos_prefix.push(EOS);
+    let tasks = vec![
+        SeqTask {
+            id: 0,
+            prompt: vec![BOS, 7],
+            prefix_logps: vec![-0.5; eos_prefix.len()],
+            prefix: eos_prefix.clone(),
+        },
+        SeqTask {
+            id: 1,
+            prompt: vec![BOS, 8],
+            prefix_logps: vec![-0.25; gen_len],
+            prefix: vec![9; gen_len],
+        },
+    ];
+    let mut rng = Rng::new(1);
+    let (results, stats) = eng.run(&blob, tasks, SampleCfg::default(), &mut rng, &mut timer).unwrap();
+
+    assert_eq!(stats.decode_steps, 0);
+    assert_eq!(stats.new_tokens, 0);
+    assert_eq!(stats.reused_tokens, eos_prefix.len() + gen_len);
+    assert_eq!(m.calls_of("prefill"), 0, "terminal drafts must not prefill");
+    assert_eq!(m.calls_of("decode"), 0);
+    assert_eq!(results[0].response, eos_prefix);
+    assert!(results[0].finished);
+    assert_eq!(results[0].logps, vec![-0.5; eos_prefix.len()]);
+    assert_eq!(results[1].response, vec![9; gen_len]);
+    assert!(!results[1].finished, "cap-length prefix without EOS is unfinished");
+}
+
+#[test]
+fn refill_preserves_live_neighbour_state() {
+    // A long row must produce the same tokens whether or not its
+    // neighbour slot gets refilled mid-flight — i.e. refills must not
+    // disturb live rows' device state.
+    let m = no_eos_engine();
+    let blob = m.blob();
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let mut timer = StageTimer::new();
+
+    // Run id2 (full-length) alone: no refills ever touch its neighbours.
+    let mut rng = Rng::new(11);
+    let (alone, _) = eng
+        .run(&blob, vec![with_prefix(2, 0)], SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    // Same task inside the skewed workload: two refills happen around it.
+    let mut rng = Rng::new(11);
+    let (packed, _) = eng
+        .run(&blob, skewed_tasks(), SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    let packed_id2 = packed.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(alone[0].response, packed_id2.response);
+    assert_eq!(alone[0].logps, packed_id2.logps);
+}

@@ -1,0 +1,201 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! Provides the subset of the anyhow 1.x API this workspace uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait (on `Result` and
+//! `Option`), and the `anyhow!` / `bail!` / `ensure!` macros. Error chains
+//! are kept as rendered strings (no downcasting), which is all the
+//! coordinator needs; `{:#}` prints the full context chain like anyhow.
+
+use std::fmt;
+
+/// `Result` specialized to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chained error: `chain[0]` is the outermost context, the last
+/// element the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// Root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first, `: `-joined.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+/// `Debug` mirrors anyhow's multi-line "Caused by" rendering.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        // Preserve the source chain as rendered strings.
+        let mut chain = vec![err.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = err.source();
+        while let Some(src) = cur {
+            chain.push(src.to_string());
+            cur = src.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn context_layers_render_in_order() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: missing thing");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Result<i32> = None.with_context(|| format!("no {}", "value"));
+        assert_eq!(format!("{:#}", v.unwrap_err()), "no value");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert!(f(-1).is_err());
+        assert!(f(101).is_err());
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_chains() {
+        let e: Error = Err::<(), Error>(anyhow!("root")).context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+}
