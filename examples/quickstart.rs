@@ -39,16 +39,17 @@ fn main() -> Result<()> {
 
     let mut timer = StageTimer::new();
     let (first, s0) =
-        spec.collect(&eng, &mut rollout, &policy, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
+        spec.collect(&mut rollout, &policy.blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
     println!("\n-- epoch 1 (cold cache: everything decoded) --");
     for r in &first {
         println!("  {:10} -> {}", prompts[r.id], tok.decode(&r.response));
     }
     println!("  new tokens: {}  reused: {}", s0.new_tokens, s0.reused_tokens);
 
-    // 4. Same prompts again: cached rollouts become speculative drafts.
+    // 4. Same prompts again: cached rollouts become speculative drafts,
+    //    verified inside the decode slot pool (no blocking verify wave).
     let (second, s1) =
-        spec.collect(&eng, &mut rollout, &policy, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
+        spec.collect(&mut rollout, &policy.blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
     println!("\n-- epoch 2 (drafts verified under the current policy) --");
     for r in &second {
         println!(

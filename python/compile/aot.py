@@ -77,6 +77,13 @@ def entry_signatures(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         "verify": [a("blob", F32, s)] + common_tv + [
             a("logp_prev", F32, b, g), a("uniforms", F32, b, g),
             a("draft_valid", F32, b, g), a("loglen", F32, 1), a("temp", F32, 1)],
+        # verification folded into the slot pool: scores drafts AND seats the
+        # accepted prefixes (KV/valid/probs) into `gen` for masked rows; the
+        # accepted length lands in the gen blob's aux lane (read via read_gen)
+        "verify_seat": [a("blob", F32, s), a("gen", F32, sg)] + common_tv + [
+            a("logp_prev", F32, b, g), a("uniforms", F32, b, g),
+            a("draft_valid", F32, b, g), a("rowmask", F32, b),
+            a("loglen", F32, 1), a("temp", F32, 1)],
         "train_policy": [a("blob", F32, s)] + common_tv + [
             a("resp_mask", F32, b, g), a("adv", F32, b, g),
             a("old_logp", F32, b, g), a("ref_logp", F32, b, g), a("hp", F32, 8)],
@@ -98,12 +105,13 @@ def output_fields(name: str, cfg, geo, batch: int, value_head: bool):
     b, t, g, v = batch, geo.total_len, geo.gen_len, cfg.vocab
     n = C.n_params(cfg, geo, value_head)
     l, d = cfg.n_layers, cfg.d_model
-    if name in ("prefill", "decode", "refill"):
+    if name in ("prefill", "decode", "refill", "verify_seat"):
         return [
             {"name": "cache_k", "offset": 0, "shape": [l, b, t, d]},
             {"name": "cache_v", "offset": l * b * t * d, "shape": [l, b, t, d]},
             {"name": "valid", "offset": 2 * l * b * t * d, "shape": [b, t]},
             {"name": "probs", "offset": 2 * l * b * t * d + b * t, "shape": [b, v]},
+            {"name": "aux", "offset": 2 * l * b * t * d + b * t + b * v, "shape": [b]},
         ]
     if name == "score":
         return [
@@ -125,7 +133,10 @@ def output_fields(name: str, cfg, geo, batch: int, value_head: bool):
             {"name": "metrics", "offset": 3 * n + 1, "shape": [C.NUM_METRICS]},
         ]
     if name == "read_gen":
-        return [{"name": "probs", "offset": 0, "shape": [b, v]}]
+        return [
+            {"name": "probs", "offset": 0, "shape": [b, v]},
+            {"name": "aux", "offset": b * v, "shape": [b]},
+        ]
     if name == "read_metrics":
         return [
             {"name": "step", "offset": 0, "shape": [1]},

@@ -127,11 +127,17 @@ def blob_size(cfg: ModelConfig, geo: SeqGeometry, value_head: bool = False) -> i
     return 3 * n_params(cfg, geo, value_head) + 1 + NUM_METRICS
 
 
-# Gen blob layout (per batch): [cache_k | cache_v | valid | probs].
+# Gen blob layout (per batch): [cache_k | cache_v | valid | probs | aux].
 # The [B, T] valid mask is part of the device-resident generation state:
 # prefill seeds it, decode extends it in place via a one-hot slot write,
 # refill replaces it for masked rows. The host never re-uploads it per
 # decode step (see rust/src/rollout/sched.rs for the full contract).
+#
+# `aux` is a per-row f32 side channel for entries that must report a small
+# scalar alongside the new generation state: ``verify_seat`` writes each
+# seated row's accepted-prefix length there (prefill zeroes it; decode and
+# refill pass it through). ``read_gen`` returns [probs | aux], so the host
+# learns acceptance results from the read it already performs per step.
 def gen_blob_spec(cfg: ModelConfig, geo: SeqGeometry, batch: int):
     """Returns ordered (name, shape) fields of the generation-state blob."""
     l, b, t, d = cfg.n_layers, batch, geo.total_len, cfg.d_model
@@ -140,6 +146,7 @@ def gen_blob_spec(cfg: ModelConfig, geo: SeqGeometry, batch: int):
         ("cache_v", (l, b, t, d)),
         ("valid", (b, t)),
         ("probs", (b, cfg.vocab)),
+        ("aux", (b,)),
     ]
 
 

@@ -10,7 +10,7 @@ host round-trip per call to split. Every entry point therefore consumes
 and produces **single flat f32 arrays**:
 
 - ``policy blob``  = [params | adam_m | adam_v | step | metrics16]
-- ``gen blob``     = [cache_k | cache_v | valid | probs]
+- ``gen blob``     = [cache_k | cache_v | valid | probs | aux]
 - ``score/verify`` = [logp | entropy | ...]
 
 so parameters, optimizer state and the KV cache stay device-resident
@@ -273,9 +273,10 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
             off += n
         return out
 
-    def pack_gen(ck, cv, valid, probs):
+    def pack_gen(ck, cv, valid, probs, aux):
         return jnp.concatenate(
-            [ck.reshape(-1), cv.reshape(-1), valid.reshape(-1), probs.reshape(-1)]
+            [ck.reshape(-1), cv.reshape(-1), valid.reshape(-1), probs.reshape(-1),
+             aux.reshape(-1)]
         )
 
     def policy_params(blob):
@@ -297,7 +298,7 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         params = policy_params(blob)
         logits, ck, cv = forward_full(params, tokens, valid, cfg, geo, attn_pallas)
         probs = gather_last_probs(logits, last, temp)
-        return pack_gen(ck, cv, valid, probs)
+        return pack_gen(ck, cv, valid, probs, jnp.zeros((b,), jnp.float32))
 
     # -- decode -------------------------------------------------------------
     def decode(blob, gen_blob, token, slot, lpos, temp):
@@ -312,7 +313,7 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
             params, gs["cache_k"], gs["cache_v"], token, slot, lpos, valid,
             temp[0], cfg, geo,
         )
-        return pack_gen(ck, cv, valid, probs)
+        return pack_gen(ck, cv, valid, probs, gs["aux"])
 
     # -- refill: masked per-row (re)prefill into live generation state ------
     def refill(blob, gen_blob, tokens, valid, rowmask, last, temp):
@@ -330,7 +331,7 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         cv = gs["cache_v"] * (1.0 - m_cache) + cv_new * m_cache
         vmask = gs["valid"] * (1.0 - m_row) + valid * m_row
         probs = gs["probs"] * (1.0 - m_row) + probs_new * m_row
-        return pack_gen(ck, cv, vmask, probs)
+        return pack_gen(ck, cv, vmask, probs, gs["aux"])
 
     # -- score --------------------------------------------------------------
     def score(blob, tokens, valid, temp):
@@ -351,6 +352,48 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         return jnp.concatenate(
             [rej.astype(jnp.float32), lp.reshape(-1), ent.reshape(-1)]
         )
+
+    # -- verify_seat: verification folded into the slot pool ------------------
+    def verify_seat(blob, gen_blob, tokens, valid, logp_prev, uniforms,
+                    draft_valid, rowmask, loglen, temp):
+        """Verify drafts *and* seat the accepted prefixes into the live
+        generation state in one call (the phase-aware pipeline's Verify
+        phase). The teacher-forced forward that scores the draft already
+        computes exactly the KV cache the continuation needs: causal masked
+        attention means activations (and KV) at every position <= the last
+        accepted slot are identical to a refill over the truncated prefix,
+        and KV at rejected positions is masked out by the truncated valid
+        mask. So a verified row transitions Verify -> Decode without a
+        second prefill forward — that is the device-call saving over the
+        two-phase path. Rows named by `rowmask` are replaced; others keep
+        their state bit-for-bit. Each seated row's accepted-prefix length
+        is reported in the gen blob's `aux` lane (read back via read_gen).
+        """
+        params = policy_params(blob)
+        gs = unpack_gen(gen_blob)
+        logits, ck_new, cv_new = forward_full(params, tokens, valid, cfg, geo, attn_pallas)
+        lp, _ent = response_logp_ent(logits, tokens, valid, temp[0], cfg, geo, use_pallas)
+        if use_pallas:
+            rej, _ = accept_k.spec_accept(lp, logp_prev, uniforms, draft_valid, loglen[0])
+        else:
+            rej, _ = kref.ref_spec_accept(lp, logp_prev, uniforms, draft_valid, loglen[0])
+        # truncate each row's valid mask at its first rejection: response
+        # position j survives iff j < rej (prompt region is untouched)
+        jpos = jnp.arange(g, dtype=jnp.int32)[None, :]          # [1,G]
+        keep = (jpos < rej[:, None]).astype(jnp.float32)        # [B,G]
+        acc_valid = jnp.concatenate(
+            [valid[:, :p], valid[:, p:] * keep], axis=1
+        )
+        last = (p + rej - 1).astype(jnp.int32)                  # rej=0 -> last prompt slot
+        probs_new = gather_last_probs(logits, last, temp)
+        m_row = rowmask[:, None]
+        m_cache = rowmask[None, :, None, None]
+        ck = gs["cache_k"] * (1.0 - m_cache) + ck_new * m_cache
+        cv = gs["cache_v"] * (1.0 - m_cache) + cv_new * m_cache
+        vmask = gs["valid"] * (1.0 - m_row) + acc_valid * m_row
+        probs = gs["probs"] * (1.0 - m_row) + probs_new * m_row
+        aux = gs["aux"] * (1.0 - rowmask) + rej.astype(jnp.float32) * rowmask
+        return pack_gen(ck, cv, vmask, probs, aux)
 
     # -- losses ---------------------------------------------------------------
     def policy_loss(pflat, tokens, valid, resp_mask, adv, old_logp, ref_logp, hp):
@@ -445,14 +488,16 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         metrics = metrics.at[0].set(loss).at[3].set(acc).at[5].set(gn)
         return join_blob(p1, m1, v1, s1, metrics)
 
-    # -- read_gen: extract just the sampling probs from the gen blob ---------
+    # -- read_gen: extract the sampling probs + aux lane from the gen blob ---
     # (CopyRawToHost is unimplemented on this CPU PJRT plugin, so reading a
     # sub-range of a device buffer requires a full literal copy; this trivial
-    # executable keeps the per-decode-step host copy at B*V floats instead of
-    # the whole KV cache.)
+    # executable keeps the per-decode-step host copy at B*V + B floats
+    # instead of the whole KV cache. The aux tail carries verify_seat's
+    # accepted-prefix lengths, so the pipeline learns acceptance results
+    # from the same read it already performs per step.)
     def read_gen(gen_blob):
         gs = unpack_gen(gen_blob)
-        return gs["probs"].reshape(-1)
+        return jnp.concatenate([gs["probs"].reshape(-1), gs["aux"].reshape(-1)])
 
     # -- read_metrics: extract [step | metrics] from a train blob ------------
     # (same rationale as read_gen: avoids a full blob copy per train step
@@ -468,6 +513,7 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         "read_metrics": read_metrics,
         "score": score,
         "verify": verify,
+        "verify_seat": verify_seat,
         "train_policy": train_policy,
         "train_sft": train_sft,
     }

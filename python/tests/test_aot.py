@@ -25,7 +25,7 @@ def test_entry_signatures_cover_all_entries():
     sigs = aot.entry_signatures(cfg, GEO, 4, value_head=False)
     assert set(sigs) == {
         "prefill", "decode", "refill", "read_gen", "read_metrics", "score",
-        "verify", "train_policy", "train_sft",
+        "verify", "verify_seat", "train_policy", "train_sft",
     }
     # every signature starts with the policy blob
     for name, sig in sigs.items():
@@ -42,7 +42,8 @@ def test_critic_signatures():
 
 def test_output_fields_offsets_are_contiguous():
     cfg = C.PRESETS["nano"]
-    for entry in ["prefill", "decode", "refill", "score", "verify", "train_policy"]:
+    for entry in ["prefill", "decode", "refill", "verify_seat", "read_gen",
+                  "score", "verify", "train_policy"]:
         fields = aot.output_fields(entry, cfg, GEO, 4, False)
         off = 0
         for f in fields:
@@ -57,6 +58,22 @@ def test_verify_output_layout_matches_rust_expectations():
     assert fields["reject_off"]["offset"] == 0
     assert fields["logp"]["offset"] == b
     assert fields["entropy"]["offset"] == b + b * g
+
+
+def test_gen_blob_and_read_gen_carry_aux_lane():
+    cfg = C.PRESETS["nano"]
+    b, v = 4, cfg.vocab
+    spec = dict(C.gen_blob_spec(cfg, GEO, b))
+    assert spec["aux"] == (b,)
+    fields = {f["name"]: f for f in aot.output_fields("read_gen", cfg, GEO, b, False)}
+    assert fields["probs"]["offset"] == 0
+    assert fields["aux"]["offset"] == b * v
+    seat = {f["name"]: f for f in aot.output_fields("verify_seat", cfg, GEO, b, False)}
+    assert seat["aux"]["shape"] == [b]
+    # entry output sizes match the gen blob spec exactly
+    assert sum(int(np.prod(f["shape"])) for f in seat.values()) == C.flat_size(
+        C.gen_blob_spec(cfg, GEO, b)
+    )
 
 
 @pytest.mark.slow

@@ -69,8 +69,8 @@ def greedy_rollout(entries, blob, tokens, valid, steps):
     last = jnp.full((B,), P - 1, jnp.int32)
     gen = entries["prefill"](blob, jnp.asarray(tokens), jnp.asarray(valid), last, temp)
     ck_n = CFG.n_layers * B * T * CFG.d_model
-    probs = np.asarray(entries["read_gen"](gen)).reshape(B, V)
-    assert gen.shape[0] == 2 * ck_n + B * T + B * V  # [ck | cv | valid | probs]
+    probs = np.asarray(entries["read_gen"](gen))[: B * V].reshape(B, V)
+    assert gen.shape[0] == 2 * ck_n + B * T + B * V + B  # [ck | cv | valid | probs | aux]
     toks, val = tokens.copy(), valid.copy()
     logps = []
     for j in range(steps):
@@ -86,7 +86,7 @@ def greedy_rollout(entries, blob, tokens, valid, steps):
         # device-side mask must track the host-side one exactly
         dev_valid = np.asarray(gen[2 * ck_n : 2 * ck_n + B * T]).reshape(B, T)
         assert np.array_equal(dev_valid, val)
-        probs = np.asarray(entries["read_gen"](gen)).reshape(B, V)
+        probs = np.asarray(entries["read_gen"](gen))[: B * V].reshape(B, V)
     return toks, val, np.stack(logps, 1)
 
 
@@ -132,18 +132,19 @@ def test_left_pad_shift_invariance(entries, blob):
         last = np.full((B,), P - 1 - extra, np.int32)
         gen = entries["prefill"](blob, jnp.asarray(tokens), jnp.asarray(valid),
                                  jnp.asarray(last), temp)
-        probs.append(np.asarray(entries["read_gen"](gen)).reshape(B, V))
+        probs.append(np.asarray(entries["read_gen"](gen))[: B * V].reshape(B, V))
     assert np.abs(probs[0] - probs[1]).max() < 1e-5
 
 
 def unpack_gen_np(gen):
-    """Split a flat gen blob into (ck, cv, valid, probs) numpy views."""
+    """Split a flat gen blob into (ck, cv, valid, probs, aux) numpy views."""
     ck_n = CFG.n_layers * B * T * CFG.d_model
     ck = np.asarray(gen[:ck_n]).reshape(CFG.n_layers, B, T, CFG.d_model)
     cv = np.asarray(gen[ck_n : 2 * ck_n]).reshape(CFG.n_layers, B, T, CFG.d_model)
     vm = np.asarray(gen[2 * ck_n : 2 * ck_n + B * T]).reshape(B, T)
-    pr = np.asarray(gen[2 * ck_n + B * T :]).reshape(B, V)
-    return ck, cv, vm, pr
+    pr = np.asarray(gen[2 * ck_n + B * T : 2 * ck_n + B * T + B * V]).reshape(B, V)
+    aux = np.asarray(gen[2 * ck_n + B * T + B * V :])
+    return ck, cv, vm, pr, aux
 
 
 def test_refill_rebuilds_masked_rows_and_preserves_live_rows(entries, blob):
@@ -182,7 +183,7 @@ def test_decode_out_of_range_slot_is_inert(entries, blob):
     gen2 = entries["decode"](
         blob, gen, jnp.asarray(nxt), jnp.asarray(slot), jnp.asarray(lpos), temp,
     )
-    _, _, vm, _ = unpack_gen_np(gen2)
+    vm = unpack_gen_np(gen2)[2]
     expect = valid.copy()
     expect[0, P] = 1
     expect[2, P] = 1
@@ -223,6 +224,67 @@ def test_verify_zero_lenience_rejects_all(entries, blob):
     )
     rej = np.asarray(out[:B]).astype(int)
     assert (rej == 0).all(), rej
+
+
+def test_verify_seat_equals_verify_then_refill(entries, blob):
+    """verify_seat must agree with the two-phase oracle: same rejection
+    offsets as `verify`, and (for masked rows) the same seated probs/valid
+    as a `refill` over the truncated accepted prefix. Unmasked rows keep
+    their state bit-for-bit."""
+    tokens, valid, plens = make_prompts()
+    toks, val, dec_lp = greedy_rollout(entries, blob, tokens, valid, 6)
+    temp = jnp.asarray([1.0], jnp.float32)
+    loglen = jnp.asarray([0.0], jnp.float32)
+    dv = np.zeros((B, G), np.float32)
+    dv[:, :6] = 1
+    lp_prev = np.zeros((B, G), np.float32)
+    lp_prev[:, :6] = dec_lp + np.linspace(0.0, 1.5, 6)[None, :]  # force mid-draft rejects
+    rng = np.random.default_rng(11)
+    u = rng.random((B, G)).astype(np.float32)
+
+    out = entries["verify"](
+        blob, jnp.asarray(toks), jnp.asarray(val), jnp.asarray(lp_prev),
+        jnp.asarray(u), jnp.asarray(dv), loglen, temp,
+    )
+    rej = np.asarray(out[:B]).astype(int)
+    assert rej.min() < 6, "want at least one mid-draft rejection"
+
+    # seed a gen state from other prompts, then verify_seat rows 0 and 2
+    tokens_b, valid_b, _ = make_prompts(seed=9)
+    last_b = jnp.full((B,), P - 1, jnp.int32)
+    gen0 = entries["prefill"](blob, jnp.asarray(tokens_b), jnp.asarray(valid_b), last_b, temp)
+    rowmask = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+    gen_s = entries["verify_seat"](
+        blob, gen0, jnp.asarray(toks), jnp.asarray(val), jnp.asarray(lp_prev),
+        jnp.asarray(u), jnp.asarray(dv), jnp.asarray(rowmask), loglen, temp,
+    )
+    # the refill oracle: truncate each draft to its accepted prefix
+    toks_acc, val_acc = toks.copy(), val.copy()
+    for r in range(B):
+        toks_acc[r, P + rej[r] :] = 0
+        val_acc[r, P + rej[r] :] = 0
+    last_acc = jnp.asarray(P + rej - 1, jnp.int32)
+    gen_r = entries["refill"](
+        blob, gen0, jnp.asarray(toks_acc), jnp.asarray(val_acc),
+        jnp.asarray(rowmask), last_acc, temp,
+    )
+    s, rr, g0 = unpack_gen_np(gen_s), unpack_gen_np(gen_r), unpack_gen_np(gen0)
+    assert np.array_equal(s[4][rowmask > 0.5], rej[rowmask > 0.5].astype(np.float32))
+    assert np.array_equal(s[4][rowmask < 0.5], g0[4][rowmask < 0.5]), "aux passthrough"
+    for r in range(B):
+        if rowmask[r] < 0.5:
+            for i in range(4):
+                want = g0[i][:, r] if i < 2 else g0[i][r]
+                got = s[i][:, r] if i < 2 else s[i][r]
+                assert np.array_equal(got, want), f"unmasked row {r} field {i}"
+            continue
+        assert np.array_equal(s[2][r], rr[2][r]), f"valid row {r}"
+        assert np.abs(s[3][r] - rr[3][r]).max() < 1e-5, f"probs row {r}"
+        # KV at accepted (valid) positions matches the truncated refill;
+        # rejected positions are masked out and may hold garbage
+        keep = val_acc[r] > 0.5
+        assert np.abs(s[0][:, r][:, keep] - rr[0][:, r][:, keep]).max() < 1e-5
+        assert np.abs(s[1][:, r][:, keep] - rr[1][:, r][:, keep]).max() < 1e-5
 
 
 def test_train_policy_moves_params_and_reports_metrics(entries, blob):

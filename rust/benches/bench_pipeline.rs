@@ -1,0 +1,161 @@
+//! Pipeline bench: two-phase verify-then-decode vs the interleaved
+//! phase-aware pipeline, at equal outputs (per-task sampling and
+//! verification RNG streams make the two paths byte-identical).
+//!
+//! Runs against the in-tree mock backend, so it needs no artifacts and
+//! measures pure scheduling efficiency on a skewed draft workload: total
+//! device-call count (verify + decode + refill — the acceptance metric),
+//! per-entry breakdown, and host-side wall-clock. Writes
+//! `BENCH_pipeline.json` for machine diffing / the CI smoke run.
+
+use spec_rl::benchkit::{fmt_secs, Bench, JsonReport};
+use spec_rl::rollout::{PipelineStats, RolloutEngine, SampleCfg, SeqResult};
+use spec_rl::spec::{CacheEntry, Lenience, ReuseVariant, RolloutRequest, SpecRollout};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::tokenizer::BOS;
+use spec_rl::util::{Rng, StageTimer};
+
+const B: usize = 8;
+const P: usize = 16;
+const T: usize = 64;
+const V: usize = 51;
+const N_TASKS: usize = 40;
+const SEED: u64 = 7;
+/// Negative log-lenience stands in for policy drift on the mock's frozen
+/// policy: acceptance truncates drafts at varied, content-dependent
+/// offsets — the reuse-heavy skew SPEC-RL produces after its first epoch.
+const LOG_LENIENCE: f32 = -0.25;
+
+fn requests() -> Vec<RolloutRequest> {
+    (0..N_TASKS)
+        .map(|i| RolloutRequest {
+            id: i,
+            prompt: vec![BOS, 3 + (i as i32 % 40), 5 + (i as i32 % 11)],
+        })
+        .collect()
+}
+
+/// A SpecRollout warmed to the post-epoch-0 state (cache filled from the
+/// template rollouts, step = 1), so every measured pass benches exactly
+/// one fully-drafted step.
+fn warmed(template: &[SeqResult]) -> SpecRollout {
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(LOG_LENIENCE));
+    for r in template {
+        spec.cache.insert(r.id, CacheEntry::from_result(r, 0));
+    }
+    spec.step = 1;
+    spec
+}
+
+/// The RNG as collect left it after epoch 0 (two nonce draws).
+fn epoch1_rng() -> Rng {
+    let mut rng = Rng::new(SEED);
+    rng.next_u64();
+    rng.next_u64();
+    rng
+}
+
+fn main() {
+    let m = MockEngine::new(B, P, T, V);
+    let blob = m.blob();
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let cfg = SampleCfg::default();
+    let mut timer = StageTimer::new();
+
+    // epoch 0 (cold cache) once: its results template the drafts
+    let mut spec0 = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(LOG_LENIENCE));
+    let mut rng = Rng::new(SEED);
+    let (template, _) =
+        spec0.collect(&mut eng, &blob, &requests(), cfg, &mut rng, &mut timer).unwrap();
+
+    println!(
+        "== pipeline bench (mock backend: B={B} T={T}, {N_TASKS} drafted tasks, log l={LOG_LENIENCE}) =="
+    );
+    let bench = Bench::new(2, 10);
+
+    let r_pipe = bench.run("interleaved pipeline (verify_seat)", || {
+        let mut spec = warmed(&template);
+        let mut rng = epoch1_rng();
+        spec.collect(&mut eng, &blob, &requests(), cfg, &mut rng, &mut timer).unwrap()
+    });
+    let r_two = bench.run("two-phase (verify wave, then decode)", || {
+        let mut spec = warmed(&template);
+        let mut rng = epoch1_rng();
+        spec.run_two_phase(&mut eng, &blob, &requests(), cfg, &mut rng, &mut timer).unwrap()
+    });
+
+    // one measured pass each for call counts + output equivalence
+    let mut run_counted = |two_phase: bool| -> (Vec<SeqResult>, PipelineStats, usize) {
+        let mut spec = warmed(&template);
+        let mut rng = epoch1_rng();
+        let mut pass_timer = StageTimer::new();
+        m.reset_counters();
+        let (res, stats) = if two_phase {
+            spec.run_two_phase(&mut eng, &blob, &requests(), cfg, &mut rng, &mut pass_timer)
+                .unwrap()
+        } else {
+            spec.collect(&mut eng, &blob, &requests(), cfg, &mut rng, &mut pass_timer).unwrap()
+        };
+        let calls = ["verify", "verify_seat", "decode", "refill"]
+            .iter()
+            .map(|e| m.calls_of(e))
+            .sum();
+        (res, stats, calls)
+    };
+    let (pipe_res, pipe, pipe_calls) = run_counted(false);
+    let (two_res, two, two_calls) = run_counted(true);
+
+    assert_eq!(pipe_res.len(), two_res.len());
+    for (a, b) in pipe_res.iter().zip(&two_res) {
+        assert_eq!((a.id, &a.response), (b.id, &b.response), "outputs must be equal");
+        assert_eq!(a.logps, b.logps, "logps must be equal");
+    }
+    assert_eq!(pipe_calls, pipe.device_calls());
+    assert_eq!(two_calls, two.device_calls());
+    assert!(
+        pipe.device_calls() < two.device_calls(),
+        "pipeline must strictly reduce device calls ({} vs {})",
+        pipe.device_calls(),
+        two.device_calls()
+    );
+
+    println!("\n                        pipeline    two-phase");
+    println!("verify calls          {:>10}  {:>10}", pipe.verify_calls, two.verify_calls);
+    println!("decode steps          {:>10}  {:>10}", pipe.decode_steps, two.decode_steps);
+    println!("refills               {:>10}  {:>10}", pipe.refills, two.refills);
+    println!("total device calls    {:>10}  {:>10}", pipe.device_calls(), two.device_calls());
+    println!("reused tokens         {:>10}  {:>10}", pipe.reused_tokens, two.reused_tokens);
+    println!("new tokens            {:>10}  {:>10}", pipe.new_tokens, two.new_tokens);
+    println!("mean accepted prefix  {:>10.2}  {:>10.2}", pipe.mean_prefix_len, two.mean_prefix_len);
+    println!(
+        "wall-clock (median)   {:>10}  {:>10}",
+        fmt_secs(r_pipe.median_secs),
+        fmt_secs(r_two.median_secs)
+    );
+    println!(
+        "\nspeedup: {:.2}x fewer device calls, {:.2}x wall-clock",
+        two.device_calls() as f64 / pipe.device_calls() as f64,
+        r_two.median_secs / r_pipe.median_secs.max(1e-12)
+    );
+
+    let mut j = JsonReport::new();
+    j.int("batch", B)
+        .int("tasks", N_TASKS)
+        .num("log_lenience", LOG_LENIENCE as f64)
+        .int("pipeline_device_calls", pipe.device_calls())
+        .int("two_phase_device_calls", two.device_calls())
+        .int("pipeline_verify_calls", pipe.verify_calls)
+        .int("two_phase_verify_calls", two.verify_calls)
+        .int("pipeline_decode_steps", pipe.decode_steps)
+        .int("two_phase_decode_steps", two.decode_steps)
+        .int("pipeline_refills", pipe.refills)
+        .int("two_phase_refills", two.refills)
+        .int("new_tokens", pipe.new_tokens)
+        .int("reused_tokens", pipe.reused_tokens)
+        .bench("pipeline", &r_pipe)
+        .bench("two_phase", &r_two);
+    println!("\n{}", j.render());
+    if let Err(e) = j.save("BENCH_pipeline.json") {
+        eprintln!("could not write BENCH_pipeline.json: {e}");
+    }
+}

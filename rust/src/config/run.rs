@@ -36,6 +36,9 @@ pub struct RunConfig {
     // -- SPEC-RL -----------------------------------------------------------------
     pub variant: ReuseVariant,
     pub lenience: Lenience,
+    /// Rollout-cache token budget (0 = unbounded). Past it, oldest-version
+    /// entries are evicted (see `spec::cache`).
+    pub cache_budget_tokens: usize,
 
     // -- evaluation ---------------------------------------------------------------
     pub eval_every: usize,
@@ -69,6 +72,7 @@ impl Default for RunConfig {
             top_p: 1.0,
             variant: ReuseVariant::Spec,
             lenience: Lenience::Fixed(0.5),
+            cache_budget_tokens: 0,
             eval_every: 5,
             eval_n: 32,
             eval_samples_hard: 4,
@@ -119,6 +123,7 @@ impl RunConfig {
             c.lenience =
                 Lenience::parse(v).with_context(|| format!("bad lenience '{v}'"))?;
         }
+        c.cache_budget_tokens = doc.usize_or("spec.cache_budget", c.cache_budget_tokens);
         c.params.lr = doc.f64_or("train.lr", c.params.lr as f64) as f32;
         c.params.critic_lr = doc.f64_or("train.critic_lr", c.params.critic_lr as f64) as f32;
         c.params.kl_coef = doc.f64_or("train.kl_coef", c.params.kl_coef as f64) as f32;
@@ -177,6 +182,14 @@ mod tests {
         assert_eq!(c.steps, 10);
         // DAPO's paper lenience default
         assert_eq!(c.lenience, Lenience::Fixed(0.15));
+    }
+
+    #[test]
+    fn cache_budget_parses() {
+        let doc = ConfigDoc::parse("[spec]\ncache_budget = 4096").unwrap();
+        let c = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.cache_budget_tokens, 4096);
+        assert_eq!(RunConfig::default().cache_budget_tokens, 0, "unbounded by default");
     }
 
     #[test]

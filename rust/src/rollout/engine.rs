@@ -1,31 +1,43 @@
-//! Continuous-batching generation over the PJRT decode entries.
+//! Phase-aware continuous-batching generation over the PJRT entries.
 //!
-//! [`RolloutEngine::run`] drives the slot scheduler: one prefill for the
-//! initial batch, then a decode loop in which finished rows are refilled
-//! from the pending queue via the `refill` entry (a masked per-row
-//! prefill) without stalling live rows. [`RolloutEngine::run_lockstep`]
+//! [`RolloutEngine::run_pipeline`] drives the full sequence lifecycle
+//! (`Draft -> Verify -> Decode -> Done`) through one slot pool: fresh
+//! prompts start decoding immediately while drafted sequences verify in
+//! packed `verify_seat` sub-batches and transition to decode the moment
+//! their first rejection is read back — no global verify barrier, and no
+//! separate refill forward for verified rows (the verify forward's KV is
+//! reused in place; see `rollout/sched.rs` for the entry contract).
+//!
+//! [`RolloutEngine::run`] is the decode-only subset (no drafts) used by
+//! evaluation and the scheduler benches; [`RolloutEngine::run_lockstep`]
 //! preserves the old wave discipline — same results, more decode steps —
-//! for equivalence tests and the `bench_sched` comparison.
+//! as the scheduling-equivalence oracle. The blocking verify wave behind
+//! the two-phase oracle lives here too ([`RolloutEngine::verify_wave`]),
+//! executing plans packed by [`VerifyPlanner`] (which itself makes no
+//! engine calls).
 //!
 //! Host↔device traffic per decode step is three `[B]` i32 vectors; the
 //! `[B, T]` valid mask lives device-side in the generation blob and is
-//! extended there by the decode entry (see `rollout/sched.rs` for the full
-//! contract). All host scratch (layout, step vectors, probs readback,
-//! sampler order) is allocated once per engine and reused across runs.
+//! extended there by the decode entry. All host scratch (layout, verify
+//! planner, step vectors, probs readback, sampler order) is allocated once
+//! per engine and reused across runs and trainer steps.
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::batch::{BatchLayout, SeqResult, SeqTask};
 use super::sched::SlotScheduler;
 use crate::runtime::{Backend, Engine};
+use crate::spec::verifier::{VerifyPlanner, VerifyTask};
 use crate::tokenizer::EOS;
 use crate::util::{Rng, StageTimer, TopPSampler};
 
-/// Aggregate statistics for one `run` call.
+/// The per-step pipeline report: generation, verification, and cache
+/// telemetry merged into one struct (previously split across
+/// `RolloutStats` and `SpecStepStats`).
 #[derive(Clone, Debug, Default)]
-pub struct RolloutStats {
+pub struct PipelineStats {
     /// Newly decoded tokens (the paper's "Tokens" efficiency metric).
     pub new_tokens: usize,
     /// Tokens taken from verified prefixes.
@@ -34,14 +46,30 @@ pub struct RolloutStats {
     pub decode_steps: usize,
     /// Prefill batches executed (lockstep: one per wave; continuous: 1).
     pub waves: usize,
-    /// Refill executable invocations (continuous scheduler only).
+    /// Refill executable invocations.
     pub refills: usize,
     /// Sum over decode steps of rows that did not advance a sequence —
     /// the utilization gap continuous batching exists to close.
     pub slot_idle_steps: usize,
+    /// Sequences that had a cached draft (verified or variant-resolved).
+    pub drafts: usize,
+    /// Total accepted-prefix tokens over drafted sequences (raw sum).
+    pub prefix_tokens: usize,
+    /// Drafted sequences whose draft was fully reused (raw count).
+    pub full_reuses: usize,
+    /// Mean verified prefix length (derived; see `finalize_draft_means`).
+    pub mean_prefix_len: f64,
+    /// Fraction of drafts fully reused (derived).
+    pub full_reuse_ratio: f64,
+    /// `verify` / `verify_seat` executable invocations.
+    pub verify_calls: usize,
+    /// Rollout-cache entries evicted by the token budget this step.
+    pub cache_evictions: usize,
+    /// Tokens freed by those evictions.
+    pub cache_evicted_tokens: usize,
 }
 
-impl RolloutStats {
+impl PipelineStats {
     /// Fraction of row-steps wasted on idle slots (0 = perfectly packed).
     pub fn slot_idle_fraction(&self, batch: usize) -> f64 {
         let total = self.decode_steps * batch;
@@ -50,7 +78,24 @@ impl RolloutStats {
         }
         self.slot_idle_steps as f64 / total as f64
     }
+
+    /// Derive `mean_prefix_len` / `full_reuse_ratio` from the raw draft
+    /// counters (called once per step by the pipeline driver).
+    pub fn finalize_draft_means(&mut self) {
+        let d = self.drafts.max(1) as f64;
+        self.mean_prefix_len = self.prefix_tokens as f64 / d;
+        self.full_reuse_ratio = self.full_reuses as f64 / d;
+    }
+
+    /// Total verify + decode + refill executable invocations — the
+    /// interleaved-vs-two-phase comparison metric (`bench_pipeline`).
+    pub fn device_calls(&self) -> usize {
+        self.verify_calls + self.decode_steps + self.refills
+    }
 }
+
+/// Back-compat name for the decode-side view of the merged report.
+pub type RolloutStats = PipelineStats;
 
 /// Sampling configuration.
 #[derive(Clone, Copy, Debug)]
@@ -67,12 +112,12 @@ impl Default for SampleCfg {
 
 /// Per-task RNG stream: sampling depends only on (run nonce, task id), so
 /// results are invariant to slot assignment and scheduling order — the
-/// property the lockstep-vs-continuous equivalence tests pin down.
-fn task_rng(nonce: u64, id: usize) -> Rng {
+/// property the lockstep / two-phase / pipeline equivalence tests pin down.
+pub(crate) fn task_rng(nonce: u64, id: usize) -> Rng {
     Rng::new(nonce ^ (id as u64).wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
-/// Live occupant of one scheduler slot.
+/// Live decoding occupant of one scheduler slot.
 struct SlotState {
     id: usize,
     reused: usize,
@@ -99,19 +144,28 @@ pub struct RolloutEngine<'e, B: Backend = Engine> {
     pub total_len: usize,
     pub vocab: usize,
     sampler: TopPSampler,
-    // Pre-resolved entry handles: zero lookups in the decode loop.
+    // Pre-resolved entry handles: zero lookups in the decode loop. The
+    // verify pair is optional so decode-only bundles stay usable; the
+    // verify paths bail with context if the entry is absent.
     h_prefill: B::Entry,
     h_decode: B::Entry,
     h_read_gen: B::Entry,
     h_refill: B::Entry,
-    // Persistent host scratch, reused across runs: the decode loop
-    // allocates nothing per step.
+    h_verify: Option<B::Entry>,
+    h_verify_seat: Option<B::Entry>,
+    // Persistent host scratch, reused across runs and trainer steps: the
+    // decode loop allocates nothing per step, and the verify executor
+    // re-resolves nothing per step (it used to rebuild a SpecVerifier —
+    // entry handles and all — on every trainer step).
     layout: BatchLayout,
+    vplan: VerifyPlanner,
     token_in: Vec<i32>,
     slot_in: Vec<i32>,
     lpos_in: Vec<i32>,
     rowmask: Vec<f32>,
-    probs: Vec<f32>,
+    /// `read_gen` readback: `[B*V probs | B aux]` — the aux tail carries
+    /// `verify_seat`'s accepted-prefix lengths.
+    readback: Vec<f32>,
     /// Cached temperature scalar buffer, keyed by bit pattern.
     temp_buf: Option<(u32, B::Buf)>,
 }
@@ -130,12 +184,15 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             h_decode: eng.resolve(bundle, "decode")?,
             h_read_gen: eng.resolve(bundle, "read_gen")?,
             h_refill: eng.resolve(bundle, "refill")?,
+            h_verify: eng.resolve(bundle, "verify").ok(),
+            h_verify_seat: eng.resolve(bundle, "verify_seat").ok(),
             layout: BatchLayout::new(shape.batch, shape.prompt_len, shape.total_len),
+            vplan: VerifyPlanner::new(shape),
             token_in: vec![0; shape.batch],
             slot_in: vec![shape.total_len as i32; shape.batch],
             lpos_in: vec![0; shape.batch],
             rowmask: vec![0.0; shape.batch],
-            probs: vec![0.0; shape.batch * shape.vocab],
+            readback: vec![0.0; shape.batch * shape.vocab + shape.batch],
             temp_buf: None,
         })
     }
@@ -164,7 +221,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         &self,
         tasks: Vec<SeqTask>,
         results: &mut Vec<SeqResult>,
-        stats: &mut RolloutStats,
+        stats: &mut PipelineStats,
     ) -> Vec<SeqTask> {
         let gen_len = self.gen_len();
         let mut pending = Vec::with_capacity(tasks.len());
@@ -187,15 +244,166 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         pending
     }
 
-    /// Refresh `self.probs` from the generation blob.
+    /// Refresh `self.readback` (`[B*V probs | B aux]`) from the gen blob.
     fn read_probs(&mut self, gen: &B::Buf) -> Result<()> {
         let out = self.eng.call_entry(&self.h_read_gen, &[gen])?;
-        self.eng.read_f32_into(&out, &mut self.probs)
+        self.eng.read_f32_into(&out, &mut self.readback)
     }
 
-    /// Generate all tasks with the continuous-batching slot scheduler.
-    /// Stage accounting: device work under `"rollout"`, result assembly
-    /// under `"assembly"`. Results are id-sorted.
+    /// Upload the verify planner's packed buffers in the argument order
+    /// shared by the `verify` and `verify_seat` entry signatures:
+    /// `(tokens, valid, logp_prev, uniforms, draft_valid)`.
+    #[allow(clippy::type_complexity)]
+    fn upload_vplan(&self) -> Result<(B::Buf, B::Buf, B::Buf, B::Buf, B::Buf)> {
+        let (b, t) = (self.batch, self.total_len);
+        let g = self.gen_len();
+        Ok((
+            self.eng.upload_i32(&self.vplan.layout.tokens, &[b, t])?,
+            self.eng.upload_f32(&self.vplan.layout.valid, &[b, t])?,
+            self.eng.upload_f32(&self.vplan.logp_prev, &[b, g])?,
+            self.eng.upload_f32(&self.vplan.uniforms, &[b, g])?,
+            self.eng.upload_f32(&self.vplan.draft_valid, &[b, g])?,
+        ))
+    }
+
+    /// Blocking packed verification over the `verify` entry — the
+    /// two-phase oracle's executor. Returns accepted-prefix lengths (one
+    /// per draft, in input order) and the number of engine calls made.
+    pub fn verify_wave(
+        &mut self,
+        blob: &B::Buf,
+        drafts: &[VerifyTask],
+        loglen: f32,
+        temperature: f32,
+        vnonce: u64,
+    ) -> Result<(Vec<usize>, usize)> {
+        if drafts.is_empty() {
+            return Ok((Vec::new(), 0));
+        }
+        let Some(h) = self.h_verify.clone() else {
+            bail!("bundle has no 'verify' entry (rebuild artifacts)")
+        };
+        let b = self.batch;
+        self.ensure_temp(temperature)?;
+        let ll = self.eng.upload_f32(&[loglen], &[1])?;
+        let mut accepted = Vec::with_capacity(drafts.len());
+        let mut calls = 0usize;
+        for chunk in drafts.chunks(b) {
+            self.vplan.clear();
+            for (r, task) in chunk.iter().enumerate() {
+                self.vplan.set_row(r, task, vnonce);
+            }
+            let (tok, val, lp, un, dv) = self.upload_vplan()?;
+            let out = self.eng.call_entry(
+                &h,
+                &[blob, &tok, &val, &lp, &un, &dv, &ll, self.temp_ref()],
+            )?;
+            calls += 1;
+            let host = self.eng.read_f32(&out)?;
+            for (r, task) in chunk.iter().enumerate() {
+                accepted.push(self.vplan.accepted(host[r], task));
+            }
+        }
+        Ok((accepted, calls))
+    }
+
+    /// Seat pending drafts into free slots via one packed `verify_seat`
+    /// call (verify + KV seat, no separate refill forward). Rows seated
+    /// here stay in the Verify phase until `resolve_verified` reads their
+    /// rejection offsets from the aux lane.
+    #[allow(clippy::too_many_arguments)]
+    fn seat_drafts(
+        &mut self,
+        sched: &mut SlotScheduler,
+        verifying: &mut [Option<VerifyTask>],
+        blob: &B::Buf,
+        gen: &mut B::Buf,
+        vnonce: u64,
+        ll: &B::Buf,
+        stats: &mut PipelineStats,
+        timer: &mut StageTimer,
+    ) -> Result<()> {
+        let vfills = sched.fill_verify();
+        if vfills.is_empty() {
+            return Ok(());
+        }
+        let span = Instant::now();
+        let Some(h) = self.h_verify_seat.clone() else {
+            bail!("bundle has no 'verify_seat' entry (rebuild artifacts)")
+        };
+        let b = self.batch;
+        self.vplan.clear();
+        for (slot, task) in vfills {
+            self.vplan.set_row(slot, &task, vnonce);
+            self.rowmask[slot] = 1.0;
+            verifying[slot] = Some(task);
+        }
+        let (tok, val, lp, un, dv) = self.upload_vplan()?;
+        let rm = self.eng.upload_f32(&self.rowmask, &[b])?;
+        *gen = self.eng.call_entry(
+            &h,
+            &[blob, &*gen, &tok, &val, &lp, &un, &dv, &rm, ll, self.temp_ref()],
+        )?;
+        stats.verify_calls += 1;
+        self.rowmask.fill(0.0);
+        timer.add("verification", span.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Read back the aux lane for rows seated by `seat_drafts`: terminal
+    /// accepted prefixes emit results and free the slot; the rest
+    /// transition `Verify -> Decode` with their accepted prefix mirrored
+    /// into the host layout.
+    #[allow(clippy::too_many_arguments)]
+    fn resolve_verified(
+        &mut self,
+        sched: &mut SlotScheduler,
+        verifying: &mut [Option<VerifyTask>],
+        slots: &mut [Option<SlotState>],
+        rnonce: u64,
+        results: &mut Vec<SeqResult>,
+        stats: &mut PipelineStats,
+    ) {
+        let (b, v) = (self.batch, self.vocab);
+        let gen_len = self.gen_len();
+        for slot in 0..b {
+            let Some(task) = verifying[slot].take() else { continue };
+            let n_acc = self.vplan.accepted(self.readback[b * v + slot], &task);
+            stats.drafts += 1;
+            stats.prefix_tokens += n_acc;
+            if n_acc == task.draft_len() {
+                stats.full_reuses += 1;
+            }
+            let prefix = &task.entry.response[..n_acc];
+            let finished = prefix.last() == Some(&EOS);
+            if finished || n_acc >= gen_len {
+                stats.reused_tokens += n_acc;
+                results.push(SeqResult {
+                    id: task.id,
+                    reused: n_acc,
+                    new_tokens: 0,
+                    finished,
+                    logps: task.entry.logps[..n_acc].to_vec(),
+                    response: prefix.to_vec(),
+                });
+                sched.release(slot);
+            } else {
+                self.layout.set_row(slot, &task.prompt, prefix);
+                slots[slot] = Some(SlotState {
+                    rng: task_rng(rnonce, task.id),
+                    id: task.id,
+                    reused: n_acc,
+                    logps: task.entry.logps[..n_acc].to_vec(),
+                });
+                sched.to_decode(slot);
+            }
+        }
+    }
+
+    /// Generate all tasks with the continuous-batching slot scheduler
+    /// (decode phase only — no drafts). Stage accounting: device work
+    /// under `"rollout"`, result assembly under `"assembly"`. Results are
+    /// id-sorted.
     pub fn run(
         &mut self,
         blob: &B::Buf,
@@ -203,11 +411,25 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         cfg: SampleCfg,
         rng: &mut Rng,
         timer: &mut StageTimer,
-    ) -> Result<(Vec<SeqResult>, RolloutStats)> {
-        let mut stats = RolloutStats::default();
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
+        let nonce = rng.next_u64();
+        self.run_with_nonce(blob, tasks, cfg, nonce, timer)
+    }
+
+    /// [`RolloutEngine::run`] with an explicit sampling nonce (the
+    /// two-phase driver shares nonces between paths to stay byte-identical
+    /// to the pipeline).
+    pub fn run_with_nonce(
+        &mut self,
+        blob: &B::Buf,
+        tasks: Vec<SeqTask>,
+        cfg: SampleCfg,
+        run_nonce: u64,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
+        let mut stats = PipelineStats::default();
         let mut results: Vec<SeqResult> = Vec::with_capacity(tasks.len());
         let pending = self.split_terminal(tasks, &mut results, &mut stats);
-        let run_nonce = rng.next_u64();
         if pending.is_empty() {
             results.sort_by_key(|r| r.id);
             return Ok((results, stats));
@@ -252,10 +474,10 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
                 let row = r * v;
                 let tok = {
                     let st = slots[r].as_mut().unwrap();
-                    self.sampler.sample(&self.probs[row..row + v], cfg.top_p, &mut st.rng)
+                    self.sampler.sample(&self.readback[row..row + v], cfg.top_p, &mut st.rng)
                         as i32
                 };
-                let lp = self.probs[row + tok as usize].max(1e-30).ln();
+                let lp = self.readback[row + tok as usize].max(1e-30).ln();
                 let slot_pos = self.layout.push_token(r, tok);
                 stats.new_tokens += 1;
                 let done_eos = tok == EOS;
@@ -331,6 +553,175 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         Ok((results, stats))
     }
 
+    /// The interleaved phase-aware pipeline: decode-ready `tasks` and
+    /// to-verify `drafts` share one slot pool. Fresh rows decode from the
+    /// first step; drafts verify-seat into free slots as they appear and
+    /// start decoding the moment their rejection offset is read back.
+    /// Byte-identical to the two-phase verify-then-decode oracle (per-task
+    /// sampling and verification streams), with strictly fewer device
+    /// calls on draft-bearing workloads: verified rows never pay a refill
+    /// forward, and the blocking verify wave disappears.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_pipeline(
+        &mut self,
+        blob: &B::Buf,
+        tasks: Vec<SeqTask>,
+        drafts: Vec<VerifyTask>,
+        loglen: f32,
+        cfg: SampleCfg,
+        vnonce: u64,
+        rnonce: u64,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
+        let mut stats = PipelineStats::default();
+        let mut results: Vec<SeqResult> = Vec::with_capacity(tasks.len() + drafts.len());
+        let pending = self.split_terminal(tasks, &mut results, &mut stats);
+        if pending.is_empty() && drafts.is_empty() {
+            results.sort_by_key(|r| r.id);
+            return Ok((results, stats));
+        }
+
+        let (b, t, v) = (self.batch, self.total_len, self.vocab);
+        let gen_len = self.gen_len();
+        let mut sched = SlotScheduler::with_drafts(b, pending, drafts);
+        let mut slots: Vec<Option<SlotState>> = (0..b).map(|_| None).collect();
+        let mut verifying: Vec<Option<VerifyTask>> = (0..b).map(|_| None).collect();
+        self.ensure_temp(cfg.temperature)?;
+        let ll_buf = self.eng.upload_f32(&[loglen], &[1])?;
+
+        // --- initial seating: prefill decode-ready rows, verify-seat the
+        //     first drafts into whatever slots remain -----------------------
+        let span = Instant::now();
+        self.layout.clear();
+        for (slot, task) in sched.fill() {
+            self.layout.set_row(slot, &task.prompt, &task.prefix);
+            slots[slot] = Some(SlotState::new(task, rnonce));
+        }
+        let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
+        let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
+        let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
+        let mut gen = self.eng.call_entry(
+            &self.h_prefill,
+            &[blob, &tok_b, &val_b, &last_b, self.temp_ref()],
+        )?;
+        stats.waves += 1;
+        timer.add("rollout", span.elapsed().as_secs_f64());
+        self.seat_drafts(
+            &mut sched, &mut verifying, blob, &mut gen, vnonce, &ll_buf, &mut stats, timer,
+        )?;
+        let span = Instant::now();
+        self.read_probs(&gen)?;
+        self.resolve_verified(
+            &mut sched, &mut verifying, &mut slots, rnonce, &mut results, &mut stats,
+        );
+        timer.add("rollout", span.elapsed().as_secs_f64());
+
+        // --- pipeline loop ------------------------------------------------
+        while !sched.is_done() {
+            let span = Instant::now();
+            // 1. sample one token for every decoding slot
+            let mut writes = 0usize;
+            for r in 0..b {
+                self.token_in[r] = 0;
+                self.slot_in[r] = t as i32; // out-of-range => no cache write
+                self.lpos_in[r] = 0;
+                if slots[r].is_none() {
+                    continue;
+                }
+                let row = r * v;
+                let tok = {
+                    let st = slots[r].as_mut().unwrap();
+                    self.sampler.sample(&self.readback[row..row + v], cfg.top_p, &mut st.rng)
+                        as i32
+                };
+                let lp = self.readback[row + tok as usize].max(1e-30).ln();
+                let slot_pos = self.layout.push_token(r, tok);
+                stats.new_tokens += 1;
+                let done_eos = tok == EOS;
+                let done = done_eos || self.layout.resp_len[r] >= gen_len;
+                if done {
+                    let mut st = slots[r].take().unwrap();
+                    st.logps.push(lp);
+                    let response = self.layout.response(r);
+                    stats.reused_tokens += st.reused;
+                    results.push(SeqResult {
+                        id: st.id,
+                        reused: st.reused,
+                        new_tokens: response.len() - st.reused,
+                        finished: done_eos,
+                        logps: st.logps,
+                        response,
+                    });
+                    sched.release(r);
+                } else {
+                    slots[r].as_mut().unwrap().logps.push(lp);
+                    self.token_in[r] = tok;
+                    self.slot_in[r] = slot_pos as i32;
+                    self.lpos_in[r] = (self.layout.n_valid(r) - 1) as i32;
+                    writes += 1;
+                }
+            }
+
+            // 2. advance surviving decode rows (verify-phase rows are inert
+            //    here: their token_in/slot_in entries stay out-of-range)
+            if writes > 0 {
+                let tok_b = self.eng.upload_i32(&self.token_in, &[b])?;
+                let slot_b = self.eng.upload_i32(&self.slot_in, &[b])?;
+                let lpos_b = self.eng.upload_i32(&self.lpos_in, &[b])?;
+                gen = self.eng.call_entry(
+                    &self.h_decode,
+                    &[blob, &gen, &tok_b, &slot_b, &lpos_b, self.temp_ref()],
+                )?;
+                stats.decode_steps += 1;
+                stats.slot_idle_steps += b - writes;
+            }
+
+            // 3. refill freed slots from the decode-ready queue
+            let fills = sched.fill();
+            if !fills.is_empty() {
+                for (slot, task) in fills {
+                    self.layout.set_row(slot, &task.prompt, &task.prefix);
+                    self.rowmask[slot] = 1.0;
+                    slots[slot] = Some(SlotState::new(task, rnonce));
+                }
+                let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
+                let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
+                let rm_b = self.eng.upload_f32(&self.rowmask, &[b])?;
+                let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
+                gen = self.eng.call_entry(
+                    &self.h_refill,
+                    &[blob, &gen, &tok_b, &val_b, &rm_b, &last_b, self.temp_ref()],
+                )?;
+                stats.refills += 1;
+                self.rowmask.fill(0.0);
+            }
+            timer.add("rollout", span.elapsed().as_secs_f64());
+
+            // 4. verify-seat more drafts into any slots still free
+            self.seat_drafts(
+                &mut sched, &mut verifying, blob, &mut gen, vnonce, &ll_buf, &mut stats,
+                timer,
+            )?;
+
+            if sched.is_done() {
+                break;
+            }
+            // 5. one readback serves both phases: fresh probs for the next
+            //    sampling round, aux offsets for the rows just seated
+            let span = Instant::now();
+            self.read_probs(&gen)?;
+            self.resolve_verified(
+                &mut sched, &mut verifying, &mut slots, rnonce, &mut results, &mut stats,
+            );
+            timer.add("rollout", span.elapsed().as_secs_f64());
+        }
+
+        let span = Instant::now();
+        results.sort_by_key(|r| r.id);
+        timer.add("assembly", span.elapsed().as_secs_f64());
+        Ok((results, stats))
+    }
+
     /// The pre-scheduler wave discipline: tasks bind to slots in waves of
     /// `batch`, every wave decodes in lockstep until its slowest row
     /// finishes. Byte-identical outputs to [`RolloutEngine::run`] (same
@@ -343,8 +734,8 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         cfg: SampleCfg,
         rng: &mut Rng,
         timer: &mut StageTimer,
-    ) -> Result<(Vec<SeqResult>, RolloutStats)> {
-        let mut stats = RolloutStats::default();
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
+        let mut stats = PipelineStats::default();
         let mut results: Vec<SeqResult> = Vec::with_capacity(tasks.len());
         let mut pending = self.split_terminal(tasks, &mut results, &mut stats);
         let run_nonce = rng.next_u64();
@@ -375,7 +766,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         cfg: SampleCfg,
         run_nonce: u64,
         timer: &mut StageTimer,
-        stats: &mut RolloutStats,
+        stats: &mut PipelineStats,
         results: &mut Vec<SeqResult>,
     ) -> Result<()> {
         let (b, t, v) = (self.batch, self.total_len, self.vocab);
@@ -415,9 +806,9 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
                 }
                 let row = r * v;
                 let tok =
-                    self.sampler.sample(&self.probs[row..row + v], cfg.top_p, &mut rngs[r])
+                    self.sampler.sample(&self.readback[row..row + v], cfg.top_p, &mut rngs[r])
                         as i32;
-                let lp = self.probs[row + tok as usize].max(1e-30).ln();
+                let lp = self.readback[row + tok as usize].max(1e-30).ln();
                 let slot_pos = self.layout.push_token(r, tok);
                 logps[r].push(lp);
                 stats.new_tokens += 1;

@@ -1,14 +1,27 @@
-//! The batched rollout engine — the vLLM substitute.
+//! The phase-aware batched rollout engine — the vLLM substitute.
 //!
-//! Processes a queue of sequence tasks (prompt + optional reused prefix)
-//! with a **continuous-batching slot scheduler** ([`sched`]): all `batch`
-//! physical rows stay busy, a finished row's slot is refilled with the
-//! next pending task via the masked `refill` entry, and per-decode-step
-//! host→device traffic is three `[B]` vectors (the `[B, T]` valid mask is
-//! maintained device-side inside the generation blob — contract in
-//! `sched.rs`). A wave-lockstep path ([`engine::RolloutEngine::run_lockstep`])
-//! is retained as the equivalence oracle and scheduler baseline; per-task
-//! RNG streams make the two produce byte-identical results.
+//! Processes one step's sequences through the explicit lifecycle
+//! `Draft -> Verify -> Decode -> Done` over a **single continuous-batching
+//! slot pool** ([`sched`]): all `batch` physical rows stay busy, a
+//! finished row's slot is refilled with the next pending decode task via
+//! the masked `refill` entry *or* seated with the next pending draft via
+//! the `verify_seat` entry, which verifies the draft and reuses its
+//! teacher-forced forward's KV as the continuation's cache in the same
+//! call. Fresh prompts decode from the first step while drafts verify in
+//! packed sub-batches beside them — there is no global verify barrier, and
+//! a verified row pays no refill forward.
+//!
+//! Per-decode-step host→device traffic is three `[B]` vectors (the
+//! `[B, T]` valid mask is maintained device-side inside the generation
+//! blob — full contract in `sched.rs`); the per-step readback is
+//! `[B*V probs | B aux]`, the aux tail carrying verify acceptance results.
+//!
+//! Two oracles are retained, both byte-identical to the pipeline thanks to
+//! per-task sampling and verification RNG streams:
+//! [`engine::RolloutEngine::run_lockstep`] (the pre-scheduler wave
+//! discipline) pins down decode scheduling, and
+//! [`crate::spec::SpecRollout::run_two_phase`] (blocking verify wave, then
+//! decode) pins down phase interleaving.
 //!
 //! Fully-reused terminal drafts (SPEC-RL full reuse) never occupy a slot —
 //! they bypass decode entirely, which is what makes the paper's wall-clock
@@ -23,5 +36,5 @@ pub mod engine;
 pub mod sched;
 
 pub use batch::{BatchLayout, SeqResult, SeqTask};
-pub use engine::{RolloutEngine, RolloutStats, SampleCfg};
-pub use sched::SlotScheduler;
+pub use engine::{PipelineStats, RolloutEngine, RolloutStats, SampleCfg};
+pub use sched::{SlotPhase, SlotScheduler};

@@ -1,4 +1,4 @@
-//! Continuous-batching slot scheduler.
+//! Phase-aware continuous-batching slot scheduler.
 //!
 //! The rollout engine owns `B` physical rows ("slots") of the static-shape
 //! AOT executables. The old wave loop bound a *set* of tasks to the slots
@@ -6,93 +6,176 @@
 //! wave while finished rows idled as inert filler. [`SlotScheduler`] keeps
 //! the binding dynamic instead — the moment a slot's occupant finishes
 //! (EOS or length cap), the slot is released and the next pending task is
-//! assigned to it, so all `B` rows stay busy until the queue drains.
+//! assigned to it, so all `B` rows stay busy until the queues drain.
+//!
+//! ## Sequence lifecycle (`Draft -> Verify -> Decode -> Done`)
+//!
+//! Since PR 2 the scheduler runs **two phases over one slot pool**:
+//!
+//! - *Decode-ready* tasks (fresh prompts, or drafts whose acceptance was
+//!   resolved host-side by the Random/Full reuse variants) queue in
+//!   `pending` and seat via `prefill`/`refill` as before.
+//! - *Drafted* sequences ([`VerifyTask`]s) queue in `pending_verify` and
+//!   seat into free slots via the `verify_seat` AOT entry, which scores
+//!   the draft, finds its first rejection, **and** writes the accepted
+//!   prefix's KV/valid/probs into the generation blob in the same call —
+//!   the slot transitions `Verify -> Decode` ([`SlotScheduler::to_decode`])
+//!   the moment its rejection offset is read back, with no separate
+//!   refill forward and no global verify barrier.
+//!
+//! Free slots are offered to the decode queue first (those rows can sample
+//! immediately), then to the verify queue; both fills proceed in ascending
+//! slot order, so scheduling stays deterministic.
 //!
 //! Refilled rows re-enter via the `refill` AOT entry (see the decode-entry
 //! contract below): a *batched per-row prefill* that recomputes the KV
 //! cache, device-side valid mask, and next-token probs for exactly the
 //! rows named by a `[B]` row mask, blending them into the persistent
 //! generation blob without disturbing live neighbours. Several slots
-//! freeing in the same step refill in one call.
+//! freeing in the same step refill (or verify-seat) in one call.
 //!
 //! ## Decode-entry contract (shared with `python/compile`)
 //!
-//! The generation blob is `[cache_k | cache_v | valid | probs]` — the
+//! The generation blob is `[cache_k | cache_v | valid | probs | aux]` — the
 //! `[B, T]` valid mask lives *device-side* and is maintained incrementally:
 //!
-//! - `prefill(blob, tokens, valid, last, temp)` uploads the mask once and
-//!   seeds the blob;
+//! - `prefill(blob, tokens, valid, last, temp)` uploads the mask once,
+//!   seeds the blob, and zeroes the `[B]` aux lane;
 //! - `decode(blob, gen, token, slot, lpos, temp)` extends the mask on
 //!   device via a one-hot write at `slot` (out-of-range slot == inert row,
 //!   no write) — the per-step host→device traffic is three `[B]` i32
 //!   vectors, never the `[B, T]` mask;
 //! - `refill(blob, gen, tokens, valid, rowmask, last, temp)` replaces the
-//!   mask (and cache/probs) for masked rows only.
+//!   mask (and cache/probs) for masked rows only;
+//! - `verify_seat(blob, gen, tokens, valid, logp_prev, uniforms,
+//!   draft_valid, rowmask, loglen, temp)` runs the teacher-forced verify
+//!   forward for masked rows, truncates their masks at the first rejection,
+//!   seats the accepted prefix's KV/probs, and reports the accepted length
+//!   in the aux lane;
+//! - `read_gen(gen)` returns `[probs | aux]` (`B*V + B` floats), so
+//!   acceptance results ride the read the decode loop already performs.
 //!
-//! Scheduling order is deterministic: tasks are sorted by **ascending
+//! Scheduling order is deterministic: decode tasks sort by **ascending
 //! verified-prefix length** (then ascending id) — i.e. longest *remaining*
-//! generation first, the LPT rule — so long fresh rows start early and the
-//! short reuse-heavy tail packs into slots as they free, minimizing
-//! makespan. Free slots are refilled in ascending slot order from the
-//! front of the queue. Sampling uses per-task RNG streams, making results
-//! invariant to slot assignment and bit-identical to the lockstep engine's
-//! output for the same seed (which sorts the *opposite* way for wave
-//! homogeneity — the orders differ, the outputs cannot).
+//! generation first, the LPT rule — and drafts sort by ascending draft
+//! length (a draft can reuse at most its own length, so short drafts have
+//! the longest expected remainder). Sampling uses per-task RNG streams and
+//! verification uses per-task uniform streams, making results invariant to
+//! slot assignment, sub-batch packing, and scheduling order — byte-identical
+//! to both the lockstep engine and the two-phase verify-then-decode oracle.
 
 use std::collections::VecDeque;
 
 use super::batch::SeqTask;
+use crate::spec::verifier::VerifyTask;
 
-/// Dynamic task→slot binding for one rollout run.
+/// What currently occupies a slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotPhase {
+    Free,
+    /// Seated by `verify_seat`, rejection offset not yet read back.
+    Verify,
+    /// Actively decoding (fresh, refilled, or transitioned from Verify).
+    Decode,
+}
+
+/// Dynamic task→slot binding for one rollout run, over both phases.
 pub struct SlotScheduler {
     batch: usize,
     pending: VecDeque<SeqTask>,
-    occupied: Vec<bool>,
+    pending_verify: VecDeque<VerifyTask>,
+    phase: Vec<SlotPhase>,
 }
 
 impl SlotScheduler {
     /// Queue `tasks` (sorted: longest remaining generation first — i.e.
     /// ascending prefix length — ties by id) over `batch` initially-free
-    /// slots.
-    pub fn new(batch: usize, mut tasks: Vec<SeqTask>) -> Self {
+    /// slots. No drafts: decode-only scheduling, exactly as before.
+    pub fn new(batch: usize, tasks: Vec<SeqTask>) -> Self {
+        Self::with_drafts(batch, tasks, Vec::new())
+    }
+
+    /// Queue decode-ready `tasks` and to-verify `drafts` over one pool.
+    pub fn with_drafts(
+        batch: usize,
+        mut tasks: Vec<SeqTask>,
+        mut drafts: Vec<VerifyTask>,
+    ) -> Self {
         tasks.sort_by(|a, b| a.prefix.len().cmp(&b.prefix.len()).then(a.id.cmp(&b.id)));
+        // Short drafts bound acceptance from above => longest expected
+        // remainder first (the LPT proxy available before verification).
+        drafts.sort_by(|a, b| a.draft_len().cmp(&b.draft_len()).then(a.id.cmp(&b.id)));
         SlotScheduler {
             batch,
             pending: tasks.into(),
-            occupied: vec![false; batch],
+            pending_verify: drafts.into(),
+            phase: vec![SlotPhase::Free; batch],
         }
     }
 
-    /// Assign pending tasks to every free slot, in ascending slot order.
-    /// Returns the (slot, task) assignments made; empty when no slot is
-    /// free or the queue is drained.
+    /// Assign pending decode tasks to every free slot, in ascending slot
+    /// order. Returns the (slot, task) assignments made; empty when no
+    /// slot is free or the queue is drained.
     pub fn fill(&mut self) -> Vec<(usize, SeqTask)> {
         let mut out = Vec::new();
         for slot in 0..self.batch {
-            if self.occupied[slot] {
+            if self.phase[slot] != SlotPhase::Free {
                 continue;
             }
             let Some(task) = self.pending.pop_front() else { break };
-            self.occupied[slot] = true;
+            self.phase[slot] = SlotPhase::Decode;
             out.push((slot, task));
         }
         out
     }
 
-    /// Release a slot whose occupant finished.
+    /// Assign pending drafts to the remaining free slots (after a decode
+    /// fill), in ascending slot order; the caller packs them into one
+    /// `verify_seat` sub-batch.
+    pub fn fill_verify(&mut self) -> Vec<(usize, VerifyTask)> {
+        let mut out = Vec::new();
+        for slot in 0..self.batch {
+            if self.phase[slot] != SlotPhase::Free {
+                continue;
+            }
+            let Some(task) = self.pending_verify.pop_front() else { break };
+            self.phase[slot] = SlotPhase::Verify;
+            out.push((slot, task));
+        }
+        out
+    }
+
+    /// Transition a verified occupant to decoding (its accepted prefix was
+    /// read back and is not terminal).
+    pub fn to_decode(&mut self, slot: usize) {
+        debug_assert_eq!(self.phase[slot], SlotPhase::Verify, "to_decode on non-verify slot");
+        self.phase[slot] = SlotPhase::Decode;
+    }
+
+    /// Release a slot whose occupant finished (or verified terminal).
     pub fn release(&mut self, slot: usize) {
-        debug_assert!(self.occupied[slot], "releasing a free slot");
-        self.occupied[slot] = false;
+        debug_assert!(self.phase[slot] != SlotPhase::Free, "releasing a free slot");
+        self.phase[slot] = SlotPhase::Free;
     }
 
-    /// Occupied slot count.
+    /// Occupied slot count (either phase).
     pub fn busy(&self) -> usize {
-        self.occupied.iter().filter(|&&o| o).count()
+        self.phase.iter().filter(|&&p| p != SlotPhase::Free).count()
     }
 
-    /// Tasks not yet assigned to a slot.
+    /// Slots currently decoding.
+    pub fn busy_decode(&self) -> usize {
+        self.phase.iter().filter(|&&p| p == SlotPhase::Decode).count()
+    }
+
+    /// Decode tasks not yet assigned to a slot.
     pub fn pending(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Drafts not yet assigned to a slot.
+    pub fn pending_verify(&self) -> usize {
+        self.pending_verify.len()
     }
 
     /// Slots currently free.
@@ -100,15 +183,16 @@ impl SlotScheduler {
         self.batch - self.busy()
     }
 
-    /// Nothing running, nothing queued.
+    /// Nothing running, nothing queued in either phase.
     pub fn is_done(&self) -> bool {
-        self.busy() == 0 && self.pending.is_empty()
+        self.busy() == 0 && self.pending.is_empty() && self.pending_verify.is_empty()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spec::cache::CacheEntry;
 
     fn task(id: usize, prefix_len: usize) -> SeqTask {
         SeqTask {
@@ -116,6 +200,19 @@ mod tests {
             prompt: vec![1],
             prefix: vec![7; prefix_len],
             prefix_logps: vec![-1.0; prefix_len],
+        }
+    }
+
+    fn draft(id: usize, len: usize) -> VerifyTask {
+        VerifyTask {
+            id,
+            prompt: vec![1],
+            entry: CacheEntry {
+                response: vec![7; len],
+                logps: vec![-1.0; len],
+                version: 0,
+                finished: false,
+            },
         }
     }
 
@@ -183,5 +280,51 @@ mod tests {
         s.fill();
         assert!(s.fill().is_empty());
         assert_eq!(s.free(), 1);
+    }
+
+    #[test]
+    fn decode_fill_takes_priority_then_drafts_pack_the_rest() {
+        let mut s = SlotScheduler::with_drafts(
+            3,
+            vec![task(0, 0)],
+            vec![draft(10, 4), draft(11, 2)],
+        );
+        let d = s.fill();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].0, 0);
+        let v = s.fill_verify();
+        // shortest draft first (longest expected remainder), ascending slots
+        assert_eq!(v.len(), 2);
+        assert_eq!((v[0].0, v[0].1.id), (1, 11));
+        assert_eq!((v[1].0, v[1].1.id), (2, 10));
+        assert_eq!(s.busy(), 3);
+        assert_eq!(s.busy_decode(), 1);
+        assert!(!s.is_done());
+    }
+
+    #[test]
+    fn verify_transitions_to_decode_or_releases() {
+        let mut s = SlotScheduler::with_drafts(2, Vec::new(), vec![draft(0, 3), draft(1, 3)]);
+        let v = s.fill_verify();
+        assert_eq!(v.len(), 2);
+        assert_eq!(s.busy_decode(), 0);
+        s.to_decode(0); // non-terminal accepted prefix
+        s.release(1); // terminal accepted prefix
+        assert_eq!(s.busy_decode(), 1);
+        assert_eq!(s.busy(), 1);
+        assert_eq!(s.free(), 1);
+        s.release(0);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn pending_verify_counts_drain() {
+        let mut s = SlotScheduler::with_drafts(1, Vec::new(), vec![draft(0, 1), draft(1, 5)]);
+        assert_eq!(s.pending_verify(), 2);
+        assert!(!s.is_done());
+        let v = s.fill_verify();
+        assert_eq!(v[0].1.id, 0, "shortest draft first");
+        assert_eq!(s.pending_verify(), 1);
+        assert!(s.fill_verify().is_empty(), "no free slot left");
     }
 }

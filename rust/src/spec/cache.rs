@@ -6,7 +6,15 @@
 //! current-policy log-probs recorded when the trajectory was produced —
 //! exactly the `p_prev` of the acceptance rule next time the prompt
 //! reappears.
+//!
+//! Memory is bounded by an optional **token budget**: the cache tracks its
+//! total cached tokens incrementally (O(1) [`RolloutCache::total_tokens`])
+//! and, when an insert pushes it over budget, evicts oldest-version
+//! material first — `previous` entries (only the Delayed ablation reads
+//! them) before whole slots — until it fits. Eviction counters feed the
+//! per-step pipeline telemetry.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
 use crate::rollout::SeqResult;
@@ -34,15 +42,32 @@ impl CacheEntry {
     }
 }
 
-/// Latest + previous entry per sequence id.
+/// Latest + previous entry per sequence id, under an optional token budget.
 #[derive(Default, Debug)]
 pub struct RolloutCache {
     slots: HashMap<usize, (CacheEntry, Option<CacheEntry>)>,
+    /// Max total cached tokens (None = unbounded).
+    token_budget: Option<usize>,
+    /// Incrementally-tracked total (never rescanned).
+    tokens: usize,
+    evictions: u64,
+    evicted_tokens: u64,
 }
 
 impl RolloutCache {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A cache that evicts oldest-version entries past `budget` tokens.
+    pub fn with_budget(budget: usize) -> Self {
+        RolloutCache { token_budget: Some(budget), ..Self::default() }
+    }
+
+    /// (Re)set the token budget, enforcing it immediately.
+    pub fn set_token_budget(&mut self, budget: Option<usize>) {
+        self.token_budget = budget;
+        self.enforce_budget();
     }
 
     /// Most recent cached rollout for `id`.
@@ -55,16 +80,89 @@ impl RolloutCache {
         self.slots.get(&id).and_then(|(_, prev)| prev.as_ref())
     }
 
-    /// Insert a fresh rollout, demoting the current latest to `previous`.
+    /// Insert a fresh rollout, demoting the current latest to `previous`
+    /// (one hash lookup via the entry API), then enforce the budget.
     pub fn insert(&mut self, id: usize, entry: CacheEntry) {
-        match self.slots.remove(&id) {
-            Some((old_latest, _)) => {
-                self.slots.insert(id, (entry, Some(old_latest)));
+        self.insert_unenforced(id, entry);
+        self.enforce_budget();
+    }
+
+    /// Insert a whole step's rollouts, enforcing the token budget once at
+    /// the end — a binding budget would otherwise trigger a victim scan
+    /// per insert. Same eviction policy (oldest (version, id) first), so
+    /// the surviving set matches per-insert enforcement for fresh-version
+    /// batches.
+    pub fn insert_batch(&mut self, entries: impl IntoIterator<Item = (usize, CacheEntry)>) {
+        for (id, entry) in entries {
+            self.insert_unenforced(id, entry);
+        }
+        self.enforce_budget();
+    }
+
+    fn insert_unenforced(&mut self, id: usize, entry: CacheEntry) {
+        let added = entry.response.len();
+        let mut dropped = 0usize;
+        match self.slots.entry(id) {
+            Entry::Occupied(mut o) => {
+                let (latest, prev) = o.get_mut();
+                if let Some(old_prev) = prev.take() {
+                    dropped = old_prev.response.len();
+                }
+                *prev = Some(std::mem::replace(latest, entry));
             }
-            None => {
-                self.slots.insert(id, (entry, None));
+            Entry::Vacant(v) => {
+                v.insert((entry, None));
             }
         }
+        self.tokens = self.tokens + added - dropped;
+    }
+
+    /// Evict oldest-version material until the budget holds: `previous`
+    /// entries first (pure ablation fodder), then whole slots. One scan
+    /// per tier (victims sorted by (version, id) for determinism) rather
+    /// than a rescan per evicted entry, so a tight budget costs O(n log n)
+    /// per overflowing insert, not O(n) per eviction.
+    fn enforce_budget(&mut self) {
+        let Some(budget) = self.token_budget else { return };
+        if self.tokens <= budget {
+            return;
+        }
+        let mut prev_victims: Vec<(u64, usize)> = self
+            .slots
+            .iter()
+            .filter_map(|(id, (_, p))| p.as_ref().map(|e| (e.version, *id)))
+            .collect();
+        prev_victims.sort_unstable();
+        for (_, id) in prev_victims {
+            if self.tokens <= budget {
+                return;
+            }
+            let (_, prev) = self.slots.get_mut(&id).expect("victim vanished");
+            let e = prev.take().expect("victim had a previous");
+            self.note_eviction(e.response.len());
+        }
+        let mut latest_victims: Vec<(u64, usize)> =
+            self.slots.iter().map(|(id, (l, _))| (l.version, *id)).collect();
+        latest_victims.sort_unstable();
+        for (_, id) in latest_victims {
+            if self.tokens <= budget {
+                return;
+            }
+            let (latest, _) = self.slots.remove(&id).expect("victim vanished");
+            self.note_eviction(latest.response.len());
+        }
+    }
+
+    fn note_eviction(&mut self, freed: usize) {
+        self.tokens -= freed;
+        self.evictions += 1;
+        self.evicted_tokens += freed as u64;
+    }
+
+    /// Cumulative (entries evicted, tokens evicted) since construction;
+    /// the pipeline driver diffs this across a step for telemetry.
+    pub fn eviction_stats(&self) -> (u64, u64) {
+        (self.evictions, self.evicted_tokens)
     }
 
     pub fn len(&self) -> usize {
@@ -77,14 +175,13 @@ impl RolloutCache {
 
     pub fn clear(&mut self) {
         self.slots.clear();
+        self.tokens = 0;
     }
 
-    /// Total cached tokens (memory telemetry).
+    /// Total cached tokens (memory telemetry). O(1): tracked on every
+    /// insert/eviction, never recomputed by scanning.
     pub fn total_tokens(&self) -> usize {
-        self.slots
-            .values()
-            .map(|(l, p)| l.response.len() + p.as_ref().map_or(0, |e| e.response.len()))
-            .sum()
+        self.tokens
     }
 }
 
@@ -99,6 +196,13 @@ mod tests {
             version,
             finished: true,
         }
+    }
+
+    fn scan_tokens(c: &RolloutCache) -> usize {
+        c.slots
+            .values()
+            .map(|(l, p)| l.response.len() + p.as_ref().map_or(0, |e| e.response.len()))
+            .sum()
     }
 
     #[test]
@@ -137,8 +241,93 @@ mod tests {
         c.insert(0, entry(&[1, 2, 3], 0));
         c.insert(0, entry(&[4, 5], 1));
         assert_eq!(c.total_tokens(), 5);
+        assert_eq!(c.total_tokens(), scan_tokens(&c));
         assert_eq!(c.len(), 1);
         c.clear();
         assert!(c.is_empty());
+        assert_eq!(c.total_tokens(), 0);
+    }
+
+    #[test]
+    fn incremental_tokens_match_scan_under_churn() {
+        let mut c = RolloutCache::new();
+        for step in 0..6u64 {
+            for id in 0..4usize {
+                c.insert(id, entry(&vec![3; 1 + (id + step as usize) % 5], step));
+            }
+            assert_eq!(c.total_tokens(), scan_tokens(&c), "step {step}");
+        }
+    }
+
+    #[test]
+    fn budget_evicts_previous_entries_first() {
+        let mut c = RolloutCache::with_budget(6);
+        c.insert(0, entry(&[1, 1, 1], 0));
+        c.insert(1, entry(&[2, 2, 2], 0));
+        assert_eq!(c.total_tokens(), 6);
+        assert_eq!(c.eviction_stats(), (0, 0));
+        // demoting id 0 to previous pushes to 9 tokens: its old latest
+        // (now `previous`, version 0) must be the first casualty
+        c.insert(0, entry(&[4, 4, 4], 1));
+        assert_eq!(c.total_tokens(), 6);
+        assert!(c.previous(0).is_none(), "previous evicted");
+        assert_eq!(c.latest(0).unwrap().response, vec![4, 4, 4], "fresh latest kept");
+        assert_eq!(c.latest(1).unwrap().response, vec![2, 2, 2], "neighbour kept");
+        assert_eq!(c.eviction_stats(), (1, 3));
+        assert_eq!(c.total_tokens(), scan_tokens(&c));
+    }
+
+    #[test]
+    fn budget_evicts_oldest_slots_when_no_previous_left() {
+        let mut c = RolloutCache::with_budget(4);
+        c.insert(0, entry(&[1, 1], 0));
+        c.insert(1, entry(&[2, 2], 1));
+        c.insert(2, entry(&[3, 3], 2)); // 6 tokens > 4: id 0 (oldest) goes
+        assert!(c.latest(0).is_none());
+        assert!(c.latest(1).is_some());
+        assert!(c.latest(2).is_some());
+        assert_eq!(c.total_tokens(), 4);
+        let (n, tok) = c.eviction_stats();
+        assert_eq!((n, tok), (1, 2));
+        assert_eq!(c.total_tokens(), scan_tokens(&c));
+    }
+
+    #[test]
+    fn set_budget_enforces_immediately() {
+        let mut c = RolloutCache::new();
+        for id in 0..5 {
+            c.insert(id, entry(&[7; 4], id as u64));
+        }
+        assert_eq!(c.total_tokens(), 20);
+        c.set_token_budget(Some(8));
+        assert_eq!(c.total_tokens(), 8);
+        assert_eq!(c.len(), 2);
+        // the newest versions survive
+        assert!(c.latest(3).is_some() && c.latest(4).is_some());
+        c.set_token_budget(None);
+        c.insert(9, entry(&[1; 50], 9));
+        assert_eq!(c.total_tokens(), 58, "unbounded again");
+    }
+
+    #[test]
+    fn insert_batch_enforces_once_at_end() {
+        let mut c = RolloutCache::with_budget(6);
+        c.insert_batch((0..5).map(|id| (id, entry(&[7; 3], 1))));
+        assert!(c.total_tokens() <= 6);
+        assert_eq!(c.total_tokens(), scan_tokens(&c));
+        // same-version ties evict ascending id: the highest ids survive
+        assert!(c.latest(3).is_some() && c.latest(4).is_some());
+        assert!(c.latest(0).is_none());
+        assert_eq!(c.eviction_stats(), (3, 9));
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts() {
+        let mut c = RolloutCache::new();
+        for step in 0..20u64 {
+            c.insert(0, entry(&[5; 40], step));
+        }
+        assert_eq!(c.eviction_stats(), (0, 0));
+        assert_eq!(c.total_tokens(), 80);
     }
 }

@@ -1,19 +1,38 @@
-//! SPEC-RL: speculative rollouts via draft-and-verify reuse.
+//! SPEC-RL: speculative rollouts via draft-and-verify reuse, run as a
+//! phase-aware pipeline.
 //!
-//! The paper's contribution, as a drop-in wrapper around the rollout
-//! engine:
+//! Every sequence of a step moves through an explicit lifecycle:
 //!
-//! 1. [`cache::RolloutCache`] stores each sequence's previous rollout
-//!    (tokens + the log-probs the sampling policy assigned them) and is
-//!    refreshed immediately after every step.
-//! 2. [`verifier::SpecVerifier`] packs all cached drafts of a step into
-//!    batched calls of the AOT `verify` entry — one teacher-forced forward
-//!    whose L1 kernels score every draft token under the current policy and
-//!    scan for the first rejection under the lenient acceptance rule
-//!    `u <= min(1, l * p_curr/p_prev)` (Algorithm 1).
-//! 3. [`SpecRollout::collect`] assembles verified prefixes into
-//!    [`SeqTask`]s, lets the rollout engine decode only the continuations,
-//!    and updates the cache with the new trajectories.
+//! ```text
+//! Draft -> Verify -> Decode -> Done
+//! ```
+//!
+//! - **Draft**: [`cache::RolloutCache`] stores each sequence's previous
+//!   rollout (tokens + the log-probs the sampling policy assigned them),
+//!   refreshed immediately after every step and bounded by an optional
+//!   token budget. [`variants::ReuseVariant`] picks the draft (or none).
+//! - **Verify**: drafts whose acceptance needs the current policy
+//!   (Spec/Delayed) become [`VerifyTask`]s and are verified *inside* the
+//!   rollout engine's slot pool: the `verify_seat` entry scores a packed
+//!   sub-batch of drafts under Algorithm 1's lenient rule
+//!   `u <= min(1, l * p_curr/p_prev)` and seats each accepted prefix's
+//!   KV/valid/probs into the generation blob in the same forward. Variants
+//!   that need no engine (Random/Full) resolve here on the host.
+//! - **Decode**: fresh prompts and verified rows share the continuous
+//!   batching slot scheduler; a verified row starts decoding the moment
+//!   its rejection offset is read back — there is no global verify
+//!   barrier, and no refill forward for verified rows.
+//! - **Done**: fully-reused terminal drafts bypass the device entirely.
+//!
+//! [`SpecRollout::collect`] is a thin driver over this pipeline: it splits
+//! requests into decode-ready tasks and verify tasks, hands both queues to
+//! [`RolloutEngine::run_pipeline`], and folds cache/telemetry bookkeeping
+//! into the merged per-step [`PipelineStats`] report.
+//! [`SpecRollout::run_two_phase`] keeps the original blocking
+//! verify-then-decode discipline as the equivalence oracle: per-task
+//! sampling *and* verification RNG streams make the two paths
+//! byte-identical (`rust/tests/sched_continuous.rs` pins this down across
+//! variants, skewed draft lengths, and mid-stream refills).
 //!
 //! [`variants`] implements the paper's ablation baselines (Random Reuse,
 //! Delayed Reuse, Full Reuse, and Off == vanilla RLVR).
@@ -25,31 +44,18 @@ pub mod verifier;
 
 use anyhow::Result;
 
-use crate::model::Policy;
-use crate::rollout::{RolloutEngine, SampleCfg, SeqResult, SeqTask};
-use crate::runtime::Engine;
+use crate::rollout::{PipelineStats, RolloutEngine, SampleCfg, SeqResult, SeqTask};
+use crate::runtime::Backend;
 use crate::util::{Rng, StageTimer};
 
 pub use cache::{CacheEntry, RolloutCache};
 pub use lenience::Lenience;
 pub use variants::ReuseVariant;
-pub use verifier::SpecVerifier;
+pub use verifier::{VerifyPlanner, VerifyTask};
 
-/// Per-step speculative-reuse telemetry (Figures 8/9 series).
-#[derive(Clone, Debug, Default)]
-pub struct SpecStepStats {
-    /// Sequences that had a cached draft to verify.
-    pub drafts: usize,
-    /// Mean verified prefix length over drafted sequences.
-    pub mean_prefix_len: f64,
-    /// Fraction of drafted sequences whose draft was fully reused.
-    pub full_reuse_ratio: f64,
-    /// Total reused tokens / newly decoded tokens.
-    pub reused_tokens: usize,
-    pub new_tokens: usize,
-    /// Number of `verify` executable invocations.
-    pub verify_calls: usize,
-}
+/// Back-compat name: the per-step speculative-reuse telemetry merged into
+/// the unified pipeline report in PR 2.
+pub type SpecStepStats = PipelineStats;
 
 /// A prompt to roll out this step: `id` is the stable cache key
 /// (prompt index × group + sample index).
@@ -79,83 +85,151 @@ impl SpecRollout {
         Self::new(ReuseVariant::Off, Lenience::Fixed(0.0))
     }
 
-    /// Roll out one step's batch with speculative reuse.
+    /// Bound the rollout cache to `budget` tokens (oldest-version
+    /// eviction; `None` = unbounded).
+    pub fn with_cache_budget(mut self, budget: Option<usize>) -> Self {
+        self.cache.set_token_budget(budget);
+        self
+    }
+
+    /// Split a step's requests into decode-ready tasks and verify tasks,
+    /// drawing this step's verification/sampling nonces. Host-resolvable
+    /// acceptance (Random/Full) happens here; Spec/Delayed drafts go to
+    /// the engine's Verify phase. Returns
+    /// `(vnonce, rnonce, tasks, drafts, variant-resolved draft stats)`.
+    fn prepare(
+        &self,
+        requests: &[RolloutRequest],
+        rng: &mut Rng,
+    ) -> (u64, u64, Vec<SeqTask>, Vec<VerifyTask>, PipelineStats) {
+        // Both nonces are drawn unconditionally and in a fixed order, so
+        // the pipeline and two-phase paths consume the caller's RNG
+        // identically — a precondition for byte-identical outputs.
+        let vnonce = rng.next_u64();
+        let rnonce = rng.next_u64();
+        let mut pre = PipelineStats::default();
+        let mut tasks: Vec<SeqTask> = Vec::with_capacity(requests.len());
+        let mut drafts: Vec<VerifyTask> = Vec::new();
+        for req in requests {
+            let Some(entry) = self.variant.draft_for(&self.cache, req.id, self.step) else {
+                tasks.push(SeqTask::fresh(req.id, req.prompt.clone()));
+                continue;
+            };
+            match self.variant {
+                ReuseVariant::Random | ReuseVariant::Full => {
+                    let len = entry.response.len();
+                    let n_acc = if self.variant == ReuseVariant::Random {
+                        variants::random_reject(vnonce, req.id, len)
+                    } else {
+                        len
+                    };
+                    pre.drafts += 1;
+                    pre.prefix_tokens += n_acc;
+                    if n_acc == len {
+                        pre.full_reuses += 1;
+                    }
+                    tasks.push(SeqTask {
+                        id: req.id,
+                        prompt: req.prompt.clone(),
+                        prefix: entry.response[..n_acc].to_vec(),
+                        prefix_logps: entry.logps[..n_acc].to_vec(),
+                    });
+                }
+                _ => drafts.push(VerifyTask {
+                    id: req.id,
+                    prompt: req.prompt.clone(),
+                    entry,
+                }),
+            }
+        }
+        (vnonce, rnonce, tasks, drafts, pre)
+    }
+
+    /// Cache refresh (the paper's "always the most recent policy's
+    /// rollouts"; the Off variant keeps a shadow cache so overlap metrics
+    /// stay measurable) + telemetry finalization.
+    fn finish(&mut self, results: &[SeqResult], mut stats: PipelineStats) -> PipelineStats {
+        let (e0, t0) = self.cache.eviction_stats();
+        let step = self.step;
+        self.cache
+            .insert_batch(results.iter().map(|r| (r.id, CacheEntry::from_result(r, step))));
+        let (e1, t1) = self.cache.eviction_stats();
+        stats.cache_evictions = (e1 - e0) as usize;
+        stats.cache_evicted_tokens = (t1 - t0) as usize;
+        stats.finalize_draft_means();
+        self.step += 1;
+        stats
+    }
+
+    /// Roll out one step's batch with speculative reuse through the
+    /// interleaved phase-aware pipeline (the trainer default).
     ///
-    /// Returns results (sorted by id) and reuse telemetry. Stage timing:
-    /// `verification` (verify calls + acceptance), `rollout` / `assembly`
-    /// (inside the engine).
-    pub fn collect(
+    /// Returns results (sorted by id) and the merged per-step report.
+    /// Stage timing: `verification` (verify-seat sub-batches), `rollout` /
+    /// `assembly` (inside the engine).
+    pub fn collect<B: Backend>(
         &mut self,
-        eng: &Engine,
-        rollout: &mut RolloutEngine,
-        policy: &Policy,
+        rollout: &mut RolloutEngine<'_, B>,
+        blob: &B::Buf,
         requests: &[RolloutRequest],
         cfg: SampleCfg,
         rng: &mut Rng,
         timer: &mut StageTimer,
-    ) -> Result<(Vec<SeqResult>, SpecStepStats)> {
-        let mut stats = SpecStepStats::default();
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
         let loglen = self.lenience.log_value(self.step);
+        let (vnonce, rnonce, tasks, drafts, pre) = self.prepare(requests, rng);
+        let (results, mut stats) =
+            rollout.run_pipeline(blob, tasks, drafts, loglen, cfg, vnonce, rnonce, timer)?;
+        stats.drafts += pre.drafts;
+        stats.prefix_tokens += pre.prefix_tokens;
+        stats.full_reuses += pre.full_reuses;
+        let stats = self.finish(&results, stats);
+        Ok((results, stats))
+    }
 
-        // 1. split into drafted / fresh
-        let mut tasks: Vec<SeqTask> = Vec::with_capacity(requests.len());
-        let mut to_verify: Vec<(usize, &RolloutRequest, CacheEntry)> = Vec::new();
-        for req in requests {
-            match self.variant.draft_for(&self.cache, req.id, self.step) {
-                Some(entry) => to_verify.push((req.id, req, entry)),
-                None => tasks.push(SeqTask::fresh(req.id, req.prompt.clone())),
-            }
-        }
-
-        // 2. verification (one packed engine call per wave of drafts)
-        if !to_verify.is_empty() {
+    /// The original blocking discipline — verify *every* draft in packed
+    /// full-batch waves, then decode — retained as the pipeline's
+    /// equivalence oracle and the `bench_pipeline` baseline. Same RNG
+    /// consumption, same per-task streams: byte-identical results to
+    /// [`SpecRollout::collect`].
+    pub fn run_two_phase<B: Backend>(
+        &mut self,
+        rollout: &mut RolloutEngine<'_, B>,
+        blob: &B::Buf,
+        requests: &[RolloutRequest],
+        cfg: SampleCfg,
+        rng: &mut Rng,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
+        let loglen = self.lenience.log_value(self.step);
+        let (vnonce, rnonce, mut tasks, drafts, pre) = self.prepare(requests, rng);
+        let mut verified = PipelineStats::default();
+        if !drafts.is_empty() {
             let span = std::time::Instant::now();
-            let verifier = SpecVerifier::new(eng, &policy.bundle)?;
-            let accepted = match self.variant {
-                ReuseVariant::Random => variants::random_rejects(&to_verify, rng),
-                ReuseVariant::Full => {
-                    to_verify.iter().map(|(_, _, e)| e.response.len()).collect()
-                }
-                _ => {
-                    let (rejects, calls) =
-                        verifier.verify(&policy.blob, &to_verify, loglen, cfg.temperature, rng)?;
-                    stats.verify_calls = calls;
-                    rejects
-                }
-            };
-            stats.drafts = to_verify.len();
-            let mut prefix_sum = 0usize;
-            let mut full = 0usize;
-            for ((id, req, entry), n_acc) in to_verify.into_iter().zip(accepted) {
-                prefix_sum += n_acc;
-                if n_acc == entry.response.len() {
-                    full += 1;
+            let (accepted, calls) =
+                rollout.verify_wave(blob, &drafts, loglen, cfg.temperature, vnonce)?;
+            verified.verify_calls = calls;
+            for (task, n_acc) in drafts.into_iter().zip(accepted) {
+                verified.drafts += 1;
+                verified.prefix_tokens += n_acc;
+                if n_acc == task.entry.response.len() {
+                    verified.full_reuses += 1;
                 }
                 tasks.push(SeqTask {
-                    id,
-                    prompt: req.prompt.clone(),
-                    prefix: entry.response[..n_acc].to_vec(),
-                    prefix_logps: entry.logps[..n_acc].to_vec(),
+                    id: task.id,
+                    prompt: task.prompt,
+                    prefix: task.entry.response[..n_acc].to_vec(),
+                    prefix_logps: task.entry.logps[..n_acc].to_vec(),
                 });
             }
-            stats.mean_prefix_len = prefix_sum as f64 / stats.drafts.max(1) as f64;
-            stats.full_reuse_ratio = full as f64 / stats.drafts.max(1) as f64;
             timer.add("verification", span.elapsed().as_secs_f64());
         }
-
-        // 3. generate continuations (continuous-batching scheduler)
-        let (results, rstats) = rollout.run(&policy.blob, tasks, cfg, rng, timer)?;
-        stats.reused_tokens = rstats.reused_tokens;
-        stats.new_tokens = rstats.new_tokens;
-
-        // 4. immediate cache refresh (the paper's "always the most recent
-        //    policy's rollouts"); Off-variant keeps a shadow cache so
-        //    overlap metrics stay measurable.
-        for r in &results {
-            self.cache.insert(r.id, CacheEntry::from_result(r, self.step));
-        }
-        self.step += 1;
-
+        let (results, mut stats) = rollout.run_with_nonce(blob, tasks, cfg, rnonce, timer)?;
+        stats.verify_calls += verified.verify_calls;
+        stats.drafts += pre.drafts + verified.drafts;
+        stats.prefix_tokens += pre.prefix_tokens + verified.prefix_tokens;
+        stats.full_reuses += pre.full_reuses + verified.full_reuses;
+        let stats = self.finish(&results, stats);
         Ok((results, stats))
     }
 }

@@ -1,7 +1,6 @@
 //! Reuse variants: SPEC-RL proper plus the paper's ablation baselines.
 
 use super::cache::{CacheEntry, RolloutCache};
-use crate::util::Rng;
 
 /// How drafts are selected and accepted.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,11 +56,12 @@ impl ReuseVariant {
 
 /// Random-Reuse acceptance: uniform rejection offset per draft
 /// ("roughly half of the tokens reused on expectation", zero verify cost).
-pub fn random_rejects(
-    drafts: &[(usize, &super::RolloutRequest, CacheEntry)],
-    rng: &mut Rng,
-) -> Vec<usize> {
-    drafts.iter().map(|(_, _, e)| rng.below(e.response.len() + 1)).collect()
+/// Drawn from the task-keyed verification stream, so the offset depends
+/// only on (verify nonce, task id) — order- and packing-invariant, which
+/// keeps the interleaved pipeline byte-identical to the two-phase oracle
+/// for this variant too.
+pub fn random_reject(vnonce: u64, id: usize, draft_len: usize) -> usize {
+    super::verifier::verify_rng(vnonce, id).below(draft_len + 1)
 }
 
 #[cfg(test)]
@@ -118,20 +118,25 @@ mod tests {
 
     #[test]
     fn random_rejects_in_range() {
-        let c = seed_cache();
-        let e = c.latest(5).unwrap().clone();
-        let req = super::super::RolloutRequest { id: 5, prompt: vec![1] };
-        let drafts = vec![(5usize, &req, e)];
-        let mut rng = Rng::new(1);
         let mut seen_full = false;
         let mut seen_zero = false;
-        for _ in 0..200 {
-            let r = random_rejects(&drafts, &mut rng);
-            assert!(r[0] <= 4);
-            seen_full |= r[0] == 4;
-            seen_zero |= r[0] == 0;
+        for nonce in 0..200u64 {
+            let r = random_reject(nonce, 5, 4);
+            assert!(r <= 4);
+            seen_full |= r == 4;
+            seen_zero |= r == 0;
         }
         assert!(seen_full && seen_zero);
+    }
+
+    #[test]
+    fn random_reject_is_order_invariant() {
+        // depends only on (nonce, id), not on call order or neighbours
+        assert_eq!(random_reject(9, 3, 7), random_reject(9, 3, 7));
+        assert_ne!(
+            (0..50).map(|n| random_reject(n, 1, 7)).collect::<Vec<_>>(),
+            (0..50).map(|n| random_reject(n, 2, 7)).collect::<Vec<_>>(),
+        );
     }
 
     #[test]

@@ -1,101 +1,190 @@
-//! Packed draft verification over the AOT `verify` entry.
+//! Draft-verification planning: packing and acceptance bookkeeping,
+//! engine-free.
 //!
-//! All of a step's drafts are packed into canonical `[B, T]` layouts
-//! (left-padded prompts + draft responses) and verified in batched engine
-//! calls — the paper's "all draft verification requests within a training
-//! batch are packed into a single call to the rollout engine". Each call
-//! runs one teacher-forced forward (L1 attention kernel), the fused
-//! log-prob kernel, and the L1 acceptance scan, returning the first
-//! rejection offset per row.
+//! [`VerifyPlanner`] owns the host-side scratch for packing drafts into
+//! canonical `[B, T]` layouts (left-padded prompts + draft responses) plus
+//! the acceptance side vectors (`logp_prev` / `uniforms` / `draft_valid`)
+//! consumed by the AOT `verify` and `verify_seat` entries. It makes **no
+//! engine calls** — the engine-facing executor lives in
+//! [`crate::rollout::engine::RolloutEngine`] (`verify_wave` for the
+//! blocking two-phase oracle, the `verify_seat` path inside
+//! `run_pipeline` for the interleaved default).
 //!
-//! Packing writes prompt/response slices straight into one reused
-//! [`BatchLayout`] scratch (no intermediate `SeqTask` clones), the side
-//! vectors (`logp_prev`/`uniforms`/`draft_valid`) are allocated once per
-//! verify call and reused across chunks, and the scalar lenience /
-//! temperature buffers upload once per call rather than once per chunk.
+//! Acceptance uniforms come from **per-task RNG streams**
+//! ([`verify_rng`]): the uniforms a draft is judged against depend only on
+//! (verify nonce, task id), never on which sub-batch or row the draft
+//! happens to be packed into. That packing invariance is what lets the
+//! phase-aware pipeline verify drafts in opportunistic sub-batches while
+//! staying byte-identical to the blocking full-wave path (the same
+//! property per-task sampling streams give the decode phase).
 
-use anyhow::Result;
-
-use super::cache::CacheEntry;
-use super::RolloutRequest;
 use crate::rollout::batch::BatchLayout;
-use crate::runtime::{Backend, Engine};
+use crate::runtime::BatchShape;
 use crate::util::Rng;
 
-/// Batched verifier bound to one bundle.
-pub struct SpecVerifier<'e, B: Backend = Engine> {
-    eng: &'e B,
-    h_verify: B::Entry,
-    batch: usize,
-    prompt_len: usize,
-    total_len: usize,
+use super::cache::CacheEntry;
+
+/// A drafted sequence awaiting speculative verification — the `Verify`
+/// phase of the rollout pipeline (`Draft -> Verify -> Decode -> Done`).
+#[derive(Clone, Debug)]
+pub struct VerifyTask {
+    /// Stable cache key; results carry it back.
+    pub id: usize,
+    /// BOS + prompt token ids.
+    pub prompt: Vec<i32>,
+    /// The cached draft to verify (tokens + sampling-time log-probs).
+    pub entry: CacheEntry,
 }
 
-impl<'e, B: Backend> SpecVerifier<'e, B> {
-    pub fn new(eng: &'e B, bundle: &str) -> Result<Self> {
-        let shape = eng.shape(bundle)?;
-        Ok(SpecVerifier {
-            eng,
-            h_verify: eng.resolve(bundle, "verify")?,
+impl VerifyTask {
+    /// Draft length in tokens.
+    pub fn draft_len(&self) -> usize {
+        self.entry.response.len()
+    }
+}
+
+/// Per-task uniform stream for the acceptance rule. Distinct mixing
+/// constants from the decode-phase `task_rng`, so verification and
+/// sampling never share randomness even under the same nonce.
+pub fn verify_rng(nonce: u64, id: usize) -> Rng {
+    Rng::new(nonce ^ (id as u64).wrapping_add(0x5851).wrapping_mul(0xD1B5_4A32_D192_ED03))
+}
+
+/// Host-side packing/acceptance scratch for one bundle geometry, reused
+/// across verify calls and trainer steps (constructed once per
+/// [`crate::rollout::engine::RolloutEngine`]).
+pub struct VerifyPlanner {
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub total_len: usize,
+    /// Canonical `[B, T]` tokens/valid pack (prompt + full draft).
+    pub layout: BatchLayout,
+    /// `[B, G]` log-probs recorded when each draft token was sampled.
+    pub logp_prev: Vec<f32>,
+    /// `[B, G]` 1.0 where the draft actually has a token.
+    pub draft_valid: Vec<f32>,
+    /// `[B, G]` U(0,1) acceptance draws from per-task streams.
+    pub uniforms: Vec<f32>,
+}
+
+impl VerifyPlanner {
+    pub fn new(shape: BatchShape) -> Self {
+        let g = shape.gen_len();
+        VerifyPlanner {
             batch: shape.batch,
             prompt_len: shape.prompt_len,
             total_len: shape.total_len,
-        })
+            layout: BatchLayout::new(shape.batch, shape.prompt_len, shape.total_len),
+            logp_prev: vec![0.0; shape.batch * g],
+            draft_valid: vec![0.0; shape.batch * g],
+            uniforms: vec![0.0; shape.batch * g],
+        }
     }
 
-    /// Verify drafts; returns accepted-prefix lengths (one per draft, in
-    /// input order) and the number of engine calls made.
-    pub fn verify(
-        &self,
-        blob: &B::Buf,
-        drafts: &[(usize, &RolloutRequest, CacheEntry)],
-        log_lenience: f32,
-        temperature: f32,
-        rng: &mut Rng,
-    ) -> Result<(Vec<usize>, usize)> {
-        let (b, t) = (self.batch, self.total_len);
-        let g = t - self.prompt_len;
-        let mut accepted = Vec::with_capacity(drafts.len());
-        let mut calls = 0usize;
+    pub fn gen_len(&self) -> usize {
+        self.total_len - self.prompt_len
+    }
 
-        // One scratch set reused across chunks.
-        let mut layout = BatchLayout::new(b, self.prompt_len, t);
-        let mut logp_prev = vec![0f32; b * g];
-        let mut draft_valid = vec![0f32; b * g];
-        let mut uniforms = vec![0f32; b * g];
-        let ll = self.eng.upload_f32(&[log_lenience], &[1])?;
-        let tp = self.eng.upload_f32(&[temperature], &[1])?;
+    /// Reset every row to inert filler (allocations kept).
+    pub fn clear(&mut self) {
+        self.layout.clear();
+        self.logp_prev.fill(0.0);
+        self.draft_valid.fill(0.0);
+        self.uniforms.fill(0.0);
+    }
 
-        for chunk in drafts.chunks(b) {
-            layout.clear();
-            logp_prev.fill(0.0);
-            draft_valid.fill(0.0);
-            rng.fill_uniform(&mut uniforms);
-            for (r, (_, req, entry)) in chunk.iter().enumerate() {
-                layout.set_row(r, &req.prompt, &entry.response);
-                for (j, &lp) in entry.logps.iter().enumerate() {
-                    logp_prev[r * g + j] = lp;
-                    draft_valid[r * g + j] = 1.0;
-                }
-            }
-
-            let tok = self.eng.upload_i32(&layout.tokens, &[b, t])?;
-            let val = self.eng.upload_f32(&layout.valid, &[b, t])?;
-            let lp = self.eng.upload_f32(&logp_prev, &[b, g])?;
-            let un = self.eng.upload_f32(&uniforms, &[b, g])?;
-            let dv = self.eng.upload_f32(&draft_valid, &[b, g])?;
-
-            let out = self.eng.call_entry(
-                &self.h_verify,
-                &[blob, &tok, &val, &lp, &un, &dv, &ll, &tp],
-            )?;
-            calls += 1;
-            let host = self.eng.read_f32(&out)?;
-            for (r, (_, _, entry)) in chunk.iter().enumerate() {
-                let n = host[r].round() as usize;
-                accepted.push(n.min(entry.response.len()));
-            }
+    /// Pack one draft into row `r`, drawing its acceptance uniforms from
+    /// the task-keyed stream (packing-invariant by construction).
+    pub fn set_row(&mut self, r: usize, task: &VerifyTask, nonce: u64) {
+        self.layout.set_row(r, &task.prompt, &task.entry.response);
+        let g = self.gen_len();
+        let base = r * g;
+        let mut rng = verify_rng(nonce, task.id);
+        for (j, &lp) in task.entry.logps.iter().enumerate() {
+            self.logp_prev[base + j] = lp;
+            self.draft_valid[base + j] = 1.0;
+            self.uniforms[base + j] = rng.f32();
         }
-        Ok((accepted, calls))
+    }
+
+    /// Interpret a device-reported first-rejection offset for `task`
+    /// (clamped into `[0, draft_len]`).
+    pub fn accepted(&self, raw: f32, task: &VerifyTask) -> usize {
+        let n = raw.round().max(0.0) as usize;
+        n.min(task.draft_len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> BatchShape {
+        BatchShape { batch: 3, prompt_len: 4, total_len: 12, vocab: 8 }
+    }
+
+    fn task(id: usize, len: usize) -> VerifyTask {
+        VerifyTask {
+            id,
+            prompt: vec![1, 5],
+            entry: CacheEntry {
+                response: (0..len as i32).map(|j| 3 + j).collect(),
+                logps: vec![-1.0; len],
+                version: 0,
+                finished: false,
+            },
+        }
+    }
+
+    #[test]
+    fn uniforms_are_packing_invariant() {
+        let nonce = 99;
+        let mut a = VerifyPlanner::new(shape());
+        let mut b = VerifyPlanner::new(shape());
+        let t = task(7, 5);
+        a.set_row(0, &t, nonce);
+        b.set_row(2, &t, nonce);
+        let g = a.gen_len();
+        assert_eq!(a.uniforms[..g], b.uniforms[2 * g..3 * g]);
+        assert_eq!(a.logp_prev[..g], b.logp_prev[2 * g..3 * g]);
+    }
+
+    #[test]
+    fn distinct_tasks_get_distinct_streams() {
+        let mut p = VerifyPlanner::new(shape());
+        p.set_row(0, &task(1, 5), 7);
+        p.set_row(1, &task(2, 5), 7);
+        let g = p.gen_len();
+        assert_ne!(p.uniforms[..5], p.uniforms[g..g + 5]);
+    }
+
+    #[test]
+    fn set_row_fills_side_vectors_only_for_draft_positions() {
+        let mut p = VerifyPlanner::new(shape());
+        p.set_row(1, &task(4, 3), 1);
+        let g = p.gen_len();
+        assert_eq!(&p.draft_valid[g..g + 3], &[1.0, 1.0, 1.0]);
+        assert!(p.draft_valid[g + 3..2 * g].iter().all(|&x| x == 0.0));
+        assert!(p.uniforms[g..g + 3].iter().all(|&u| (0.0..1.0).contains(&u)));
+        p.clear();
+        assert!(p.draft_valid.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn accepted_clamps_to_draft_len() {
+        let p = VerifyPlanner::new(shape());
+        let t = task(0, 4);
+        assert_eq!(p.accepted(2.0, &t), 2);
+        assert_eq!(p.accepted(9.0, &t), 4);
+        assert_eq!(p.accepted(-1.0, &t), 0);
+    }
+
+    #[test]
+    fn verify_rng_differs_from_decode_stream() {
+        // same nonce, same id: the verification stream must not replay
+        // the sampling stream
+        let mut v = verify_rng(42, 3);
+        let mut d = crate::rollout::engine::task_rng(42, 3);
+        assert_ne!(v.next_u64(), d.next_u64());
     }
 }

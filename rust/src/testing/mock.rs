@@ -17,6 +17,16 @@
 //! on every call (a decode carrying a stale `[B, T]` valid arg fails
 //! loudly), and the generation state carries its valid mask device-side,
 //! updated incrementally from `slot` writes like the real lowered entry.
+//!
+//! The `verify` / `verify_seat` entries implement the lenient acceptance
+//! rule `u <= min(1, l * p_curr/p_prev)` against the same content-hashed
+//! model, with `p_curr` scored token-by-token exactly as a teacher-forced
+//! forward would: both entries share one scoring routine, so the blocking
+//! two-phase wave and the interleaved pipeline accept identical prefixes
+//! by construction. `verify_seat` additionally seats the accepted prefix
+//! into the row (the mock analog of reusing the verify forward's KV) and
+//! reports its length in the gen state's `aux` lane; `read_gen` returns
+//! `[probs | aux]` per the contract in `rollout/sched.rs`.
 
 use std::cell::RefCell;
 
@@ -40,6 +50,9 @@ struct RowState {
 #[derive(Clone, Debug, Default)]
 pub struct GenState {
     rows: Vec<RowState>,
+    /// Per-row f32 side channel: `verify_seat` writes accepted-prefix
+    /// lengths here; prefill zeroes it, decode/refill pass it through.
+    aux: Vec<f32>,
 }
 
 /// A mock device buffer.
@@ -157,6 +170,57 @@ impl MockEngine {
         let probs = self.row_probs(&toks);
         RowState { toks, probs }
     }
+
+    /// Valid prompt-region tokens of one packed row.
+    fn prompt_of(&self, tokens: &[i32], valid: &[f32], r: usize) -> Vec<i32> {
+        let (p, t) = (self.shape.prompt_len, self.shape.total_len);
+        (0..p).filter(|&j| valid[r * t + j] > 0.5).map(|j| tokens[r * t + j]).collect()
+    }
+
+    /// Teacher-forced acceptance scan for one packed row: score each draft
+    /// token under the content-hashed "current policy" and apply the
+    /// lenient rule `u <= exp(min(0, loglen + ln p_curr - logp_prev))`.
+    /// Shared by `verify` and `verify_seat` so the two entries accept
+    /// identical prefixes by construction. Returns (accepted count,
+    /// per-draft-token current logps).
+    #[allow(clippy::too_many_arguments)]
+    fn accept_row(
+        &self,
+        tokens: &[i32],
+        valid: &[f32],
+        r: usize,
+        logp_prev: &[f32],
+        uniforms: &[f32],
+        draft_valid: &[f32],
+        loglen: f32,
+    ) -> (usize, Vec<f32>) {
+        let (p, t) = (self.shape.prompt_len, self.shape.total_len);
+        let g = t - p;
+        let row = r * t;
+        let mut ctx = self.prompt_of(tokens, valid, r);
+        let mut lps = vec![0f32; g];
+        let mut n_acc = 0usize;
+        let mut rejected = false;
+        for j in 0..g {
+            if draft_valid[r * g + j] < 0.5 {
+                break;
+            }
+            let tok = tokens[row + p + j];
+            let probs = self.row_probs(&ctx);
+            let lc = probs[tok as usize].max(1e-30).ln();
+            lps[j] = lc;
+            if !rejected {
+                let log_alpha = (loglen + lc - logp_prev[r * g + j]).min(0.0);
+                if uniforms[r * g + j] > log_alpha.exp() {
+                    rejected = true;
+                } else {
+                    n_acc += 1;
+                }
+            }
+            ctx.push(tok);
+        }
+        (n_acc, lps)
+    }
 }
 
 impl Backend for MockEngine {
@@ -165,7 +229,9 @@ impl Backend for MockEngine {
 
     fn resolve(&self, _bundle: &str, entry: &str) -> Result<String> {
         match entry {
-            "prefill" | "decode" | "read_gen" | "refill" => Ok(entry.to_string()),
+            "prefill" | "decode" | "read_gen" | "refill" | "verify" | "verify_seat" => {
+                Ok(entry.to_string())
+            }
             other => bail!("mock backend has no entry '{other}'"),
         }
     }
@@ -183,7 +249,7 @@ impl Backend for MockEngine {
                 ensure!(args[2].dims() == [b, t], "prefill: valid dims {:?}", args[2].dims());
                 ensure!(args[3].dims() == [b], "prefill: last dims {:?}", args[3].dims());
                 let rows = (0..b).map(|r| self.row_from_layout(tokens, valid, r)).collect();
-                Ok(MockBuf::Gen(GenState { rows }))
+                Ok(MockBuf::Gen(GenState { rows, aux: vec![0.0; b] }))
             }
             "decode" => {
                 // (blob, gen, token[B], slot[B], lpos[B], temp[1]) — a 7th
@@ -231,7 +297,7 @@ impl Backend for MockEngine {
                 ensure!(args.len() == 1, "read_gen: expected 1 arg, got {}", args.len());
                 let gen = args[0].gen()?;
                 let v = self.shape.vocab;
-                let mut out = Vec::with_capacity(b * v);
+                let mut out = Vec::with_capacity(b * v + b);
                 for r in 0..b {
                     if gen.rows[r].probs.is_empty() {
                         out.extend(std::iter::repeat(1.0 / v as f32).take(v));
@@ -239,7 +305,89 @@ impl Backend for MockEngine {
                         out.extend_from_slice(&gen.rows[r].probs);
                     }
                 }
-                Ok(MockBuf::F32(out, vec![b, v]))
+                // [probs | aux] — the aux tail carries verify_seat results
+                if gen.aux.len() == b {
+                    out.extend_from_slice(&gen.aux);
+                } else {
+                    out.extend(std::iter::repeat(0.0).take(b));
+                }
+                Ok(MockBuf::F32(out, vec![b * v + b]))
+            }
+            "verify" => {
+                // (blob, tokens[B,T], valid[B,T], logp_prev[B,G],
+                //  uniforms[B,G], draft_valid[B,G], loglen[1], temp[1])
+                ensure!(args.len() == 8, "verify: expected 8 args, got {}", args.len());
+                let g = t - self.shape.prompt_len;
+                let tokens = args[1].i32s()?;
+                let valid = args[2].f32s()?;
+                let lp_prev = args[3].f32s()?;
+                let un = args[4].f32s()?;
+                let dv = args[5].f32s()?;
+                ensure!(args[1].dims() == [b, t], "verify: tokens dims {:?}", args[1].dims());
+                ensure!(args[2].dims() == [b, t], "verify: valid dims {:?}", args[2].dims());
+                ensure!(args[3].dims() == [b, g], "verify: logp_prev dims {:?}", args[3].dims());
+                ensure!(args[4].dims() == [b, g], "verify: uniforms dims {:?}", args[4].dims());
+                ensure!(args[5].dims() == [b, g], "verify: draft_valid dims {:?}", args[5].dims());
+                ensure!(args[6].dims() == [1], "verify: loglen dims {:?}", args[6].dims());
+                let ll = args[6].f32s()?[0];
+                // [rej | logp | entropy] like the lowered entry
+                let mut out = vec![0f32; b + 2 * b * g];
+                for r in 0..b {
+                    let (n_acc, lps) = self.accept_row(tokens, valid, r, lp_prev, un, dv, ll);
+                    out[r] = n_acc as f32;
+                    out[b + r * g..b + (r + 1) * g].copy_from_slice(&lps);
+                }
+                Ok(MockBuf::F32(out, vec![b + 2 * b * g]))
+            }
+            "verify_seat" => {
+                // (blob, gen, tokens[B,T], valid[B,T], logp_prev[B,G],
+                //  uniforms[B,G], draft_valid[B,G], rowmask[B], loglen[1], temp[1])
+                ensure!(args.len() == 10, "verify_seat: expected 10 args, got {}", args.len());
+                let g = t - self.shape.prompt_len;
+                let mut gen = args[1].gen()?.clone();
+                let tokens = args[2].i32s()?;
+                let valid = args[3].f32s()?;
+                let lp_prev = args[4].f32s()?;
+                let un = args[5].f32s()?;
+                let dv = args[6].f32s()?;
+                let rowmask = args[7].f32s()?;
+                ensure!(args[2].dims() == [b, t], "verify_seat: tokens dims {:?}", args[2].dims());
+                ensure!(args[3].dims() == [b, t], "verify_seat: valid dims {:?}", args[3].dims());
+                ensure!(
+                    args[4].dims() == [b, g],
+                    "verify_seat: logp_prev dims {:?}",
+                    args[4].dims()
+                );
+                ensure!(
+                    args[5].dims() == [b, g],
+                    "verify_seat: uniforms dims {:?}",
+                    args[5].dims()
+                );
+                ensure!(
+                    args[6].dims() == [b, g],
+                    "verify_seat: draft_valid dims {:?}",
+                    args[6].dims()
+                );
+                ensure!(args[7].dims() == [b], "verify_seat: rowmask dims {:?}", args[7].dims());
+                ensure!(args[8].dims() == [1], "verify_seat: loglen dims {:?}", args[8].dims());
+                let ll = args[8].f32s()?[0];
+                ensure!(gen.aux.len() == b, "verify_seat: gen state has no aux lane");
+                for r in 0..b {
+                    if rowmask[r] <= 0.5 {
+                        continue;
+                    }
+                    let (n_acc, _) = self.accept_row(tokens, valid, r, lp_prev, un, dv, ll);
+                    // seat the accepted prefix: the mock analog of reusing
+                    // the verify forward's KV under a truncated valid mask
+                    let mut toks = self.prompt_of(tokens, valid, r);
+                    let row = r * t;
+                    let p = self.shape.prompt_len;
+                    toks.extend((0..n_acc).map(|j| tokens[row + p + j]));
+                    let probs = self.row_probs(&toks);
+                    gen.rows[r] = RowState { toks, probs };
+                    gen.aux[r] = n_acc as f32;
+                }
+                Ok(MockBuf::Gen(gen))
             }
             other => bail!("mock backend cannot execute '{other}'"),
         }
@@ -310,7 +458,7 @@ mod tests {
         let m = MockEngine::new(1, 2, 4, 8);
         let blob = m.blob();
         let dec = m.resolve("x", "decode").unwrap();
-        let g = MockBuf::Gen(GenState { rows: vec![RowState::default()] });
+        let g = MockBuf::Gen(GenState { rows: vec![RowState::default()], aux: vec![0.0] });
         let tok = m.upload_i32(&[5], &[1]).unwrap();
         let slot = m.upload_i32(&[2], &[1]).unwrap();
         let lpos = m.upload_i32(&[2], &[1]).unwrap();
@@ -326,5 +474,89 @@ mod tests {
     fn unknown_entry_is_error() {
         let m = MockEngine::new(1, 2, 4, 8);
         assert!(m.resolve("x", "train_policy").is_err());
+    }
+
+    #[test]
+    fn verify_and_verify_seat_accept_identically() {
+        let (b, p, t, v) = (2usize, 3usize, 9usize, 10usize);
+        let g = t - p;
+        let m = MockEngine::new(b, p, t, v);
+        let blob = m.blob();
+        // two drafts of length 4 and 2, prompts right-aligned
+        let mut tokens = vec![PAD; b * t];
+        let mut valid = vec![0f32; b * t];
+        let mut dv = vec![0f32; b * g];
+        for (r, dlen) in [(0usize, 4usize), (1, 2)] {
+            tokens[r * t + p - 2] = BOS;
+            tokens[r * t + p - 1] = 4 + r as i32;
+            valid[r * t + p - 2] = 1.0;
+            valid[r * t + p - 1] = 1.0;
+            for j in 0..dlen {
+                tokens[r * t + p + j] = 3 + ((r + j) as i32 % 5);
+                valid[r * t + p + j] = 1.0;
+                dv[r * g + j] = 1.0;
+            }
+        }
+        let lp_prev = vec![-1.2f32; b * g];
+        let mut rng = Rng::new(5);
+        let mut un = vec![0f32; b * g];
+        rng.fill_uniform(&mut un);
+
+        let tok_b = m.upload_i32(&tokens, &[b, t]).unwrap();
+        let val_b = m.upload_f32(&valid, &[b, t]).unwrap();
+        let lp_b = m.upload_f32(&lp_prev, &[b, g]).unwrap();
+        let un_b = m.upload_f32(&un, &[b, g]).unwrap();
+        let dv_b = m.upload_f32(&dv, &[b, g]).unwrap();
+        let ll = m.upload_f32(&[0.3], &[1]).unwrap();
+        let temp = m.upload_f32(&[1.0], &[1]).unwrap();
+
+        let hv = m.resolve("x", "verify").unwrap();
+        let out = m
+            .call_entry(&hv, &[&blob, &tok_b, &val_b, &lp_b, &un_b, &dv_b, &ll, &temp])
+            .unwrap();
+        let host = m.read_f32(&out).unwrap();
+        assert_eq!(host.len(), b + 2 * b * g);
+        let rej: Vec<usize> = (0..b).map(|r| host[r] as usize).collect();
+        assert!(rej[0] <= 4 && rej[1] <= 2);
+
+        // seat through verify_seat and cross-check via read_gen's aux tail
+        let hp = m.resolve("x", "prefill").unwrap();
+        let last = m.upload_i32(&[(p - 1) as i32; 2], &[b]).unwrap();
+        let gen = m.call_entry(&hp, &[&blob, &tok_b, &val_b, &last, &temp]).unwrap();
+        let hs = m.resolve("x", "verify_seat").unwrap();
+        let rm = m.upload_f32(&[1.0, 1.0], &[b]).unwrap();
+        let gen2 = m
+            .call_entry(
+                &hs,
+                &[&blob, &gen, &tok_b, &val_b, &lp_b, &un_b, &dv_b, &rm, &ll, &temp],
+            )
+            .unwrap();
+        let hr = m.resolve("x", "read_gen").unwrap();
+        let read = m.read_f32(&m.call_entry(&hr, &[&gen2]).unwrap()).unwrap();
+        assert_eq!(read.len(), b * v + b);
+        for r in 0..b {
+            assert_eq!(read[b * v + r] as usize, rej[r], "row {r} acceptance must match");
+        }
+        // seated row content == prompt + accepted prefix
+        let g2 = gen2.gen().unwrap();
+        assert_eq!(g2.rows[0].toks.len(), 2 + rej[0]);
+        assert_eq!(g2.rows[1].toks.len(), 2 + rej[1]);
+    }
+
+    #[test]
+    fn decode_preserves_aux_lane() {
+        let m = MockEngine::new(1, 2, 6, 8);
+        let blob = m.blob();
+        let mut g = GenState { rows: vec![RowState::default()], aux: vec![3.0] };
+        g.rows[0].toks = vec![1, 4];
+        g.rows[0].probs = m.row_probs(&g.rows[0].toks);
+        let gen = MockBuf::Gen(g);
+        let dec = m.resolve("x", "decode").unwrap();
+        let tok = m.upload_i32(&[5], &[1]).unwrap();
+        let slot = m.upload_i32(&[2], &[1]).unwrap();
+        let lpos = m.upload_i32(&[2], &[1]).unwrap();
+        let temp = m.upload_f32(&[1.0], &[1]).unwrap();
+        let gen2 = m.call_entry(&dec, &[&blob, &gen, &tok, &slot, &lpos, &temp]).unwrap();
+        assert_eq!(gen2.gen().unwrap().aux, vec![3.0]);
     }
 }

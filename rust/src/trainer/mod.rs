@@ -55,7 +55,8 @@ impl RunSummary {
 /// Per-step record used by the CSV series (Tables 7-27, Figures 4-11).
 pub const STEP_COLUMNS: &[&str] = &[
     "step", "epoch", "reward", "tokens_new", "tokens_reused", "tokens_cum",
-    "prefix_len", "full_reuse", "drafts", "gen_rounds",
+    "prefix_len", "full_reuse", "drafts", "gen_rounds", "verify_calls",
+    "cache_tokens", "cache_evictions", "cache_evicted_tokens",
     "rollout_s", "verification_s", "assembly_s", "reward_s", "old_logp_s",
     "ref_s", "values_s", "adv_s", "update_critic_s", "update_actor_s",
     "others_s", "total_s",
@@ -112,6 +113,8 @@ impl<'e> Trainer<'e> {
             .with_context(|| format!("unknown dataset '{}'", cfg.dataset))?;
         let train_set = tasks::train_set(&dataset, cfg.n_prompts);
         let rollout = RolloutEngine::new(eng, &cfg.bundle)?;
+        let cache_budget =
+            if cfg.cache_budget_tokens > 0 { Some(cfg.cache_budget_tokens) } else { None };
         let report_path = format!(
             "{}/{}_{}_{}.csv",
             cfg.out_dir,
@@ -122,7 +125,7 @@ impl<'e> Trainer<'e> {
         Ok(Trainer {
             eng,
             rng: Rng::new(cfg.seed),
-            spec: SpecRollout::new(spec_variant, cfg.lenience),
+            spec: SpecRollout::new(spec_variant, cfg.lenience).with_cache_budget(cache_budget),
             rollout,
             tok,
             train_set,
@@ -193,10 +196,11 @@ impl<'e> Trainer<'e> {
                 })
                 .collect();
 
+            // Interleaved phase-aware pipeline (the default since PR 2;
+            // `SpecRollout::run_two_phase` is the retained oracle).
             let (results, sstats) = self.spec.collect(
-                self.eng,
                 &mut self.rollout,
-                &self.policy,
+                &self.policy.blob,
                 &requests,
                 scfg,
                 &mut self.rng,
@@ -208,6 +212,8 @@ impl<'e> Trainer<'e> {
             spec_stats_acc.reused_tokens += sstats.reused_tokens;
             spec_stats_acc.new_tokens += sstats.new_tokens;
             spec_stats_acc.verify_calls += sstats.verify_calls;
+            spec_stats_acc.cache_evictions += sstats.cache_evictions;
+            spec_stats_acc.cache_evicted_tokens += sstats.cache_evicted_tokens;
             gen_rounds += 1;
 
             for (id, prev) in &prev_drafts {
@@ -405,6 +411,10 @@ impl<'e> Trainer<'e> {
         rec.insert("full_reuse", spec_stats_acc.full_reuse_ratio / drafts);
         rec.insert("drafts", spec_stats_acc.drafts as f64);
         rec.insert("gen_rounds", gen_rounds as f64);
+        rec.insert("verify_calls", spec_stats_acc.verify_calls as f64);
+        rec.insert("cache_tokens", self.spec.cache.total_tokens() as f64);
+        rec.insert("cache_evictions", spec_stats_acc.cache_evictions as f64);
+        rec.insert("cache_evicted_tokens", spec_stats_acc.cache_evicted_tokens as f64);
         rec.insert("rollout_s", timer.get("rollout"));
         rec.insert("verification_s", timer.get("verification"));
         rec.insert("assembly_s", timer.get("assembly"));

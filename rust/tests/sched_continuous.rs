@@ -1,10 +1,12 @@
 //! Continuous-batching scheduler invariants, runnable without artifacts:
 //! the mock backend (testing::mock) implements the decode-entry contract
-//! with a deterministic content-hashed model, so lockstep-vs-continuous
-//! equivalence, upload-traffic budgets, and slot accounting are all plain
-//! unit tests.
+//! (including `verify`/`verify_seat`) with a deterministic content-hashed
+//! model, so lockstep-vs-continuous equivalence, interleaved-pipeline vs
+//! two-phase equivalence, upload-traffic budgets, and slot accounting are
+//! all plain unit tests.
 
-use spec_rl::rollout::{RolloutEngine, SampleCfg, SeqTask};
+use spec_rl::rollout::{PipelineStats, RolloutEngine, SampleCfg, SeqResult, SeqTask};
+use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
 use spec_rl::testing::mock::MockEngine;
 use spec_rl::tokenizer::{BOS, EOS};
 use spec_rl::util::{Rng, StageTimer};
@@ -215,6 +217,217 @@ fn terminal_drafts_bypass_the_device_entirely() {
     assert_eq!(results[0].logps, vec![-0.5; eos_prefix.len()]);
     assert_eq!(results[1].response, vec![9; gen_len]);
     assert!(!results[1].finished, "cap-length prefix without EOS is unfinished");
+}
+
+// ---------------------------------------------------------------------------
+// interleaved pipeline vs two-phase oracle
+// ---------------------------------------------------------------------------
+
+/// 11 requests over 4 slots: more tasks than slots forces mid-stream
+/// refills/seats; prompt variety gives content-dependent (skewed) lengths.
+fn pipe_requests() -> Vec<RolloutRequest> {
+    (0..11)
+        .map(|i| RolloutRequest {
+            id: i,
+            prompt: vec![BOS, 3 + (i as i32 % 9), 4 + (i as i32 % 7)],
+        })
+        .collect()
+}
+
+/// Drive `epochs` steps of one path against a fresh engine + cache.
+/// Negative log-lenience stands in for policy drift: with the mock's
+/// frozen policy, `p_curr == p_prev` exactly, so `log l < 0` yields
+/// varied mid-draft rejections (the skew the pipeline must handle).
+fn drive(
+    variant: ReuseVariant,
+    two_phase: bool,
+    epochs: usize,
+    seed: u64,
+) -> (Vec<Vec<SeqResult>>, Vec<PipelineStats>) {
+    let m = MockEngine::new(4, P, T, V);
+    let blob = m.blob();
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let mut spec = SpecRollout::new(variant, Lenience::Fixed(-0.4));
+    let mut rng = Rng::new(seed);
+    let mut timer = StageTimer::new();
+    let mut all_results = Vec::new();
+    let mut all_stats = Vec::new();
+    for _ in 0..epochs {
+        let (r, s) = if two_phase {
+            spec.run_two_phase(&mut eng, &blob, &pipe_requests(), SampleCfg::default(), &mut rng, &mut timer)
+        } else {
+            spec.collect(&mut eng, &blob, &pipe_requests(), SampleCfg::default(), &mut rng, &mut timer)
+        }
+        .unwrap();
+        all_results.push(r);
+        all_stats.push(s);
+    }
+    (all_results, all_stats)
+}
+
+#[test]
+fn pipeline_matches_two_phase_across_all_variants() {
+    // 3 epochs: epoch 0 fills the cache, epoch 1 drafts from `latest`,
+    // epoch 2 additionally exercises the Delayed variant's `previous` slot.
+    for variant in [
+        ReuseVariant::Off,
+        ReuseVariant::Spec,
+        ReuseVariant::Random,
+        ReuseVariant::Delayed,
+        ReuseVariant::Full,
+    ] {
+        let (pipe, ps) = drive(variant, false, 3, 77);
+        let (two, ts) = drive(variant, true, 3, 77);
+        for (epoch, (ra, rb)) in pipe.iter().zip(&two).enumerate() {
+            assert_eq!(ra.len(), rb.len(), "{variant:?} epoch {epoch}");
+            for (x, y) in ra.iter().zip(rb) {
+                assert_eq!(x.id, y.id, "{variant:?} epoch {epoch}");
+                assert_eq!(x.response, y.response, "{variant:?} epoch {epoch} id {}", x.id);
+                assert_eq!(x.logps, y.logps, "{variant:?} epoch {epoch} id {}", x.id);
+                assert_eq!(
+                    (x.reused, x.new_tokens, x.finished),
+                    (y.reused, y.new_tokens, y.finished),
+                    "{variant:?} epoch {epoch} id {}",
+                    x.id
+                );
+            }
+        }
+        for (epoch, (a, b)) in ps.iter().zip(&ts).enumerate() {
+            assert_eq!(a.new_tokens, b.new_tokens, "{variant:?} epoch {epoch}");
+            assert_eq!(a.reused_tokens, b.reused_tokens, "{variant:?} epoch {epoch}");
+            assert_eq!(a.drafts, b.drafts, "{variant:?} epoch {epoch}");
+            assert_eq!(a.prefix_tokens, b.prefix_tokens, "{variant:?} epoch {epoch}");
+            assert_eq!(a.full_reuses, b.full_reuses, "{variant:?} epoch {epoch}");
+        }
+        // sanity: draft-bearing variants actually drafted once warm
+        // (Delayed needs two cache generations before `previous` exists)
+        match variant {
+            ReuseVariant::Off => assert_eq!(ps[1].drafts + ps[2].drafts, 0),
+            ReuseVariant::Delayed => {
+                assert_eq!(ps[1].drafts, 0, "no `previous` entry yet");
+                assert_eq!(ps[2].drafts, 11, "epoch 2 drafts from `previous`");
+            }
+            _ => assert_eq!(ps[1].drafts, 11, "{variant:?} epoch 1 must draft everything"),
+        }
+    }
+}
+
+#[test]
+fn pipeline_matches_two_phase_at_full_acceptance_boundary() {
+    // log l = 0 with a frozen policy accepts every draft token: epoch 2
+    // is pure reuse (terminal drafts) on both paths.
+    let m = MockEngine::new(3, P, T, V);
+    let blob = m.blob();
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let mut a = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.0));
+    let mut b = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.0));
+    let mut timer = StageTimer::new();
+    let mut rng_a = Rng::new(5);
+    let mut rng_b = Rng::new(5);
+    for epoch in 0..2 {
+        let (ra, sa) = a
+            .collect(&mut eng, &blob, &pipe_requests(), SampleCfg::default(), &mut rng_a, &mut timer)
+            .unwrap();
+        let (rb, sb) = b
+            .run_two_phase(&mut eng, &blob, &pipe_requests(), SampleCfg::default(), &mut rng_b, &mut timer)
+            .unwrap();
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!((x.id, &x.response, &x.logps), (y.id, &y.response, &y.logps));
+        }
+        if epoch == 1 {
+            assert!(sa.full_reuse_ratio > 0.99, "{sa:?}");
+            assert_eq!(sa.new_tokens, 0, "pure reuse decodes nothing");
+            assert_eq!(sb.new_tokens, 0);
+        }
+    }
+}
+
+#[test]
+fn pipeline_uses_fewer_device_calls_than_two_phase() {
+    // Heavily drafted skewed workload: every request carries a draft with
+    // a content-dependent accepted prefix. The pipeline folds verification
+    // into the seat (no blocking verify wave, no refill forward for
+    // verified rows), so verify+decode+refill must come out strictly lower.
+    let m = MockEngine::new(4, P, T, V);
+    let blob = m.blob();
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let reqs: Vec<RolloutRequest> = (0..40)
+        .map(|i| RolloutRequest {
+            id: i,
+            prompt: vec![BOS, 3 + (i as i32 % 9), 4 + (i as i32 % 7)],
+        })
+        .collect();
+    let mut timer = StageTimer::new();
+
+    let count = |m: &MockEngine, entries: &[&str]| -> usize {
+        entries.iter().map(|e| m.calls_of(e)).sum()
+    };
+
+    // pipeline path: epoch 0 (cold) then drafted epoch 1 under counters
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(-0.4));
+    let mut rng = Rng::new(13);
+    spec.collect(&mut eng, &blob, &reqs, SampleCfg::default(), &mut rng, &mut timer).unwrap();
+    m.reset_counters();
+    let (pipe_res, pipe_stats) = spec
+        .collect(&mut eng, &blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    let pipe_calls = count(&m, &["verify", "verify_seat", "decode", "refill"]);
+    assert_eq!(pipe_calls, pipe_stats.device_calls(), "{pipe_stats:?}");
+    assert_eq!(m.calls_of("verify"), 0, "pipeline never uses the blocking entry");
+
+    // two-phase oracle: identical seed and cache history
+    let mut spec2 = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(-0.4));
+    let mut rng = Rng::new(13);
+    spec2
+        .run_two_phase(&mut eng, &blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    m.reset_counters();
+    let (two_res, two_stats) = spec2
+        .run_two_phase(&mut eng, &blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    let two_calls = count(&m, &["verify", "verify_seat", "decode", "refill"]);
+    assert_eq!(two_calls, two_stats.device_calls(), "{two_stats:?}");
+    assert_eq!(m.calls_of("verify_seat"), 0, "oracle never seats");
+    assert_eq!(m.calls_of("verify"), 10, "40 drafts / batch 4 = 10 packed waves");
+
+    // same outputs, strictly fewer device calls
+    for (x, y) in pipe_res.iter().zip(&two_res) {
+        assert_eq!((x.id, &x.response, &x.logps), (y.id, &y.response, &y.logps));
+    }
+    assert!(
+        pipe_calls < two_calls,
+        "pipeline {pipe_calls} must beat two-phase {two_calls} ({pipe_stats:?} vs {two_stats:?})"
+    );
+}
+
+#[test]
+fn pipeline_without_drafts_matches_plain_run() {
+    // Off-variant epoch 0 degenerates to the decode-only scheduler.
+    let m = no_eos_engine();
+    let blob = m.blob();
+    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let mut timer = StageTimer::new();
+
+    let mut spec = SpecRollout::vanilla();
+    let reqs: Vec<RolloutRequest> = (0..5)
+        .map(|i| RolloutRequest { id: i, prompt: vec![BOS, 5 + i as i32, 6] })
+        .collect();
+    let mut rng = Rng::new(3);
+    let (via_spec, s) = spec
+        .collect(&mut eng, &blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    assert_eq!(s.verify_calls, 0);
+    assert_eq!(s.drafts, 0);
+
+    // same nonce consumption pattern: burn the verify nonce, then run
+    let mut rng = Rng::new(3);
+    let _vnonce = rng.next_u64();
+    let tasks: Vec<SeqTask> =
+        reqs.iter().map(|r| SeqTask::fresh(r.id, r.prompt.clone())).collect();
+    let (plain, _) = eng.run(&blob, tasks, SampleCfg::default(), &mut rng, &mut timer).unwrap();
+    for (x, y) in via_spec.iter().zip(&plain) {
+        assert_eq!((x.id, &x.response, &x.logps), (y.id, &y.response, &y.logps));
+    }
 }
 
 #[test]
