@@ -1,33 +1,94 @@
-//! Quickstart: load the engine, generate from a base policy, and watch one
-//! speculative draft-and-verify round do its thing.
+//! Quickstart: one speculative draft-and-verify round, first sharded
+//! across two mock engines (no artifacts needed), then against the real
+//! PJRT runtime when `artifacts/` exists.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart          # mock shard demo
+//! make artifacts && cargo run --release --example quickstart   # + PJRT
 //! ```
 
 use anyhow::Result;
 use spec_rl::exp;
-use spec_rl::rollout::{RolloutEngine, SampleCfg};
+use spec_rl::rollout::{EnginePool, SampleCfg};
 use spec_rl::runtime::Engine;
 use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
-use spec_rl::tokenizer::Tokenizer;
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::tokenizer::{Tokenizer, BOS};
 use spec_rl::util::{logging, Rng, StageTimer};
 
-fn main() -> Result<()> {
-    logging::init();
-    // 1. Load the AOT artifacts into the PJRT runtime (compile-once).
+/// Part 1 — `rollout.shards = 2` on mock replicas: the `EnginePool`
+/// spills one step's work across two slot pools (LPT placement; see
+/// ARCHITECTURE.md, "Sharding and placement") and, because sampling and
+/// verification use per-task RNG streams (ARCHITECTURE.md, "RNG-stream
+/// contract"), the outputs are byte-identical to a single-engine run.
+fn sharded_mock_demo() -> Result<()> {
+    println!("== part 1: rollout.shards = 2 over mock replicas ==");
+    // Two identically-provisioned engines — in production each would be
+    // its own device/process; the mock replicas are content-hashed pure
+    // functions, so they agree on every distribution by construction.
+    let shards = MockEngine::replicas(2, 8, 8, 24, 24);
+    let blobs: Vec<_> = shards.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(shards.iter(), "mock")?;
+
+    let reqs: Vec<RolloutRequest> = (0..12)
+        .map(|i| RolloutRequest { id: i, prompt: vec![BOS, 3 + (i as i32 % 9), 5] })
+        .collect();
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
+    let mut rng = Rng::new(42);
+    let mut timer = StageTimer::new();
+
+    // epoch 1: cold cache, everything decodes (across both shards)
+    let (_, s0) = spec.collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
+    // epoch 2: cached rollouts become drafts, verified inside each
+    // shard's slot pool (lifecycle pinned per engine: KV never migrates —
+    // ARCHITECTURE.md, "Sequence lifecycle")
+    let (results, s1) = spec.collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
+
+    println!("epoch 1: new tokens={} (cold cache)", s0.new_tokens);
+    println!(
+        "epoch 2: drafts={} mean verified prefix={:.1} new tokens={} sequences={}",
+        s1.drafts,
+        s1.mean_prefix_len,
+        s1.new_tokens,
+        results.len()
+    );
+    // Per-shard PipelineStats: device_calls() per engine — on real
+    // hardware the shards run concurrently, so the busiest engine is the
+    // step's critical path.
+    for (shard, calls) in s1.shard_device_calls.iter().enumerate() {
+        println!("  shard {shard}: {calls} device calls (verify_seat + decode + refill)");
+    }
+    for (shard, m) in shards.iter().enumerate() {
+        println!(
+            "  shard {shard} counters: {} total entry calls, {} uploads",
+            m.counters().calls.len(),
+            m.counters().uploads.len()
+        );
+    }
+    Ok(())
+}
+
+/// Part 2 — the same flow against the real PJRT runtime (requires
+/// `make artifacts`; skipped when missing).
+fn pjrt_demo() -> Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n== part 2 skipped: no artifacts/ (run `make artifacts`) ==");
+        return Ok(());
+    }
+    println!("\n== part 2: PJRT engine ==");
     let eng = Engine::load("artifacts")?;
     println!(
         "loaded manifest: vocab={} prompt_len={} total_len={}",
         eng.manifest.vocab, eng.manifest.prompt_len, eng.manifest.total_len
     );
 
-    // 2. Get a base policy (cached SFT checkpoint, trains one if missing).
+    // A base policy (cached SFT checkpoint; trains one if missing) and a
+    // one-shard pool — the single-engine pipeline, unchanged. With N
+    // devices you would load N engines and pass N blobs instead.
     let policy = exp::ensure_base(&eng, "tiny_b32", 1500)?;
     let tok = Tokenizer::new(&eng.manifest.charset);
-
-    // 3. Batched generation through the rollout engine.
-    let mut rollout = RolloutEngine::new(&eng, "tiny_b32")?;
+    let mut pool = EnginePool::single(&eng, "tiny_b32")?;
     let mut rng = Rng::new(42);
     let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
     let prompts = ["17+25=", "9*7=", "3+4*2=", "80-35="];
@@ -38,18 +99,19 @@ fn main() -> Result<()> {
         .collect();
 
     let mut timer = StageTimer::new();
+    let blobs = [&policy.blob];
     let (first, s0) =
-        spec.collect(&mut rollout, &policy.blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
+        spec.collect(&mut pool, &blobs, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
     println!("\n-- epoch 1 (cold cache: everything decoded) --");
     for r in &first {
         println!("  {:10} -> {}", prompts[r.id], tok.decode(&r.response));
     }
     println!("  new tokens: {}  reused: {}", s0.new_tokens, s0.reused_tokens);
 
-    // 4. Same prompts again: cached rollouts become speculative drafts,
-    //    verified inside the decode slot pool (no blocking verify wave).
+    // Same prompts again: cached rollouts become speculative drafts,
+    // verified inside the decode slot pool (no blocking verify wave).
     let (second, s1) =
-        spec.collect(&mut rollout, &policy.blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
+        spec.collect(&mut pool, &blobs, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
     println!("\n-- epoch 2 (drafts verified under the current policy) --");
     for r in &second {
         println!(
@@ -74,4 +136,10 @@ fn main() -> Result<()> {
         timer.get("assembly")
     );
     Ok(())
+}
+
+fn main() -> Result<()> {
+    logging::init();
+    sharded_mock_demo()?;
+    pjrt_demo()
 }

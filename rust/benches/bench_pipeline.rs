@@ -8,56 +8,21 @@
 //! per-entry breakdown, and host-side wall-clock. Writes
 //! `BENCH_pipeline.json` for machine diffing / the CI smoke run.
 
+use spec_rl::benchkit::drafted::{epoch1_rng, requests, warmed, B, LOG_LENIENCE, N_TASKS, T};
 use spec_rl::benchkit::{fmt_secs, Bench, JsonReport};
-use spec_rl::rollout::{PipelineStats, RolloutEngine, SampleCfg, SeqResult};
-use spec_rl::spec::{CacheEntry, Lenience, ReuseVariant, RolloutRequest, SpecRollout};
+use spec_rl::rollout::{EnginePool, PipelineStats, RolloutEngine, SampleCfg, SeqResult};
+use spec_rl::spec::{Lenience, ReuseVariant, SpecRollout};
 use spec_rl::testing::mock::MockEngine;
-use spec_rl::tokenizer::BOS;
 use spec_rl::util::{Rng, StageTimer};
 
-const B: usize = 8;
-const P: usize = 16;
-const T: usize = 64;
-const V: usize = 51;
-const N_TASKS: usize = 40;
-const SEED: u64 = 7;
-/// Negative log-lenience stands in for policy drift on the mock's frozen
-/// policy: acceptance truncates drafts at varied, content-dependent
-/// offsets — the reuse-heavy skew SPEC-RL produces after its first epoch.
-const LOG_LENIENCE: f32 = -0.25;
-
-fn requests() -> Vec<RolloutRequest> {
-    (0..N_TASKS)
-        .map(|i| RolloutRequest {
-            id: i,
-            prompt: vec![BOS, 3 + (i as i32 % 40), 5 + (i as i32 % 11)],
-        })
-        .collect()
-}
-
-/// A SpecRollout warmed to the post-epoch-0 state (cache filled from the
-/// template rollouts, step = 1), so every measured pass benches exactly
-/// one fully-drafted step.
-fn warmed(template: &[SeqResult]) -> SpecRollout {
-    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(LOG_LENIENCE));
-    for r in template {
-        spec.cache.insert(r.id, CacheEntry::from_result(r, 0));
-    }
-    spec.step = 1;
-    spec
-}
-
-/// The RNG as collect left it after epoch 0 (two nonce draws).
-fn epoch1_rng() -> Rng {
-    let mut rng = Rng::new(SEED);
-    rng.next_u64();
-    rng.next_u64();
-    rng
-}
+const P: usize = spec_rl::benchkit::drafted::P;
+const V: usize = spec_rl::benchkit::drafted::V;
+const SEED: u64 = spec_rl::benchkit::drafted::SEED;
 
 fn main() {
     let m = MockEngine::new(B, P, T, V);
     let blob = m.blob();
+    let mut pool = EnginePool::single(&m, "mock").unwrap();
     let mut eng = RolloutEngine::new(&m, "mock").unwrap();
     let cfg = SampleCfg::default();
     let mut timer = StageTimer::new();
@@ -66,7 +31,7 @@ fn main() {
     let mut spec0 = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(LOG_LENIENCE));
     let mut rng = Rng::new(SEED);
     let (template, _) =
-        spec0.collect(&mut eng, &blob, &requests(), cfg, &mut rng, &mut timer).unwrap();
+        spec0.collect(&mut pool, &[&blob], &requests(), cfg, &mut rng, &mut timer).unwrap();
 
     println!(
         "== pipeline bench (mock backend: B={B} T={T}, {N_TASKS} drafted tasks, log l={LOG_LENIENCE}) =="
@@ -76,7 +41,7 @@ fn main() {
     let r_pipe = bench.run("interleaved pipeline (verify_seat)", || {
         let mut spec = warmed(&template);
         let mut rng = epoch1_rng();
-        spec.collect(&mut eng, &blob, &requests(), cfg, &mut rng, &mut timer).unwrap()
+        spec.collect(&mut pool, &[&blob], &requests(), cfg, &mut rng, &mut timer).unwrap()
     });
     let r_two = bench.run("two-phase (verify wave, then decode)", || {
         let mut spec = warmed(&template);
@@ -94,7 +59,8 @@ fn main() {
             spec.run_two_phase(&mut eng, &blob, &requests(), cfg, &mut rng, &mut pass_timer)
                 .unwrap()
         } else {
-            spec.collect(&mut eng, &blob, &requests(), cfg, &mut rng, &mut pass_timer).unwrap()
+            spec.collect(&mut pool, &[&blob], &requests(), cfg, &mut rng, &mut pass_timer)
+                .unwrap()
         };
         let calls = ["verify", "verify_seat", "decode", "refill"]
             .iter()

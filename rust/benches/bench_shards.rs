@@ -1,0 +1,100 @@
+//! Sharding bench: the phase-aware pipeline over an `EnginePool` of 1, 2,
+//! and 4 engines, at equal outputs (per-task sampling and verification RNG
+//! streams make results shard-count-invariant).
+//!
+//! Runs against mock replicas, so it needs no artifacts and measures pure
+//! placement efficiency on the skewed 40-draft workload: per-engine
+//! device-call totals (the critical path when shards run on their own
+//! devices — the busiest engine must strictly shrink as the pool grows),
+//! the cross-shard balance, and host-side wall-clock. Writes
+//! `BENCH_shards.json` for machine diffing / the CI smoke run.
+
+use spec_rl::benchkit::drafted::{
+    epoch1_rng, requests, warmed, B, LOG_LENIENCE, N_TASKS, P, SEED, T, V,
+};
+use spec_rl::benchkit::{fmt_secs, Bench, JsonReport};
+use spec_rl::rollout::{EnginePool, SampleCfg, SeqResult};
+use spec_rl::spec::{Lenience, ReuseVariant, SpecRollout};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::util::{Rng, StageTimer};
+
+fn main() {
+    println!(
+        "== shards bench (mock replicas: B={B}/shard T={T}, {N_TASKS} drafted tasks, log l={LOG_LENIENCE}) =="
+    );
+    let bench = Bench::new(1, 8);
+    let mut j = JsonReport::new();
+    j.int("batch_per_shard", B).int("tasks", N_TASKS).num("log_lenience", LOG_LENIENCE as f64);
+
+    let mut baseline: Option<Vec<SeqResult>> = None;
+    let mut prev_max = usize::MAX;
+    println!("\nshards  device calls (total)  busiest engine  idlest engine  wall-clock (median)");
+    for shards in [1usize, 2, 4] {
+        let mocks = MockEngine::replicas(shards, B, P, T, V);
+        let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        let cfg = SampleCfg::default();
+        let mut timer = StageTimer::new();
+
+        // epoch 0 (cold cache) once: its results template the drafts
+        let mut spec0 = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(LOG_LENIENCE));
+        let mut rng = Rng::new(SEED);
+        let (template, _) =
+            spec0.collect(&mut pool, &blob_refs, &requests(), cfg, &mut rng, &mut timer).unwrap();
+
+        let r_time = bench.run(&format!("pipeline over {shards} shard(s)"), || {
+            let mut spec = warmed(&template);
+            let mut rng = epoch1_rng();
+            spec.collect(&mut pool, &blob_refs, &requests(), cfg, &mut rng, &mut timer).unwrap()
+        });
+
+        // one counted pass for per-engine device traffic + equivalence
+        for m in &mocks {
+            m.reset_counters();
+        }
+        let mut spec = warmed(&template);
+        let mut rng = epoch1_rng();
+        let (res, stats) = spec
+            .collect(&mut pool, &blob_refs, &requests(), cfg, &mut rng, &mut timer)
+            .unwrap();
+        let per_engine: Vec<usize> = mocks.iter().map(|m| m.device_calls()).collect();
+        assert_eq!(stats.shard_device_calls, per_engine, "telemetry must match counters");
+
+        match &baseline {
+            None => baseline = Some(res),
+            Some(base) => {
+                for (a, b) in base.iter().zip(&res) {
+                    assert_eq!((a.id, &a.response), (b.id, &b.response), "outputs must be equal");
+                    assert_eq!(a.logps, b.logps, "logps must be equal");
+                }
+            }
+        }
+        let max = *per_engine.iter().max().unwrap();
+        let min = *per_engine.iter().min().unwrap();
+        assert!(
+            max < prev_max,
+            "busiest engine must strictly shrink as shards grow ({max} !< {prev_max})"
+        );
+        prev_max = max;
+
+        println!(
+            "{shards:>6}  {:>20}  {:>14}  {:>13}  {:>19}",
+            stats.device_calls(),
+            max,
+            min,
+            fmt_secs(r_time.median_secs)
+        );
+        j.int(&format!("s{shards}_device_calls_total"), stats.device_calls())
+            .int(&format!("s{shards}_device_calls_max_per_engine"), max)
+            .int(&format!("s{shards}_device_calls_min_per_engine"), min)
+            .int(&format!("s{shards}_new_tokens"), stats.new_tokens)
+            .int(&format!("s{shards}_reused_tokens"), stats.reused_tokens)
+            .bench(&format!("s{shards}"), &r_time);
+    }
+
+    println!("\n{}", j.render());
+    if let Err(e) = j.save("BENCH_shards.json") {
+        eprintln!("could not write BENCH_shards.json: {e}");
+    }
+}

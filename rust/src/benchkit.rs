@@ -2,9 +2,69 @@
 //!
 //! `cargo bench` benches use [`Bench`] for hot-path measurements
 //! (warmup, N samples, mean/median/p95/stddev) and plain drivers for the
-//! end-to-end table regenerations.
+//! end-to-end table regenerations. [`drafted`] is the canonical skewed
+//! drafted-step workload shared by the scheduling benches.
 
 use std::time::Instant;
+
+/// The canonical "skewed 40-draft" workload shared by `bench_pipeline`
+/// and `bench_shards` — one definition, so the two benches cannot drift
+/// apart (same geometry, same lenience, same two-nonce RNG replay).
+pub mod drafted {
+    use crate::rollout::SeqResult;
+    use crate::spec::{CacheEntry, Lenience, ReuseVariant, RolloutRequest, SpecRollout};
+    use crate::tokenizer::BOS;
+    use crate::util::Rng;
+
+    /// Slot rows per engine.
+    pub const B: usize = 8;
+    /// Prompt region length.
+    pub const P: usize = 16;
+    /// Total sequence length.
+    pub const T: usize = 64;
+    /// Vocabulary size.
+    pub const V: usize = 51;
+    /// Drafted tasks per step.
+    pub const N_TASKS: usize = 40;
+    /// Workload seed.
+    pub const SEED: u64 = 7;
+    /// Negative log-lenience stands in for policy drift on the mock's
+    /// frozen policy: acceptance truncates drafts at varied,
+    /// content-dependent offsets — the reuse-heavy skew SPEC-RL produces
+    /// after its first epoch.
+    pub const LOG_LENIENCE: f32 = -0.25;
+
+    /// One step's request batch (prompt variety ⇒ skewed lengths).
+    pub fn requests() -> Vec<RolloutRequest> {
+        (0..N_TASKS)
+            .map(|i| RolloutRequest {
+                id: i,
+                prompt: vec![BOS, 3 + (i as i32 % 40), 5 + (i as i32 % 11)],
+            })
+            .collect()
+    }
+
+    /// A [`SpecRollout`] warmed to the post-epoch-0 state (cache filled
+    /// from the template rollouts, step = 1), so every measured pass
+    /// benches exactly one fully-drafted step.
+    pub fn warmed(template: &[SeqResult]) -> SpecRollout {
+        let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(LOG_LENIENCE));
+        for r in template {
+            spec.cache.insert(r.id, CacheEntry::from_result(r, 0));
+        }
+        spec.step = 1;
+        spec
+    }
+
+    /// The RNG exactly as `collect` left it after epoch 0 (two nonce
+    /// draws in `prepare`).
+    pub fn epoch1_rng() -> Rng {
+        let mut rng = Rng::new(SEED);
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+}
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]

@@ -32,6 +32,10 @@ pub struct RunConfig {
     pub steps: usize,
     pub temperature: f32,
     pub top_p: f32,
+    /// Engines in the rollout pool (`rollout.shards`, default 1). Each
+    /// shard runs its own slot pool; work spills across them LPT-first
+    /// (see `rollout::pool`). Results are shard-count-invariant.
+    pub rollout_shards: usize,
 
     // -- SPEC-RL -----------------------------------------------------------------
     pub variant: ReuseVariant,
@@ -70,6 +74,7 @@ impl Default for RunConfig {
             steps: 45,
             temperature: 1.0,
             top_p: 1.0,
+            rollout_shards: 1,
             variant: ReuseVariant::Spec,
             lenience: Lenience::Fixed(0.5),
             cache_budget_tokens: 0,
@@ -115,6 +120,7 @@ impl RunConfig {
         c.steps = doc.usize_or("run.steps", c.steps);
         c.temperature = doc.f64_or("run.temperature", c.temperature as f64) as f32;
         c.top_p = doc.f64_or("run.top_p", c.top_p as f64) as f32;
+        c.rollout_shards = doc.usize_or("rollout.shards", c.rollout_shards);
         if let Some(v) = doc.get("spec.variant").and_then(|v| v.as_str()) {
             c.variant =
                 ReuseVariant::parse(v).with_context(|| format!("unknown variant '{v}'"))?;
@@ -150,6 +156,7 @@ impl RunConfig {
         anyhow::ensure!(self.n_prompts >= self.prompts_per_step, "n_prompts < prompts_per_step");
         anyhow::ensure!(self.temperature > 0.0, "temperature must be > 0");
         anyhow::ensure!((0.0..=1.0).contains(&self.top_p), "top_p in (0, 1]");
+        anyhow::ensure!(self.rollout_shards >= 1, "rollout.shards must be >= 1");
         Ok(())
     }
 }
@@ -182,6 +189,16 @@ mod tests {
         assert_eq!(c.steps, 10);
         // DAPO's paper lenience default
         assert_eq!(c.lenience, Lenience::Fixed(0.15));
+    }
+
+    #[test]
+    fn rollout_shards_parses_and_validates() {
+        let doc = ConfigDoc::parse("[rollout]\nshards = 4").unwrap();
+        let c = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.rollout_shards, 4);
+        assert_eq!(RunConfig::default().rollout_shards, 1, "single engine by default");
+        let doc = ConfigDoc::parse("[rollout]\nshards = 0").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err(), "zero shards rejected");
     }
 
     #[test]

@@ -18,11 +18,19 @@
 //! (parameters, optimizer state, KV cache) stay device-resident between
 //! calls.
 //!
-//! Quick tour: [`trainer::Trainer`] drives steps; [`rollout::RolloutEngine`]
-//! generates; [`spec::SpecRollout`] wraps it with draft-and-verify reuse;
-//! [`algo`] turns rewards into updates; [`tasks`] provides the synthetic
-//! verifiable-math environment standing in for DeepMath (see DESIGN.md for
-//! the substitution table).
+//! Quick tour: [`trainer::Trainer`] drives steps; [`rollout::EnginePool`]
+//! places each step's work across one or more [`rollout::RolloutEngine`]s
+//! (the sharded slot pool); [`spec::SpecRollout`] wraps generation with
+//! draft-and-verify reuse; [`algo`] turns rewards into updates; [`tasks`]
+//! provides the synthetic verifiable-math environment standing in for
+//! DeepMath (see DESIGN.md for the substitution table).
+//!
+//! The load-bearing invariants — the gen-blob layout, the
+//! `Draft -> Verify -> Decode -> Done` lifecycle, the inert-slot and
+//! packing-invariance (per-task RNG stream) contracts, and the
+//! sharding/placement rules — are specified in `ARCHITECTURE.md` at the
+//! repository root; every backend and every scheduler change must
+//! preserve them (`rust/tests/sched_continuous.rs` pins them down).
 
 pub mod algo;
 pub mod benchkit;

@@ -21,6 +21,12 @@
 //! extended there by the decode entry. All host scratch (layout, verify
 //! planner, step vectors, probs readback, sampler order) is allocated once
 //! per engine and reused across runs and trainer steps.
+//!
+//! Every discipline shares one sample-token/finish-row decode block
+//! (`sample_row`, plus `sample_round` / `decode_advance` /
+//! `prefill_layout` / `refill_slots`), so the oracles cannot drift from
+//! the pipeline silently. One engine serves one backend; the sharded
+//! multi-engine layer is [`crate::rollout::pool::EnginePool`].
 
 use std::time::Instant;
 
@@ -67,6 +73,10 @@ pub struct PipelineStats {
     pub cache_evictions: usize,
     /// Tokens freed by those evictions.
     pub cache_evicted_tokens: usize,
+    /// Per-shard `device_calls()` totals when the step ran through an
+    /// [`crate::rollout::pool::EnginePool`] (one entry per shard, in shard
+    /// order). Empty for engine-level runs that bypass the pool.
+    pub shard_device_calls: Vec<usize>,
 }
 
 impl PipelineStats {
@@ -88,9 +98,35 @@ impl PipelineStats {
     }
 
     /// Total verify + decode + refill executable invocations — the
-    /// interleaved-vs-two-phase comparison metric (`bench_pipeline`).
+    /// interleaved-vs-two-phase comparison metric (`bench_pipeline`) and,
+    /// per shard, the critical-path metric of `bench_shards`.
     pub fn device_calls(&self) -> usize {
         self.verify_calls + self.decode_steps + self.refills
+    }
+
+    /// Merge another report's raw counters into this one (the pool's
+    /// cross-shard aggregation). Derived means are *not* merged — they are
+    /// recomputed from the raw sums by
+    /// [`PipelineStats::finalize_draft_means`] at the step boundary.
+    pub fn absorb(&mut self, o: &PipelineStats) {
+        self.new_tokens += o.new_tokens;
+        self.reused_tokens += o.reused_tokens;
+        self.decode_steps += o.decode_steps;
+        self.waves += o.waves;
+        self.refills += o.refills;
+        self.slot_idle_steps += o.slot_idle_steps;
+        self.drafts += o.drafts;
+        self.prefix_tokens += o.prefix_tokens;
+        self.full_reuses += o.full_reuses;
+        self.verify_calls += o.verify_calls;
+        self.cache_evictions += o.cache_evictions;
+        self.cache_evicted_tokens += o.cache_evicted_tokens;
+        if self.shard_device_calls.len() < o.shard_device_calls.len() {
+            self.shard_device_calls.resize(o.shard_device_calls.len(), 0);
+        }
+        for (a, b) in self.shard_device_calls.iter_mut().zip(&o.shard_device_calls) {
+            *a += b;
+        }
     }
 }
 
@@ -248,6 +284,161 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
     fn read_probs(&mut self, gen: &B::Buf) -> Result<()> {
         let out = self.eng.call_entry(&self.h_read_gen, &[gen])?;
         self.eng.read_f32_into(&out, &mut self.readback)
+    }
+
+    /// Reset row `r`'s decode-entry inputs to the inert convention
+    /// (`slot == T` ⇒ no cache write) ahead of a sampling round.
+    fn reset_step_row(&mut self, r: usize) {
+        self.token_in[r] = 0;
+        self.slot_in[r] = self.total_len as i32;
+        self.lpos_in[r] = 0;
+    }
+
+    /// The sample-token/finish-row decode block shared by every discipline
+    /// (`run_with_nonce`, `run_pipeline`, `run_wave` — formerly spelled out
+    /// in each): sample row `r` from the current readback, append the token
+    /// to the host layout, and arm the decode-entry inputs when the row
+    /// survives. Callers own the phase bookkeeping (slot state vs wave
+    /// arrays) and result assembly. Returns `(logp, done_eos, done)`.
+    fn sample_row(
+        &mut self,
+        r: usize,
+        top_p: f32,
+        rng: &mut Rng,
+        stats: &mut PipelineStats,
+    ) -> (f32, bool, bool) {
+        let v = self.vocab;
+        let row = r * v;
+        let tok = self.sampler.sample(&self.readback[row..row + v], top_p, rng) as i32;
+        let lp = self.readback[row + tok as usize].max(1e-30).ln();
+        let slot_pos = self.layout.push_token(r, tok);
+        stats.new_tokens += 1;
+        let done_eos = tok == EOS;
+        let done = done_eos || self.layout.resp_len[r] >= self.gen_len();
+        if !done {
+            self.token_in[r] = tok;
+            self.slot_in[r] = slot_pos as i32;
+            self.lpos_in[r] = (self.layout.n_valid(r) - 1) as i32;
+        }
+        (lp, done_eos, done)
+    }
+
+    /// One sampling round over the slot pool: every decoding occupant
+    /// samples one token; finished rows emit results and release their
+    /// slot; verify-phase and free rows stay inert (out-of-range slot).
+    /// Returns the number of surviving rows (armed decode writes).
+    fn sample_round(
+        &mut self,
+        sched: &mut SlotScheduler,
+        slots: &mut [Option<SlotState>],
+        results: &mut Vec<SeqResult>,
+        top_p: f32,
+        stats: &mut PipelineStats,
+    ) -> usize {
+        let mut writes = 0usize;
+        for r in 0..self.batch {
+            self.reset_step_row(r);
+            if slots[r].is_none() {
+                continue;
+            }
+            let (lp, done_eos, done) = {
+                let st = slots[r].as_mut().unwrap();
+                let rng = &mut st.rng;
+                self.sample_row(r, top_p, rng, stats)
+            };
+            if done {
+                let mut st = slots[r].take().unwrap();
+                st.logps.push(lp);
+                let response = self.layout.response(r);
+                stats.reused_tokens += st.reused;
+                results.push(SeqResult {
+                    id: st.id,
+                    reused: st.reused,
+                    new_tokens: response.len() - st.reused,
+                    finished: done_eos,
+                    logps: st.logps,
+                    response,
+                });
+                sched.release(r);
+            } else {
+                slots[r].as_mut().unwrap().logps.push(lp);
+                writes += 1;
+            }
+        }
+        writes
+    }
+
+    /// Advance surviving rows one decode step: three `[B]` uploads, never
+    /// the `[B, T]` mask (inert rows carry out-of-range slots).
+    fn decode_advance(
+        &mut self,
+        blob: &B::Buf,
+        gen: &mut B::Buf,
+        writes: usize,
+        stats: &mut PipelineStats,
+    ) -> Result<()> {
+        let b = self.batch;
+        let tok_b = self.eng.upload_i32(&self.token_in, &[b])?;
+        let slot_b = self.eng.upload_i32(&self.slot_in, &[b])?;
+        let lpos_b = self.eng.upload_i32(&self.lpos_in, &[b])?;
+        *gen = self.eng.call_entry(
+            &self.h_decode,
+            &[blob, &*gen, &tok_b, &slot_b, &lpos_b, self.temp_ref()],
+        )?;
+        stats.decode_steps += 1;
+        stats.slot_idle_steps += b - writes;
+        Ok(())
+    }
+
+    /// Prefill the current host layout into a fresh generation blob — the
+    /// only full-mask upload of a run (counts one wave).
+    fn prefill_layout(&mut self, blob: &B::Buf, stats: &mut PipelineStats) -> Result<B::Buf> {
+        let (b, t) = (self.batch, self.total_len);
+        let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
+        let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
+        let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
+        let gen = self.eng.call_entry(
+            &self.h_prefill,
+            &[blob, &tok_b, &val_b, &last_b, self.temp_ref()],
+        )?;
+        stats.waves += 1;
+        Ok(gen)
+    }
+
+    /// Re-seat freed slots from the decode queue via the masked `refill`
+    /// entry (several rows per call), arming their slot state. Runs after
+    /// the decode step so refill probs are the freshest state for the next
+    /// sampling round. No-op when no slot is free or the queue is drained.
+    fn refill_slots(
+        &mut self,
+        sched: &mut SlotScheduler,
+        slots: &mut [Option<SlotState>],
+        run_nonce: u64,
+        blob: &B::Buf,
+        gen: &mut B::Buf,
+        stats: &mut PipelineStats,
+    ) -> Result<()> {
+        let fills = sched.fill();
+        if fills.is_empty() {
+            return Ok(());
+        }
+        for (slot, task) in fills {
+            self.layout.set_row(slot, &task.prompt, &task.prefix);
+            self.rowmask[slot] = 1.0;
+            slots[slot] = Some(SlotState::new(task, run_nonce));
+        }
+        let (b, t) = (self.batch, self.total_len);
+        let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
+        let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
+        let rm_b = self.eng.upload_f32(&self.rowmask, &[b])?;
+        let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
+        *gen = self.eng.call_entry(
+            &self.h_refill,
+            &[blob, &*gen, &tok_b, &val_b, &rm_b, &last_b, self.temp_ref()],
+        )?;
+        stats.refills += 1;
+        self.rowmask.fill(0.0);
+        Ok(())
     }
 
     /// Upload the verify planner's packed buffers in the argument order
@@ -435,8 +626,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             return Ok((results, stats));
         }
 
-        let (b, t, v) = (self.batch, self.total_len, self.vocab);
-        let gen_len = self.gen_len();
+        let b = self.batch;
         let mut sched = SlotScheduler::new(b, pending);
         let mut slots: Vec<Option<SlotState>> = (0..b).map(|_| None).collect();
         self.ensure_temp(cfg.temperature)?;
@@ -448,14 +638,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             self.layout.set_row(slot, &task.prompt, &task.prefix);
             slots[slot] = Some(SlotState::new(task, run_nonce));
         }
-        let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
-        let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
-        let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
-        let mut gen = self.eng.call_entry(
-            &self.h_prefill,
-            &[blob, &tok_b, &val_b, &last_b, self.temp_ref()],
-        )?;
-        stats.waves += 1;
+        let mut gen = self.prefill_layout(blob, &mut stats)?;
         self.read_probs(&gen)?;
         timer.add("rollout", span.elapsed().as_secs_f64());
 
@@ -463,81 +646,16 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         loop {
             let span = Instant::now();
             // 1. sample one token for every occupied slot
-            let mut writes = 0usize;
-            for r in 0..b {
-                self.token_in[r] = 0;
-                self.slot_in[r] = t as i32; // out-of-range => no cache write
-                self.lpos_in[r] = 0;
-                if slots[r].is_none() {
-                    continue;
-                }
-                let row = r * v;
-                let tok = {
-                    let st = slots[r].as_mut().unwrap();
-                    self.sampler.sample(&self.readback[row..row + v], cfg.top_p, &mut st.rng)
-                        as i32
-                };
-                let lp = self.readback[row + tok as usize].max(1e-30).ln();
-                let slot_pos = self.layout.push_token(r, tok);
-                stats.new_tokens += 1;
-                let done_eos = tok == EOS;
-                let done = done_eos || self.layout.resp_len[r] >= gen_len;
-                if done {
-                    let mut st = slots[r].take().unwrap();
-                    st.logps.push(lp);
-                    let response = self.layout.response(r);
-                    stats.reused_tokens += st.reused;
-                    results.push(SeqResult {
-                        id: st.id,
-                        reused: st.reused,
-                        new_tokens: response.len() - st.reused,
-                        finished: done_eos,
-                        logps: st.logps,
-                        response,
-                    });
-                    sched.release(r);
-                } else {
-                    slots[r].as_mut().unwrap().logps.push(lp);
-                    self.token_in[r] = tok;
-                    self.slot_in[r] = slot_pos as i32;
-                    self.lpos_in[r] = (self.layout.n_valid(r) - 1) as i32;
-                    writes += 1;
-                }
-            }
+            let writes =
+                self.sample_round(&mut sched, &mut slots, &mut results, cfg.top_p, &mut stats);
 
             // 2. advance surviving rows: three [B] uploads, no [B,T] mask
             if sched.busy() > 0 {
-                let tok_b = self.eng.upload_i32(&self.token_in, &[b])?;
-                let slot_b = self.eng.upload_i32(&self.slot_in, &[b])?;
-                let lpos_b = self.eng.upload_i32(&self.lpos_in, &[b])?;
-                gen = self.eng.call_entry(
-                    &self.h_decode,
-                    &[blob, &gen, &tok_b, &slot_b, &lpos_b, self.temp_ref()],
-                )?;
-                stats.decode_steps += 1;
-                stats.slot_idle_steps += b - writes;
+                self.decode_advance(blob, &mut gen, writes, &mut stats)?;
             }
 
-            // 3. refill freed slots (after the decode so refill probs are
-            //    the freshest state for the next sampling round)
-            let fills = sched.fill();
-            if !fills.is_empty() {
-                for (slot, task) in fills {
-                    self.layout.set_row(slot, &task.prompt, &task.prefix);
-                    self.rowmask[slot] = 1.0;
-                    slots[slot] = Some(SlotState::new(task, run_nonce));
-                }
-                let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
-                let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
-                let rm_b = self.eng.upload_f32(&self.rowmask, &[b])?;
-                let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
-                gen = self.eng.call_entry(
-                    &self.h_refill,
-                    &[blob, &gen, &tok_b, &val_b, &rm_b, &last_b, self.temp_ref()],
-                )?;
-                stats.refills += 1;
-                self.rowmask.fill(0.0);
-            }
+            // 3. refill freed slots
+            self.refill_slots(&mut sched, &mut slots, run_nonce, blob, &mut gen, &mut stats)?;
 
             if sched.is_done() {
                 timer.add("rollout", span.elapsed().as_secs_f64());
@@ -581,8 +699,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             return Ok((results, stats));
         }
 
-        let (b, t, v) = (self.batch, self.total_len, self.vocab);
-        let gen_len = self.gen_len();
+        let b = self.batch;
         let mut sched = SlotScheduler::with_drafts(b, pending, drafts);
         let mut slots: Vec<Option<SlotState>> = (0..b).map(|_| None).collect();
         let mut verifying: Vec<Option<VerifyTask>> = (0..b).map(|_| None).collect();
@@ -597,14 +714,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             self.layout.set_row(slot, &task.prompt, &task.prefix);
             slots[slot] = Some(SlotState::new(task, rnonce));
         }
-        let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
-        let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
-        let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
-        let mut gen = self.eng.call_entry(
-            &self.h_prefill,
-            &[blob, &tok_b, &val_b, &last_b, self.temp_ref()],
-        )?;
-        stats.waves += 1;
+        let mut gen = self.prefill_layout(blob, &mut stats)?;
         timer.add("rollout", span.elapsed().as_secs_f64());
         self.seat_drafts(
             &mut sched, &mut verifying, blob, &mut gen, vnonce, &ll_buf, &mut stats, timer,
@@ -619,82 +729,18 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         // --- pipeline loop ------------------------------------------------
         while !sched.is_done() {
             let span = Instant::now();
-            // 1. sample one token for every decoding slot
-            let mut writes = 0usize;
-            for r in 0..b {
-                self.token_in[r] = 0;
-                self.slot_in[r] = t as i32; // out-of-range => no cache write
-                self.lpos_in[r] = 0;
-                if slots[r].is_none() {
-                    continue;
-                }
-                let row = r * v;
-                let tok = {
-                    let st = slots[r].as_mut().unwrap();
-                    self.sampler.sample(&self.readback[row..row + v], cfg.top_p, &mut st.rng)
-                        as i32
-                };
-                let lp = self.readback[row + tok as usize].max(1e-30).ln();
-                let slot_pos = self.layout.push_token(r, tok);
-                stats.new_tokens += 1;
-                let done_eos = tok == EOS;
-                let done = done_eos || self.layout.resp_len[r] >= gen_len;
-                if done {
-                    let mut st = slots[r].take().unwrap();
-                    st.logps.push(lp);
-                    let response = self.layout.response(r);
-                    stats.reused_tokens += st.reused;
-                    results.push(SeqResult {
-                        id: st.id,
-                        reused: st.reused,
-                        new_tokens: response.len() - st.reused,
-                        finished: done_eos,
-                        logps: st.logps,
-                        response,
-                    });
-                    sched.release(r);
-                } else {
-                    slots[r].as_mut().unwrap().logps.push(lp);
-                    self.token_in[r] = tok;
-                    self.slot_in[r] = slot_pos as i32;
-                    self.lpos_in[r] = (self.layout.n_valid(r) - 1) as i32;
-                    writes += 1;
-                }
-            }
+            // 1. sample one token for every decoding slot (verify-phase
+            //    rows are inert: their slot_in entries stay out-of-range)
+            let writes =
+                self.sample_round(&mut sched, &mut slots, &mut results, cfg.top_p, &mut stats);
 
-            // 2. advance surviving decode rows (verify-phase rows are inert
-            //    here: their token_in/slot_in entries stay out-of-range)
+            // 2. advance surviving decode rows
             if writes > 0 {
-                let tok_b = self.eng.upload_i32(&self.token_in, &[b])?;
-                let slot_b = self.eng.upload_i32(&self.slot_in, &[b])?;
-                let lpos_b = self.eng.upload_i32(&self.lpos_in, &[b])?;
-                gen = self.eng.call_entry(
-                    &self.h_decode,
-                    &[blob, &gen, &tok_b, &slot_b, &lpos_b, self.temp_ref()],
-                )?;
-                stats.decode_steps += 1;
-                stats.slot_idle_steps += b - writes;
+                self.decode_advance(blob, &mut gen, writes, &mut stats)?;
             }
 
             // 3. refill freed slots from the decode-ready queue
-            let fills = sched.fill();
-            if !fills.is_empty() {
-                for (slot, task) in fills {
-                    self.layout.set_row(slot, &task.prompt, &task.prefix);
-                    self.rowmask[slot] = 1.0;
-                    slots[slot] = Some(SlotState::new(task, rnonce));
-                }
-                let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
-                let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
-                let rm_b = self.eng.upload_f32(&self.rowmask, &[b])?;
-                let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
-                gen = self.eng.call_entry(
-                    &self.h_refill,
-                    &[blob, &gen, &tok_b, &val_b, &rm_b, &last_b, self.temp_ref()],
-                )?;
-                stats.refills += 1;
-                self.rowmask.fill(0.0);
-            }
+            self.refill_slots(&mut sched, &mut slots, rnonce, blob, &mut gen, &mut stats)?;
             timer.add("rollout", span.elapsed().as_secs_f64());
 
             // 4. verify-seat more drafts into any slots still free
@@ -749,7 +795,6 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             let wave = &pending[idx..(idx + self.batch).min(pending.len())];
             self.run_wave(blob, wave, cfg, run_nonce, timer, &mut stats, &mut results)?;
             idx += self.batch;
-            stats.waves += 1;
         }
         let span = Instant::now();
         results.sort_by_key(|r| r.id);
@@ -769,7 +814,6 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         stats: &mut PipelineStats,
         results: &mut Vec<SeqResult>,
     ) -> Result<()> {
-        let (b, t, v) = (self.batch, self.total_len, self.vocab);
         let gen_len = self.gen_len();
         let n = tasks.len();
         self.ensure_temp(cfg.temperature)?;
@@ -784,43 +828,24 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         let mut finished = vec![false; n];
         let mut eos_emitted = vec![false; n];
 
-        let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
-        let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
-        let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
-        let mut gen = self.eng.call_entry(
-            &self.h_prefill,
-            &[blob, &tok_b, &val_b, &last_b, self.temp_ref()],
-        )?;
+        let mut gen = self.prefill_layout(blob, stats)?;
         self.read_probs(&gen)?;
         timer.add("rollout", span.elapsed().as_secs_f64());
 
         loop {
             let span = Instant::now();
             let mut writes = 0usize;
-            for r in 0..b {
-                self.token_in[r] = 0;
-                self.slot_in[r] = t as i32; // inert write
-                self.lpos_in[r] = 0;
+            for r in 0..self.batch {
+                self.reset_step_row(r);
                 if r >= n || finished[r] || self.layout.resp_len[r] >= gen_len {
                     continue;
                 }
-                let row = r * v;
-                let tok =
-                    self.sampler.sample(&self.readback[row..row + v], cfg.top_p, &mut rngs[r])
-                        as i32;
-                let lp = self.readback[row + tok as usize].max(1e-30).ln();
-                let slot_pos = self.layout.push_token(r, tok);
+                let (lp, done_eos, done) = self.sample_row(r, cfg.top_p, &mut rngs[r], stats);
                 logps[r].push(lp);
-                stats.new_tokens += 1;
-                if tok == EOS {
+                if done {
                     finished[r] = true;
-                    eos_emitted[r] = true;
-                } else if self.layout.resp_len[r] >= gen_len {
-                    finished[r] = true;
+                    eos_emitted[r] = done_eos;
                 } else {
-                    self.token_in[r] = tok;
-                    self.slot_in[r] = slot_pos as i32;
-                    self.lpos_in[r] = (self.layout.n_valid(r) - 1) as i32;
                     writes += 1;
                 }
             }
@@ -828,15 +853,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
                 timer.add("rollout", span.elapsed().as_secs_f64());
                 break;
             }
-            let tok_b = self.eng.upload_i32(&self.token_in, &[b])?;
-            let slot_b = self.eng.upload_i32(&self.slot_in, &[b])?;
-            let lpos_b = self.eng.upload_i32(&self.lpos_in, &[b])?;
-            gen = self.eng.call_entry(
-                &self.h_decode,
-                &[blob, &gen, &tok_b, &slot_b, &lpos_b, self.temp_ref()],
-            )?;
-            stats.decode_steps += 1;
-            stats.slot_idle_steps += b - writes;
+            self.decode_advance(blob, &mut gen, writes, stats)?;
             self.read_probs(&gen)?;
             timer.add("rollout", span.elapsed().as_secs_f64());
         }

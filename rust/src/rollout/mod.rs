@@ -27,14 +27,23 @@
 //! they bypass decode entirely, which is what makes the paper's wall-clock
 //! speedups reachable.
 //!
+//! Above the single-engine pipeline sits [`pool::EnginePool`]: `N`
+//! backends, one slot pool each, with one step's work placed across them
+//! (LPT spill over a shared queue; a row's whole lifecycle is pinned to
+//! one engine so KV never migrates). Per-task sampling and verification
+//! RNG streams make results byte-identical for any shard count — see
+//! `ARCHITECTURE.md` for the full contract set.
+//!
 //! Canonical layout (shared with L2): prompts right-aligned into slots
 //! `[0, P)`, responses in `[P, T)`; positional embeddings are logical
 //! (mask-cumsum) so physical padding is invisible to the model.
 
 pub mod batch;
 pub mod engine;
+pub mod pool;
 pub mod sched;
 
 pub use batch::{BatchLayout, SeqResult, SeqTask};
 pub use engine::{PipelineStats, RolloutEngine, RolloutStats, SampleCfg};
+pub use pool::EnginePool;
 pub use sched::{SlotPhase, SlotScheduler};

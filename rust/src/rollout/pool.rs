@@ -1,0 +1,311 @@
+//! Sharded multi-engine rollout: one slot pool per backend, one pool of
+//! pools.
+//!
+//! [`EnginePool`] owns `N` [`RolloutEngine`]s, one per [`Backend`]
+//! instance (N [`crate::testing::mock::MockEngine`]s in tests, N AOT
+//! engines in production), and places one step's work across their
+//! per-engine slot pools. It is the layer the ROADMAP's "shard the slot
+//! pool across multiple engines" lever lands in, and the prerequisite for
+//! multi-host pools (see `ARCHITECTURE.md`, "Sharding and placement").
+//!
+//! ## Placement rules
+//!
+//! - **A row's entire lifecycle is pinned to one engine.** Draft →
+//!   Verify → Decode → Done all happen inside the shard the task was
+//!   placed on, so KV never migrates between generation blobs. Placement
+//!   therefore happens once per step, before any engine call.
+//! - **LPT across pools.** The shared pending queue (decode tasks *and*
+//!   drafts) is ordered longest-expected-remainder first — the same
+//!   proxies [`SlotScheduler`](super::SlotScheduler) sorts by within a
+//!   shard: a decode task still needs `gen_len - prefix` tokens, and a
+//!   draft can reuse at most its own length, so short drafts carry the
+//!   longest expected remainder. Each item then spills into the
+//!   least-loaded pool (ties go to the lowest shard index), keeping every
+//!   engine busy until the tail drains instead of letting one shard idle
+//!   on the decode tail.
+//! - **Replicas must be interchangeable.** Every backend must serve the
+//!   same bundle geometry (checked at construction) and hold the same
+//!   policy weights (the caller passes one blob per shard); per-row
+//!   independence of probs — the contract every backend already
+//!   guarantees — makes outputs placement-invariant.
+//!
+//! ## Determinism
+//!
+//! Sampling uses per-task streams (`task_rng(rnonce, id)`) and
+//! verification uses per-task uniform streams (`verify_rng(vnonce, id)`),
+//! so a task's tokens depend only on the step nonces and its id — never on
+//! which shard, slot, or verify sub-batch it lands in. Results are
+//! byte-identical for any shard count, pinned by
+//! `rust/tests/sched_continuous.rs` (`shards ∈ {1, 2, 4}` vs the
+//! `run_two_phase` oracle across all `ReuseVariant`s) and measured by
+//! `bench_shards` (`BENCH_shards.json`).
+
+use anyhow::{ensure, Result};
+
+use super::batch::{SeqResult, SeqTask};
+use super::engine::{PipelineStats, RolloutEngine, SampleCfg};
+use crate::runtime::{Backend, Engine};
+use crate::spec::verifier::VerifyTask;
+use crate::util::StageTimer;
+
+/// A pool of per-backend rollout engines behind one placement front-end.
+///
+/// Construct it from any iterator of backend references (all serving the
+/// same bundle geometry); [`crate::spec::SpecRollout::collect`] drives it.
+///
+/// ```
+/// use spec_rl::rollout::{EnginePool, SampleCfg};
+/// use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
+/// use spec_rl::testing::mock::MockEngine;
+/// use spec_rl::tokenizer::BOS;
+/// use spec_rl::util::{Rng, StageTimer};
+///
+/// // Two mock replicas stand in for two identically-provisioned engines.
+/// let shards = MockEngine::replicas(2, 4, 8, 16, 16);
+/// let blobs: Vec<_> = shards.iter().map(|m| m.blob()).collect();
+/// let blob_refs: Vec<_> = blobs.iter().collect();
+/// let mut pool = EnginePool::new(shards.iter(), "mock").unwrap();
+///
+/// let reqs: Vec<RolloutRequest> = (0..6)
+///     .map(|i| RolloutRequest { id: i, prompt: vec![BOS, 3 + i as i32] })
+///     .collect();
+/// let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
+/// let mut rng = Rng::new(7);
+/// let mut timer = StageTimer::new();
+/// let (results, stats) = spec
+///     .collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+///     .unwrap();
+/// assert_eq!(results.len(), 6);
+/// assert_eq!(stats.shard_device_calls.len(), 2, "one device-call total per shard");
+/// ```
+pub struct EnginePool<'e, B: Backend = Engine> {
+    shards: Vec<RolloutEngine<'e, B>>,
+}
+
+/// One shard's placed work: (decode-ready tasks, drafts to verify).
+type ShardWork = (Vec<SeqTask>, Vec<VerifyTask>);
+
+impl<'e, B: Backend> EnginePool<'e, B> {
+    /// Bind one [`RolloutEngine`] per backend, all serving `bundle`.
+    /// Fails when the pool is empty or the shard geometries differ (the
+    /// placement rules assume interchangeable replicas).
+    pub fn new<I>(backends: I, bundle: &str) -> Result<Self>
+    where
+        I: IntoIterator<Item = &'e B>,
+    {
+        let mut shards = Vec::new();
+        for eng in backends {
+            shards.push(RolloutEngine::new(eng, bundle)?);
+        }
+        ensure!(!shards.is_empty(), "EnginePool needs at least one backend");
+        let first = &shards[0];
+        let (b0, p0, t0, v0) = (first.batch, first.prompt_len, first.total_len, first.vocab);
+        for (i, s) in shards.iter().enumerate().skip(1) {
+            ensure!(
+                s.batch == b0 && s.prompt_len == p0 && s.total_len == t0 && s.vocab == v0,
+                "EnginePool shard {i} geometry (B={}, P={}, T={}, V={}) differs from shard 0 \
+                 (B={b0}, P={p0}, T={t0}, V={v0})",
+                s.batch,
+                s.prompt_len,
+                s.total_len,
+                s.vocab
+            );
+        }
+        Ok(EnginePool { shards })
+    }
+
+    /// A one-shard pool (the single-engine pipeline, unchanged).
+    pub fn single(backend: &'e B, bundle: &str) -> Result<Self> {
+        Self::new(std::iter::once(backend), bundle)
+    }
+
+    /// Number of engines in the pool.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Borrow one shard's engine. Shard 0 doubles as the "primary" engine
+    /// for decode-only consumers (evaluation, the scheduler benches).
+    pub fn shard_mut(&mut self, i: usize) -> &mut RolloutEngine<'e, B> {
+        &mut self.shards[i]
+    }
+
+    /// LPT placement across pools: order the shared queue by descending
+    /// expected remainder (ties by id, so placement is deterministic) and
+    /// spill each item into the least-loaded shard. Terminal drafts cost
+    /// zero — they never occupy a slot wherever they land.
+    fn place(&self, tasks: Vec<SeqTask>, drafts: Vec<VerifyTask>) -> Vec<ShardWork> {
+        enum Item {
+            Task(SeqTask),
+            Draft(VerifyTask),
+        }
+        let n = self.shards.len();
+        let gen_len = self.shards[0].gen_len();
+        let mut work: Vec<(usize, usize, Item)> =
+            Vec::with_capacity(tasks.len() + drafts.len());
+        for t in tasks {
+            // Terminal full-reuse prefixes never occupy a slot (the engine
+            // routes them straight to results), so they carry zero load.
+            let cost = if t.prefix_is_terminal(gen_len) {
+                0
+            } else {
+                gen_len.saturating_sub(t.prefix.len())
+            };
+            work.push((cost, t.id, Item::Task(t)));
+        }
+        for d in drafts {
+            work.push((gen_len.saturating_sub(d.draft_len()), d.id, Item::Draft(d)));
+        }
+        work.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+
+        let mut out: Vec<ShardWork> = (0..n).map(|_| (Vec::new(), Vec::new())).collect();
+        let mut load = vec![0usize; n];
+        for (cost, _, item) in work {
+            let shard = (0..n).min_by_key(|&i| load[i]).expect("pool has shards");
+            load[shard] += cost;
+            match item {
+                Item::Task(t) => out[shard].0.push(t),
+                Item::Draft(d) => out[shard].1.push(d),
+            }
+        }
+        out
+    }
+
+    /// Run one step's decode-ready `tasks` and to-verify `drafts` across
+    /// the pool: place (LPT across pools), run each shard's phase-aware
+    /// pipeline with the *same* step nonces, and merge id-sorted results.
+    ///
+    /// `blobs` carries one policy blob per shard (the same buffer repeated
+    /// when the shards share a device, one device-resident copy each when
+    /// they do not). The merged [`PipelineStats`] sums the raw counters
+    /// and records each shard's `device_calls()` in `shard_device_calls`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_pipeline(
+        &mut self,
+        blobs: &[&B::Buf],
+        tasks: Vec<SeqTask>,
+        drafts: Vec<VerifyTask>,
+        loglen: f32,
+        cfg: SampleCfg,
+        vnonce: u64,
+        rnonce: u64,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
+        ensure!(
+            blobs.len() == self.shards.len(),
+            "EnginePool: {} blobs for {} shards (one policy blob per engine)",
+            blobs.len(),
+            self.shards.len()
+        );
+        if self.shards.len() == 1 {
+            let (results, mut stats) = self.shards[0]
+                .run_pipeline(blobs[0], tasks, drafts, loglen, cfg, vnonce, rnonce, timer)?;
+            stats.shard_device_calls = vec![stats.device_calls()];
+            return Ok((results, stats));
+        }
+
+        let placed = self.place(tasks, drafts);
+        let mut results: Vec<SeqResult> = Vec::new();
+        let mut agg = PipelineStats::default();
+        for (shard, (t, d)) in placed.into_iter().enumerate() {
+            let (r, s) = self.shards[shard]
+                .run_pipeline(blobs[shard], t, d, loglen, cfg, vnonce, rnonce, timer)?;
+            agg.absorb(&s);
+            agg.shard_device_calls.push(s.device_calls());
+            results.extend(r);
+        }
+        results.sort_by_key(|r| r.id);
+        Ok((results, agg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::cache::CacheEntry;
+    use crate::testing::mock::MockEngine;
+    use crate::tokenizer::BOS;
+
+    fn task(id: usize, prefix_len: usize) -> SeqTask {
+        SeqTask {
+            id,
+            prompt: vec![BOS, 5],
+            prefix: vec![7; prefix_len],
+            prefix_logps: vec![-1.0; prefix_len],
+        }
+    }
+
+    fn draft(id: usize, len: usize) -> VerifyTask {
+        VerifyTask {
+            id,
+            prompt: vec![BOS, 5],
+            entry: CacheEntry {
+                response: vec![7; len],
+                logps: vec![-1.0; len],
+                version: 0,
+                finished: false,
+            },
+        }
+    }
+
+    #[test]
+    fn placement_is_lpt_and_deterministic() {
+        let mocks = MockEngine::replicas(2, 2, 8, 16, 16);
+        let pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        // remainders (gen_len = 8): id0 -> 8, id1 -> 6, id2 -> 5, id3 -> 1
+        let tasks = vec![task(0, 0), task(1, 2), task(2, 3), task(3, 7)];
+        let placed = pool.place(tasks, Vec::new());
+        // LPT greedy: 8 -> shard0, 6 -> shard1, 5 -> shard1 (6 < 8),
+        // 1 -> shard0 (8 < 11)
+        let ids = |s: usize| placed[s].0.iter().map(|t| t.id).collect::<Vec<_>>();
+        assert_eq!(ids(0), vec![0, 3]);
+        assert_eq!(ids(1), vec![1, 2]);
+    }
+
+    #[test]
+    fn drafts_and_tasks_share_one_spill_queue() {
+        let mocks = MockEngine::replicas(2, 2, 8, 16, 16);
+        let pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        // expected remainders: task2 -> 8, draft0 -> 7, draft1 -> 6,
+        // task3 -> 5; greedy LPT lands the tasks on shard 0 and both
+        // drafts on shard 1 (loads 13 / 13).
+        let placed =
+            pool.place(vec![task(2, 0), task(3, 3)], vec![draft(0, 1), draft(1, 2)]);
+        assert_eq!(placed[0].0.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert!(placed[0].1.is_empty());
+        assert_eq!(placed[1].1.iter().map(|d| d.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(placed[1].0.is_empty());
+    }
+
+    #[test]
+    fn empty_pool_is_rejected() {
+        let mocks: Vec<MockEngine> = Vec::new();
+        assert!(EnginePool::new(mocks.iter(), "mock").is_err());
+    }
+
+    #[test]
+    fn mismatched_geometry_is_rejected() {
+        let a = MockEngine::new(2, 8, 16, 16);
+        let b = MockEngine::new(4, 8, 16, 16);
+        assert!(EnginePool::new([&a, &b], "mock").is_err());
+    }
+
+    #[test]
+    fn blob_count_must_match_shards() {
+        let mocks = MockEngine::replicas(2, 2, 8, 16, 16);
+        let blob = mocks[0].blob();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        let mut timer = StageTimer::new();
+        let err = pool.run_pipeline(
+            &[&blob],
+            vec![task(0, 0)],
+            Vec::new(),
+            0.0,
+            SampleCfg::default(),
+            1,
+            2,
+            &mut timer,
+        );
+        assert!(err.is_err());
+    }
+}

@@ -63,6 +63,12 @@
 //! verification uses per-task uniform streams, making results invariant to
 //! slot assignment, sub-batch packing, and scheduling order — byte-identical
 //! to both the lockstep engine and the two-phase verify-then-decode oracle.
+//!
+//! One `SlotScheduler` spans one engine's `B` physical rows. The
+//! cross-engine layer — N slot pools behind one LPT placement front-end,
+//! with every row's lifecycle pinned to the engine it was placed on — is
+//! [`super::pool::EnginePool`]. The full contract set (gen-blob layout,
+//! inert slots, RNG streams, shard placement) lives in `ARCHITECTURE.md`.
 
 use std::collections::VecDeque;
 

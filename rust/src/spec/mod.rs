@@ -26,8 +26,10 @@
 //!
 //! [`SpecRollout::collect`] is a thin driver over this pipeline: it splits
 //! requests into decode-ready tasks and verify tasks, hands both queues to
-//! [`RolloutEngine::run_pipeline`], and folds cache/telemetry bookkeeping
-//! into the merged per-step [`PipelineStats`] report.
+//! an [`EnginePool`] (which spills them across its per-engine slot pools —
+//! one shard is the plain single-engine pipeline), and folds
+//! cache/telemetry bookkeeping into the merged per-step [`PipelineStats`]
+//! report.
 //! [`SpecRollout::run_two_phase`] keeps the original blocking
 //! verify-then-decode discipline as the equivalence oracle: per-task
 //! sampling *and* verification RNG streams make the two paths
@@ -44,7 +46,7 @@ pub mod verifier;
 
 use anyhow::Result;
 
-use crate::rollout::{PipelineStats, RolloutEngine, SampleCfg, SeqResult, SeqTask};
+use crate::rollout::{EnginePool, PipelineStats, RolloutEngine, SampleCfg, SeqResult, SeqTask};
 use crate::runtime::Backend;
 use crate::util::{Rng, StageTimer};
 
@@ -162,15 +164,24 @@ impl SpecRollout {
     }
 
     /// Roll out one step's batch with speculative reuse through the
-    /// interleaved phase-aware pipeline (the trainer default).
+    /// interleaved phase-aware pipeline, sharded across an [`EnginePool`]
+    /// (the trainer default; a one-shard pool is the original
+    /// single-engine pipeline, unchanged).
     ///
-    /// Returns results (sorted by id) and the merged per-step report.
-    /// Stage timing: `verification` (verify-seat sub-batches), `rollout` /
-    /// `assembly` (inside the engine).
+    /// `blobs` carries one policy blob per shard — every shard must hold
+    /// the same weights, or results stop being placement-invariant (the
+    /// sharding contract in `ARCHITECTURE.md`). The single shared
+    /// [`RolloutCache`] refreshes once from the merged, id-sorted results,
+    /// so the `spec.cache_budget` token budget is global across shards.
+    ///
+    /// Returns results (sorted by id) and the merged per-step report
+    /// (including per-shard `device_calls` totals). Stage timing:
+    /// `verification` (verify-seat sub-batches), `rollout` / `assembly`
+    /// (inside the engines).
     pub fn collect<B: Backend>(
         &mut self,
-        rollout: &mut RolloutEngine<'_, B>,
-        blob: &B::Buf,
+        pool: &mut EnginePool<'_, B>,
+        blobs: &[&B::Buf],
         requests: &[RolloutRequest],
         cfg: SampleCfg,
         rng: &mut Rng,
@@ -179,7 +190,7 @@ impl SpecRollout {
         let loglen = self.lenience.log_value(self.step);
         let (vnonce, rnonce, tasks, drafts, pre) = self.prepare(requests, rng);
         let (results, mut stats) =
-            rollout.run_pipeline(blob, tasks, drafts, loglen, cfg, vnonce, rnonce, timer)?;
+            pool.run_pipeline(blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, timer)?;
         stats.drafts += pre.drafts;
         stats.prefix_tokens += pre.prefix_tokens;
         stats.full_reuses += pre.full_reuses;

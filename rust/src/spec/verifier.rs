@@ -12,11 +12,13 @@
 //!
 //! Acceptance uniforms come from **per-task RNG streams**
 //! ([`verify_rng`]): the uniforms a draft is judged against depend only on
-//! (verify nonce, task id), never on which sub-batch or row the draft
-//! happens to be packed into. That packing invariance is what lets the
-//! phase-aware pipeline verify drafts in opportunistic sub-batches while
-//! staying byte-identical to the blocking full-wave path (the same
-//! property per-task sampling streams give the decode phase).
+//! (verify nonce, task id), never on which sub-batch, row, **or shard**
+//! the draft happens to be packed into. That packing invariance is what
+//! lets the phase-aware pipeline verify drafts in opportunistic
+//! sub-batches — and [`crate::rollout::pool::EnginePool`] spread them
+//! across engines — while staying byte-identical to the blocking
+//! full-wave path (the same property per-task sampling streams give the
+//! decode phase). See `ARCHITECTURE.md`, "RNG-stream contract".
 
 use crate::rollout::batch::BatchLayout;
 use crate::runtime::BatchShape;

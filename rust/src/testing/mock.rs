@@ -120,6 +120,32 @@ impl MockEngine {
         }
     }
 
+    /// `n` identically-configured replicas — the cheap stand-in for a
+    /// pool of per-device engines. Each instance keeps its own call and
+    /// upload counters, so per-shard device traffic is directly
+    /// observable (the content-hashed model is a pure function, so all
+    /// replicas agree on every distribution by construction).
+    pub fn replicas(
+        n: usize,
+        batch: usize,
+        prompt_len: usize,
+        total_len: usize,
+        vocab: usize,
+    ) -> Vec<MockEngine> {
+        (0..n).map(|_| MockEngine::new(batch, prompt_len, total_len, vocab)).collect()
+    }
+
+    /// Total executable invocations over the contract's device-call
+    /// entries (`verify` + `verify_seat` + `decode` + `refill`) — the
+    /// per-engine critical-path metric `bench_shards` tracks, matching
+    /// [`crate::rollout::PipelineStats::device_calls`].
+    pub fn device_calls(&self) -> usize {
+        ["verify", "verify_seat", "decode", "refill"]
+            .iter()
+            .map(|e| self.calls_of(e))
+            .sum()
+    }
+
     /// Policy blob stand-in (contents irrelevant to the mock model).
     pub fn blob(&self) -> MockBuf {
         MockBuf::F32(vec![0.0], vec![1])
@@ -305,12 +331,12 @@ impl Backend for MockEngine {
                         out.extend_from_slice(&gen.rows[r].probs);
                     }
                 }
-                // [probs | aux] — the aux tail carries verify_seat results
-                if gen.aux.len() == b {
-                    out.extend_from_slice(&gen.aux);
-                } else {
-                    out.extend(std::iter::repeat(0.0).take(b));
-                }
+                // [probs | aux] — the aux tail carries verify_seat results;
+                // a gen state without the lane is a contract violation, not
+                // a zeros-for-free situation (it would silently read as
+                // "every draft rejected at offset 0")
+                ensure!(gen.aux.len() == b, "read_gen: gen state has no aux lane");
+                out.extend_from_slice(&gen.aux);
                 Ok(MockBuf::F32(out, vec![b * v + b]))
             }
             "verify" => {

@@ -17,7 +17,7 @@ use crate::algo;
 use crate::config::RunConfig;
 use crate::metrics::{self, Report};
 use crate::model::Policy;
-use crate::rollout::{RolloutEngine, SampleCfg, SeqResult};
+use crate::rollout::{EnginePool, SampleCfg, SeqResult};
 use crate::runtime::Engine;
 use crate::spec::{RolloutRequest, SpecRollout};
 use crate::tasks::{self, TaskInstance};
@@ -56,6 +56,7 @@ impl RunSummary {
 pub const STEP_COLUMNS: &[&str] = &[
     "step", "epoch", "reward", "tokens_new", "tokens_reused", "tokens_cum",
     "prefix_len", "full_reuse", "drafts", "gen_rounds", "verify_calls",
+    "shards", "device_calls", "shard_calls_max", "shard_calls_min",
     "cache_tokens", "cache_evictions", "cache_evicted_tokens",
     "rollout_s", "verification_s", "assembly_s", "reward_s", "old_logp_s",
     "ref_s", "values_s", "adv_s", "update_critic_s", "update_actor_s",
@@ -74,7 +75,9 @@ pub struct Trainer<'e> {
     /// PPO critic.
     pub critic: Option<Policy>,
     pub spec: SpecRollout,
-    pub rollout: RolloutEngine<'e>,
+    /// `cfg.rollout_shards` engines over one slot-pool placement layer
+    /// (one shard == the plain single-engine pipeline).
+    pub pool: EnginePool<'e>,
     pub tok: Tokenizer,
     pub train_set: Vec<TaskInstance>,
     pub rng: Rng,
@@ -112,7 +115,9 @@ impl<'e> Trainer<'e> {
         let dataset = tasks::DatasetSpec::by_name(&cfg.dataset)
             .with_context(|| format!("unknown dataset '{}'", cfg.dataset))?;
         let train_set = tasks::train_set(&dataset, cfg.n_prompts);
-        let rollout = RolloutEngine::new(eng, &cfg.bundle)?;
+        // All shards bind to the same PJRT engine here (one device, one
+        // blob); distinct per-device backends plug into the same pool.
+        let pool = EnginePool::new((0..cfg.rollout_shards).map(|_| eng), &cfg.bundle)?;
         let cache_budget =
             if cfg.cache_budget_tokens > 0 { Some(cfg.cache_budget_tokens) } else { None };
         let report_path = format!(
@@ -126,7 +131,7 @@ impl<'e> Trainer<'e> {
             eng,
             rng: Rng::new(cfg.seed),
             spec: SpecRollout::new(spec_variant, cfg.lenience).with_cache_budget(cache_budget),
-            rollout,
+            pool,
             tok,
             train_set,
             policy: base,
@@ -196,24 +201,20 @@ impl<'e> Trainer<'e> {
                 })
                 .collect();
 
-            // Interleaved phase-aware pipeline (the default since PR 2;
+            // Interleaved phase-aware pipeline over the engine pool (the
+            // default since PR 2 / sharded since PR 3;
             // `SpecRollout::run_two_phase` is the retained oracle).
+            let shard_blobs: Vec<_> =
+                (0..self.pool.shards()).map(|_| &self.policy.blob).collect();
             let (results, sstats) = self.spec.collect(
-                &mut self.rollout,
-                &self.policy.blob,
+                &mut self.pool,
+                &shard_blobs,
                 &requests,
                 scfg,
                 &mut self.rng,
                 &mut timer,
             )?;
-            spec_stats_acc.drafts += sstats.drafts;
-            spec_stats_acc.mean_prefix_len += sstats.mean_prefix_len * sstats.drafts as f64;
-            spec_stats_acc.full_reuse_ratio += sstats.full_reuse_ratio * sstats.drafts as f64;
-            spec_stats_acc.reused_tokens += sstats.reused_tokens;
-            spec_stats_acc.new_tokens += sstats.new_tokens;
-            spec_stats_acc.verify_calls += sstats.verify_calls;
-            spec_stats_acc.cache_evictions += sstats.cache_evictions;
-            spec_stats_acc.cache_evicted_tokens += sstats.cache_evicted_tokens;
+            spec_stats_acc.absorb(&sstats);
             gen_rounds += 1;
 
             for (id, prev) in &prev_drafts {
@@ -396,22 +397,29 @@ impl<'e> Trainer<'e> {
         // ---- record -----------------------------------------------------------------
         self.cum_new_tokens += spec_stats_acc.new_tokens;
         self.cum_reused_tokens += spec_stats_acc.reused_tokens;
+        // Re-derive the per-draft means from the raw counters summed over
+        // the step's gen rounds (absorb never merges derived fields).
+        spec_stats_acc.finalize_draft_means();
         let total_s = t_step.elapsed().as_secs_f64();
         let known: f64 = timer.total();
         let mut rec: BTreeMap<&'static str, f64> = BTreeMap::new();
         let reward_mean = rewards.iter().map(|&r| r as f64).sum::<f64>() / b as f64;
-        let drafts = spec_stats_acc.drafts.max(1) as f64;
         rec.insert("step", step_idx as f64);
         rec.insert("epoch", (step_idx / self.cfg.steps_per_epoch()) as f64);
         rec.insert("reward", reward_mean);
         rec.insert("tokens_new", spec_stats_acc.new_tokens as f64);
         rec.insert("tokens_reused", spec_stats_acc.reused_tokens as f64);
         rec.insert("tokens_cum", self.cum_new_tokens as f64);
-        rec.insert("prefix_len", spec_stats_acc.mean_prefix_len / drafts);
-        rec.insert("full_reuse", spec_stats_acc.full_reuse_ratio / drafts);
+        rec.insert("prefix_len", spec_stats_acc.mean_prefix_len);
+        rec.insert("full_reuse", spec_stats_acc.full_reuse_ratio);
         rec.insert("drafts", spec_stats_acc.drafts as f64);
         rec.insert("gen_rounds", gen_rounds as f64);
         rec.insert("verify_calls", spec_stats_acc.verify_calls as f64);
+        let shard_calls = &spec_stats_acc.shard_device_calls;
+        rec.insert("shards", self.pool.shards() as f64);
+        rec.insert("device_calls", shard_calls.iter().sum::<usize>() as f64);
+        rec.insert("shard_calls_max", shard_calls.iter().copied().max().unwrap_or(0) as f64);
+        rec.insert("shard_calls_min", shard_calls.iter().copied().min().unwrap_or(0) as f64);
         rec.insert("cache_tokens", self.spec.cache.total_tokens() as f64);
         rec.insert("cache_evictions", spec_stats_acc.cache_evictions as f64);
         rec.insert("cache_evicted_tokens", spec_stats_acc.cache_evicted_tokens as f64);
@@ -463,7 +471,7 @@ impl<'e> Trainer<'e> {
         let total = t0.elapsed().as_secs_f64();
         let final_eval = eval::evaluate(
             self.eng,
-            &mut self.rollout,
+            self.pool.shard_mut(0),
             &self.policy,
             &self.tok,
             self.cfg.eval_n,

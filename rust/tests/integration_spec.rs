@@ -2,7 +2,7 @@
 //! the spec-consistency invariants (1-4 in DESIGN.md).
 
 use spec_rl::model::Policy;
-use spec_rl::rollout::{RolloutEngine, SampleCfg};
+use spec_rl::rollout::{EnginePool, RolloutEngine, SampleCfg};
 use spec_rl::runtime::Engine;
 use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
 use spec_rl::tokenizer::Tokenizer;
@@ -28,14 +28,14 @@ const PROMPTS: [&str; 4] = ["1+1=", "17+25=", "9*9=", "50-8="];
 
 fn collect_once(
     spec: &mut SpecRollout,
-    rollout: &mut RolloutEngine,
+    pool: &mut EnginePool<'_>,
     policy: &Policy,
     tok: &Tokenizer,
     rng: &mut Rng,
 ) -> (Vec<spec_rl::rollout::SeqResult>, spec_rl::spec::SpecStepStats) {
     let reqs = requests(tok, &PROMPTS);
     let mut timer = StageTimer::new();
-    spec.collect(rollout, &policy.blob, &reqs, SampleCfg::default(), rng, &mut timer)
+    spec.collect(pool, &[&policy.blob], &reqs, SampleCfg::default(), rng, &mut timer)
         .unwrap()
 }
 
@@ -46,14 +46,14 @@ fn identical_policy_full_acceptance() {
     let Some(eng) = engine() else { return };
     let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
     let tok = Tokenizer::new(&eng.manifest.charset);
-    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut pool = EnginePool::single(&eng, "tiny_b32").unwrap();
     let mut rng = Rng::new(21);
     // small epsilon absorbs decode-vs-score float noise (~1e-6)
     let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.01));
 
-    let (first, s0) = collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
+    let (first, s0) = collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
     assert_eq!(s0.drafts, 0, "epoch 1 has no drafts");
-    let (second, s1) = collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
+    let (second, s1) = collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
     assert_eq!(s1.drafts, 4);
     assert!(s1.full_reuse_ratio > 0.99, "{s1:?}");
     assert_eq!(s1.new_tokens, 0);
@@ -68,12 +68,12 @@ fn zero_lenience_is_vanilla() {
     let Some(eng) = engine() else { return };
     let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
     let tok = Tokenizer::new(&eng.manifest.charset);
-    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut pool = EnginePool::single(&eng, "tiny_b32").unwrap();
     let mut rng = Rng::new(22);
     let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Zero);
 
-    collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
-    let (_, s1) = collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
+    collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
+    let (_, s1) = collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
     assert_eq!(s1.drafts, 4);
     assert_eq!(s1.mean_prefix_len, 0.0, "{s1:?}");
     assert_eq!(s1.reused_tokens, 0);
@@ -86,12 +86,12 @@ fn full_variant_reuses_everything() {
     let Some(eng) = engine() else { return };
     let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
     let tok = Tokenizer::new(&eng.manifest.charset);
-    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut pool = EnginePool::single(&eng, "tiny_b32").unwrap();
     let mut rng = Rng::new(23);
     let mut spec = SpecRollout::new(ReuseVariant::Full, Lenience::Infinite);
 
-    let (first, _) = collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
-    let (second, s1) = collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
+    let (first, _) = collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
+    let (second, s1) = collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
     assert_eq!(s1.verify_calls, 0, "full reuse skips verification");
     // drafts that ended with EOS are terminal -> zero new tokens for them;
     // length-capped drafts resume (prefix == gen cap is terminal too).
@@ -107,18 +107,18 @@ fn cache_refreshes_to_current_step() {
     let Some(eng) = engine() else { return };
     let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
     let tok = Tokenizer::new(&eng.manifest.charset);
-    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut pool = EnginePool::single(&eng, "tiny_b32").unwrap();
     let mut rng = Rng::new(24);
     let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
 
-    let (r0, _) = collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
+    let (r0, _) = collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
     for r in &r0 {
         let e = spec.cache.latest(r.id).unwrap();
         assert_eq!(e.version, 0);
         assert_eq!(e.response, r.response);
         assert_eq!(e.logps.len(), e.response.len());
     }
-    let (r1, _) = collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
+    let (r1, _) = collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
     for r in &r1 {
         assert_eq!(spec.cache.latest(r.id).unwrap().version, 1);
         // previous slot holds the step-0 rollout (delayed-reuse source)
@@ -133,12 +133,12 @@ fn random_variant_skips_verifier() {
     let Some(eng) = engine() else { return };
     let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
     let tok = Tokenizer::new(&eng.manifest.charset);
-    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut pool = EnginePool::single(&eng, "tiny_b32").unwrap();
     let mut rng = Rng::new(25);
     let mut spec = SpecRollout::new(ReuseVariant::Random, Lenience::Fixed(0.5));
 
-    collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
-    let (_, s1) = collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
+    collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
+    let (_, s1) = collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
     assert_eq!(s1.verify_calls, 0);
     assert_eq!(s1.drafts, 4);
 }
@@ -149,13 +149,13 @@ fn off_variant_never_drafts_but_tracks_cache() {
     let Some(eng) = engine() else { return };
     let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
     let tok = Tokenizer::new(&eng.manifest.charset);
-    let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut pool = EnginePool::single(&eng, "tiny_b32").unwrap();
     let mut rng = Rng::new(26);
     let mut spec = SpecRollout::vanilla();
 
-    collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
+    collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
     assert_eq!(spec.cache.len(), 4, "shadow cache fills");
-    let (_, s1) = collect_once(&mut spec, &mut rollout, &policy, &tok, &mut rng);
+    let (_, s1) = collect_once(&mut spec, &mut pool, &policy, &tok, &mut rng);
     assert_eq!(s1.drafts, 0);
     assert_eq!(s1.reused_tokens, 0);
 }
@@ -170,6 +170,7 @@ fn verification_is_packed() {
     let policy = Policy::from_init(&eng, "tiny_b32").unwrap();
     let tok = Tokenizer::new(&eng.manifest.charset);
     let mut rollout = RolloutEngine::new(&eng, "tiny_b32").unwrap();
+    let mut pool = EnginePool::single(&eng, "tiny_b32").unwrap();
     let b = rollout.batch;
     let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
     let mut spec_p = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
@@ -195,10 +196,10 @@ fn verification_is_packed() {
     // interleaved pipeline: same seed, same results, byte for byte
     let mut rng = Rng::new(27);
     spec_p
-        .collect(&mut rollout, &policy.blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .collect(&mut pool, &[&policy.blob], &reqs, SampleCfg::default(), &mut rng, &mut timer)
         .unwrap();
     let (pipe, sp) = spec_p
-        .collect(&mut rollout, &policy.blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .collect(&mut pool, &[&policy.blob], &reqs, SampleCfg::default(), &mut rng, &mut timer)
         .unwrap();
     assert_eq!(sp.drafts, b + 2);
     assert_eq!(two.len(), pipe.len());

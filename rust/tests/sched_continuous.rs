@@ -2,10 +2,10 @@
 //! the mock backend (testing::mock) implements the decode-entry contract
 //! (including `verify`/`verify_seat`) with a deterministic content-hashed
 //! model, so lockstep-vs-continuous equivalence, interleaved-pipeline vs
-//! two-phase equivalence, upload-traffic budgets, and slot accounting are
-//! all plain unit tests.
+//! two-phase equivalence, sharded-pool vs single-engine equivalence,
+//! upload-traffic budgets, and slot accounting are all plain unit tests.
 
-use spec_rl::rollout::{PipelineStats, RolloutEngine, SampleCfg, SeqResult, SeqTask};
+use spec_rl::rollout::{EnginePool, PipelineStats, RolloutEngine, SampleCfg, SeqResult, SeqTask};
 use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
 use spec_rl::testing::mock::MockEngine;
 use spec_rl::tokenizer::{BOS, EOS};
@@ -234,29 +234,35 @@ fn pipe_requests() -> Vec<RolloutRequest> {
         .collect()
 }
 
-/// Drive `epochs` steps of one path against a fresh engine + cache.
-/// Negative log-lenience stands in for policy drift: with the mock's
-/// frozen policy, `p_curr == p_prev` exactly, so `log l < 0` yields
+/// Drive `epochs` steps of one path against a fresh engine pool + cache.
+/// `shards == 0` selects the blocking two-phase oracle (single engine);
+/// `shards >= 1` runs the interleaved pipeline over that many mock
+/// replicas. Negative log-lenience stands in for policy drift: with the
+/// mock's frozen policy, `p_curr == p_prev` exactly, so `log l < 0` yields
 /// varied mid-draft rejections (the skew the pipeline must handle).
 fn drive(
     variant: ReuseVariant,
-    two_phase: bool,
+    shards: usize,
     epochs: usize,
     seed: u64,
 ) -> (Vec<Vec<SeqResult>>, Vec<PipelineStats>) {
-    let m = MockEngine::new(4, P, T, V);
-    let blob = m.blob();
-    let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+    let mocks = MockEngine::replicas(shards.max(1), 4, P, T, V);
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool =
+        (shards > 0).then(|| EnginePool::new(mocks.iter(), "mock").unwrap());
+    let mut eng =
+        (shards == 0).then(|| RolloutEngine::new(&mocks[0], "mock").unwrap());
     let mut spec = SpecRollout::new(variant, Lenience::Fixed(-0.4));
     let mut rng = Rng::new(seed);
     let mut timer = StageTimer::new();
     let mut all_results = Vec::new();
     let mut all_stats = Vec::new();
     for _ in 0..epochs {
-        let (r, s) = if two_phase {
-            spec.run_two_phase(&mut eng, &blob, &pipe_requests(), SampleCfg::default(), &mut rng, &mut timer)
+        let (r, s) = if let Some(eng) = eng.as_mut() {
+            spec.run_two_phase(eng, &blobs[0], &pipe_requests(), SampleCfg::default(), &mut rng, &mut timer)
         } else {
-            spec.collect(&mut eng, &blob, &pipe_requests(), SampleCfg::default(), &mut rng, &mut timer)
+            spec.collect(pool.as_mut().unwrap(), &blob_refs, &pipe_requests(), SampleCfg::default(), &mut rng, &mut timer)
         }
         .unwrap();
         all_results.push(r);
@@ -266,9 +272,12 @@ fn drive(
 }
 
 #[test]
-fn pipeline_matches_two_phase_across_all_variants() {
+fn pipeline_matches_two_phase_across_all_variants_and_shard_counts() {
     // 3 epochs: epoch 0 fills the cache, epoch 1 drafts from `latest`,
-    // epoch 2 additionally exercises the Delayed variant's `previous` slot.
+    // epoch 2 additionally exercises the Delayed variant's `previous`
+    // slot. shards ∈ {1, 2, 4} must all match the two-phase oracle
+    // byte-for-byte: per-task RNG streams make results invariant to
+    // placement, so the shard count cannot show up in the outputs.
     for variant in [
         ReuseVariant::Off,
         ReuseVariant::Spec,
@@ -276,31 +285,49 @@ fn pipeline_matches_two_phase_across_all_variants() {
         ReuseVariant::Delayed,
         ReuseVariant::Full,
     ] {
-        let (pipe, ps) = drive(variant, false, 3, 77);
-        let (two, ts) = drive(variant, true, 3, 77);
-        for (epoch, (ra, rb)) in pipe.iter().zip(&two).enumerate() {
-            assert_eq!(ra.len(), rb.len(), "{variant:?} epoch {epoch}");
-            for (x, y) in ra.iter().zip(rb) {
-                assert_eq!(x.id, y.id, "{variant:?} epoch {epoch}");
-                assert_eq!(x.response, y.response, "{variant:?} epoch {epoch} id {}", x.id);
-                assert_eq!(x.logps, y.logps, "{variant:?} epoch {epoch} id {}", x.id);
-                assert_eq!(
-                    (x.reused, x.new_tokens, x.finished),
-                    (y.reused, y.new_tokens, y.finished),
-                    "{variant:?} epoch {epoch} id {}",
-                    x.id
-                );
+        let (two, ts) = drive(variant, 0, 3, 77);
+        let mut ps1: Vec<PipelineStats> = Vec::new();
+        for shards in [1usize, 2, 4] {
+            let (pipe, ps) = drive(variant, shards, 3, 77);
+            for (epoch, (ra, rb)) in pipe.iter().zip(&two).enumerate() {
+                assert_eq!(ra.len(), rb.len(), "{variant:?} shards {shards} epoch {epoch}");
+                for (x, y) in ra.iter().zip(rb) {
+                    assert_eq!(x.id, y.id, "{variant:?} shards {shards} epoch {epoch}");
+                    assert_eq!(
+                        x.response, y.response,
+                        "{variant:?} shards {shards} epoch {epoch} id {}",
+                        x.id
+                    );
+                    assert_eq!(
+                        x.logps, y.logps,
+                        "{variant:?} shards {shards} epoch {epoch} id {}",
+                        x.id
+                    );
+                    assert_eq!(
+                        (x.reused, x.new_tokens, x.finished),
+                        (y.reused, y.new_tokens, y.finished),
+                        "{variant:?} shards {shards} epoch {epoch} id {}",
+                        x.id
+                    );
+                }
+            }
+            for (epoch, (a, b)) in ps.iter().zip(&ts).enumerate() {
+                let tag = format!("{variant:?} shards {shards} epoch {epoch}");
+                assert_eq!(a.new_tokens, b.new_tokens, "{tag}");
+                assert_eq!(a.reused_tokens, b.reused_tokens, "{tag}");
+                assert_eq!(a.drafts, b.drafts, "{tag}");
+                assert_eq!(a.prefix_tokens, b.prefix_tokens, "{tag}");
+                assert_eq!(a.full_reuses, b.full_reuses, "{tag}");
+                assert_eq!(a.shard_device_calls.len(), shards, "{tag}");
+            }
+            if shards == 1 {
+                ps1 = ps;
             }
         }
-        for (epoch, (a, b)) in ps.iter().zip(&ts).enumerate() {
-            assert_eq!(a.new_tokens, b.new_tokens, "{variant:?} epoch {epoch}");
-            assert_eq!(a.reused_tokens, b.reused_tokens, "{variant:?} epoch {epoch}");
-            assert_eq!(a.drafts, b.drafts, "{variant:?} epoch {epoch}");
-            assert_eq!(a.prefix_tokens, b.prefix_tokens, "{variant:?} epoch {epoch}");
-            assert_eq!(a.full_reuses, b.full_reuses, "{variant:?} epoch {epoch}");
-        }
-        // sanity: draft-bearing variants actually drafted once warm
-        // (Delayed needs two cache generations before `previous` exists)
+        // sanity on the single-shard run: draft-bearing variants actually
+        // drafted once warm (Delayed needs two cache generations before
+        // `previous` exists)
+        let ps = ps1;
         match variant {
             ReuseVariant::Off => assert_eq!(ps[1].drafts + ps[2].drafts, 0),
             ReuseVariant::Delayed => {
@@ -318,6 +345,7 @@ fn pipeline_matches_two_phase_at_full_acceptance_boundary() {
     // is pure reuse (terminal drafts) on both paths.
     let m = MockEngine::new(3, P, T, V);
     let blob = m.blob();
+    let mut pool = EnginePool::single(&m, "mock").unwrap();
     let mut eng = RolloutEngine::new(&m, "mock").unwrap();
     let mut a = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.0));
     let mut b = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.0));
@@ -326,7 +354,7 @@ fn pipeline_matches_two_phase_at_full_acceptance_boundary() {
     let mut rng_b = Rng::new(5);
     for epoch in 0..2 {
         let (ra, sa) = a
-            .collect(&mut eng, &blob, &pipe_requests(), SampleCfg::default(), &mut rng_a, &mut timer)
+            .collect(&mut pool, &[&blob], &pipe_requests(), SampleCfg::default(), &mut rng_a, &mut timer)
             .unwrap();
         let (rb, sb) = b
             .run_two_phase(&mut eng, &blob, &pipe_requests(), SampleCfg::default(), &mut rng_b, &mut timer)
@@ -364,12 +392,14 @@ fn pipeline_uses_fewer_device_calls_than_two_phase() {
     };
 
     // pipeline path: epoch 0 (cold) then drafted epoch 1 under counters
+    let mut pool = EnginePool::single(&m, "mock").unwrap();
     let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(-0.4));
     let mut rng = Rng::new(13);
-    spec.collect(&mut eng, &blob, &reqs, SampleCfg::default(), &mut rng, &mut timer).unwrap();
+    spec.collect(&mut pool, &[&blob], &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
     m.reset_counters();
     let (pipe_res, pipe_stats) = spec
-        .collect(&mut eng, &blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .collect(&mut pool, &[&blob], &reqs, SampleCfg::default(), &mut rng, &mut timer)
         .unwrap();
     let pipe_calls = count(&m, &["verify", "verify_seat", "decode", "refill"]);
     assert_eq!(pipe_calls, pipe_stats.device_calls(), "{pipe_stats:?}");
@@ -405,6 +435,7 @@ fn pipeline_without_drafts_matches_plain_run() {
     // Off-variant epoch 0 degenerates to the decode-only scheduler.
     let m = no_eos_engine();
     let blob = m.blob();
+    let mut pool = EnginePool::single(&m, "mock").unwrap();
     let mut eng = RolloutEngine::new(&m, "mock").unwrap();
     let mut timer = StageTimer::new();
 
@@ -414,7 +445,7 @@ fn pipeline_without_drafts_matches_plain_run() {
         .collect();
     let mut rng = Rng::new(3);
     let (via_spec, s) = spec
-        .collect(&mut eng, &blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .collect(&mut pool, &[&blob], &reqs, SampleCfg::default(), &mut rng, &mut timer)
         .unwrap();
     assert_eq!(s.verify_calls, 0);
     assert_eq!(s.drafts, 0);
@@ -428,6 +459,141 @@ fn pipeline_without_drafts_matches_plain_run() {
     for (x, y) in via_spec.iter().zip(&plain) {
         assert_eq!((x.id, &x.response, &x.logps), (y.id, &y.response, &y.logps));
     }
+}
+
+// ---------------------------------------------------------------------------
+// sharded pool vs single engine
+// ---------------------------------------------------------------------------
+
+/// The skewed 40-draft acceptance workload (same shape as `bench_shards`).
+fn sharded_requests() -> Vec<RolloutRequest> {
+    (0..40)
+        .map(|i| RolloutRequest {
+            id: i,
+            prompt: vec![BOS, 3 + (i as i32 % 9), 4 + (i as i32 % 7)],
+        })
+        .collect()
+}
+
+#[test]
+fn sharding_strictly_reduces_per_engine_device_calls() {
+    // 40 drafted tasks over B=4 slots per shard: as the pool grows, the
+    // busiest engine's verify+decode+refill total (the critical path on
+    // real hardware, where shards run concurrently) must strictly shrink,
+    // while outputs stay byte-identical to the single-engine run.
+    let reqs = sharded_requests();
+    let mut baseline: Option<Vec<SeqResult>> = None;
+    let mut prev_max = usize::MAX;
+    for shards in [1usize, 2, 4] {
+        let mocks = MockEngine::replicas(shards, 4, P, T, V);
+        let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(-0.4));
+        let mut rng = Rng::new(13);
+        let mut timer = StageTimer::new();
+
+        // epoch 0 (cold) fills the cache; epoch 1 is the measured,
+        // fully-drafted step
+        spec.collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+            .unwrap();
+        for m in &mocks {
+            m.reset_counters();
+        }
+        let (res, stats) = spec
+            .collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+            .unwrap();
+
+        // per-shard telemetry matches each engine's own counters
+        let per_engine: Vec<usize> = mocks.iter().map(|m| m.device_calls()).collect();
+        assert_eq!(stats.shard_device_calls, per_engine, "shards={shards}");
+        assert_eq!(stats.device_calls(), per_engine.iter().sum::<usize>());
+        assert!(
+            per_engine.iter().all(|&c| c > 0),
+            "idle shard on a 40-draft step: {per_engine:?}"
+        );
+
+        // byte-identical outputs regardless of shard count
+        match &baseline {
+            None => baseline = Some(res),
+            Some(base) => {
+                assert_eq!(base.len(), res.len());
+                for (a, b) in base.iter().zip(&res) {
+                    assert_eq!(
+                        (a.id, &a.response, &a.logps),
+                        (b.id, &b.response, &b.logps),
+                        "shards={shards}"
+                    );
+                }
+            }
+        }
+
+        let max = *per_engine.iter().max().unwrap();
+        assert!(max < prev_max, "shards={shards}: busiest engine {max} !< {prev_max}");
+        prev_max = max;
+    }
+}
+
+/// Observable cache state after a budgeted run: (surviving latest ids,
+/// surviving previous ids, cumulative eviction stats, total tokens,
+/// summed per-step eviction counters from PipelineStats).
+type CacheTrace = (Vec<usize>, Vec<usize>, (u64, u64), usize, (usize, usize));
+
+/// Drive `epochs` budgeted steps under `shards` shards; the budget must
+/// hold after every step.
+fn drive_budgeted(shards: usize, budget: usize, epochs: usize) -> CacheTrace {
+    let mocks = MockEngine::replicas(shards, 4, P, T, V);
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(-0.4))
+        .with_cache_budget(Some(budget));
+    let mut rng = Rng::new(5);
+    let mut timer = StageTimer::new();
+    let mut step_evictions = 0usize;
+    let mut step_evicted_tokens = 0usize;
+    for _ in 0..epochs {
+        let (_, s) = spec
+            .collect(&mut pool, &blob_refs, &pipe_requests(), SampleCfg::default(), &mut rng, &mut timer)
+            .unwrap();
+        step_evictions += s.cache_evictions;
+        step_evicted_tokens += s.cache_evicted_tokens;
+        assert!(
+            spec.cache.total_tokens() <= budget,
+            "budget violated under {shards} shards: {} > {budget}",
+            spec.cache.total_tokens()
+        );
+    }
+    let latest: Vec<usize> = (0..11).filter(|&id| spec.cache.latest(id).is_some()).collect();
+    let previous: Vec<usize> =
+        (0..11).filter(|&id| spec.cache.previous(id).is_some()).collect();
+    (latest, previous, spec.cache.eviction_stats(), spec.cache.total_tokens(), (step_evictions, step_evicted_tokens))
+}
+
+#[test]
+fn cache_budget_is_global_and_shard_count_invariant() {
+    // The pool merges results before the single shared RolloutCache
+    // refreshes, so the `spec.cache_budget` token budget binds globally —
+    // N shards never hold N budgets — and the eviction sequence (and the
+    // per-step counters surfaced through PipelineStats) must match the
+    // single-engine run exactly.
+    let budget = 48;
+    let single = drive_budgeted(1, budget, 3);
+    let sharded = drive_budgeted(2, budget, 3);
+    assert_eq!(single, sharded, "cache evolution must be shard-count-invariant");
+
+    let (latest, previous, (evictions, evicted_tokens), total, (se, st)) = single;
+    assert!(evictions > 0, "budget {budget} must bind on this workload");
+    assert_eq!(evictions as usize, se, "PipelineStats must aggregate every eviction");
+    assert_eq!(evicted_tokens as usize, st);
+    // Oldest-version-first: the `previous` tier drains before any `latest`
+    // entry is touched, so surviving previous entries and evicted latest
+    // entries cannot coexist.
+    assert!(
+        previous.is_empty() || latest.len() == 11,
+        "previous {previous:?} survived while latest entries were evicted ({latest:?})"
+    );
+    assert!(total <= budget);
 }
 
 #[test]
