@@ -17,10 +17,11 @@ use spec_rl::tokenizer::{Tokenizer, BOS};
 use spec_rl::util::{logging, Rng, StageTimer};
 
 /// Part 1 — `rollout.shards = 2` on mock replicas: the `EnginePool`
-/// spills one step's work across two slot pools (LPT placement; see
-/// ARCHITECTURE.md, "Sharding and placement") and, because sampling and
-/// verification use per-task RNG streams (ARCHITECTURE.md, "RNG-stream
-/// contract"), the outputs are byte-identical to a single-engine run.
+/// drives one step's work across two slot pools pulling from one shared
+/// steal-queue (LPT-first, mid-step included; see ARCHITECTURE.md §7,
+/// "Placement, stealing, and the pinning invariant") and, because
+/// sampling and verification use per-task RNG streams (ARCHITECTURE.md
+/// §6), the outputs are byte-identical to a single-engine run.
 fn sharded_mock_demo() -> Result<()> {
     println!("== part 1: rollout.shards = 2 over mock replicas ==");
     // Two identically-provisioned engines — in production each would be
@@ -31,10 +32,18 @@ fn sharded_mock_demo() -> Result<()> {
     let blob_refs: Vec<_> = blobs.iter().collect();
     let mut pool = EnginePool::new(shards.iter(), "mock")?;
 
-    let reqs: Vec<RolloutRequest> = (0..12)
+    // 20 sequences over 2x8 slots: the 4-task tail beyond the initial
+    // seats drains through the shared steal-queue mid-step.
+    let reqs: Vec<RolloutRequest> = (0..20)
         .map(|i| RolloutRequest { id: i, prompt: vec![BOS, 3 + (i as i32 % 9), 5] })
         .collect();
-    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
+    // `spec.cache_budget` (config) / `with_cache_budget` (API) caps the
+    // rollout cache in *tokens*; past it, oldest-version entries are
+    // evicted before any latest entry (ARCHITECTURE.md §8). Deliberately
+    // tight here so the budget can bind on a 20-sequence demo — size a
+    // real run from the `cache_tokens` CSV column (ARCHITECTURE.md §10).
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5))
+        .with_cache_budget(Some(48));
     let mut rng = Rng::new(42);
     let mut timer = StageTimer::new();
 
@@ -55,10 +64,13 @@ fn sharded_mock_demo() -> Result<()> {
     );
     // Per-shard PipelineStats: device_calls() per engine — on real
     // hardware the shards run concurrently, so the busiest engine is the
-    // step's critical path.
+    // step's critical path. `steal_count` is how much of the step's tail
+    // drained through the shared steal-queue to whichever engine had free
+    // slots (ARCHITECTURE.md §7) instead of queueing behind one shard.
     for (shard, calls) in s1.shard_device_calls.iter().enumerate() {
         println!("  shard {shard}: {calls} device calls (verify_seat + decode + refill)");
     }
+    println!("  work stolen mid-step: {} items", s1.steal_count);
     for (shard, m) in shards.iter().enumerate() {
         println!(
             "  shard {shard} counters: {} total entry calls, {} uploads",
@@ -66,6 +78,15 @@ fn sharded_mock_demo() -> Result<()> {
             m.counters().uploads.len()
         );
     }
+    // Cache telemetry from the same merged report: the token budget binds
+    // globally across shards (one cache, one budget), and every eviction
+    // it forces is surfaced per step.
+    println!(
+        "  cache: {} tokens held, {} entries evicted this step ({} tokens freed)",
+        spec.cache.total_tokens(),
+        s1.cache_evictions,
+        s1.cache_evicted_tokens
+    );
     Ok(())
 }
 

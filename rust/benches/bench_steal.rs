@@ -1,0 +1,134 @@
+//! Work-stealing bench: the same adversarial stale-draft step under PR 3's
+//! one-pass static placement vs the PR 4 shared steal-queue, at equal
+//! outputs (per-task sampling and verification RNG streams make results
+//! placement-invariant).
+//!
+//! The workload (`benchkit::stale`) is the static-placement worst case:
+//! 40 same-length drafts (the LPT estimate is uninformative, so one-pass
+//! placement degenerates to round-robin by id) where every 4th draft is
+//! stale — rejected at ~offset 0, re-decoding its whole response — and
+//! staleness is id-correlated, so static placement pins *every* expensive
+//! draft to shard 0. `eos_bias = 0` makes realized lengths deterministic.
+//! Asserts, for `shards ∈ {2, 4}`: byte-identical outputs, a strictly
+//! lower busiest-engine device-call total under stealing (`shard_calls_max`
+//! is the step's critical path when shards run on their own devices), and
+//! `steal_count > 0`. Writes `BENCH_steal.json` for machine diffing / the
+//! CI smoke run.
+
+use spec_rl::benchkit::drafted::{B, LOG_LENIENCE, P, SEED, T, V};
+use spec_rl::benchkit::{fmt_secs, stale, Bench, JsonReport};
+use spec_rl::rollout::{EnginePool, Placement, SampleCfg, SeqResult};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::util::{Rng, StageTimer};
+
+/// Draft length: identical for every task, so the placement estimate
+/// carries no information about realized work.
+const DRAFT_LEN: usize = 30;
+
+fn main() {
+    println!(
+        "== steal bench (mock replicas: B={B}/shard T={T}, {} stale-mod-{} drafts, log l={LOG_LENIENCE}) ==",
+        stale::N_TASKS,
+        stale::STALE_MOD,
+    );
+    let bench = Bench::new(1, 8);
+    let mut j = JsonReport::new();
+    j.int("batch_per_shard", B)
+        .int("tasks", stale::N_TASKS)
+        .int("draft_len", DRAFT_LEN)
+        .num("log_lenience", LOG_LENIENCE as f64);
+
+    let mut baseline: Option<Vec<SeqResult>> = None;
+    println!(
+        "\nshards  static max/engine  steal max/engine  steals  steal wall-clock (median)"
+    );
+    for shards in [1usize, 2, 4] {
+        let mut mocks = MockEngine::replicas(shards, B, P, T, V);
+        for m in &mut mocks {
+            // Deterministic full-length tails: every rejected row decodes
+            // exactly to the cap, so the imbalance is structural, not
+            // sampled.
+            m.eos_bias = 0.0;
+        }
+        let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        let cfg = SampleCfg::default();
+        let mut timer = StageTimer::new();
+
+        let mut run = |placement: Placement| {
+            for m in &mocks {
+                m.reset_counters();
+            }
+            let mut spec = stale::warmed(stale::N_TASKS, DRAFT_LEN, V, LOG_LENIENCE)
+                .with_placement(placement);
+            let mut rng = Rng::new(SEED);
+            let reqs = stale::requests(stale::N_TASKS, V);
+            let (res, stats) =
+                spec.collect(&mut pool, &blob_refs, &reqs, cfg, &mut rng, &mut timer).unwrap();
+            let per_engine: Vec<usize> = mocks.iter().map(|m| m.device_calls()).collect();
+            assert_eq!(stats.shard_device_calls, per_engine, "telemetry must match counters");
+            (res, stats, per_engine)
+        };
+
+        let (static_res, _static_stats, static_calls) = run(Placement::Static);
+        let (steal_res, steal_stats, steal_calls) = run(Placement::Steal);
+
+        // outputs must be byte-identical across placements AND shard counts
+        // (length first: zip alone would pass on a truncated result set)
+        assert_eq!(static_res.len(), stale::N_TASKS, "static run dropped results");
+        assert_eq!(steal_res.len(), stale::N_TASKS, "steal run dropped results");
+        for (a, b) in static_res.iter().zip(&steal_res) {
+            assert_eq!((a.id, &a.response), (b.id, &b.response), "placement changed outputs");
+            assert_eq!(a.logps, b.logps, "placement changed logps");
+        }
+        match &baseline {
+            None => baseline = Some(steal_res),
+            Some(base) => {
+                assert_eq!(base.len(), steal_res.len(), "shard count changed result count");
+                for (a, b) in base.iter().zip(&steal_res) {
+                    assert_eq!((a.id, &a.response), (b.id, &b.response), "shard count leaked");
+                    assert_eq!(a.logps, b.logps, "shard count leaked into logps");
+                }
+            }
+        }
+
+        let static_max = *static_calls.iter().max().unwrap();
+        let steal_max = *steal_calls.iter().max().unwrap();
+        if shards > 1 {
+            assert!(
+                steal_max < static_max,
+                "{shards} shards: stealing must strictly tighten the critical path \
+                 ({steal_max} !< {static_max})"
+            );
+            assert!(steal_stats.steal_count > 0, "no steals on the adversarial tail");
+        } else {
+            assert_eq!(steal_max, static_max, "one shard: the disciplines coincide");
+            assert_eq!(steal_stats.steal_count, 0, "a lone engine cannot steal");
+        }
+
+        let r_time = bench.run(&format!("steal pipeline over {shards} shard(s)"), || {
+            let mut spec = stale::warmed(stale::N_TASKS, DRAFT_LEN, V, LOG_LENIENCE);
+            let mut rng = Rng::new(SEED);
+            let reqs = stale::requests(stale::N_TASKS, V);
+            spec.collect(&mut pool, &blob_refs, &reqs, cfg, &mut rng, &mut timer).unwrap()
+        });
+
+        println!(
+            "{shards:>6}  {static_max:>17}  {steal_max:>16}  {:>6}  {:>25}",
+            steal_stats.steal_count,
+            fmt_secs(r_time.median_secs)
+        );
+        j.int(&format!("s{shards}_static_calls_max_per_engine"), static_max)
+            .int(&format!("s{shards}_steal_calls_max_per_engine"), steal_max)
+            .int(&format!("s{shards}_static_calls_total"), static_calls.iter().sum())
+            .int(&format!("s{shards}_steal_calls_total"), steal_calls.iter().sum())
+            .int(&format!("s{shards}_steal_count"), steal_stats.steal_count)
+            .bench(&format!("s{shards}"), &r_time);
+    }
+
+    println!("\n{}", j.render());
+    if let Err(e) = j.save("BENCH_steal.json") {
+        eprintln!("could not write BENCH_steal.json: {e}");
+    }
+}

@@ -66,6 +66,74 @@ pub mod drafted {
     }
 }
 
+/// The adversarial **stale-draft** workload: the one-pass placement
+/// worst case `bench_steal` and the steal tests share.
+///
+/// Every draft has the *same* length, so the LPT estimate
+/// (`gen_len - draft_len`) is uninformative and PR 3's static placement
+/// degenerates to deterministic round-robin by id. Every 4th draft is
+/// **stale** — its recorded log-probs claim `p_prev = 1`, so lenient
+/// verification rejects it at ~offset 0 and the row re-decodes its whole
+/// response — while the rest are **fresh** (log-probs claim a tiny
+/// `p_prev`, so the draft body is fully accepted and only the tail
+/// re-decodes). Because staleness is id-correlated (`id % 4 == 0`),
+/// static placement pins *all* expensive drafts to shard 0 at `shards ∈
+/// {2, 4}`; the steal-queue drains them to whichever engine has free
+/// slots. Run it on `eos_bias = 0` replicas so realized lengths are
+/// deterministic (every rejected row decodes exactly to the cap).
+pub mod stale {
+    use crate::spec::{CacheEntry, Lenience, ReuseVariant, RolloutRequest, SpecRollout};
+    use crate::tokenizer::{BOS, EOS};
+
+    /// Drafted tasks per step (over 4x-the-slot-count queues the tail
+    /// that stealing redistributes).
+    pub const N_TASKS: usize = 40;
+    /// Every 4th draft is stale.
+    pub const STALE_MOD: usize = 4;
+
+    /// One step's request batch (prompts stay inside `vocab`).
+    pub fn requests(n: usize, vocab: usize) -> Vec<RolloutRequest> {
+        (0..n)
+            .map(|i| RolloutRequest {
+                id: i,
+                prompt: vec![BOS, 3 + (i % (vocab - 3)) as i32, 4 + (i % 7) as i32],
+            })
+            .collect()
+    }
+
+    /// The crafted cache entries: `len`-token drafts, every
+    /// [`STALE_MOD`]th stale (`logps = 0.0` ⇒ rejected at ~0), the rest
+    /// fresh (`logps = -50.0` ⇒ body accepted; the EOS tail re-decodes).
+    pub fn entries(n: usize, len: usize, vocab: usize) -> Vec<(usize, CacheEntry)> {
+        assert!(len >= 2, "stale entries need at least 2 tokens");
+        (0..n)
+            .map(|i| {
+                let is_stale = i % STALE_MOD == 0;
+                let mut response: Vec<i32> =
+                    (0..len - 1).map(|j| 3 + ((i + j) % (vocab - 3)) as i32).collect();
+                response.push(if is_stale { 3 + (i % (vocab - 3)) as i32 } else { EOS });
+                let lp = if is_stale { 0.0 } else { -50.0 };
+                let entry = CacheEntry {
+                    logps: vec![lp; response.len()],
+                    response,
+                    version: 0,
+                    finished: !is_stale,
+                };
+                (i, entry)
+            })
+            .collect()
+    }
+
+    /// A [`SpecRollout`] whose cache holds the crafted drafts, so the
+    /// next `collect` is exactly one fully-drafted adversarial step.
+    pub fn warmed(n: usize, len: usize, vocab: usize, log_lenience: f32) -> SpecRollout {
+        let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(log_lenience));
+        spec.cache.insert_batch(entries(n, len, vocab));
+        spec.step = 1;
+        spec
+    }
+}
+
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {

@@ -43,6 +43,12 @@ pub struct RunConfig {
     /// Rollout-cache token budget (0 = unbounded). Past it, oldest-version
     /// entries are evicted (see `spec::cache`).
     pub cache_budget_tokens: usize,
+    /// Adaptive verify seating (`spec.verify_seat_min`, default 1): seat a
+    /// packed `verify_seat` sub-batch only when at least this many slots
+    /// are free (clamped to the bundle batch). 1 = seat eagerly; larger
+    /// values trade verify latency for fuller sub-batches. Results are
+    /// identical for every value.
+    pub verify_seat_min: usize,
 
     // -- evaluation ---------------------------------------------------------------
     pub eval_every: usize,
@@ -78,6 +84,7 @@ impl Default for RunConfig {
             variant: ReuseVariant::Spec,
             lenience: Lenience::Fixed(0.5),
             cache_budget_tokens: 0,
+            verify_seat_min: 1,
             eval_every: 5,
             eval_n: 32,
             eval_samples_hard: 4,
@@ -130,6 +137,7 @@ impl RunConfig {
                 Lenience::parse(v).with_context(|| format!("bad lenience '{v}'"))?;
         }
         c.cache_budget_tokens = doc.usize_or("spec.cache_budget", c.cache_budget_tokens);
+        c.verify_seat_min = doc.usize_or("spec.verify_seat_min", c.verify_seat_min);
         c.params.lr = doc.f64_or("train.lr", c.params.lr as f64) as f32;
         c.params.critic_lr = doc.f64_or("train.critic_lr", c.params.critic_lr as f64) as f32;
         c.params.kl_coef = doc.f64_or("train.kl_coef", c.params.kl_coef as f64) as f32;
@@ -157,6 +165,7 @@ impl RunConfig {
         anyhow::ensure!(self.temperature > 0.0, "temperature must be > 0");
         anyhow::ensure!((0.0..=1.0).contains(&self.top_p), "top_p in (0, 1]");
         anyhow::ensure!(self.rollout_shards >= 1, "rollout.shards must be >= 1");
+        anyhow::ensure!(self.verify_seat_min >= 1, "spec.verify_seat_min must be >= 1");
         Ok(())
     }
 }
@@ -199,6 +208,16 @@ mod tests {
         assert_eq!(RunConfig::default().rollout_shards, 1, "single engine by default");
         let doc = ConfigDoc::parse("[rollout]\nshards = 0").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err(), "zero shards rejected");
+    }
+
+    #[test]
+    fn verify_seat_min_parses_and_validates() {
+        let doc = ConfigDoc::parse("[spec]\nverify_seat_min = 4").unwrap();
+        let c = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.verify_seat_min, 4);
+        assert_eq!(RunConfig::default().verify_seat_min, 1, "eager seating by default");
+        let doc = ConfigDoc::parse("[spec]\nverify_seat_min = 0").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err(), "zero seat-min rejected");
     }
 
     #[test]

@@ -19,18 +19,21 @@
 //! calls.
 //!
 //! Quick tour: [`trainer::Trainer`] drives steps; [`rollout::EnginePool`]
-//! places each step's work across one or more [`rollout::RolloutEngine`]s
-//! (the sharded slot pool); [`spec::SpecRollout`] wraps generation with
-//! draft-and-verify reuse; [`algo`] turns rewards into updates; [`tasks`]
-//! provides the synthetic verifiable-math environment standing in for
-//! DeepMath (see DESIGN.md for the substitution table).
+//! drives each step's work across one or more [`rollout::RolloutEngine`]s
+//! pulling from one shared [`rollout::WorkQueue`] (the mid-step
+//! steal-queue over sharded slot pools); [`spec::SpecRollout`] wraps
+//! generation with draft-and-verify reuse; [`algo`] turns rewards into
+//! updates; [`tasks`] provides the synthetic verifiable-math environment
+//! standing in for DeepMath (see DESIGN.md for the substitution table).
 //!
 //! The load-bearing invariants — the gen-blob layout, the
 //! `Draft -> Verify -> Decode -> Done` lifecycle, the inert-slot and
 //! packing-invariance (per-task RNG stream) contracts, and the
-//! sharding/placement rules — are specified in `ARCHITECTURE.md` at the
-//! repository root; every backend and every scheduler change must
-//! preserve them (`rust/tests/sched_continuous.rs` pins them down).
+//! placement/stealing rules (lifecycle pinning) — are specified in
+//! `ARCHITECTURE.md` at the repository root; every backend and every
+//! scheduler change must preserve them (`rust/tests/sched_continuous.rs`
+//! pins them down, and `rust/tests/doc_links.rs` keeps the book's `§`
+//! anchors honest).
 
 pub mod algo;
 pub mod benchkit;

@@ -8,6 +8,16 @@
 //! separate refill forward for verified rows (the verify forward's KV is
 //! reused in place; see `rollout/sched.rs` for the entry contract).
 //!
+//! The pipeline is a resumable state machine (PR 4):
+//! [`RolloutEngine::pipeline_start`] seats the initial work and returns a
+//! [`PipelineRun`], and [`RolloutEngine::pipeline_step`] advances it one
+//! decode round at a time, pulling replacement work from a caller-supplied
+//! [`WorkQueue`] whenever slots free up. `run_pipeline` is the one-engine
+//! driver (private queue); [`crate::rollout::pool::EnginePool`] interleaves
+//! the same steps across N engines over one *shared* queue, which is what
+//! makes mid-step work stealing possible without ever migrating a seated
+//! row.
+//!
 //! [`RolloutEngine::run`] is the decode-only subset (no drafts) used by
 //! evaluation and the scheduler benches; [`RolloutEngine::run_lockstep`]
 //! preserves the old wave discipline — same results, more decode steps —
@@ -33,7 +43,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::batch::{BatchLayout, SeqResult, SeqTask};
-use super::sched::SlotScheduler;
+use super::sched::{SlotScheduler, WorkQueue};
 use crate::runtime::{Backend, Engine};
 use crate::spec::verifier::{VerifyPlanner, VerifyTask};
 use crate::tokenizer::EOS;
@@ -69,6 +79,11 @@ pub struct PipelineStats {
     pub full_reuse_ratio: f64,
     /// `verify` / `verify_seat` executable invocations.
     pub verify_calls: usize,
+    /// Work items (tasks or drafts) a shard pulled from the shared
+    /// steal-queue *after* the pool's initial seating pass — i.e. work
+    /// that one-pass placement would have pinned to a single engine up
+    /// front. Always 0 for single-engine runs and static placement.
+    pub steal_count: usize,
     /// Rollout-cache entries evicted by the token budget this step.
     pub cache_evictions: usize,
     /// Tokens freed by those evictions.
@@ -119,6 +134,7 @@ impl PipelineStats {
         self.prefix_tokens += o.prefix_tokens;
         self.full_reuses += o.full_reuses;
         self.verify_calls += o.verify_calls;
+        self.steal_count += o.steal_count;
         self.cache_evictions += o.cache_evictions;
         self.cache_evicted_tokens += o.cache_evicted_tokens;
         if self.shard_device_calls.len() < o.shard_device_calls.len() {
@@ -133,16 +149,23 @@ impl PipelineStats {
 /// Back-compat name for the decode-side view of the merged report.
 pub type RolloutStats = PipelineStats;
 
-/// Sampling configuration.
+/// Per-run sampling + seating configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct SampleCfg {
     pub temperature: f32,
     pub top_p: f32,
+    /// Adaptive verify seating (`spec.verify_seat_min`): a packed
+    /// `verify_seat` sub-batch is seated only when at least this many
+    /// slots are free (clamped into `[1, batch]`; 1 = seat eagerly, the
+    /// pre-PR 4 behavior). Larger values trade verify latency for packing
+    /// — fewer, fuller `verify_seat` calls. Results are byte-identical
+    /// for every value (per-task RNG streams; `ARCHITECTURE.md` §6).
+    pub verify_seat_min: usize,
 }
 
 impl Default for SampleCfg {
     fn default() -> Self {
-        SampleCfg { temperature: 1.0, top_p: 1.0 }
+        SampleCfg { temperature: 1.0, top_p: 1.0, verify_seat_min: 1 }
     }
 }
 
@@ -169,6 +192,49 @@ impl SlotState {
             reused: task.prefix.len(),
             logps: task.prefix_logps,
         }
+    }
+}
+
+/// The resumable state of one engine's pipeline run (PR 4): slot phases,
+/// live occupants, the device generation blob, and the per-shard results
+/// and stats accumulated so far. Produced by
+/// [`RolloutEngine::pipeline_start`], advanced by
+/// [`RolloutEngine::pipeline_step`], consumed by
+/// [`PipelineRun::into_parts`].
+///
+/// The work a run draws on lives *outside* it, in the caller's
+/// [`WorkQueue`] — that separation is what lets
+/// [`crate::rollout::pool::EnginePool`] drive N runs round-robin over one
+/// shared queue (mid-step work stealing) while each run's seated rows stay
+/// pinned to its engine.
+pub struct PipelineRun<B: Backend = Engine> {
+    sched: SlotScheduler,
+    slots: Vec<Option<SlotState>>,
+    verifying: Vec<Option<VerifyTask>>,
+    /// Device generation blob (`None` only for a run that started with
+    /// nothing to do and made no device calls).
+    gen: Option<B::Buf>,
+    /// Uploaded log-lenience scalar, reused by every verify-seat call.
+    ll: Option<B::Buf>,
+    cfg: SampleCfg,
+    vnonce: u64,
+    rnonce: u64,
+    stats: PipelineStats,
+    results: Vec<SeqResult>,
+    done: bool,
+}
+
+impl<B: Backend> PipelineRun<B> {
+    /// All seated rows finished and the queue had nothing left for this
+    /// engine at the last check. (With a shared queue, a done run stays
+    /// done: the queue only ever drains within a step.)
+    pub fn done(&self) -> bool {
+        self.done
+    }
+
+    /// Tear down into (unsorted results, this engine's stats).
+    pub fn into_parts(self) -> (Vec<SeqResult>, PipelineStats) {
+        (self.results, self.stats)
     }
 }
 
@@ -252,8 +318,10 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
     }
 
     /// Pull fully-reused terminal drafts straight into results; return the
-    /// tasks that actually need decode slots.
-    fn split_terminal(
+    /// tasks that actually need decode slots. The pool driver calls this
+    /// once before building the shared queue — every queued item needs a
+    /// slot somewhere.
+    pub(crate) fn split_terminal(
         &self,
         tasks: Vec<SeqTask>,
         results: &mut Vec<SeqResult>,
@@ -405,20 +473,25 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         Ok(gen)
     }
 
-    /// Re-seat freed slots from the decode queue via the masked `refill`
-    /// entry (several rows per call), arming their slot state. Runs after
-    /// the decode step so refill probs are the freshest state for the next
-    /// sampling round. No-op when no slot is free or the queue is drained.
+    /// Re-seat freed slots from the queue's decode lane via the masked
+    /// `refill` entry (several rows per call), arming their slot state.
+    /// Runs after the decode step so refill probs are the freshest state
+    /// for the next sampling round. No-op when no slot is free or the
+    /// lane is drained. With a shared queue this is the steal point for
+    /// decode work: whichever engine frees a slot first pulls the next
+    /// task, never a row seated elsewhere.
+    #[allow(clippy::too_many_arguments)]
     fn refill_slots(
         &mut self,
         sched: &mut SlotScheduler,
         slots: &mut [Option<SlotState>],
+        queue: &mut WorkQueue,
         run_nonce: u64,
         blob: &B::Buf,
         gen: &mut B::Buf,
         stats: &mut PipelineStats,
     ) -> Result<()> {
-        let fills = sched.fill();
+        let fills = sched.fill(queue);
         if fills.is_empty() {
             return Ok(());
         }
@@ -498,15 +571,19 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         Ok((accepted, calls))
     }
 
-    /// Seat pending drafts into free slots via one packed `verify_seat`
+    /// Seat queued drafts into free slots via one packed `verify_seat`
     /// call (verify + KV seat, no separate refill forward). Rows seated
     /// here stay in the Verify phase until `resolve_verified` reads their
-    /// rejection offsets from the aux lane.
+    /// rejection offsets from the aux lane. Seating is adaptive
+    /// (`seat_min`, see [`SampleCfg::verify_seat_min`]) and, with a shared
+    /// queue, this is the steal point for draft work.
     #[allow(clippy::too_many_arguments)]
     fn seat_drafts(
         &mut self,
         sched: &mut SlotScheduler,
         verifying: &mut [Option<VerifyTask>],
+        queue: &mut WorkQueue,
+        seat_min: usize,
         blob: &B::Buf,
         gen: &mut B::Buf,
         vnonce: u64,
@@ -514,7 +591,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         stats: &mut PipelineStats,
         timer: &mut StageTimer,
     ) -> Result<()> {
-        let vfills = sched.fill_verify();
+        let vfills = sched.fill_verify(queue, seat_min);
         if vfills.is_empty() {
             return Ok(());
         }
@@ -627,14 +704,15 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         }
 
         let b = self.batch;
-        let mut sched = SlotScheduler::new(b, pending);
+        let mut queue = WorkQueue::tasks_only(pending);
+        let mut sched = SlotScheduler::new(b);
         let mut slots: Vec<Option<SlotState>> = (0..b).map(|_| None).collect();
         self.ensure_temp(cfg.temperature)?;
 
         // --- initial fill + prefill -------------------------------------
         let span = Instant::now();
         self.layout.clear();
-        for (slot, task) in sched.fill() {
+        for (slot, task) in sched.fill(&mut queue) {
             self.layout.set_row(slot, &task.prompt, &task.prefix);
             slots[slot] = Some(SlotState::new(task, run_nonce));
         }
@@ -655,9 +733,11 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             }
 
             // 3. refill freed slots
-            self.refill_slots(&mut sched, &mut slots, run_nonce, blob, &mut gen, &mut stats)?;
+            self.refill_slots(
+                &mut sched, &mut slots, &mut queue, run_nonce, blob, &mut gen, &mut stats,
+            )?;
 
-            if sched.is_done() {
+            if sched.is_done(&queue) {
                 timer.add("rollout", span.elapsed().as_secs_f64());
                 break;
             }
@@ -679,6 +759,12 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
     /// sampling and verification streams), with strictly fewer device
     /// calls on draft-bearing workloads: verified rows never pay a refill
     /// forward, and the blocking verify wave disappears.
+    ///
+    /// This is the one-engine driver over the stepwise core
+    /// ([`RolloutEngine::pipeline_start`] / [`RolloutEngine::pipeline_step`])
+    /// with a private [`WorkQueue`]; the sharded driver is
+    /// [`crate::rollout::pool::EnginePool`], which interleaves the same
+    /// steps across N engines over one shared queue.
     #[allow(clippy::too_many_arguments)]
     pub fn run_pipeline(
         &mut self,
@@ -699,73 +785,185 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             return Ok((results, stats));
         }
 
-        let b = self.batch;
-        let mut sched = SlotScheduler::with_drafts(b, pending, drafts);
-        let mut slots: Vec<Option<SlotState>> = (0..b).map(|_| None).collect();
-        let mut verifying: Vec<Option<VerifyTask>> = (0..b).map(|_| None).collect();
-        self.ensure_temp(cfg.temperature)?;
-        let ll_buf = self.eng.upload_f32(&[loglen], &[1])?;
-
-        // --- initial seating: prefill decode-ready rows, verify-seat the
-        //     first drafts into whatever slots remain -----------------------
-        let span = Instant::now();
-        self.layout.clear();
-        for (slot, task) in sched.fill() {
-            self.layout.set_row(slot, &task.prompt, &task.prefix);
-            slots[slot] = Some(SlotState::new(task, rnonce));
+        let mut queue = WorkQueue::new(pending, drafts);
+        let mut run = self.pipeline_start(blob, &mut queue, loglen, cfg, vnonce, rnonce, timer)?;
+        while !run.done() {
+            self.pipeline_step(&mut run, blob, &mut queue, timer)?;
         }
-        let mut gen = self.prefill_layout(blob, &mut stats)?;
-        timer.add("rollout", span.elapsed().as_secs_f64());
-        self.seat_drafts(
-            &mut sched, &mut verifying, blob, &mut gen, vnonce, &ll_buf, &mut stats, timer,
-        )?;
-        let span = Instant::now();
-        self.read_probs(&gen)?;
-        self.resolve_verified(
-            &mut sched, &mut verifying, &mut slots, rnonce, &mut results, &mut stats,
-        );
-        timer.add("rollout", span.elapsed().as_secs_f64());
-
-        // --- pipeline loop ------------------------------------------------
-        while !sched.is_done() {
-            let span = Instant::now();
-            // 1. sample one token for every decoding slot (verify-phase
-            //    rows are inert: their slot_in entries stay out-of-range)
-            let writes =
-                self.sample_round(&mut sched, &mut slots, &mut results, cfg.top_p, &mut stats);
-
-            // 2. advance surviving decode rows
-            if writes > 0 {
-                self.decode_advance(blob, &mut gen, writes, &mut stats)?;
-            }
-
-            // 3. refill freed slots from the decode-ready queue
-            self.refill_slots(&mut sched, &mut slots, rnonce, blob, &mut gen, &mut stats)?;
-            timer.add("rollout", span.elapsed().as_secs_f64());
-
-            // 4. verify-seat more drafts into any slots still free
-            self.seat_drafts(
-                &mut sched, &mut verifying, blob, &mut gen, vnonce, &ll_buf, &mut stats,
-                timer,
-            )?;
-
-            if sched.is_done() {
-                break;
-            }
-            // 5. one readback serves both phases: fresh probs for the next
-            //    sampling round, aux offsets for the rows just seated
-            let span = Instant::now();
-            self.read_probs(&gen)?;
-            self.resolve_verified(
-                &mut sched, &mut verifying, &mut slots, rnonce, &mut results, &mut stats,
-            );
-            timer.add("rollout", span.elapsed().as_secs_f64());
-        }
+        let (r, s) = run.into_parts();
+        results.extend(r);
+        stats.absorb(&s);
 
         let span = Instant::now();
         results.sort_by_key(|r| r.id);
         timer.add("assembly", span.elapsed().as_secs_f64());
         Ok((results, stats))
+    }
+
+    /// Begin a pipeline run on this engine: seat the initial work from
+    /// `queue` (decode fills + prefill, then the first packed verify-seat),
+    /// read the first probs/aux back, and return the resumable
+    /// [`PipelineRun`]. A run that finds neither a decode task nor a draft
+    /// in the queue completes immediately with **zero** device calls — an
+    /// idle shard of an over-provisioned pool costs nothing.
+    ///
+    /// The caller owns the queue: pass a private one for a single-engine
+    /// run, or one shared queue to every shard's `pipeline_start` /
+    /// [`RolloutEngine::pipeline_step`] to get mid-step work stealing (see
+    /// [`crate::rollout::pool::EnginePool`]). Step nonces and `cfg` are
+    /// captured in the run; results are byte-identical however the steps
+    /// of concurrent runs interleave (`ARCHITECTURE.md` §6).
+    #[allow(clippy::too_many_arguments)]
+    pub fn pipeline_start(
+        &mut self,
+        blob: &B::Buf,
+        queue: &mut WorkQueue,
+        loglen: f32,
+        cfg: SampleCfg,
+        vnonce: u64,
+        rnonce: u64,
+        timer: &mut StageTimer,
+    ) -> Result<PipelineRun<B>> {
+        let b = self.batch;
+        let mut run = PipelineRun {
+            sched: SlotScheduler::new(b),
+            slots: (0..b).map(|_| None).collect(),
+            verifying: (0..b).map(|_| None).collect(),
+            gen: None,
+            ll: None,
+            cfg,
+            vnonce,
+            rnonce,
+            stats: PipelineStats::default(),
+            results: Vec::new(),
+            done: false,
+        };
+
+        let span = Instant::now();
+        self.layout.clear();
+        let fills = run.sched.fill(queue);
+        if fills.is_empty() && queue.pending_drafts() == 0 {
+            // Nothing left for this shard: no prefill, no uploads.
+            run.done = true;
+            return Ok(run);
+        }
+        self.ensure_temp(cfg.temperature)?;
+        run.ll = Some(self.eng.upload_f32(&[loglen], &[1])?);
+        for (slot, task) in fills {
+            self.layout.set_row(slot, &task.prompt, &task.prefix);
+            run.slots[slot] = Some(SlotState::new(task, rnonce));
+        }
+        run.gen = Some(self.prefill_layout(blob, &mut run.stats)?);
+        timer.add("rollout", span.elapsed().as_secs_f64());
+
+        self.seat_drafts(
+            &mut run.sched,
+            &mut run.verifying,
+            queue,
+            cfg.verify_seat_min,
+            blob,
+            run.gen.as_mut().expect("gen blob set above"),
+            vnonce,
+            run.ll.as_ref().expect("loglen uploaded above"),
+            &mut run.stats,
+            timer,
+        )?;
+        let span = Instant::now();
+        self.read_probs(run.gen.as_ref().expect("gen blob set above"))?;
+        self.resolve_verified(
+            &mut run.sched,
+            &mut run.verifying,
+            &mut run.slots,
+            rnonce,
+            &mut run.results,
+            &mut run.stats,
+        );
+        timer.add("rollout", span.elapsed().as_secs_f64());
+        run.done = run.sched.is_done(queue);
+        Ok(run)
+    }
+
+    /// Advance a started run by one pipeline round: sample every decoding
+    /// slot, advance survivors one decode step, refill freed slots from
+    /// the queue's task lane, verify-seat queued drafts into slots still
+    /// free (respecting [`SampleCfg::verify_seat_min`]), then read
+    /// probs/aux back and resolve just-verified rows. No-op once the run
+    /// is done. With a shared queue the refill/seat pulls are the steal
+    /// points — this engine picks up work another shard would otherwise
+    /// have queued behind its tail.
+    pub fn pipeline_step(
+        &mut self,
+        run: &mut PipelineRun<B>,
+        blob: &B::Buf,
+        queue: &mut WorkQueue,
+        timer: &mut StageTimer,
+    ) -> Result<()> {
+        if run.done {
+            return Ok(());
+        }
+        let cfg = run.cfg;
+        let span = Instant::now();
+        // 1. sample one token for every decoding slot (verify-phase rows
+        //    are inert: their slot_in entries stay out-of-range)
+        let writes = self.sample_round(
+            &mut run.sched, &mut run.slots, &mut run.results, cfg.top_p, &mut run.stats,
+        );
+
+        // 2. advance surviving decode rows
+        if writes > 0 {
+            self.decode_advance(
+                blob,
+                run.gen.as_mut().expect("started run has a gen blob"),
+                writes,
+                &mut run.stats,
+            )?;
+        }
+
+        // 3. refill freed slots from the queue's decode lane
+        self.refill_slots(
+            &mut run.sched,
+            &mut run.slots,
+            queue,
+            run.rnonce,
+            blob,
+            run.gen.as_mut().expect("started run has a gen blob"),
+            &mut run.stats,
+        )?;
+        timer.add("rollout", span.elapsed().as_secs_f64());
+
+        // 4. verify-seat more drafts into any slots still free
+        self.seat_drafts(
+            &mut run.sched,
+            &mut run.verifying,
+            queue,
+            cfg.verify_seat_min,
+            blob,
+            run.gen.as_mut().expect("started run has a gen blob"),
+            run.vnonce,
+            run.ll.as_ref().expect("started run has a loglen buffer"),
+            &mut run.stats,
+            timer,
+        )?;
+
+        if run.sched.is_done(queue) {
+            run.done = true;
+            return Ok(());
+        }
+        // 5. one readback serves both phases: fresh probs for the next
+        //    sampling round, aux offsets for the rows just seated
+        let span = Instant::now();
+        self.read_probs(run.gen.as_ref().expect("started run has a gen blob"))?;
+        self.resolve_verified(
+            &mut run.sched,
+            &mut run.verifying,
+            &mut run.slots,
+            run.rnonce,
+            &mut run.results,
+            &mut run.stats,
+        );
+        timer.add("rollout", span.elapsed().as_secs_f64());
+        run.done = run.sched.is_done(queue);
+        Ok(())
     }
 
     /// The pre-scheduler wave discipline: tasks bind to slots in waves of

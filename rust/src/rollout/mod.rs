@@ -28,11 +28,14 @@
 //! speedups reachable.
 //!
 //! Above the single-engine pipeline sits [`pool::EnginePool`]: `N`
-//! backends, one slot pool each, with one step's work placed across them
-//! (LPT spill over a shared queue; a row's whole lifecycle is pinned to
-//! one engine so KV never migrates). Per-task sampling and verification
-//! RNG streams make results byte-identical for any shard count — see
-//! `ARCHITECTURE.md` for the full contract set.
+//! backends, one slot pool each, all pulling from one shared
+//! [`sched::WorkQueue`] (the steal-queue): unstarted work drains LPT-first
+//! to whichever engine has free slots, mid-step included, while a row's
+//! whole lifecycle stays pinned to the engine that seated it so KV never
+//! migrates. Per-task sampling and verification RNG streams make results
+//! byte-identical for any shard count, either placement discipline, and
+//! any `verify_seat_min` — see `ARCHITECTURE.md` for the full contract
+//! set.
 //!
 //! Canonical layout (shared with L2): prompts right-aligned into slots
 //! `[0, P)`, responses in `[P, T)`; positional embeddings are logical
@@ -44,6 +47,6 @@ pub mod pool;
 pub mod sched;
 
 pub use batch::{BatchLayout, SeqResult, SeqTask};
-pub use engine::{PipelineStats, RolloutEngine, RolloutStats, SampleCfg};
-pub use pool::EnginePool;
-pub use sched::{SlotPhase, SlotScheduler};
+pub use engine::{PipelineRun, PipelineStats, RolloutEngine, RolloutStats, SampleCfg};
+pub use pool::{EnginePool, Placement};
+pub use sched::{SlotPhase, SlotScheduler, WorkQueue};

@@ -1,54 +1,88 @@
-//! Sharded multi-engine rollout: one slot pool per backend, one pool of
-//! pools.
+//! Sharded multi-engine rollout: one slot pool per backend, one shared
+//! steal-queue across all of them.
 //!
 //! [`EnginePool`] owns `N` [`RolloutEngine`]s, one per [`Backend`]
 //! instance (N [`crate::testing::mock::MockEngine`]s in tests, N AOT
-//! engines in production), and places one step's work across their
-//! per-engine slot pools. It is the layer the ROADMAP's "shard the slot
-//! pool across multiple engines" lever lands in, and the prerequisite for
-//! multi-host pools (see `ARCHITECTURE.md`, "Sharding and placement").
+//! engines in production), and drives one step's work across their
+//! per-engine slot pools. Since PR 4 the pool no longer places work once
+//! at step start: unstarted items stay in one shared [`WorkQueue`] (the
+//! **steal-queue**) and every engine pulls from it — at its initial
+//! seating pass and again whenever a refill pass finds free slots
+//! mid-step. The slowest shard can no longer sit on a private backlog
+//! while its neighbours idle; `bench_steal` pins the busiest engine's
+//! device-call total strictly below one-pass placement on the adversarial
+//! stale-draft workload.
 //!
 //! ## Placement rules
 //!
-//! - **A row's entire lifecycle is pinned to one engine.** Draft →
-//!   Verify → Decode → Done all happen inside the shard the task was
-//!   placed on, so KV never migrates between generation blobs. Placement
-//!   therefore happens once per step, before any engine call.
-//! - **LPT across pools.** The shared pending queue (decode tasks *and*
-//!   drafts) is ordered longest-expected-remainder first — the same
-//!   proxies [`SlotScheduler`](super::SlotScheduler) sorts by within a
-//!   shard: a decode task still needs `gen_len - prefix` tokens, and a
-//!   draft can reuse at most its own length, so short drafts carry the
-//!   longest expected remainder. Each item then spills into the
-//!   least-loaded pool (ties go to the lowest shard index), keeping every
-//!   engine busy until the tail drains instead of letting one shard idle
-//!   on the decode tail.
+//! - **Only never-seated work moves.** The steal-queue holds tasks and
+//!   drafts whose lifecycle has not begun: no KV, no slot, no uniforms
+//!   consumed anywhere. The moment an engine seats an item (prefill,
+//!   `refill`, or `verify_seat`), the row's entire remaining
+//!   `Draft -> Verify -> Decode -> Done` lifecycle is pinned to that
+//!   engine — KV never migrates between generation blobs. Stealing moves
+//!   queue entries, never rows.
+//! - **LPT-first pulls.** The queue keeps decode tasks sorted by
+//!   ascending verified-prefix length and drafts by ascending draft
+//!   length (longest expected remainder first, ties by id — the same
+//!   proxies [`SlotScheduler`](super::SlotScheduler) has always used), so
+//!   every pull — initial or stolen — takes the longest-remaining work
+//!   first. Decode tasks are offered before drafts: those rows can sample
+//!   immediately.
+//! - **Deterministic interleave.** Shards start in index order and then
+//!   step round-robin (shard 0, 1, …, N-1, repeat), so which engine pulls
+//!   which item is a pure function of the inputs — placement is
+//!   reproducible even though it is decided mid-step.
 //! - **Replicas must be interchangeable.** Every backend must serve the
 //!   same bundle geometry (checked at construction) and hold the same
 //!   policy weights (the caller passes one blob per shard); per-row
 //!   independence of probs — the contract every backend already
 //!   guarantees — makes outputs placement-invariant.
 //!
+//! [`Placement::Static`] keeps PR 3's one-pass discipline (estimate
+//! expected remainders, spill LPT-greedy into per-engine queues, never
+//! rebalance) as the measurable baseline and second placement oracle:
+//! outputs must be byte-identical either way, only the device-call split
+//! may differ.
+//!
 //! ## Determinism
 //!
 //! Sampling uses per-task streams (`task_rng(rnonce, id)`) and
 //! verification uses per-task uniform streams (`verify_rng(vnonce, id)`),
 //! so a task's tokens depend only on the step nonces and its id — never on
-//! which shard, slot, or verify sub-batch it lands in. Results are
-//! byte-identical for any shard count, pinned by
-//! `rust/tests/sched_continuous.rs` (`shards ∈ {1, 2, 4}` vs the
-//! `run_two_phase` oracle across all `ReuseVariant`s) and measured by
-//! `bench_shards` (`BENCH_shards.json`).
+//! which shard, slot, or verify sub-batch it lands in, and never on *when*
+//! a shard stole it. Results are byte-identical for any shard count and
+//! either placement, pinned by `rust/tests/sched_continuous.rs`
+//! (`shards ∈ {1, 2, 4}` vs the `run_two_phase` oracle across all
+//! `ReuseVariant`s, plus the steal-vs-static and `verify_seat_min` sweeps)
+//! and measured by `bench_shards` / `bench_steal`.
 
 use anyhow::{ensure, Result};
 
 use super::batch::{SeqResult, SeqTask};
-use super::engine::{PipelineStats, RolloutEngine, SampleCfg};
+use super::engine::{PipelineRun, PipelineStats, RolloutEngine, SampleCfg};
+use super::sched::WorkQueue;
 use crate::runtime::{Backend, Engine};
 use crate::spec::verifier::VerifyTask;
 use crate::util::StageTimer;
 
-/// A pool of per-backend rollout engines behind one placement front-end.
+/// How a pool spreads one step's work across its shards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Placement {
+    /// Shared steal-queue (the default since PR 4): every engine pulls
+    /// LPT-first whenever it has free slots, so realized load balances
+    /// mid-step. `PipelineStats::steal_count` reports the pulls made
+    /// after the initial seating pass.
+    #[default]
+    Steal,
+    /// PR 3's one-pass placement: spill the queue LPT-greedy by
+    /// *estimated* remainder into per-engine private queues at step
+    /// start, never rebalance. Kept as the baseline `bench_steal`
+    /// measures against and as a second placement oracle.
+    Static,
+}
+
+/// A pool of per-backend rollout engines behind one steal-queue front-end.
 ///
 /// Construct it from any iterator of backend references (all serving the
 /// same bundle geometry); [`crate::spec::SpecRollout::collect`] drives it.
@@ -66,8 +100,11 @@ use crate::util::StageTimer;
 /// let blob_refs: Vec<_> = blobs.iter().collect();
 /// let mut pool = EnginePool::new(shards.iter(), "mock").unwrap();
 ///
-/// let reqs: Vec<RolloutRequest> = (0..6)
-///     .map(|i| RolloutRequest { id: i, prompt: vec![BOS, 3 + i as i32] })
+/// // 12 prompts over 2x4 slots: the tail beyond the 8 initial seats
+/// // stays in the shared steal-queue and goes to whichever engine's
+/// // slots free up first.
+/// let reqs: Vec<RolloutRequest> = (0..12)
+///     .map(|i| RolloutRequest { id: i, prompt: vec![BOS, 3 + (i as i32 % 9)] })
 ///     .collect();
 /// let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
 /// let mut rng = Rng::new(7);
@@ -75,14 +112,15 @@ use crate::util::StageTimer;
 /// let (results, stats) = spec
 ///     .collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
 ///     .unwrap();
-/// assert_eq!(results.len(), 6);
+/// assert_eq!(results.len(), 12);
 /// assert_eq!(stats.shard_device_calls.len(), 2, "one device-call total per shard");
+/// assert!(stats.steal_count > 0, "the 4-task tail is stolen mid-step");
 /// ```
 pub struct EnginePool<'e, B: Backend = Engine> {
     shards: Vec<RolloutEngine<'e, B>>,
 }
 
-/// One shard's placed work: (decode-ready tasks, drafts to verify).
+/// One shard's statically-placed work: (decode-ready tasks, drafts).
 type ShardWork = (Vec<SeqTask>, Vec<VerifyTask>);
 
 impl<'e, B: Backend> EnginePool<'e, B> {
@@ -130,10 +168,14 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         &mut self.shards[i]
     }
 
-    /// LPT placement across pools: order the shared queue by descending
-    /// expected remainder (ties by id, so placement is deterministic) and
-    /// spill each item into the least-loaded shard. Terminal drafts cost
-    /// zero — they never occupy a slot wherever they land.
+    /// PR 3's one-pass LPT placement: order the work by descending
+    /// *estimated* remainder (ties by id, so placement is deterministic)
+    /// and spill each item into the least-loaded shard. Terminal drafts
+    /// cost zero — they never occupy a slot wherever they land. The
+    /// estimate is all this pass ever sees: a draft whose acceptance
+    /// collapses at verify time still pays its full re-decode on the
+    /// engine it was pinned to, which is exactly the imbalance the
+    /// steal-queue exists to drain.
     fn place(&self, tasks: Vec<SeqTask>, drafts: Vec<VerifyTask>) -> Vec<ShardWork> {
         enum Item {
             Task(SeqTask),
@@ -172,16 +214,39 @@ impl<'e, B: Backend> EnginePool<'e, B> {
     }
 
     /// Run one step's decode-ready `tasks` and to-verify `drafts` across
-    /// the pool: place (LPT across pools), run each shard's phase-aware
-    /// pipeline with the *same* step nonces, and merge id-sorted results.
-    ///
-    /// `blobs` carries one policy blob per shard (the same buffer repeated
-    /// when the shards share a device, one device-resident copy each when
-    /// they do not). The merged [`PipelineStats`] sums the raw counters
-    /// and records each shard's `device_calls()` in `shard_device_calls`.
+    /// the pool under the default [`Placement::Steal`] discipline. See
+    /// [`EnginePool::run_pipeline_with`].
     #[allow(clippy::too_many_arguments)]
     pub fn run_pipeline(
         &mut self,
+        blobs: &[&B::Buf],
+        tasks: Vec<SeqTask>,
+        drafts: Vec<VerifyTask>,
+        loglen: f32,
+        cfg: SampleCfg,
+        vnonce: u64,
+        rnonce: u64,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
+        self.run_pipeline_with(
+            Placement::Steal, blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, timer,
+        )
+    }
+
+    /// Run one step across the pool under an explicit [`Placement`]:
+    /// every shard runs the phase-aware pipeline with the *same* step
+    /// nonces, and the id-sorted merged results are byte-identical for
+    /// either discipline and any shard count.
+    ///
+    /// `blobs` carries one policy blob per shard (the same buffer repeated
+    /// when the shards share a device, one device-resident copy each when
+    /// they do not). The merged [`PipelineStats`] sums the raw counters,
+    /// records each shard's `device_calls()` in `shard_device_calls`, and
+    /// (under `Steal`) reports mid-step pulls in `steal_count`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_pipeline_with(
+        &mut self,
+        placement: Placement,
         blobs: &[&B::Buf],
         tasks: Vec<SeqTask>,
         drafts: Vec<VerifyTask>,
@@ -203,13 +268,88 @@ impl<'e, B: Backend> EnginePool<'e, B> {
             stats.shard_device_calls = vec![stats.device_calls()];
             return Ok((results, stats));
         }
+        match placement {
+            Placement::Static => {
+                self.run_static(blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, timer)
+            }
+            Placement::Steal => {
+                self.run_steal(blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, timer)
+            }
+        }
+    }
 
+    /// The PR 3 discipline: one-pass placement, then each shard's
+    /// pipeline runs to completion on its private queue.
+    #[allow(clippy::too_many_arguments)]
+    fn run_static(
+        &mut self,
+        blobs: &[&B::Buf],
+        tasks: Vec<SeqTask>,
+        drafts: Vec<VerifyTask>,
+        loglen: f32,
+        cfg: SampleCfg,
+        vnonce: u64,
+        rnonce: u64,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
         let placed = self.place(tasks, drafts);
         let mut results: Vec<SeqResult> = Vec::new();
         let mut agg = PipelineStats::default();
         for (shard, (t, d)) in placed.into_iter().enumerate() {
             let (r, s) = self.shards[shard]
                 .run_pipeline(blobs[shard], t, d, loglen, cfg, vnonce, rnonce, timer)?;
+            agg.absorb(&s);
+            agg.shard_device_calls.push(s.device_calls());
+            results.extend(r);
+        }
+        results.sort_by_key(|r| r.id);
+        Ok((results, agg))
+    }
+
+    /// The PR 4 discipline: all shards pull from one shared steal-queue.
+    /// Shards start in index order, then step round-robin; a shard whose
+    /// refill pass finds free slots pulls the queue's longest-remaining
+    /// item, so the step's tail drains to whichever engine has capacity
+    /// instead of queueing behind one shard's backlog.
+    #[allow(clippy::too_many_arguments)]
+    fn run_steal(
+        &mut self,
+        blobs: &[&B::Buf],
+        tasks: Vec<SeqTask>,
+        drafts: Vec<VerifyTask>,
+        loglen: f32,
+        cfg: SampleCfg,
+        vnonce: u64,
+        rnonce: u64,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
+        let n = self.shards.len();
+        let mut results: Vec<SeqResult> = Vec::new();
+        let mut agg = PipelineStats::default();
+        // Terminal full-reuse drafts never need a slot: fold them straight
+        // into the merged results, exactly as the engine driver would.
+        let pending = self.shards[0].split_terminal(tasks, &mut results, &mut agg);
+
+        let mut queue = WorkQueue::new(pending, drafts);
+        let mut runs: Vec<PipelineRun<B>> = Vec::with_capacity(n);
+        for i in 0..n {
+            runs.push(self.shards[i].pipeline_start(
+                blobs[i], &mut queue, loglen, cfg, vnonce, rnonce, timer,
+            )?);
+        }
+        // Everything popped from here on is work the one-pass placement
+        // would have pinned to a single engine up front.
+        queue.mark_started();
+        while runs.iter().any(|r| !r.done()) {
+            for i in 0..n {
+                if !runs[i].done() {
+                    self.shards[i].pipeline_step(&mut runs[i], blobs[i], &mut queue, timer)?;
+                }
+            }
+        }
+        agg.steal_count = queue.steals();
+        for run in runs {
+            let (r, s) = run.into_parts();
             agg.absorb(&s);
             agg.shard_device_calls.push(s.device_calls());
             results.extend(r);
@@ -249,7 +389,7 @@ mod tests {
     }
 
     #[test]
-    fn placement_is_lpt_and_deterministic() {
+    fn static_placement_is_lpt_and_deterministic() {
         let mocks = MockEngine::replicas(2, 2, 8, 16, 16);
         let pool = EnginePool::new(mocks.iter(), "mock").unwrap();
         // remainders (gen_len = 8): id0 -> 8, id1 -> 6, id2 -> 5, id3 -> 1
@@ -263,7 +403,7 @@ mod tests {
     }
 
     #[test]
-    fn drafts_and_tasks_share_one_spill_queue() {
+    fn static_drafts_and_tasks_share_one_spill_queue() {
         let mocks = MockEngine::replicas(2, 2, 8, 16, 16);
         let pool = EnginePool::new(mocks.iter(), "mock").unwrap();
         // expected remainders: task2 -> 8, draft0 -> 7, draft1 -> 6,
@@ -307,5 +447,87 @@ mod tests {
             &mut timer,
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn steal_tail_goes_to_free_engines_and_results_match_static() {
+        // 2 shards x 2 slots, 7 fresh tasks with skewed remainders: the
+        // 3-task tail beyond the 4 initial seats is stolen mid-step, and
+        // both disciplines produce identical id-sorted results.
+        let mocks = MockEngine::replicas(2, 2, 8, 16, 16);
+        let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        let mut timer = StageTimer::new();
+        let tasks = || (0..7).map(|i| task(i, i)).collect::<Vec<_>>();
+
+        let (steal_res, steal_stats) = pool
+            .run_pipeline_with(
+                Placement::Steal,
+                &blob_refs,
+                tasks(),
+                Vec::new(),
+                0.0,
+                SampleCfg::default(),
+                11,
+                12,
+                &mut timer,
+            )
+            .unwrap();
+        let (static_res, static_stats) = pool
+            .run_pipeline_with(
+                Placement::Static,
+                &blob_refs,
+                tasks(),
+                Vec::new(),
+                0.0,
+                SampleCfg::default(),
+                11,
+                12,
+                &mut timer,
+            )
+            .unwrap();
+
+        assert_eq!(steal_res.len(), 7);
+        for (a, b) in steal_res.iter().zip(&static_res) {
+            assert_eq!((a.id, &a.response, &a.logps), (b.id, &b.response, &b.logps));
+        }
+        assert!(steal_stats.steal_count > 0, "{steal_stats:?}");
+        assert_eq!(static_stats.steal_count, 0, "static placement never steals");
+        assert_eq!(steal_stats.shard_device_calls.len(), 2);
+        assert_eq!(
+            steal_stats.new_tokens, static_stats.new_tokens,
+            "same tokens either way"
+        );
+    }
+
+    #[test]
+    fn idle_shards_of_an_oversized_pool_cost_nothing() {
+        // 4 shards x 2 slots but only one 1-token task: shards that find
+        // the queue empty at start must make zero device calls.
+        let mocks = MockEngine::replicas(4, 2, 8, 16, 16);
+        let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        let mut timer = StageTimer::new();
+        let (res, stats) = pool
+            .run_pipeline(
+                &blob_refs,
+                vec![task(0, 7)],
+                Vec::new(),
+                0.0,
+                SampleCfg::default(),
+                3,
+                4,
+                &mut timer,
+            )
+            .unwrap();
+        assert_eq!(res.len(), 1);
+        assert_eq!(stats.shard_device_calls.len(), 4);
+        assert!(!mocks[0].counters().calls.is_empty(), "shard 0 ran the task");
+        for (i, m) in mocks.iter().enumerate().skip(1) {
+            assert_eq!(m.counters().calls.len(), 0, "shard {i} should be idle");
+            assert_eq!(stats.shard_device_calls[i], 0);
+        }
     }
 }

@@ -1,21 +1,35 @@
-//! Phase-aware continuous-batching slot scheduler.
+//! Phase-aware continuous-batching slot scheduler + the shared work queue.
 //!
 //! The rollout engine owns `B` physical rows ("slots") of the static-shape
 //! AOT executables. The old wave loop bound a *set* of tasks to the slots
 //! for the lifetime of the longest member: one slow row pinned the whole
 //! wave while finished rows idled as inert filler. [`SlotScheduler`] keeps
 //! the binding dynamic instead — the moment a slot's occupant finishes
-//! (EOS or length cap), the slot is released and the next pending task is
-//! assigned to it, so all `B` rows stay busy until the queues drain.
+//! (EOS or length cap), the slot is released and the next pending item is
+//! seated in it, so all `B` rows stay busy until the queues drain.
+//!
+//! ## The work queue (PR 4: the steal-queue)
+//!
+//! Unstarted work lives in a [`WorkQueue`]: decode-ready tasks and
+//! to-verify drafts, each LPT-ordered (see below). The scheduler owns **no
+//! queues of its own** — every fill pass pulls from a caller-supplied
+//! `WorkQueue`, which is what makes mid-step work stealing possible: a
+//! single-engine run hands the scheduler a private queue, while
+//! [`super::pool::EnginePool`] hands *every* shard the same shared queue,
+//! so any engine with a free slot after its refill pass pulls the next
+//! item — wherever the step's remaining work happens to be. Only
+//! never-seated work moves between engines this way; a row, once seated,
+//! never migrates (the lifecycle-pinning invariant, `ARCHITECTURE.md` §7).
+//! Pops made after [`WorkQueue::mark_started`] count as steals.
 //!
 //! ## Sequence lifecycle (`Draft -> Verify -> Decode -> Done`)
 //!
 //! Since PR 2 the scheduler runs **two phases over one slot pool**:
 //!
 //! - *Decode-ready* tasks (fresh prompts, or drafts whose acceptance was
-//!   resolved host-side by the Random/Full reuse variants) queue in
-//!   `pending` and seat via `prefill`/`refill` as before.
-//! - *Drafted* sequences ([`VerifyTask`]s) queue in `pending_verify` and
+//!   resolved host-side by the Random/Full reuse variants) queue in the
+//!   task lane and seat via `prefill`/`refill` as before.
+//! - *Drafted* sequences ([`VerifyTask`]s) queue in the draft lane and
 //!   seat into free slots via the `verify_seat` AOT entry, which scores
 //!   the draft, finds its first rejection, **and** writes the accepted
 //!   prefix's KV/valid/probs into the generation blob in the same call —
@@ -23,9 +37,13 @@
 //!   the moment its rejection offset is read back, with no separate
 //!   refill forward and no global verify barrier.
 //!
-//! Free slots are offered to the decode queue first (those rows can sample
-//! immediately), then to the verify queue; both fills proceed in ascending
-//! slot order, so scheduling stays deterministic.
+//! Free slots are offered to the decode lane first (those rows can sample
+//! immediately), then to the draft lane; both fills proceed in ascending
+//! slot order, so scheduling stays deterministic. Draft seating is
+//! **adaptive** (PR 4): [`SlotScheduler::fill_verify`] seats a packed
+//! `verify_seat` sub-batch only when at least `seat_min` slots are free
+//! (`spec.verify_seat_min`, clamped into `[1, B]`; 1 = seat eagerly, the
+//! pre-PR 4 behavior), trading verify latency for sub-batch packing.
 //!
 //! Refilled rows re-enter via the `refill` AOT entry (see the decode-entry
 //! contract below): a *batched per-row prefill* that recomputes the KV
@@ -55,25 +73,99 @@
 //! - `read_gen(gen)` returns `[probs | aux]` (`B*V + B` floats), so
 //!   acceptance results ride the read the decode loop already performs.
 //!
-//! Scheduling order is deterministic: decode tasks sort by **ascending
+//! Queue order is deterministic LPT: decode tasks sort by **ascending
 //! verified-prefix length** (then ascending id) — i.e. longest *remaining*
-//! generation first, the LPT rule — and drafts sort by ascending draft
-//! length (a draft can reuse at most its own length, so short drafts have
-//! the longest expected remainder). Sampling uses per-task RNG streams and
+//! generation first — and drafts sort by ascending draft length (a draft
+//! can reuse at most its own length, so short drafts have the longest
+//! expected remainder). Sampling uses per-task RNG streams and
 //! verification uses per-task uniform streams, making results invariant to
-//! slot assignment, sub-batch packing, and scheduling order — byte-identical
-//! to both the lockstep engine and the two-phase verify-then-decode oracle.
+//! slot assignment, sub-batch packing, scheduling order, **and which
+//! engine pops an item from the shared queue** — byte-identical to the
+//! lockstep engine and the two-phase verify-then-decode oracle.
 //!
 //! One `SlotScheduler` spans one engine's `B` physical rows. The
-//! cross-engine layer — N slot pools behind one LPT placement front-end,
-//! with every row's lifecycle pinned to the engine it was placed on — is
+//! cross-engine layer — N slot pools pulling from one shared `WorkQueue`,
+//! with every row's lifecycle pinned to the engine that seated it — is
 //! [`super::pool::EnginePool`]. The full contract set (gen-blob layout,
-//! inert slots, RNG streams, shard placement) lives in `ARCHITECTURE.md`.
+//! inert slots, RNG streams, placement and stealing) lives in
+//! `ARCHITECTURE.md` §§2-7.
 
 use std::collections::VecDeque;
 
 use super::batch::SeqTask;
 use crate::spec::verifier::VerifyTask;
+
+/// One step's unstarted work: decode-ready tasks and to-verify drafts in
+/// LPT order. Private to a single engine run, or shared across an
+/// [`super::pool::EnginePool`]'s shards as the mid-step steal-queue (only
+/// never-seated work lives here, so pulling from it can never migrate a
+/// row between engines).
+pub struct WorkQueue {
+    tasks: VecDeque<SeqTask>,
+    drafts: VecDeque<VerifyTask>,
+    /// Set once every shard's initial seating pass is done; later pops are
+    /// counted as steals.
+    started: bool,
+    steals: usize,
+}
+
+impl WorkQueue {
+    /// LPT-order both lanes: tasks by ascending verified-prefix length
+    /// (longest remaining generation first), drafts by ascending draft
+    /// length (longest expected remainder first); ties by id. Terminal
+    /// full-reuse tasks must be split out by the caller first — every
+    /// queued item is assumed to need a slot.
+    pub fn new(mut tasks: Vec<SeqTask>, mut drafts: Vec<VerifyTask>) -> Self {
+        tasks.sort_by(|a, b| a.prefix.len().cmp(&b.prefix.len()).then(a.id.cmp(&b.id)));
+        drafts.sort_by(|a, b| a.draft_len().cmp(&b.draft_len()).then(a.id.cmp(&b.id)));
+        WorkQueue { tasks: tasks.into(), drafts: drafts.into(), started: false, steals: 0 }
+    }
+
+    /// A decode-only queue (no drafts).
+    pub fn tasks_only(tasks: Vec<SeqTask>) -> Self {
+        Self::new(tasks, Vec::new())
+    }
+
+    fn pop_task(&mut self) -> Option<SeqTask> {
+        let t = self.tasks.pop_front();
+        self.steals += (t.is_some() && self.started) as usize;
+        t
+    }
+
+    fn pop_draft(&mut self) -> Option<VerifyTask> {
+        let d = self.drafts.pop_front();
+        self.steals += (d.is_some() && self.started) as usize;
+        d
+    }
+
+    /// Decode-ready tasks not yet seated anywhere.
+    pub fn pending(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Drafts not yet seated anywhere.
+    pub fn pending_drafts(&self) -> usize {
+        self.drafts.len()
+    }
+
+    /// Nothing left to hand out.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty() && self.drafts.is_empty()
+    }
+
+    /// Flip into the stealing regime: the pool calls this after every
+    /// shard's initial seating pass, so later pops — work an engine picks
+    /// up mid-step that one-pass placement would have pinned elsewhere —
+    /// are counted in [`WorkQueue::steals`].
+    pub fn mark_started(&mut self) {
+        self.started = true;
+    }
+
+    /// Items popped after [`WorkQueue::mark_started`].
+    pub fn steals(&self) -> usize {
+        self.steals
+    }
+}
 
 /// What currently occupies a slot.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -85,66 +177,56 @@ pub enum SlotPhase {
     Decode,
 }
 
-/// Dynamic task→slot binding for one rollout run, over both phases.
+/// Dynamic item→slot binding over one engine's `batch` physical rows, both
+/// phases. Owns no work of its own: every fill pulls from the caller's
+/// [`WorkQueue`] (private or shared — the scheduler cannot tell).
 pub struct SlotScheduler {
     batch: usize,
-    pending: VecDeque<SeqTask>,
-    pending_verify: VecDeque<VerifyTask>,
     phase: Vec<SlotPhase>,
 }
 
 impl SlotScheduler {
-    /// Queue `tasks` (sorted: longest remaining generation first — i.e.
-    /// ascending prefix length — ties by id) over `batch` initially-free
-    /// slots. No drafts: decode-only scheduling, exactly as before.
-    pub fn new(batch: usize, tasks: Vec<SeqTask>) -> Self {
-        Self::with_drafts(batch, tasks, Vec::new())
+    /// `batch` initially-free slots.
+    pub fn new(batch: usize) -> Self {
+        SlotScheduler { batch, phase: vec![SlotPhase::Free; batch] }
     }
 
-    /// Queue decode-ready `tasks` and to-verify `drafts` over one pool.
-    pub fn with_drafts(
-        batch: usize,
-        mut tasks: Vec<SeqTask>,
-        mut drafts: Vec<VerifyTask>,
-    ) -> Self {
-        tasks.sort_by(|a, b| a.prefix.len().cmp(&b.prefix.len()).then(a.id.cmp(&b.id)));
-        // Short drafts bound acceptance from above => longest expected
-        // remainder first (the LPT proxy available before verification).
-        drafts.sort_by(|a, b| a.draft_len().cmp(&b.draft_len()).then(a.id.cmp(&b.id)));
-        SlotScheduler {
-            batch,
-            pending: tasks.into(),
-            pending_verify: drafts.into(),
-            phase: vec![SlotPhase::Free; batch],
-        }
-    }
-
-    /// Assign pending decode tasks to every free slot, in ascending slot
+    /// Assign queued decode tasks to every free slot, in ascending slot
     /// order. Returns the (slot, task) assignments made; empty when no
-    /// slot is free or the queue is drained.
-    pub fn fill(&mut self) -> Vec<(usize, SeqTask)> {
+    /// slot is free or the task lane is drained.
+    pub fn fill(&mut self, queue: &mut WorkQueue) -> Vec<(usize, SeqTask)> {
         let mut out = Vec::new();
         for slot in 0..self.batch {
             if self.phase[slot] != SlotPhase::Free {
                 continue;
             }
-            let Some(task) = self.pending.pop_front() else { break };
+            let Some(task) = queue.pop_task() else { break };
             self.phase[slot] = SlotPhase::Decode;
             out.push((slot, task));
         }
         out
     }
 
-    /// Assign pending drafts to the remaining free slots (after a decode
+    /// Assign queued drafts to the remaining free slots (after a decode
     /// fill), in ascending slot order; the caller packs them into one
-    /// `verify_seat` sub-batch.
-    pub fn fill_verify(&mut self) -> Vec<(usize, VerifyTask)> {
+    /// `verify_seat` sub-batch. Adaptive seating: seats nothing unless at
+    /// least `seat_min` slots are free (clamped into `[1, batch]`, so a
+    /// draft-only run can never deadlock — when every slot is free,
+    /// `free() == batch >= seat_min` always holds).
+    pub fn fill_verify(
+        &mut self,
+        queue: &mut WorkQueue,
+        seat_min: usize,
+    ) -> Vec<(usize, VerifyTask)> {
+        if self.free() < seat_min.clamp(1, self.batch) {
+            return Vec::new();
+        }
         let mut out = Vec::new();
         for slot in 0..self.batch {
             if self.phase[slot] != SlotPhase::Free {
                 continue;
             }
-            let Some(task) = self.pending_verify.pop_front() else { break };
+            let Some(task) = queue.pop_draft() else { break };
             self.phase[slot] = SlotPhase::Verify;
             out.push((slot, task));
         }
@@ -174,24 +256,16 @@ impl SlotScheduler {
         self.phase.iter().filter(|&&p| p == SlotPhase::Decode).count()
     }
 
-    /// Decode tasks not yet assigned to a slot.
-    pub fn pending(&self) -> usize {
-        self.pending.len()
-    }
-
-    /// Drafts not yet assigned to a slot.
-    pub fn pending_verify(&self) -> usize {
-        self.pending_verify.len()
-    }
-
     /// Slots currently free.
     pub fn free(&self) -> usize {
         self.batch - self.busy()
     }
 
-    /// Nothing running, nothing queued in either phase.
-    pub fn is_done(&self) -> bool {
-        self.busy() == 0 && self.pending.is_empty() && self.pending_verify.is_empty()
+    /// Nothing running here, nothing left in the queue. With a shared
+    /// queue this is per-engine: another shard may still be decoding rows
+    /// of its own, but it can no longer hand work to this one.
+    pub fn is_done(&self, queue: &WorkQueue) -> bool {
+        self.busy() == 0 && queue.is_empty()
     }
 }
 
@@ -224,42 +298,46 @@ mod tests {
 
     #[test]
     fn initial_fill_orders_longest_remaining_first() {
-        let mut s = SlotScheduler::new(2, vec![task(0, 1), task(1, 5), task(2, 3)]);
-        let fills = s.fill();
+        let mut q = WorkQueue::tasks_only(vec![task(0, 1), task(1, 5), task(2, 3)]);
+        let mut s = SlotScheduler::new(2);
+        let fills = s.fill(&mut q);
         let got: Vec<usize> = fills.iter().map(|(_, t)| t.id).collect();
         assert_eq!(got, vec![0, 2], "shortest prefixes (longest remaining) go first");
         assert_eq!(fills[0].0, 0);
         assert_eq!(fills[1].0, 1);
-        assert_eq!(s.pending(), 1);
+        assert_eq!(q.pending(), 1);
         assert_eq!(s.busy(), 2);
     }
 
     #[test]
     fn ties_break_by_id() {
-        let mut s = SlotScheduler::new(4, vec![task(3, 2), task(1, 2), task(2, 2)]);
-        let ids: Vec<usize> = s.fill().into_iter().map(|(_, t)| t.id).collect();
+        let mut q = WorkQueue::tasks_only(vec![task(3, 2), task(1, 2), task(2, 2)]);
+        let mut s = SlotScheduler::new(4);
+        let ids: Vec<usize> = s.fill(&mut q).into_iter().map(|(_, t)| t.id).collect();
         assert_eq!(ids, vec![1, 2, 3]);
     }
 
     #[test]
     fn release_then_fill_reuses_the_slot() {
-        let mut s = SlotScheduler::new(2, (0..5).map(|i| task(i, 0)).collect());
-        s.fill();
+        let mut q = WorkQueue::tasks_only((0..5).map(|i| task(i, 0)).collect());
+        let mut s = SlotScheduler::new(2);
+        s.fill(&mut q);
         s.release(1);
-        let fills = s.fill();
+        let fills = s.fill(&mut q);
         assert_eq!(fills.len(), 1);
         assert_eq!(fills[0].0, 1);
         assert_eq!(fills[0].1.id, 2);
-        assert_eq!(s.pending(), 2);
+        assert_eq!(q.pending(), 2);
     }
 
     #[test]
     fn multiple_frees_batch_into_one_fill() {
-        let mut s = SlotScheduler::new(3, (0..6).map(|i| task(i, 0)).collect());
-        s.fill();
+        let mut q = WorkQueue::tasks_only((0..6).map(|i| task(i, 0)).collect());
+        let mut s = SlotScheduler::new(3);
+        s.fill(&mut q);
         s.release(0);
         s.release(2);
-        let fills = s.fill();
+        let fills = s.fill(&mut q);
         let slots: Vec<usize> = fills.iter().map(|(sl, _)| *sl).collect();
         let ids: Vec<usize> = fills.iter().map(|(_, t)| t.id).collect();
         assert_eq!(slots, vec![0, 2], "ascending slot order");
@@ -268,50 +346,50 @@ mod tests {
 
     #[test]
     fn drains_to_done() {
-        let mut s = SlotScheduler::new(2, (0..3).map(|i| task(i, 0)).collect());
-        assert!(!s.is_done());
-        s.fill();
+        let mut q = WorkQueue::tasks_only((0..3).map(|i| task(i, 0)).collect());
+        let mut s = SlotScheduler::new(2);
+        assert!(!s.is_done(&q));
+        s.fill(&mut q);
         s.release(0);
         s.release(1);
-        s.fill();
+        s.fill(&mut q);
         assert_eq!(s.busy(), 1);
         s.release(0);
-        assert!(s.is_done());
-        assert!(s.fill().is_empty());
+        assert!(s.is_done(&q));
+        assert!(s.fill(&mut q).is_empty());
     }
 
     #[test]
     fn fill_with_no_pending_is_empty() {
-        let mut s = SlotScheduler::new(2, vec![task(0, 0)]);
-        s.fill();
-        assert!(s.fill().is_empty());
+        let mut q = WorkQueue::tasks_only(vec![task(0, 0)]);
+        let mut s = SlotScheduler::new(2);
+        s.fill(&mut q);
+        assert!(s.fill(&mut q).is_empty());
         assert_eq!(s.free(), 1);
     }
 
     #[test]
     fn decode_fill_takes_priority_then_drafts_pack_the_rest() {
-        let mut s = SlotScheduler::with_drafts(
-            3,
-            vec![task(0, 0)],
-            vec![draft(10, 4), draft(11, 2)],
-        );
-        let d = s.fill();
+        let mut q = WorkQueue::new(vec![task(0, 0)], vec![draft(10, 4), draft(11, 2)]);
+        let mut s = SlotScheduler::new(3);
+        let d = s.fill(&mut q);
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].0, 0);
-        let v = s.fill_verify();
+        let v = s.fill_verify(&mut q, 1);
         // shortest draft first (longest expected remainder), ascending slots
         assert_eq!(v.len(), 2);
         assert_eq!((v[0].0, v[0].1.id), (1, 11));
         assert_eq!((v[1].0, v[1].1.id), (2, 10));
         assert_eq!(s.busy(), 3);
         assert_eq!(s.busy_decode(), 1);
-        assert!(!s.is_done());
+        assert!(!s.is_done(&q));
     }
 
     #[test]
     fn verify_transitions_to_decode_or_releases() {
-        let mut s = SlotScheduler::with_drafts(2, Vec::new(), vec![draft(0, 3), draft(1, 3)]);
-        let v = s.fill_verify();
+        let mut q = WorkQueue::new(Vec::new(), vec![draft(0, 3), draft(1, 3)]);
+        let mut s = SlotScheduler::new(2);
+        let v = s.fill_verify(&mut q, 1);
         assert_eq!(v.len(), 2);
         assert_eq!(s.busy_decode(), 0);
         s.to_decode(0); // non-terminal accepted prefix
@@ -320,17 +398,60 @@ mod tests {
         assert_eq!(s.busy(), 1);
         assert_eq!(s.free(), 1);
         s.release(0);
-        assert!(s.is_done());
+        assert!(s.is_done(&q));
     }
 
     #[test]
-    fn pending_verify_counts_drain() {
-        let mut s = SlotScheduler::with_drafts(1, Vec::new(), vec![draft(0, 1), draft(1, 5)]);
-        assert_eq!(s.pending_verify(), 2);
-        assert!(!s.is_done());
-        let v = s.fill_verify();
+    fn pending_draft_counts_drain() {
+        let mut q = WorkQueue::new(Vec::new(), vec![draft(0, 1), draft(1, 5)]);
+        let mut s = SlotScheduler::new(1);
+        assert_eq!(q.pending_drafts(), 2);
+        assert!(!s.is_done(&q));
+        let v = s.fill_verify(&mut q, 1);
         assert_eq!(v[0].1.id, 0, "shortest draft first");
-        assert_eq!(s.pending_verify(), 1);
-        assert!(s.fill_verify().is_empty(), "no free slot left");
+        assert_eq!(q.pending_drafts(), 1);
+        assert!(s.fill_verify(&mut q, 1).is_empty(), "no free slot left");
+    }
+
+    #[test]
+    fn fill_verify_waits_for_seat_min_free_slots() {
+        let mut q = WorkQueue::new((0..2).map(|i| task(i, 0)).collect(), vec![draft(10, 2)]);
+        let mut s = SlotScheduler::new(4);
+        s.fill(&mut q); // 2 decode rows seated, 2 slots free
+        assert!(s.fill_verify(&mut q, 3).is_empty(), "2 free < seat_min 3: hold the draft");
+        assert_eq!(q.pending_drafts(), 1, "held drafts stay in the queue");
+        s.release(0);
+        let v = s.fill_verify(&mut q, 3);
+        assert_eq!(v.len(), 1, "3 free >= seat_min 3: seat");
+        assert_eq!(v[0].1.id, 10);
+    }
+
+    #[test]
+    fn seat_min_clamps_to_batch_so_draft_only_runs_cannot_deadlock() {
+        let mut q = WorkQueue::new(Vec::new(), vec![draft(0, 2), draft(1, 3)]);
+        let mut s = SlotScheduler::new(2);
+        // seat_min far above batch still seats once every slot is free
+        let v = s.fill_verify(&mut q, 64);
+        assert_eq!(v.len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn shared_queue_pops_after_start_count_as_steals() {
+        let mut q = WorkQueue::new((0..3).map(|i| task(i, 0)).collect(), vec![draft(9, 2)]);
+        let mut a = SlotScheduler::new(1);
+        let mut b = SlotScheduler::new(1);
+        a.fill(&mut q);
+        b.fill(&mut q);
+        assert_eq!(q.steals(), 0, "initial placement pops are not steals");
+        q.mark_started();
+        a.release(0);
+        let f = a.fill(&mut q);
+        assert_eq!(f[0].1.id, 2);
+        b.release(0);
+        let v = b.fill_verify(&mut q, 1);
+        assert_eq!(v[0].1.id, 9);
+        assert_eq!(q.steals(), 2, "mid-step pops from the shared queue are steals");
+        assert!(q.is_empty());
     }
 }

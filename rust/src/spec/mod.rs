@@ -25,11 +25,14 @@
 //! - **Done**: fully-reused terminal drafts bypass the device entirely.
 //!
 //! [`SpecRollout::collect`] is a thin driver over this pipeline: it splits
-//! requests into decode-ready tasks and verify tasks, hands both queues to
-//! an [`EnginePool`] (which spills them across its per-engine slot pools —
-//! one shard is the plain single-engine pipeline), and folds
-//! cache/telemetry bookkeeping into the merged per-step [`PipelineStats`]
-//! report.
+//! requests into decode-ready tasks and verify tasks, hands both lanes to
+//! an [`EnginePool`] as one shared steal-queue (every shard pulls
+//! LPT-first whenever it has free slots, mid-step included — one shard is
+//! the plain single-engine pipeline), and folds cache/telemetry
+//! bookkeeping into the merged per-step [`PipelineStats`] report.
+//! [`SpecRollout::placement`] selects the pool discipline
+//! ([`Placement::Steal`] by default; `Static` keeps PR 3's one-pass
+//! spill as a measurable baseline).
 //! [`SpecRollout::run_two_phase`] keeps the original blocking
 //! verify-then-decode discipline as the equivalence oracle: per-task
 //! sampling *and* verification RNG streams make the two paths
@@ -46,7 +49,9 @@ pub mod verifier;
 
 use anyhow::Result;
 
-use crate::rollout::{EnginePool, PipelineStats, RolloutEngine, SampleCfg, SeqResult, SeqTask};
+use crate::rollout::{
+    EnginePool, PipelineStats, Placement, RolloutEngine, SampleCfg, SeqResult, SeqTask,
+};
 use crate::runtime::Backend;
 use crate::util::{Rng, StageTimer};
 
@@ -72,13 +77,30 @@ pub struct SpecRollout {
     pub cache: RolloutCache,
     pub variant: ReuseVariant,
     pub lenience: Lenience,
+    /// Pool placement discipline for [`SpecRollout::collect`]
+    /// ([`Placement::Steal`] by default; results are byte-identical
+    /// either way, only the per-shard device-call split differs).
+    pub placement: Placement,
     /// Current step counter (cache versioning).
     pub step: u64,
 }
 
 impl SpecRollout {
     pub fn new(variant: ReuseVariant, lenience: Lenience) -> Self {
-        SpecRollout { cache: RolloutCache::new(), variant, lenience, step: 0 }
+        SpecRollout {
+            cache: RolloutCache::new(),
+            variant,
+            lenience,
+            placement: Placement::Steal,
+            step: 0,
+        }
+    }
+
+    /// Select the pool placement discipline (`bench_steal` uses this to
+    /// measure `Static` against the `Steal` default).
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
     }
 
     /// Vanilla RLVR (no reuse, cache still shadow-updated for overlap
@@ -166,7 +188,11 @@ impl SpecRollout {
     /// Roll out one step's batch with speculative reuse through the
     /// interleaved phase-aware pipeline, sharded across an [`EnginePool`]
     /// (the trainer default; a one-shard pool is the original
-    /// single-engine pipeline, unchanged).
+    /// single-engine pipeline, unchanged). Under the default
+    /// [`Placement::Steal`] the step's unstarted tail drains to whichever
+    /// shard has free slots (`stats.steal_count` reports the mid-step
+    /// pulls); `cfg.verify_seat_min` tunes how full a packed verify
+    /// sub-batch must be before it seats.
     ///
     /// `blobs` carries one policy blob per shard — every shard must hold
     /// the same weights, or results stop being placement-invariant (the
@@ -189,8 +215,9 @@ impl SpecRollout {
     ) -> Result<(Vec<SeqResult>, PipelineStats)> {
         let loglen = self.lenience.log_value(self.step);
         let (vnonce, rnonce, tasks, drafts, pre) = self.prepare(requests, rng);
-        let (results, mut stats) =
-            pool.run_pipeline(blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, timer)?;
+        let (results, mut stats) = pool.run_pipeline_with(
+            self.placement, blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, timer,
+        )?;
         stats.drafts += pre.drafts;
         stats.prefix_tokens += pre.prefix_tokens;
         stats.full_reuses += pre.full_reuses;

@@ -17,6 +17,11 @@
 //! on every call (a decode carrying a stale `[B, T]` valid arg fails
 //! loudly), and the generation state carries its valid mask device-side,
 //! updated incrementally from `slot` writes like the real lowered entry.
+//! Every row seated on an engine (`prefill` / `refill` / `verify_seat`)
+//! is logged by prompt signature ([`MockCounters::seated`]), so the
+//! steal tests can assert the lifecycle-pinning invariant directly: a
+//! task's row appears on exactly one engine per step, however the shared
+//! queue drained.
 //!
 //! The `verify` / `verify_seat` entries implement the lenient acceptance
 //! rule `u <= min(1, l * p_curr/p_prev)` against the same content-hashed
@@ -100,6 +105,12 @@ pub struct MockCounters {
     pub uploads: Vec<Vec<usize>>,
     /// Entry names of every call, in order.
     pub calls: Vec<String>,
+    /// Prompt-region signature of every row seated on this engine (via
+    /// `prefill`, `refill`, or `verify_seat`), in seating order. With
+    /// per-task-unique prompts this is a row→engine attribution trace:
+    /// the steal tests assert no signature ever appears on two engines —
+    /// the lifecycle-pinning invariant made observable.
+    pub seated: Vec<Vec<i32>>,
 }
 
 /// Deterministic mock rollout backend.
@@ -167,6 +178,20 @@ impl MockEngine {
     /// Calls of one entry.
     pub fn calls_of(&self, entry: &str) -> usize {
         self.counters.borrow().calls.iter().filter(|c| c.as_str() == entry).count()
+    }
+
+    /// Prompt signatures of every row seated on this engine, in order
+    /// (see [`MockCounters::seated`]).
+    pub fn seated_rows(&self) -> Vec<Vec<i32>> {
+        self.counters.borrow().seated.clone()
+    }
+
+    /// Record the prompt signature of a row being seated.
+    fn trace_seat(&self, tokens: &[i32], valid: &[f32], r: usize) {
+        let sig = self.prompt_of(tokens, valid, r);
+        if !sig.is_empty() {
+            self.counters.borrow_mut().seated.push(sig);
+        }
     }
 
     /// Next-token distribution as a pure function of row content.
@@ -274,6 +299,9 @@ impl Backend for MockEngine {
                 ensure!(args[1].dims() == [b, t], "prefill: tokens dims {:?}", args[1].dims());
                 ensure!(args[2].dims() == [b, t], "prefill: valid dims {:?}", args[2].dims());
                 ensure!(args[3].dims() == [b], "prefill: last dims {:?}", args[3].dims());
+                for r in 0..b {
+                    self.trace_seat(tokens, valid, r);
+                }
                 let rows = (0..b).map(|r| self.row_from_layout(tokens, valid, r)).collect();
                 Ok(MockBuf::Gen(GenState { rows, aux: vec![0.0; b] }))
             }
@@ -314,6 +342,7 @@ impl Backend for MockEngine {
                 ensure!(args[5].dims() == [b], "refill: last dims {:?}", args[5].dims());
                 for r in 0..b {
                     if rowmask[r] > 0.5 {
+                        self.trace_seat(tokens, valid, r);
                         gen.rows[r] = self.row_from_layout(tokens, valid, r);
                     }
                 }
@@ -402,6 +431,7 @@ impl Backend for MockEngine {
                     if rowmask[r] <= 0.5 {
                         continue;
                     }
+                    self.trace_seat(tokens, valid, r);
                     let (n_acc, _) = self.accept_row(tokens, valid, r, lp_prev, un, dv, ll);
                     // seat the accepted prefix: the mock analog of reusing
                     // the verify forward's KV under a truncated valid mask

@@ -21,7 +21,7 @@ pub fn eval_suite(
     rng: &mut Rng,
 ) -> Result<f64> {
     let _ = eng;
-    let cfg = SampleCfg { temperature: 1.0, top_p: 0.95 };
+    let cfg = SampleCfg { top_p: 0.95, ..SampleCfg::default() };
     let mut timer = StageTimer::new();
     let mut total = 0f64;
     for _ in 0..samples.max(1) {

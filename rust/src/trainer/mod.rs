@@ -56,7 +56,7 @@ impl RunSummary {
 pub const STEP_COLUMNS: &[&str] = &[
     "step", "epoch", "reward", "tokens_new", "tokens_reused", "tokens_cum",
     "prefix_len", "full_reuse", "drafts", "gen_rounds", "verify_calls",
-    "shards", "device_calls", "shard_calls_max", "shard_calls_min",
+    "shards", "device_calls", "shard_calls_max", "shard_calls_min", "steal_count",
     "cache_tokens", "cache_evictions", "cache_evicted_tokens",
     "rollout_s", "verification_s", "assembly_s", "reward_s", "old_logp_s",
     "ref_s", "values_s", "adv_s", "update_critic_s", "update_actor_s",
@@ -147,7 +147,11 @@ impl<'e> Trainer<'e> {
     }
 
     fn sample_cfg(&self) -> SampleCfg {
-        SampleCfg { temperature: self.cfg.temperature, top_p: self.cfg.top_p }
+        SampleCfg {
+            temperature: self.cfg.temperature,
+            top_p: self.cfg.top_p,
+            verify_seat_min: self.cfg.verify_seat_min,
+        }
     }
 
     /// Next `prompts_per_step` prompt indices (cyclic epoch order).
@@ -420,6 +424,7 @@ impl<'e> Trainer<'e> {
         rec.insert("device_calls", shard_calls.iter().sum::<usize>() as f64);
         rec.insert("shard_calls_max", shard_calls.iter().copied().max().unwrap_or(0) as f64);
         rec.insert("shard_calls_min", shard_calls.iter().copied().min().unwrap_or(0) as f64);
+        rec.insert("steal_count", spec_stats_acc.steal_count as f64);
         rec.insert("cache_tokens", self.spec.cache.total_tokens() as f64);
         rec.insert("cache_evictions", spec_stats_acc.cache_evictions as f64);
         rec.insert("cache_evicted_tokens", spec_stats_acc.cache_evicted_tokens as f64);

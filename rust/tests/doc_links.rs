@@ -1,0 +1,130 @@
+//! The doc-link CI gate: every numbered section anchor (`§N`, `§§A-B`)
+//! referenced from ROADMAP.md or from rustdoc comments in this crate's
+//! sources, benches, tests, and examples must name a real `## N.` heading
+//! in ARCHITECTURE.md. The book is normative — module docs point into it
+//! by section number — so a renumbering that orphans a reference has to
+//! fail CI instead of silently rotting.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    // tests run with CARGO_MANIFEST_DIR = <repo>/rust
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ has a parent").to_path_buf()
+}
+
+/// Section numbers of ARCHITECTURE.md's `## N. Title` headings.
+fn headings(book: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for line in book.lines() {
+        let Some(rest) = line.strip_prefix("## ") else { continue };
+        let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        if !digits.is_empty() && rest[digits.len()..].starts_with('.') {
+            out.push(digits.parse().expect("ascii digits parse"));
+        }
+    }
+    out
+}
+
+/// Every section number referenced as `§N` (or the endpoints of a
+/// `§§A-B` range) in `text`. A `§` not followed by digits is prose, not
+/// an anchor, and is ignored.
+fn section_refs(text: &str) -> Vec<usize> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i] != '§' {
+            i += 1;
+            continue;
+        }
+        while i < chars.len() && chars[i] == '§' {
+            i += 1;
+        }
+        let mut read_num = |i: &mut usize| -> Option<usize> {
+            let start = *i;
+            while *i < chars.len() && chars[*i].is_ascii_digit() {
+                *i += 1;
+            }
+            (*i > start).then(|| chars[start..*i].iter().collect::<String>().parse().unwrap())
+        };
+        let Some(first) = read_num(&mut i) else { continue };
+        out.push(first);
+        if i < chars.len() && chars[i] == '-' {
+            let mut j = i + 1;
+            if let Some(second) = read_num(&mut j) {
+                out.push(second);
+                i = j;
+            }
+        }
+    }
+    out
+}
+
+/// All .rs files under `dir`, recursively.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn architecture_section_anchors_resolve() {
+    let root = repo_root();
+    let book = fs::read_to_string(root.join("ARCHITECTURE.md"))
+        .expect("ARCHITECTURE.md at the repo root");
+    let sections = headings(&book);
+    assert!(
+        sections.len() >= 9,
+        "ARCHITECTURE.md lost its numbered headings? found {sections:?}"
+    );
+
+    // The book's own internal cross-references are scanned too, so a
+    // renumbering cannot orphan an in-book "§N" while CI stays green.
+    let mut sources: Vec<PathBuf> =
+        vec![root.join("ROADMAP.md"), root.join("ARCHITECTURE.md")];
+    for dir in ["rust/src", "rust/benches", "rust/tests", "examples"] {
+        rust_files(&root.join(dir), &mut sources);
+    }
+
+    let mut checked = 0usize;
+    for path in sources {
+        let Ok(text) = fs::read_to_string(&path) else { continue };
+        for n in section_refs(&text) {
+            assert!(
+                sections.contains(&n),
+                "{} references ARCHITECTURE.md §{n}, but the book has sections {sections:?}",
+                path.display()
+            );
+            checked += 1;
+        }
+    }
+    assert!(
+        checked > 0,
+        "no § anchors found anywhere — the reference scan is broken"
+    );
+}
+
+#[test]
+fn roadmap_quick_index_points_at_real_sections() {
+    let root = repo_root();
+    let roadmap =
+        fs::read_to_string(root.join("ROADMAP.md")).expect("ROADMAP.md at the repo root");
+    let book = fs::read_to_string(root.join("ARCHITECTURE.md"))
+        .expect("ARCHITECTURE.md at the repo root");
+    let sections = headings(&book);
+    let refs = section_refs(&roadmap);
+    assert!(
+        !refs.is_empty(),
+        "ROADMAP.md's quick index should reference ARCHITECTURE.md by § number"
+    );
+    for n in refs {
+        assert!(sections.contains(&n), "ROADMAP.md §{n} is not a section of ARCHITECTURE.md");
+    }
+}

@@ -31,7 +31,7 @@ fn uniform_policy_decode_probs_are_uniform() {
         .map(|i| SeqTask::fresh(i, tok.encode_prompt("1+1=")))
         .collect();
     let (results, stats) = rollout
-        .run(&policy.blob, tasks, SampleCfg { temperature: 1.0, top_p: 1.0 }, &mut rng, &mut timer)
+        .run(&policy.blob, tasks, SampleCfg::default(), &mut rng, &mut timer)
         .unwrap();
     assert_eq!(results.len(), 4);
     for r in &results {

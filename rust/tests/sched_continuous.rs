@@ -5,7 +5,12 @@
 //! two-phase equivalence, sharded-pool vs single-engine equivalence,
 //! upload-traffic budgets, and slot accounting are all plain unit tests.
 
-use spec_rl::rollout::{EnginePool, PipelineStats, RolloutEngine, SampleCfg, SeqResult, SeqTask};
+use std::collections::HashSet;
+
+use spec_rl::benchkit::stale;
+use spec_rl::rollout::{
+    EnginePool, PipelineStats, Placement, RolloutEngine, SampleCfg, SeqResult, SeqTask,
+};
 use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
 use spec_rl::testing::mock::MockEngine;
 use spec_rl::tokenizer::{BOS, EOS};
@@ -594,6 +599,165 @@ fn cache_budget_is_global_and_shard_count_invariant() {
         "previous {previous:?} survived while latest entries were evicted ({latest:?})"
     );
     assert!(total <= budget);
+}
+
+// ---------------------------------------------------------------------------
+// mid-step work stealing + adaptive verify seating (PR 4)
+// ---------------------------------------------------------------------------
+
+/// Draft length of the adversarial stale-draft workload at the test
+/// geometry (gen_len = 8): every draft the same length, every 4th stale.
+const STALE_LEN: usize = 5;
+const STALE_LENIENCE: f32 = -0.4;
+const STALE_SEED: u64 = 13;
+
+/// `eos_bias = 0` replicas: rejected rows decode exactly to the cap, so
+/// the static-placement imbalance is structural, not sampled.
+fn stale_mocks(shards: usize) -> Vec<MockEngine> {
+    let mut mocks = MockEngine::replicas(shards, 4, P, T, V);
+    for m in &mut mocks {
+        m.eos_bias = 0.0;
+    }
+    mocks
+}
+
+/// One adversarial drafted step over `shards` engines; returns the
+/// id-sorted results, merged stats, and the mocks (for counter/seat-trace
+/// inspection — each holds exactly this one step's traffic).
+fn stale_collect(
+    shards: usize,
+    placement: Placement,
+    seat_min: usize,
+) -> (Vec<SeqResult>, PipelineStats, Vec<MockEngine>) {
+    let mocks = stale_mocks(shards);
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+    let mut spec = stale::warmed(stale::N_TASKS, STALE_LEN, V, STALE_LENIENCE)
+        .with_placement(placement);
+    let mut rng = Rng::new(STALE_SEED);
+    let mut timer = StageTimer::new();
+    let cfg = SampleCfg { verify_seat_min: seat_min, ..SampleCfg::default() };
+    let reqs = stale::requests(stale::N_TASKS, V);
+    let (res, stats) = spec
+        .collect(&mut pool, &blob_refs, &reqs, cfg, &mut rng, &mut timer)
+        .unwrap();
+    (res, stats, mocks)
+}
+
+/// The blocking two-phase oracle on the same adversarial step.
+fn stale_oracle() -> Vec<SeqResult> {
+    let mocks = stale_mocks(1);
+    let blob = mocks[0].blob();
+    let mut eng = RolloutEngine::new(&mocks[0], "mock").unwrap();
+    let mut spec = stale::warmed(stale::N_TASKS, STALE_LEN, V, STALE_LENIENCE);
+    let mut rng = Rng::new(STALE_SEED);
+    let mut timer = StageTimer::new();
+    let (res, _) = spec
+        .run_two_phase(
+            &mut eng,
+            &blob,
+            &stale::requests(stale::N_TASKS, V),
+            SampleCfg::default(),
+            &mut rng,
+            &mut timer,
+        )
+        .unwrap();
+    res
+}
+
+fn assert_same_results(a: &[SeqResult], b: &[SeqResult], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{tag}");
+        assert_eq!(x.response, y.response, "{tag} id {}", x.id);
+        assert_eq!(x.logps, y.logps, "{tag} id {}", x.id);
+        assert_eq!(
+            (x.reused, x.new_tokens, x.finished),
+            (y.reused, y.new_tokens, y.finished),
+            "{tag} id {}",
+            x.id
+        );
+    }
+}
+
+#[test]
+fn stealing_matches_the_oracle_and_tightens_the_critical_path() {
+    // Adversarially skewed: same-length drafts make the placement
+    // estimate uninformative, and id-correlated staleness makes PR 3's
+    // deterministic spill pin every expensive draft to shard 0. The
+    // steal-queue must (a) stay byte-identical to the two-phase oracle,
+    // (b) actually engage, and (c) strictly tighten the busiest engine's
+    // device-call total vs static placement.
+    let oracle = stale_oracle();
+    for shards in [2usize, 4] {
+        let (steal_res, steal_stats, steal_mocks) =
+            stale_collect(shards, Placement::Steal, 1);
+        let (static_res, static_stats, _) = stale_collect(shards, Placement::Static, 1);
+        assert_same_results(&steal_res, &oracle, &format!("steal vs oracle, {shards} shards"));
+        assert_same_results(&static_res, &oracle, &format!("static vs oracle, {shards} shards"));
+
+        assert!(steal_stats.steal_count > 0, "{shards} shards: no steals ({steal_stats:?})");
+        assert_eq!(static_stats.steal_count, 0, "static placement must never steal");
+
+        // merged telemetry matches each engine's own counters
+        let per_engine: Vec<usize> = steal_mocks.iter().map(|m| m.device_calls()).collect();
+        assert_eq!(steal_stats.shard_device_calls, per_engine, "shards={shards}");
+
+        let steal_max = *steal_stats.shard_device_calls.iter().max().unwrap();
+        let static_max = *static_stats.shard_device_calls.iter().max().unwrap();
+        assert!(
+            steal_max < static_max,
+            "{shards} shards: stealing must strictly tighten the critical path \
+             ({steal_max} !< {static_max})"
+        );
+    }
+}
+
+#[test]
+fn stolen_rows_never_seat_on_two_engines() {
+    // Lifecycle pinning, observed from the device side: every task's row
+    // is seated (prefill/refill/verify_seat) on exactly one engine, no
+    // matter how the shared queue drained. Prompts are per-task-unique,
+    // so the mock's seat trace attributes rows to engines exactly.
+    for shards in [2usize, 4] {
+        let (_, stats, mocks) = stale_collect(shards, Placement::Steal, 1);
+        assert!(stats.steal_count > 0, "stealing must engage for the trace to mean much");
+        let seats: Vec<HashSet<Vec<i32>>> =
+            mocks.iter().map(|m| m.seated_rows().into_iter().collect()).collect();
+        let total_seats: usize = mocks.iter().map(|m| m.seated_rows().len()).sum();
+        assert_eq!(total_seats, stale::N_TASKS, "each drafted row seats exactly once");
+        for i in 0..shards {
+            for j in i + 1..shards {
+                let both: Vec<_> = seats[i].intersection(&seats[j]).collect();
+                assert!(
+                    both.is_empty(),
+                    "rows seated on engines {i} and {j}: {both:?} (KV would have migrated)"
+                );
+            }
+        }
+        let union: HashSet<_> = seats.iter().flatten().cloned().collect();
+        assert_eq!(union.len(), stale::N_TASKS, "every drafted row seated somewhere");
+    }
+}
+
+#[test]
+fn verify_seat_min_sweep_is_byte_identical() {
+    // Adaptive seating only reshapes verify_seat packing; per-task RNG
+    // streams keep outputs byte-identical for every threshold (including
+    // seat_min == batch, which must not deadlock) at any shard count.
+    let oracle = stale_oracle();
+    for shards in [1usize, 2] {
+        for seat_min in [1usize, 2, 4] {
+            let (res, stats, _) = stale_collect(shards, Placement::Steal, seat_min);
+            assert_same_results(
+                &res,
+                &oracle,
+                &format!("seat_min {seat_min}, {shards} shards"),
+            );
+            assert!(stats.verify_calls > 0, "drafted step must verify ({stats:?})");
+        }
+    }
 }
 
 #[test]
