@@ -58,7 +58,7 @@ fn main() -> Result<()> {
         println!("prompt       : {prompt}   (answer: {answer})");
         println!("old rollout  : {}", tok.decode(&draft));
         println!("new rollout  : {}", tok.decode(&cur.response));
-        let marker: String = std::iter::repeat_n('^', shared).collect();
+        let marker = "^".repeat(shared);
         println!("verified     : {marker}  ({shared} tokens reused)");
         println!();
     }

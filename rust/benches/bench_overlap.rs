@@ -1,0 +1,131 @@
+//! Overlap bench: the adversarial stale-draft step on replicas sharing a
+//! virtual clock, measuring the overlapped steal driver's realized
+//! makespan against the serialized baseline at equal outputs.
+//!
+//! Since PR 5 the pool drives each round in two passes — submit every
+//! live shard's device chain, then complete the readbacks — so engine
+//! forwards on distinct devices run concurrently instead of
+//! host-serialized. On the mock's virtual clock
+//! (`MockEngine::clocked_replicas`) that shows up as
+//! `PipelineStats::overlap_makespan` (realized host-clock delta)
+//! dropping strictly below `serial_makespan` (summed device-busy time —
+//! exactly what the old round-robin driver realized, since it never let
+//! two forwards overlap). Asserts, for `shards ∈ {2, 4}`: byte-identical
+//! outputs across placements and shard counts, a strictly lower
+//! overlapped makespan, and agreement of the two columns on the
+//! serialized disciplines (1 shard, and `Placement::Static`). Writes
+//! `BENCH_overlap.json` for machine diffing / the CI smoke run.
+
+use spec_rl::benchkit::drafted::{B, LOG_LENIENCE, P, SEED, T, V};
+use spec_rl::benchkit::{fmt_secs, stale, Bench, JsonReport};
+use spec_rl::rollout::{EnginePool, Placement, SampleCfg, SeqResult};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::util::{Rng, StageTimer};
+
+/// Draft length: identical for every task, so the placement estimate
+/// carries no information about realized work (same as `bench_steal`).
+const DRAFT_LEN: usize = 30;
+
+fn main() {
+    println!(
+        "== overlap bench (clocked mock replicas: B={B}/shard T={T}, {} stale-mod-{} drafts) ==",
+        stale::N_TASKS,
+        stale::STALE_MOD,
+    );
+    let bench = Bench::new(1, 8);
+    let mut j = JsonReport::new();
+    j.int("batch_per_shard", B)
+        .int("tasks", stale::N_TASKS)
+        .int("draft_len", DRAFT_LEN)
+        .num("log_lenience", LOG_LENIENCE as f64);
+
+    let mut baseline: Option<Vec<SeqResult>> = None;
+    println!("\nshards  overlap makespan  serial makespan  speedup  wall-clock (median)");
+    for shards in [1usize, 2, 4] {
+        let mut mocks = MockEngine::clocked_replicas(shards, B, P, T, V);
+        for m in &mut mocks {
+            // Deterministic full-length tails: every rejected row decodes
+            // exactly to the cap, so the imbalance is structural.
+            m.eos_bias = 0.0;
+        }
+        let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        let cfg = SampleCfg::default();
+        let mut timer = StageTimer::new();
+
+        let mut run = |placement: Placement| {
+            let mut spec = stale::warmed(stale::N_TASKS, DRAFT_LEN, V, LOG_LENIENCE)
+                .with_placement(placement);
+            let mut rng = Rng::new(SEED);
+            let reqs = stale::requests(stale::N_TASKS, V);
+            spec.collect(&mut pool, &blob_refs, &reqs, cfg, &mut rng, &mut timer).unwrap()
+        };
+
+        let (steal_res, steal_stats) = run(Placement::Steal);
+        let (static_res, static_stats) = run(Placement::Static);
+
+        // outputs must be byte-identical across placements AND shard
+        // counts (length first: zip alone would pass on truncation)
+        assert_eq!(steal_res.len(), stale::N_TASKS, "steal run dropped results");
+        assert_eq!(static_res.len(), stale::N_TASKS, "static run dropped results");
+        for (a, b) in steal_res.iter().zip(&static_res) {
+            assert_eq!((a.id, &a.response), (b.id, &b.response), "placement changed outputs");
+            assert_eq!(a.logps, b.logps, "placement changed logps");
+        }
+        match &baseline {
+            None => baseline = Some(steal_res),
+            Some(base) => {
+                assert_eq!(base.len(), steal_res.len(), "shard count changed result count");
+                for (a, b) in base.iter().zip(&steal_res) {
+                    assert_eq!((a.id, &a.response), (b.id, &b.response), "shard count leaked");
+                    assert_eq!(a.logps, b.logps, "shard count leaked into logps");
+                }
+            }
+        }
+
+        let (ov, se) = (steal_stats.overlap_makespan, steal_stats.serial_makespan);
+        assert!(se > 0.0, "{shards} shards: the virtual clock never moved");
+        if shards > 1 {
+            assert!(
+                ov < se,
+                "{shards} shards: overlapped makespan {ov} must come out strictly below \
+                 the serialized {se}"
+            );
+            // Static completes every chain inline — a serialized
+            // discipline realizes exactly its serial column.
+            assert!(
+                (static_stats.overlap_makespan - static_stats.serial_makespan).abs() < 1e-6,
+                "static realized {} != serialized {}",
+                static_stats.overlap_makespan,
+                static_stats.serial_makespan
+            );
+        } else {
+            assert!(
+                (ov - se).abs() < 1e-6,
+                "one shard has nothing to overlap with: {ov} vs {se}"
+            );
+        }
+
+        let r_time = bench.run(&format!("overlapped steal over {shards} shard(s)"), || {
+            run(Placement::Steal)
+        });
+
+        let speedup = se / ov.max(1e-12);
+        println!(
+            "{shards:>6}  {ov:>16.1}  {se:>15.1}  {speedup:>6.2}x  {:>19}",
+            fmt_secs(r_time.median_secs)
+        );
+        j.num(&format!("s{shards}_overlap_makespan"), ov)
+            .num(&format!("s{shards}_serial_makespan"), se)
+            .num(&format!("s{shards}_overlap_speedup"), speedup)
+            .num(&format!("s{shards}_static_overlap_makespan"), static_stats.overlap_makespan)
+            .num(&format!("s{shards}_static_serial_makespan"), static_stats.serial_makespan)
+            .bench(&format!("s{shards}"), &r_time);
+    }
+
+    println!("\n{}", j.render());
+    if let Err(e) = j.save("BENCH_overlap.json") {
+        eprintln!("could not write BENCH_overlap.json: {e}");
+    }
+}

@@ -12,11 +12,19 @@
 //! [`RolloutEngine::pipeline_start`] seats the initial work and returns a
 //! [`PipelineRun`], and [`RolloutEngine::pipeline_step`] advances it one
 //! decode round at a time, pulling replacement work from a caller-supplied
-//! [`WorkQueue`] whenever slots free up. `run_pipeline` is the one-engine
-//! driver (private queue); [`crate::rollout::pool::EnginePool`] interleaves
-//! the same steps across N engines over one *shared* queue, which is what
-//! makes mid-step work stealing possible without ever migrating a seated
-//! row.
+//! [`WorkQueue`] whenever slots free up. Since PR 5 each round is itself
+//! split in two: [`RolloutEngine::step_submit`] issues the round's whole
+//! device chain (decode → refill → verify-seat → read_gen, linked through
+//! pending handles) without blocking, and
+//! [`RolloutEngine::step_complete`] cashes the returned [`StepTicket`] in
+//! — the only host-blocking half. `pipeline_step` is the composed
+//! (blocking) form; `run_pipeline` is the one-engine driver over it
+//! (private queue). [`crate::rollout::pool::EnginePool`] drives the two
+//! halves separately across N engines over one *shared* queue: every live
+//! shard's round is submitted before any shard's is completed, so engine
+//! forwards on distinct devices run concurrently instead of
+//! host-serialized, while mid-step work stealing keeps working and no
+//! seated row ever migrates (`ARCHITECTURE.md` §11).
 //!
 //! [`RolloutEngine::run`] is the decode-only subset (no drafts) used by
 //! evaluation and the scheduler benches; [`RolloutEngine::run_lockstep`]
@@ -92,6 +100,18 @@ pub struct PipelineStats {
     /// [`crate::rollout::pool::EnginePool`] (one entry per shard, in shard
     /// order). Empty for engine-level runs that bypass the pool.
     pub shard_device_calls: Vec<usize>,
+    /// Realized virtual makespan of the step under the driver actually
+    /// used (`ARCHITECTURE.md` §11): host-clock delta across the pool
+    /// run. Only a backend with a virtual clock
+    /// ([`crate::testing::mock::MockEngine`]) can report it; on real
+    /// devices it stays 0. Under the overlapped steal driver this is the
+    /// quantity that drops below [`PipelineStats::serial_makespan`].
+    pub overlap_makespan: f64,
+    /// What a host-serialized driver would have realized for the same
+    /// step: the sum of every shard's device-busy virtual seconds (a
+    /// serialized driver never lets two forwards overlap, so its
+    /// makespan is exactly that sum). 0 without a virtual clock.
+    pub serial_makespan: f64,
 }
 
 impl PipelineStats {
@@ -137,6 +157,8 @@ impl PipelineStats {
         self.steal_count += o.steal_count;
         self.cache_evictions += o.cache_evictions;
         self.cache_evicted_tokens += o.cache_evicted_tokens;
+        self.overlap_makespan += o.overlap_makespan;
+        self.serial_makespan += o.serial_makespan;
         if self.shard_device_calls.len() < o.shard_device_calls.len() {
             self.shard_device_calls.resize(o.shard_device_calls.len(), 0);
         }
@@ -238,6 +260,37 @@ impl<B: Backend> PipelineRun<B> {
     }
 }
 
+/// The in-flight half of one pipeline round (PR 5): everything
+/// [`RolloutEngine::step_submit`] issued to the device and has not yet
+/// blocked on. Holding a ticket means the engine's device chain for this
+/// round — decode → refill → verify-seat → read_gen, whichever of those
+/// ran — is queued on its own timeline; the host is free to submit other
+/// shards' chains before [`RolloutEngine::step_complete`] cashes this one
+/// in. An empty ticket (no device call this round) completes as a no-op.
+pub struct StepTicket<B: Backend = Engine> {
+    /// Final pending forward of the round's gen-blob chain; its output is
+    /// the round's new generation blob. `None` when no state-mutating
+    /// entry ran this round.
+    gen: Option<B::Pending>,
+    /// Pending `read_gen` output for the round's probs/aux readback;
+    /// `None` when the run finished during submission.
+    read: Option<B::Pending>,
+}
+
+impl<B: Backend> StepTicket<B> {
+    /// The round's current chain head: the buffer the next submit must
+    /// consume as its gen argument — the in-flight chain's output if any
+    /// stage has been submitted this round, else the run's completed blob
+    /// (`fallback`). Keeping this in one place is what guarantees a newly
+    /// added chain stage can never read a stale pre-round gen blob.
+    fn chain_head<'a>(&'a self, eng: &B, fallback: &'a B::Buf) -> &'a B::Buf {
+        match self.gen.as_ref() {
+            Some(p) => eng.pending_buf(p),
+            None => fallback,
+        }
+    }
+}
+
 /// The batched rollout engine bound to one (backend, bundle).
 pub struct RolloutEngine<'e, B: Backend = Engine> {
     eng: &'e B,
@@ -301,6 +354,12 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
 
     pub fn gen_len(&self) -> usize {
         self.total_len - self.prompt_len
+    }
+
+    /// The backend this engine is bound to (the pool's overlap accounting
+    /// reads its virtual clock through this).
+    pub(crate) fn backend(&self) -> &B {
+        self.eng
     }
 
     /// Prime the cached temperature buffer for this run's config.
@@ -436,8 +495,32 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         writes
     }
 
-    /// Advance surviving rows one decode step: three `[B]` uploads, never
-    /// the `[B, T]` mask (inert rows carry out-of-range slots).
+    /// Submit one decode step over `gen`: three `[B]` uploads, never the
+    /// `[B, T]` mask (inert rows carry out-of-range slots). Non-blocking;
+    /// the returned pending's buffer is the advanced generation blob.
+    fn decode_submit(
+        &mut self,
+        blob: &B::Buf,
+        gen: &B::Buf,
+        writes: usize,
+        stats: &mut PipelineStats,
+    ) -> Result<B::Pending> {
+        let b = self.batch;
+        let tok_b = self.eng.upload_i32(&self.token_in, &[b])?;
+        let slot_b = self.eng.upload_i32(&self.slot_in, &[b])?;
+        let lpos_b = self.eng.upload_i32(&self.lpos_in, &[b])?;
+        let pending = self.eng.submit_entry(
+            &self.h_decode,
+            &[blob, gen, &tok_b, &slot_b, &lpos_b, self.temp_ref()],
+        )?;
+        stats.decode_steps += 1;
+        stats.slot_idle_steps += b - writes;
+        Ok(pending)
+    }
+
+    /// Advance surviving rows one decode step, blocking — the synchronous
+    /// composition of [`RolloutEngine::decode_submit`] + complete used by
+    /// the single-chain drivers.
     fn decode_advance(
         &mut self,
         blob: &B::Buf,
@@ -445,16 +528,8 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         writes: usize,
         stats: &mut PipelineStats,
     ) -> Result<()> {
-        let b = self.batch;
-        let tok_b = self.eng.upload_i32(&self.token_in, &[b])?;
-        let slot_b = self.eng.upload_i32(&self.slot_in, &[b])?;
-        let lpos_b = self.eng.upload_i32(&self.lpos_in, &[b])?;
-        *gen = self.eng.call_entry(
-            &self.h_decode,
-            &[blob, &*gen, &tok_b, &slot_b, &lpos_b, self.temp_ref()],
-        )?;
-        stats.decode_steps += 1;
-        stats.slot_idle_steps += b - writes;
+        let pending = self.decode_submit(blob, gen, writes, stats)?;
+        *gen = self.eng.complete(pending)?;
         Ok(())
     }
 
@@ -476,24 +551,24 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
     /// Re-seat freed slots from the queue's decode lane via the masked
     /// `refill` entry (several rows per call), arming their slot state.
     /// Runs after the decode step so refill probs are the freshest state
-    /// for the next sampling round. No-op when no slot is free or the
-    /// lane is drained. With a shared queue this is the steal point for
-    /// decode work: whichever engine frees a slot first pulls the next
-    /// task, never a row seated elsewhere.
+    /// for the next sampling round. Returns `None` (no submit) when no
+    /// slot is free or the lane is drained. With a shared queue this is
+    /// the steal point for decode work: whichever engine frees a slot
+    /// first pulls the next task, never a row seated elsewhere.
     #[allow(clippy::too_many_arguments)]
-    fn refill_slots(
+    fn refill_submit(
         &mut self,
         sched: &mut SlotScheduler,
         slots: &mut [Option<SlotState>],
         queue: &mut WorkQueue,
         run_nonce: u64,
         blob: &B::Buf,
-        gen: &mut B::Buf,
+        gen: &B::Buf,
         stats: &mut PipelineStats,
-    ) -> Result<()> {
+    ) -> Result<Option<B::Pending>> {
         let fills = sched.fill(queue);
         if fills.is_empty() {
-            return Ok(());
+            return Ok(None);
         }
         for (slot, task) in fills {
             self.layout.set_row(slot, &task.prompt, &task.prefix);
@@ -505,12 +580,33 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
         let rm_b = self.eng.upload_f32(&self.rowmask, &[b])?;
         let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
-        *gen = self.eng.call_entry(
+        let pending = self.eng.submit_entry(
             &self.h_refill,
-            &[blob, &*gen, &tok_b, &val_b, &rm_b, &last_b, self.temp_ref()],
+            &[blob, gen, &tok_b, &val_b, &rm_b, &last_b, self.temp_ref()],
         )?;
         stats.refills += 1;
         self.rowmask.fill(0.0);
+        Ok(Some(pending))
+    }
+
+    /// Blocking [`RolloutEngine::refill_submit`] + complete (the
+    /// single-chain drivers' form).
+    #[allow(clippy::too_many_arguments)]
+    fn refill_slots(
+        &mut self,
+        sched: &mut SlotScheduler,
+        slots: &mut [Option<SlotState>],
+        queue: &mut WorkQueue,
+        run_nonce: u64,
+        blob: &B::Buf,
+        gen: &mut B::Buf,
+        stats: &mut PipelineStats,
+    ) -> Result<()> {
+        if let Some(p) =
+            self.refill_submit(sched, slots, queue, run_nonce, blob, gen, stats)?
+        {
+            *gen = self.eng.complete(p)?;
+        }
         Ok(())
     }
 
@@ -572,28 +668,29 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
     }
 
     /// Seat queued drafts into free slots via one packed `verify_seat`
-    /// call (verify + KV seat, no separate refill forward). Rows seated
+    /// submit (verify + KV seat, no separate refill forward). Rows seated
     /// here stay in the Verify phase until `resolve_verified` reads their
     /// rejection offsets from the aux lane. Seating is adaptive
     /// (`seat_min`, see [`SampleCfg::verify_seat_min`]) and, with a shared
-    /// queue, this is the steal point for draft work.
+    /// queue, this is the steal point for draft work. Returns `None`
+    /// (no submit) when nothing seats.
     #[allow(clippy::too_many_arguments)]
-    fn seat_drafts(
+    fn seat_submit(
         &mut self,
         sched: &mut SlotScheduler,
         verifying: &mut [Option<VerifyTask>],
         queue: &mut WorkQueue,
         seat_min: usize,
         blob: &B::Buf,
-        gen: &mut B::Buf,
+        gen: &B::Buf,
         vnonce: u64,
         ll: &B::Buf,
         stats: &mut PipelineStats,
         timer: &mut StageTimer,
-    ) -> Result<()> {
+    ) -> Result<Option<B::Pending>> {
         let vfills = sched.fill_verify(queue, seat_min);
         if vfills.is_empty() {
-            return Ok(());
+            return Ok(None);
         }
         let span = Instant::now();
         let Some(h) = self.h_verify_seat.clone() else {
@@ -608,13 +705,37 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         }
         let (tok, val, lp, un, dv) = self.upload_vplan()?;
         let rm = self.eng.upload_f32(&self.rowmask, &[b])?;
-        *gen = self.eng.call_entry(
+        let pending = self.eng.submit_entry(
             &h,
-            &[blob, &*gen, &tok, &val, &lp, &un, &dv, &rm, ll, self.temp_ref()],
+            &[blob, gen, &tok, &val, &lp, &un, &dv, &rm, ll, self.temp_ref()],
         )?;
         stats.verify_calls += 1;
         self.rowmask.fill(0.0);
         timer.add("verification", span.elapsed().as_secs_f64());
+        Ok(Some(pending))
+    }
+
+    /// Blocking [`RolloutEngine::seat_submit`] + complete (the
+    /// single-chain drivers' form).
+    #[allow(clippy::too_many_arguments)]
+    fn seat_drafts(
+        &mut self,
+        sched: &mut SlotScheduler,
+        verifying: &mut [Option<VerifyTask>],
+        queue: &mut WorkQueue,
+        seat_min: usize,
+        blob: &B::Buf,
+        gen: &mut B::Buf,
+        vnonce: u64,
+        ll: &B::Buf,
+        stats: &mut PipelineStats,
+        timer: &mut StageTimer,
+    ) -> Result<()> {
+        if let Some(p) = self.seat_submit(
+            sched, verifying, queue, seat_min, blob, gen, vnonce, ll, stats, timer,
+        )? {
+            *gen = self.eng.complete(p)?;
+        }
         Ok(())
     }
 
@@ -883,23 +1004,36 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         Ok(run)
     }
 
-    /// Advance a started run by one pipeline round: sample every decoding
-    /// slot, advance survivors one decode step, refill freed slots from
-    /// the queue's task lane, verify-seat queued drafts into slots still
-    /// free (respecting [`SampleCfg::verify_seat_min`]), then read
-    /// probs/aux back and resolve just-verified rows. No-op once the run
-    /// is done. With a shared queue the refill/seat pulls are the steal
-    /// points — this engine picks up work another shard would otherwise
-    /// have queued behind its tail.
-    pub fn pipeline_step(
+    /// Issue one pipeline round's device work without blocking on any of
+    /// it: sample every decoding slot from the current readback, submit
+    /// the decode step for survivors, submit a refill for freed slots
+    /// (pulling from the queue's decode lane), submit a packed
+    /// verify-seat for slots still free (respecting
+    /// [`SampleCfg::verify_seat_min`]), and finally submit the round's
+    /// `read_gen`. The chain is linked through [`Backend::pending_buf`] —
+    /// each forward consumes its predecessor's pending output on the
+    /// device's own timeline — so the host returns as soon as everything
+    /// is queued. Blocking happens only in
+    /// [`RolloutEngine::step_complete`]; between the two, a pool driver
+    /// submits the *other* shards' rounds, which is what lets engine
+    /// forwards on distinct devices run concurrently
+    /// (`ARCHITECTURE.md` §11).
+    ///
+    /// With a shared queue the refill/seat pulls are the steal points —
+    /// this engine picks up work another shard would otherwise have
+    /// queued behind its tail. Returns an empty ticket once the run is
+    /// done; a round that finds nothing to do (no survivors, queue
+    /// drained) marks the run done and also returns an empty ticket.
+    pub fn step_submit(
         &mut self,
         run: &mut PipelineRun<B>,
         blob: &B::Buf,
         queue: &mut WorkQueue,
         timer: &mut StageTimer,
-    ) -> Result<()> {
+    ) -> Result<StepTicket<B>> {
+        let mut ticket = StepTicket { gen: None, read: None };
         if run.done {
-            return Ok(());
+            return Ok(ticket);
         }
         let cfg = run.cfg;
         let span = Instant::now();
@@ -909,50 +1043,90 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             &mut run.sched, &mut run.slots, &mut run.results, cfg.top_p, &mut run.stats,
         );
 
-        // 2. advance surviving decode rows
+        // 2. submit the decode step for surviving rows
         if writes > 0 {
-            self.decode_advance(
-                blob,
-                run.gen.as_mut().expect("started run has a gen blob"),
-                writes,
-                &mut run.stats,
-            )?;
+            let p = {
+                let gen = run.gen.as_ref().expect("started run has a gen blob");
+                self.decode_submit(blob, gen, writes, &mut run.stats)?
+            };
+            ticket.gen = Some(p);
         }
 
-        // 3. refill freed slots from the queue's decode lane
-        self.refill_slots(
-            &mut run.sched,
-            &mut run.slots,
-            queue,
-            run.rnonce,
-            blob,
-            run.gen.as_mut().expect("started run has a gen blob"),
-            &mut run.stats,
-        )?;
+        // 3. submit a refill for freed slots from the queue's decode lane
+        let refilled = {
+            let fallback = run.gen.as_ref().expect("started run has a gen blob");
+            let gen = ticket.chain_head(self.eng, fallback);
+            self.refill_submit(
+                &mut run.sched, &mut run.slots, queue, run.rnonce, blob, gen, &mut run.stats,
+            )?
+        };
+        if let Some(p) = refilled {
+            ticket.gen = Some(p);
+        }
         timer.add("rollout", span.elapsed().as_secs_f64());
 
-        // 4. verify-seat more drafts into any slots still free
-        self.seat_drafts(
-            &mut run.sched,
-            &mut run.verifying,
-            queue,
-            cfg.verify_seat_min,
-            blob,
-            run.gen.as_mut().expect("started run has a gen blob"),
-            run.vnonce,
-            run.ll.as_ref().expect("started run has a loglen buffer"),
-            &mut run.stats,
-            timer,
-        )?;
+        // 4. submit a packed verify-seat into any slots still free
+        let seated = {
+            let fallback = run.gen.as_ref().expect("started run has a gen blob");
+            let gen = ticket.chain_head(self.eng, fallback);
+            self.seat_submit(
+                &mut run.sched,
+                &mut run.verifying,
+                queue,
+                cfg.verify_seat_min,
+                blob,
+                gen,
+                run.vnonce,
+                run.ll.as_ref().expect("started run has a loglen buffer"),
+                &mut run.stats,
+                timer,
+            )?
+        };
+        if let Some(p) = seated {
+            ticket.gen = Some(p);
+        }
 
         if run.sched.is_done(queue) {
+            // Nothing decoding, nothing verifying, queue drained: the
+            // round submitted no forward (any occupied slot would have
+            // kept `busy > 0`), so there is nothing to read back.
             run.done = true;
-            return Ok(());
+            return Ok(ticket);
         }
-        // 5. one readback serves both phases: fresh probs for the next
-        //    sampling round, aux offsets for the rows just seated
+
+        // 5. submit the round's readback: one read serves both phases —
+        //    fresh probs for the next sampling round, aux offsets for the
+        //    rows just seated
+        let read = {
+            let fallback = run.gen.as_ref().expect("started run has a gen blob");
+            let gen = ticket.chain_head(self.eng, fallback);
+            self.eng.submit_entry(&self.h_read_gen, &[gen])?
+        };
+        ticket.read = Some(read);
+        Ok(ticket)
+    }
+
+    /// Cash in a round's ticket: block on the device chain's final
+    /// pending (the round's new generation blob), then on the `read_gen`
+    /// output, refresh the host readback, and resolve just-verified
+    /// rows. This is the only host-blocking half of the two-phase round;
+    /// completing an empty ticket is free.
+    pub fn step_complete(
+        &mut self,
+        run: &mut PipelineRun<B>,
+        ticket: StepTicket<B>,
+        queue: &WorkQueue,
+        timer: &mut StageTimer,
+    ) -> Result<()> {
+        if let Some(p) = ticket.gen {
+            run.gen = Some(self.eng.complete(p)?);
+        }
+        let Some(read) = ticket.read else {
+            return Ok(());
+        };
         let span = Instant::now();
-        self.read_probs(run.gen.as_ref().expect("started run has a gen blob"))?;
+        let out = self.eng.complete(read)?;
+        self.eng.read_f32_into(&out, &mut self.readback)?;
         self.resolve_verified(
             &mut run.sched,
             &mut run.verifying,
@@ -964,6 +1138,23 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         timer.add("rollout", span.elapsed().as_secs_f64());
         run.done = run.sched.is_done(queue);
         Ok(())
+    }
+
+    /// Advance a started run by one pipeline round, blocking: the
+    /// composed [`RolloutEngine::step_submit`] +
+    /// [`RolloutEngine::step_complete`]. Single-engine runs and
+    /// [`crate::rollout::pool::Placement::Static`] drive this form — one
+    /// chain, nothing to overlap with — so they are untouched by the
+    /// two-phase split. No-op once the run is done.
+    pub fn pipeline_step(
+        &mut self,
+        run: &mut PipelineRun<B>,
+        blob: &B::Buf,
+        queue: &mut WorkQueue,
+        timer: &mut StageTimer,
+    ) -> Result<()> {
+        let ticket = self.step_submit(run, blob, queue, timer)?;
+        self.step_complete(run, ticket, queue, timer)
     }
 
     /// The pre-scheduler wave discipline: tasks bind to slots in waves of

@@ -32,10 +32,16 @@
 //! [`sched::WorkQueue`] (the steal-queue): unstarted work drains LPT-first
 //! to whichever engine has free slots, mid-step included, while a row's
 //! whole lifecycle stays pinned to the engine that seated it so KV never
-//! migrates. Per-task sampling and verification RNG streams make results
-//! byte-identical for any shard count, either placement discipline, and
-//! any `verify_seat_min` — see `ARCHITECTURE.md` for the full contract
-//! set.
+//! migrates. The pool drives each round in two phases
+//! ([`engine::RolloutEngine::step_submit`] /
+//! [`engine::RolloutEngine::step_complete`]): every live shard's device
+//! chain is submitted before any shard's readback blocks the host, so
+//! engine forwards run concurrently instead of host-serialized —
+//! `PipelineStats::overlap_makespan` vs `serial_makespan` quantifies the
+//! win on the mock's virtual clock (`bench_overlap`). Per-task sampling
+//! and verification RNG streams make results byte-identical for any shard
+//! count, either placement discipline, and any `verify_seat_min` — see
+//! `ARCHITECTURE.md` for the full contract set.
 //!
 //! Canonical layout (shared with L2): prompts right-aligned into slots
 //! `[0, P)`, responses in `[P, T)`; positional embeddings are logical
@@ -47,6 +53,8 @@ pub mod pool;
 pub mod sched;
 
 pub use batch::{BatchLayout, SeqResult, SeqTask};
-pub use engine::{PipelineRun, PipelineStats, RolloutEngine, RolloutStats, SampleCfg};
+pub use engine::{
+    PipelineRun, PipelineStats, RolloutEngine, RolloutStats, SampleCfg, StepTicket,
+};
 pub use pool::{EnginePool, Placement};
 pub use sched::{SlotPhase, SlotScheduler, WorkQueue};

@@ -33,6 +33,18 @@
 //!   step round-robin (shard 0, 1, …, N-1, repeat), so which engine pulls
 //!   which item is a pure function of the inputs — placement is
 //!   reproducible even though it is decided mid-step.
+//! - **Overlapped stepping (PR 5).** Each round-robin round runs in two
+//!   passes over the shards: a *submit* pass
+//!   ([`RolloutEngine::step_submit`]) issues every live shard's whole
+//!   device chain for the round, then a *complete* pass
+//!   ([`RolloutEngine::step_complete`]) blocks on the readbacks in the
+//!   same order. Queue pulls all happen in the submit pass, in shard
+//!   index order — exactly the sequence the old host-serialized driver
+//!   produced — so placement, steal counts, and outputs are unchanged
+//!   while engines on distinct devices run their forwards concurrently.
+//!   `PipelineStats::overlap_makespan` vs `serial_makespan` measures the
+//!   win on the mock's virtual clock (`ARCHITECTURE.md` §11,
+//!   `bench_overlap`).
 //! - **Replicas must be interchangeable.** Every backend must serve the
 //!   same bundle geometry (checked at construction) and hold the same
 //!   policy weights (the caller passes one blob per shard); per-row
@@ -60,7 +72,7 @@
 use anyhow::{ensure, Result};
 
 use super::batch::{SeqResult, SeqTask};
-use super::engine::{PipelineRun, PipelineStats, RolloutEngine, SampleCfg};
+use super::engine::{PipelineRun, PipelineStats, RolloutEngine, SampleCfg, StepTicket};
 use super::sched::WorkQueue;
 use crate::runtime::{Backend, Engine};
 use crate::spec::verifier::VerifyTask;
@@ -213,6 +225,32 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         out
     }
 
+    /// Snapshot the backends' virtual clock for overlap accounting: the
+    /// shared host reading plus each shard's device-busy total. A `None`
+    /// host reading (any real device backend) disables the accounting.
+    fn clock_begin(&self) -> (Option<f64>, Vec<f64>) {
+        let t0 = self.shards[0].backend().virtual_now();
+        let busy0 = self.shards.iter().map(|s| s.backend().device_busy_secs()).collect();
+        (t0, busy0)
+    }
+
+    /// Fill the makespan telemetry from a [`EnginePool::clock_begin`]
+    /// snapshot: `overlap_makespan` is the realized host-clock delta of
+    /// this run under the driver actually used; `serial_makespan` is the
+    /// summed device-busy deltas — what a driver that never lets two
+    /// forwards overlap would have realized (`ARCHITECTURE.md` §11).
+    fn clock_end(&self, stats: &mut PipelineStats, t0: Option<f64>, busy0: &[f64]) {
+        let Some(t0) = t0 else { return };
+        let now = self.shards[0].backend().virtual_now().unwrap_or(t0);
+        stats.overlap_makespan = now - t0;
+        stats.serial_makespan = self
+            .shards
+            .iter()
+            .zip(busy0)
+            .map(|(s, b0)| s.backend().device_busy_secs() - b0)
+            .sum();
+    }
+
     /// Run one step's decode-ready `tasks` and to-verify `drafts` across
     /// the pool under the default [`Placement::Steal`] discipline. See
     /// [`EnginePool::run_pipeline_with`].
@@ -263,9 +301,11 @@ impl<'e, B: Backend> EnginePool<'e, B> {
             self.shards.len()
         );
         if self.shards.len() == 1 {
+            let (t0, busy0) = self.clock_begin();
             let (results, mut stats) = self.shards[0]
                 .run_pipeline(blobs[0], tasks, drafts, loglen, cfg, vnonce, rnonce, timer)?;
             stats.shard_device_calls = vec![stats.device_calls()];
+            self.clock_end(&mut stats, t0, &busy0);
             return Ok((results, stats));
         }
         match placement {
@@ -295,6 +335,7 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         let placed = self.place(tasks, drafts);
         let mut results: Vec<SeqResult> = Vec::new();
         let mut agg = PipelineStats::default();
+        let (t0, busy0) = self.clock_begin();
         for (shard, (t, d)) in placed.into_iter().enumerate() {
             let (r, s) = self.shards[shard]
                 .run_pipeline(blobs[shard], t, d, loglen, cfg, vnonce, rnonce, timer)?;
@@ -302,15 +343,24 @@ impl<'e, B: Backend> EnginePool<'e, B> {
             agg.shard_device_calls.push(s.device_calls());
             results.extend(r);
         }
+        self.clock_end(&mut agg, t0, &busy0);
         results.sort_by_key(|r| r.id);
         Ok((results, agg))
     }
 
-    /// The PR 4 discipline: all shards pull from one shared steal-queue.
-    /// Shards start in index order, then step round-robin; a shard whose
-    /// refill pass finds free slots pulls the queue's longest-remaining
-    /// item, so the step's tail drains to whichever engine has capacity
-    /// instead of queueing behind one shard's backlog.
+    /// The steal discipline: all shards pull from one shared steal-queue
+    /// (PR 4), and since PR 5 the drive loop is **overlapped** — each
+    /// round submits every live shard's device chain before completing
+    /// any of them, so shard *i+1*'s forward no longer waits for shard
+    /// *i*'s readback. Shards start in index order, then step
+    /// round-robin; a shard whose refill pass finds free slots pulls the
+    /// queue's longest-remaining item, so the step's tail drains to
+    /// whichever engine has capacity instead of queueing behind one
+    /// shard's backlog. Because every queue pull happens in the submit
+    /// pass, in shard index order, the pull sequence — and therefore
+    /// placement, steal counts, and outputs — is identical to the old
+    /// host-serialized round-robin; only the realized makespan changes
+    /// (`overlap_makespan` < `serial_makespan` on the virtual clock).
     #[allow(clippy::too_many_arguments)]
     fn run_steal(
         &mut self,
@@ -330,6 +380,7 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         // into the merged results, exactly as the engine driver would.
         let pending = self.shards[0].split_terminal(tasks, &mut results, &mut agg);
 
+        let (t0, busy0) = self.clock_begin();
         let mut queue = WorkQueue::new(pending, drafts);
         let mut runs: Vec<PipelineRun<B>> = Vec::with_capacity(n);
         for i in 0..n {
@@ -340,10 +391,26 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         // Everything popped from here on is work the one-pass placement
         // would have pinned to a single engine up front.
         queue.mark_started();
+        let mut tickets: Vec<Option<StepTicket<B>>> = (0..n).map(|_| None).collect();
         while runs.iter().any(|r| !r.done()) {
+            // Submit pass: issue every live shard's chain for this round.
+            // All queue pulls happen here, in shard index order.
             for i in 0..n {
                 if !runs[i].done() {
-                    self.shards[i].pipeline_step(&mut runs[i], blobs[i], &mut queue, timer)?;
+                    tickets[i] = Some(self.shards[i].step_submit(
+                        &mut runs[i],
+                        blobs[i],
+                        &mut queue,
+                        timer,
+                    )?);
+                }
+            }
+            // Complete pass: now block on the readbacks, same order. On
+            // devices this is where the overlap is realized — shard i's
+            // wait runs concurrently with shards i+1..n's forwards.
+            for i in 0..n {
+                if let Some(ticket) = tickets[i].take() {
+                    self.shards[i].step_complete(&mut runs[i], ticket, &queue, timer)?;
                 }
             }
         }
@@ -354,6 +421,7 @@ impl<'e, B: Backend> EnginePool<'e, B> {
             agg.shard_device_calls.push(s.device_calls());
             results.extend(r);
         }
+        self.clock_end(&mut agg, t0, &busy0);
         results.sort_by_key(|r| r.id);
         Ok((results, agg))
     }

@@ -437,6 +437,56 @@ mod tests {
     }
 
     #[test]
+    fn draft_lane_lpt_ties_break_by_id() {
+        // Equal-length drafts must pop in ascending id order regardless
+        // of insertion order — the determinism the overlapped driver's
+        // submit-pass pull sequence (and every placement oracle) relies
+        // on.
+        let mut q = WorkQueue::new(Vec::new(), vec![draft(5, 3), draft(1, 3), draft(3, 3)]);
+        let mut s = SlotScheduler::new(3);
+        let ids: Vec<usize> =
+            s.fill_verify(&mut q, 1).into_iter().map(|(_, d)| d.id).collect();
+        assert_eq!(ids, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn zero_draft_queue_behaves_like_tasks_only() {
+        // A step with no drafts at all: the draft lane must hand out
+        // nothing (whatever seat_min says), never count a steal for it,
+        // and never block completion.
+        let mut q = WorkQueue::new(vec![task(0, 0), task(1, 2)], Vec::new());
+        let mut s = SlotScheduler::new(4);
+        assert_eq!(q.pending_drafts(), 0);
+        assert_eq!(s.fill(&mut q).len(), 2);
+        assert!(s.fill_verify(&mut q, 1).is_empty(), "no draft lane to pull from");
+        assert!(s.fill_verify(&mut q, 64).is_empty(), "seat_min cannot conjure drafts");
+        s.release(0);
+        s.release(1);
+        assert!(s.is_done(&q), "an empty draft lane must not block completion");
+        assert_eq!(q.steals(), 0);
+    }
+
+    #[test]
+    fn oversized_pool_leaves_trailing_schedulers_empty() {
+        // More shards than work items: schedulers that reach the queue
+        // after it drained seat nothing and are immediately done — the
+        // engine layer turns that into zero submits (pinned end-to-end by
+        // the pool's idle-shard tests).
+        let mut q = WorkQueue::new(vec![task(0, 0)], vec![draft(9, 2)]);
+        let mut shards: Vec<SlotScheduler> = (0..4).map(|_| SlotScheduler::new(2)).collect();
+        let mut seated = 0;
+        for s in shards.iter_mut() {
+            seated += s.fill(&mut q).len() + s.fill_verify(&mut q, 1).len();
+        }
+        assert_eq!(seated, 2, "both items seat exactly once, on the first shard");
+        assert!(q.is_empty());
+        for (i, s) in shards.iter().enumerate().skip(1) {
+            assert_eq!(s.busy(), 0, "shard {i} should have nothing seated");
+            assert!(s.is_done(&q), "an empty shard over a drained queue is done");
+        }
+    }
+
+    #[test]
     fn shared_queue_pops_after_start_count_as_steals() {
         let mut q = WorkQueue::new((0..3).map(|i| task(i, 0)).collect(), vec![draft(9, 2)]);
         let mut a = SlotScheduler::new(1);

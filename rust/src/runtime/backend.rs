@@ -11,6 +11,34 @@
 //! engine construction, so the per-decode-step path does no string
 //! formatting, no map lookups, and (for the PJRT engine) no lock
 //! acquisitions.
+//!
+//! ## The submit/complete protocol (overlapped shard stepping)
+//!
+//! Every entry call exists in two forms:
+//!
+//! - [`Backend::call_entry`] — the synchronous form: issue the forward
+//!   and block until its result is usable. Single-engine drivers and the
+//!   oracles use it exclusively.
+//! - [`Backend::submit_entry`] / [`Backend::complete`] — the two-phase
+//!   form: `submit_entry` *issues* the forward and returns a
+//!   [`Backend::Pending`] handle without waiting; `complete` blocks until
+//!   the forward's output is host-usable and hands the buffer back.
+//!   [`Backend::pending_buf`] borrows the device buffer behind a pending
+//!   forward so a *further* submit on the same backend can consume it as
+//!   an argument — device-side chaining with no host wait in between.
+//!
+//! The two-phase form is what lets
+//! [`crate::rollout::pool::EnginePool`]'s overlapped driver issue every
+//! shard's forward chain for a round before blocking on any shard's
+//! readback, so engines on distinct devices run concurrently instead of
+//! host-serialized (`ARCHITECTURE.md` §11). A purely synchronous backend
+//! implements the protocol as its degenerate case — `Pending = Buf`,
+//! `submit_entry = call_entry`, `complete = identity` — which is exactly
+//! what the PJRT [`super::Engine`] does (PJRT buffers are futures the
+//! runtime resolves on first host read, so the degenerate submit is
+//! still a real asynchronous dispatch there). A remote backend would
+//! return its RPC ticket as `Pending` instead; nothing in the scheduler
+//! layer changes.
 
 use anyhow::Result;
 
@@ -35,13 +63,36 @@ pub trait Backend {
     type Buf;
     /// Pre-resolved entry-point handle (cheap to clone, lock-free to call).
     type Entry: Clone;
+    /// Handle to an in-flight forward issued by [`Backend::submit_entry`].
+    /// Synchronous backends use `Pending = Buf` (the forward completes at
+    /// submit time and the handle merely carries the result to
+    /// [`Backend::complete`]); asynchronous backends carry their transport
+    /// ticket here.
+    type Pending;
 
     /// Resolve `bundle/entry` once; the returned handle is used for every
     /// subsequent call.
     fn resolve(&self, bundle: &str, entry: &str) -> Result<Self::Entry>;
 
-    /// Execute a pre-resolved entry.
+    /// Execute a pre-resolved entry synchronously (submit + complete in
+    /// one blocking step).
     fn call_entry(&self, entry: &Self::Entry, args: &[&Self::Buf]) -> Result<Self::Buf>;
+
+    /// Issue a forward without blocking the host on its result. The
+    /// returned [`Backend::Pending`] must eventually be passed to
+    /// [`Backend::complete`] (or dropped, abandoning the result).
+    fn submit_entry(&self, entry: &Self::Entry, args: &[&Self::Buf]) -> Result<Self::Pending>;
+
+    /// Block until a pending forward's output is host-usable and return
+    /// it. This is the only host-blocking point of the two-phase form.
+    fn complete(&self, pending: Self::Pending) -> Result<Self::Buf>;
+
+    /// Borrow the device buffer behind a pending forward for use as an
+    /// argument to a further submit on the *same* backend. This is
+    /// device-side chaining: the dependency is resolved on the device's
+    /// own timeline, so the host never waits. Reading the buffer back to
+    /// host without [`Backend::complete`] is outside the contract.
+    fn pending_buf<'a>(&self, pending: &'a Self::Pending) -> &'a Self::Buf;
 
     fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Self::Buf>;
 
@@ -51,11 +102,38 @@ pub trait Backend {
 
     /// Read into a caller-owned scratch vec (decode hot loop: no per-step
     /// allocation beyond what the transport itself requires).
+    ///
+    /// This default is the documented *fallback only*: it round-trips
+    /// through the `Vec` that [`Backend::read_f32`] allocates, paying one
+    /// extra copy per readback. Backends with a host-visible view of
+    /// their buffers should override it to copy straight into `out`
+    /// (both in-tree backends do — see [`super::Engine`] and
+    /// [`crate::testing::mock::MockEngine`]).
     fn read_f32_into(&self, buf: &Self::Buf, out: &mut Vec<f32>) -> Result<()> {
         let v = self.read_f32(buf)?;
         out.clear();
         out.extend_from_slice(&v);
         Ok(())
+    }
+
+    /// Current reading of the backend's **virtual clock**, if it models
+    /// one ([`crate::testing::mock::MockEngine`] with an attached
+    /// [`crate::testing::mock::VirtualClock`]). The pool's overlap
+    /// accounting (`PipelineStats::overlap_makespan` /
+    /// `serial_makespan`, `ARCHITECTURE.md` §11) is driven entirely by
+    /// this hook; real device backends keep the default `None` and the
+    /// makespan telemetry stays zero.
+    fn virtual_now(&self) -> Option<f64> {
+        None
+    }
+
+    /// Total virtual seconds this backend has spent executing forwards
+    /// (monotonic; meaningful only when [`Backend::virtual_now`] is
+    /// `Some`). Summed across shards this is what a host-serialized
+    /// driver would realize as its makespan, since it never lets two
+    /// forwards overlap.
+    fn device_busy_secs(&self) -> f64 {
+        0.0
     }
 
     /// Bundle geometry (batch rows, sequence slots, vocabulary).

@@ -262,6 +262,11 @@ impl Engine {
 impl Backend for Engine {
     type Buf = xla::PjRtBuffer;
     type Entry = EntryHandle;
+    // The synchronous degenerate of the submit/complete protocol
+    // (ARCHITECTURE.md §11): PJRT's execute returns buffer futures the
+    // runtime resolves on first host read, so "submit" is already a real
+    // asynchronous dispatch and the pending handle is the buffer itself.
+    type Pending = xla::PjRtBuffer;
 
     fn resolve(&self, bundle: &str, entry: &str) -> Result<EntryHandle> {
         self.handle(bundle, entry)
@@ -269,6 +274,22 @@ impl Backend for Engine {
 
     fn call_entry(&self, entry: &EntryHandle, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
         self.call_handle(entry, args)
+    }
+
+    fn submit_entry(
+        &self,
+        entry: &EntryHandle,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        self.call_handle(entry, args)
+    }
+
+    fn complete(&self, pending: xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
+        Ok(pending)
+    }
+
+    fn pending_buf<'a>(&self, pending: &'a xla::PjRtBuffer) -> &'a xla::PjRtBuffer {
+        pending
     }
 
     fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
@@ -284,10 +305,14 @@ impl Backend for Engine {
     }
 
     fn read_f32_into(&self, buf: &xla::PjRtBuffer, out: &mut Vec<f32>) -> Result<()> {
-        // One transport allocation is forced by the literal API; moving the
-        // vec in avoids the trait default's second copy.
+        // The device→host transfer lands in one literal; copying out of
+        // its borrowed view into the caller's scratch reuses `out`'s
+        // capacity, so the steady-state decode loop allocates nothing
+        // here (the trait default would pay a fresh `to_vec` allocation
+        // per readback — it remains only as the documented fallback).
         let lit = buf.to_literal_sync()?;
-        *out = lit.to_vec::<f32>()?;
+        out.clear();
+        out.extend_from_slice(lit.as_slice::<f32>()?);
         Ok(())
     }
 

@@ -32,14 +32,58 @@
 //! into the row (the mock analog of reusing the verify forward's KV) and
 //! reports its length in the gen state's `aux` lane; `read_gen` returns
 //! `[probs | aux]` per the contract in `rollout/sched.rs`.
+//!
+//! ## The virtual clock (overlap accounting)
+//!
+//! A [`VirtualClock`] attached via [`MockEngine::attach_clock`] (or
+//! [`MockEngine::clocked_replicas`]) gives the mock a latency model for
+//! the submit/complete protocol (`ARCHITECTURE.md` §11): every entry
+//! call costs a fixed per-entry latency on *this engine's* device
+//! timeline, while the shared clock tracks the host. A synchronous
+//! [`Backend::call_entry`] blocks the host for the whole forward; a
+//! [`Backend::submit_entry`] only reserves device time, and the host
+//! does not advance until [`Backend::complete`]. Replicas sharing one
+//! clock therefore realize a shorter makespan when a driver submits all
+//! their chains before completing any — exactly the quantity
+//! `PipelineStats::overlap_makespan` reports against the serialized
+//! `serial_makespan` baseline (`bench_overlap`). Without an attached
+//! clock every latency is zero and the accounting stays dark.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::runtime::{Backend, BatchShape};
 use crate::tokenizer::{BOS, EOS, PAD};
 use crate::util::Rng;
+
+/// The host timeline one replica group shares for overlap accounting.
+/// Engine-local device timelines live in each [`MockEngine`]'s busy
+/// counter; this cell is the host's position, advanced by synchronous
+/// calls and by completes.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    host: Cell<f64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Rc<VirtualClock> {
+        Rc::new(VirtualClock::default())
+    }
+
+    /// Current host time (virtual seconds since construction).
+    pub fn now(&self) -> f64 {
+        self.host.get()
+    }
+}
+
+/// An in-flight mock forward: the eagerly-computed result plus the
+/// virtual time at which the device finishes it.
+pub struct MockPending {
+    buf: MockBuf,
+    ready: f64,
+}
 
 /// One row of mock generation state.
 #[derive(Clone, Debug, Default)]
@@ -120,6 +164,12 @@ pub struct MockEngine {
     /// larger = shorter, more length-skewed rollouts.
     pub eos_bias: f32,
     counters: RefCell<MockCounters>,
+    /// Shared host timeline (None = no latency model, all costs zero).
+    clock: Option<Rc<VirtualClock>>,
+    /// This engine's device timeline: virtual time its last forward ends.
+    busy: Cell<f64>,
+    /// Cumulative forward latency on this engine (idle gaps excluded).
+    busy_secs: Cell<f64>,
 }
 
 impl MockEngine {
@@ -128,6 +178,9 @@ impl MockEngine {
             shape: BatchShape { batch, prompt_len, total_len, vocab },
             eos_bias: 0.6,
             counters: RefCell::new(MockCounters::default()),
+            clock: None,
+            busy: Cell::new(0.0),
+            busy_secs: Cell::new(0.0),
         }
     }
 
@@ -144,6 +197,66 @@ impl MockEngine {
         vocab: usize,
     ) -> Vec<MockEngine> {
         (0..n).map(|_| MockEngine::new(batch, prompt_len, total_len, vocab)).collect()
+    }
+
+    /// [`MockEngine::replicas`] sharing one [`VirtualClock`]: each
+    /// replica keeps its own device timeline but the host timeline is
+    /// common, so the pool's overlap accounting
+    /// (`PipelineStats::overlap_makespan` / `serial_makespan`) measures
+    /// how much of the replicas' device time a driver actually ran
+    /// concurrently.
+    pub fn clocked_replicas(
+        n: usize,
+        batch: usize,
+        prompt_len: usize,
+        total_len: usize,
+        vocab: usize,
+    ) -> Vec<MockEngine> {
+        let clock = VirtualClock::new();
+        let mut out = MockEngine::replicas(n, batch, prompt_len, total_len, vocab);
+        for m in &mut out {
+            m.attach_clock(clock.clone());
+        }
+        out
+    }
+
+    /// Attach a (shared) host timeline, arming the latency model. The
+    /// engine's device timeline starts at the clock's current reading.
+    pub fn attach_clock(&mut self, clock: Rc<VirtualClock>) {
+        self.busy.set(clock.now());
+        self.clock = Some(clock);
+    }
+
+    /// Fixed per-entry latency (virtual seconds) of the clock model.
+    /// Values are arbitrary but ordered like the real entries: full
+    /// `[B, T]` forwards (prefill / refill / verify) dominate, the
+    /// one-token decode step is cheaper, and `read_gen` is a readback,
+    /// not a forward. Zero without an attached clock.
+    fn entry_latency(&self, entry: &str) -> f64 {
+        if self.clock.is_none() {
+            return 0.0;
+        }
+        match entry {
+            "prefill" => 2.0,
+            "refill" => 1.5,
+            "verify" | "verify_seat" => 1.6,
+            "decode" => 1.0,
+            "read_gen" => 0.2,
+            _ => 0.0,
+        }
+    }
+
+    /// Reserve device time for one forward submitted now; returns the
+    /// virtual time the forward finishes. Host time is not advanced —
+    /// that is the caller's choice (sync call vs complete).
+    fn reserve(&self, entry: &str) -> f64 {
+        let Some(clock) = &self.clock else { return 0.0 };
+        let lat = self.entry_latency(entry);
+        let start = clock.now().max(self.busy.get());
+        let end = start + lat;
+        self.busy.set(end);
+        self.busy_secs.set(self.busy_secs.get() + lat);
+        end
     }
 
     /// Total executable invocations over the contract's device-call
@@ -277,6 +390,7 @@ impl MockEngine {
 impl Backend for MockEngine {
     type Buf = MockBuf;
     type Entry = String;
+    type Pending = MockPending;
 
     fn resolve(&self, _bundle: &str, entry: &str) -> Result<String> {
         match entry {
@@ -288,9 +402,79 @@ impl Backend for MockEngine {
     }
 
     fn call_entry(&self, entry: &String, args: &[&MockBuf]) -> Result<MockBuf> {
-        self.counters.borrow_mut().calls.push(entry.clone());
+        // Submit + complete in one blocking step: the host timeline
+        // advances past the whole forward, which is what makes the
+        // serialized driver's makespan the sum of its calls' latencies.
+        let pending = self.submit_entry(entry, args)?;
+        self.complete(pending)
+    }
+
+    fn submit_entry(&self, entry: &String, args: &[&MockBuf]) -> Result<MockPending> {
+        let buf = self.execute(entry, args)?;
+        let ready = self.reserve(entry);
+        Ok(MockPending { buf, ready })
+    }
+
+    fn complete(&self, pending: MockPending) -> Result<MockBuf> {
+        if let Some(clock) = &self.clock {
+            clock.host.set(clock.now().max(pending.ready));
+        }
+        Ok(pending.buf)
+    }
+
+    fn pending_buf<'a>(&self, pending: &'a MockPending) -> &'a MockBuf {
+        &pending.buf
+    }
+
+    fn virtual_now(&self) -> Option<f64> {
+        self.clock.as_ref().map(|c| c.now())
+    }
+
+    fn device_busy_secs(&self) -> f64 {
+        self.busy_secs.get()
+    }
+
+    fn read_f32_into(&self, buf: &MockBuf, out: &mut Vec<f32>) -> Result<()> {
+        // Straight out of the host-resident storage into the caller's
+        // scratch — the trait default's intermediate Vec is the
+        // documented fallback, not this backend's path.
+        out.clear();
+        out.extend_from_slice(buf.f32s()?);
+        Ok(())
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<MockBuf> {
+        ensure!(dims.iter().product::<usize>() == data.len(), "upload_f32 dims mismatch");
+        self.counters.borrow_mut().uploads.push(dims.to_vec());
+        Ok(MockBuf::F32(data.to_vec(), dims.to_vec()))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<MockBuf> {
+        ensure!(dims.iter().product::<usize>() == data.len(), "upload_i32 dims mismatch");
+        self.counters.borrow_mut().uploads.push(dims.to_vec());
+        Ok(MockBuf::I32(data.to_vec(), dims.to_vec()))
+    }
+
+    fn read_f32(&self, buf: &MockBuf) -> Result<Vec<f32>> {
+        Ok(buf.f32s()?.to_vec())
+    }
+
+    fn shape(&self, _bundle: &str) -> Result<BatchShape> {
+        Ok(self.shape)
+    }
+}
+
+impl MockEngine {
+    /// Execute one entry against the contract — argument counts, shapes,
+    /// and the content-hashed model. Clock accounting ([`VirtualClock`])
+    /// is layered on top by the [`Backend`] impl: the synchronous
+    /// `call_entry` is submit + complete in one blocking step, while
+    /// `submit_entry` only reserves time on this engine's device
+    /// timeline and leaves the host free to submit elsewhere.
+    fn execute(&self, entry: &str, args: &[&MockBuf]) -> Result<MockBuf> {
+        self.counters.borrow_mut().calls.push(entry.to_string());
         let (b, t) = (self.shape.batch, self.shape.total_len);
-        match entry.as_str() {
+        match entry {
             "prefill" => {
                 // (blob, tokens[B,T], valid[B,T], last[B], temp[1])
                 ensure!(args.len() == 5, "prefill: expected 5 args, got {}", args.len());
@@ -448,26 +632,6 @@ impl Backend for MockEngine {
             other => bail!("mock backend cannot execute '{other}'"),
         }
     }
-
-    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<MockBuf> {
-        ensure!(dims.iter().product::<usize>() == data.len(), "upload_f32 dims mismatch");
-        self.counters.borrow_mut().uploads.push(dims.to_vec());
-        Ok(MockBuf::F32(data.to_vec(), dims.to_vec()))
-    }
-
-    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<MockBuf> {
-        ensure!(dims.iter().product::<usize>() == data.len(), "upload_i32 dims mismatch");
-        self.counters.borrow_mut().uploads.push(dims.to_vec());
-        Ok(MockBuf::I32(data.to_vec(), dims.to_vec()))
-    }
-
-    fn read_f32(&self, buf: &MockBuf) -> Result<Vec<f32>> {
-        Ok(buf.f32s()?.to_vec())
-    }
-
-    fn shape(&self, _bundle: &str) -> Result<BatchShape> {
-        Ok(self.shape)
-    }
 }
 
 #[cfg(test)]
@@ -597,6 +761,93 @@ mod tests {
         let g2 = gen2.gen().unwrap();
         assert_eq!(g2.rows[0].toks.len(), 2 + rej[0]);
         assert_eq!(g2.rows[1].toks.len(), 2 + rej[1]);
+    }
+
+    #[test]
+    fn virtual_clock_serializes_sync_calls_and_overlaps_submits() {
+        // Two replicas on one clock. Synchronous calls advance the shared
+        // host past each forward (serialized: 2 x prefill = 4.0s); a
+        // submit/submit/complete/complete round runs the same two
+        // forwards concurrently (+2.0s only).
+        let mocks = MockEngine::clocked_replicas(2, 1, 2, 4, 8);
+        let (a, b) = (&mocks[0], &mocks[1]);
+        let run_prefill = |m: &MockEngine, sync: bool| -> MockBuf {
+            let blob = m.blob();
+            let tok = m.upload_i32(&[BOS, 5, 0, 0], &[1, 4]).unwrap();
+            let val = m.upload_f32(&[1.0, 1.0, 0.0, 0.0], &[1, 4]).unwrap();
+            let last = m.upload_i32(&[1], &[1]).unwrap();
+            let temp = m.upload_f32(&[1.0], &[1]).unwrap();
+            let h = m.resolve("x", "prefill").unwrap();
+            let args = [&blob, &tok, &val, &last, &temp];
+            if sync {
+                m.call_entry(&h, &args).unwrap()
+            } else {
+                let p = m.submit_entry(&h, &args).unwrap();
+                m.complete(p).unwrap()
+            }
+        };
+
+        let t0 = Backend::virtual_now(a).unwrap();
+        run_prefill(a, true);
+        run_prefill(b, true);
+        let t1 = Backend::virtual_now(a).unwrap();
+        assert!((t1 - t0 - 4.0).abs() < 1e-9, "sync calls must serialize: {}", t1 - t0);
+
+        // submit both, then complete both: the forwards overlap
+        let blob_a = a.blob();
+        let blob_b = b.blob();
+        let mk = |m: &MockEngine| {
+            (
+                m.upload_i32(&[BOS, 6, 0, 0], &[1, 4]).unwrap(),
+                m.upload_f32(&[1.0, 1.0, 0.0, 0.0], &[1, 4]).unwrap(),
+                m.upload_i32(&[1], &[1]).unwrap(),
+                m.upload_f32(&[1.0], &[1]).unwrap(),
+            )
+        };
+        let (ta, va, la, pa) = mk(a);
+        let (tb, vb, lb, pb) = mk(b);
+        let h = a.resolve("x", "prefill").unwrap();
+        let pend_a = a.submit_entry(&h, &[&blob_a, &ta, &va, &la, &pa]).unwrap();
+        let pend_b = b.submit_entry(&h, &[&blob_b, &tb, &vb, &lb, &pb]).unwrap();
+        assert_eq!(Backend::virtual_now(a).unwrap(), t1, "submits leave the host free");
+        a.complete(pend_a).unwrap();
+        b.complete(pend_b).unwrap();
+        let t2 = Backend::virtual_now(a).unwrap();
+        assert!((t2 - t1 - 2.0).abs() < 1e-9, "submitted forwards overlap: {}", t2 - t1);
+
+        // busy accounting: each engine executed two 2.0s prefills
+        assert!((Backend::device_busy_secs(a) - 4.0).abs() < 1e-9);
+        assert!((Backend::device_busy_secs(b) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pending_buf_chains_without_advancing_the_host() {
+        // decode(submit) chained onto prefill(submit) through pending_buf:
+        // the host stays put until complete, and the chain's end time is
+        // the sum of the two latencies on one device timeline.
+        let mocks = MockEngine::clocked_replicas(1, 1, 2, 4, 8);
+        let m = &mocks[0];
+        let blob = m.blob();
+        let tok = m.upload_i32(&[BOS, 5, 0, 0], &[1, 4]).unwrap();
+        let val = m.upload_f32(&[1.0, 1.0, 0.0, 0.0], &[1, 4]).unwrap();
+        let last = m.upload_i32(&[1], &[1]).unwrap();
+        let temp = m.upload_f32(&[1.0], &[1]).unwrap();
+        let hp = m.resolve("x", "prefill").unwrap();
+        let hd = m.resolve("x", "decode").unwrap();
+        let t0 = Backend::virtual_now(m).unwrap();
+        let p_gen = m.submit_entry(&hp, &[&blob, &tok, &val, &last, &temp]).unwrap();
+        let tok1 = m.upload_i32(&[7], &[1]).unwrap();
+        let slot = m.upload_i32(&[2], &[1]).unwrap();
+        let lpos = m.upload_i32(&[2], &[1]).unwrap();
+        let p_dec = {
+            let gen = m.pending_buf(&p_gen);
+            m.submit_entry(&hd, &[&blob, gen, &tok1, &slot, &lpos, &temp]).unwrap()
+        };
+        assert_eq!(Backend::virtual_now(m).unwrap(), t0, "chain submits are free");
+        let gen2 = m.complete(p_dec).unwrap();
+        let t1 = Backend::virtual_now(m).unwrap();
+        assert!((t1 - t0 - 3.0).abs() < 1e-9, "prefill 2.0 + decode 1.0: {}", t1 - t0);
+        assert_eq!(gen2.gen().unwrap().rows[0].toks, vec![BOS, 5, 7]);
     }
 
     #[test]

@@ -57,6 +57,7 @@ pub const STEP_COLUMNS: &[&str] = &[
     "step", "epoch", "reward", "tokens_new", "tokens_reused", "tokens_cum",
     "prefix_len", "full_reuse", "drafts", "gen_rounds", "verify_calls",
     "shards", "device_calls", "shard_calls_max", "shard_calls_min", "steal_count",
+    "overlap_makespan", "serial_makespan",
     "cache_tokens", "cache_evictions", "cache_evicted_tokens",
     "rollout_s", "verification_s", "assembly_s", "reward_s", "old_logp_s",
     "ref_s", "values_s", "adv_s", "update_critic_s", "update_actor_s",
@@ -425,6 +426,10 @@ impl<'e> Trainer<'e> {
         rec.insert("shard_calls_max", shard_calls.iter().copied().max().unwrap_or(0) as f64);
         rec.insert("shard_calls_min", shard_calls.iter().copied().min().unwrap_or(0) as f64);
         rec.insert("steal_count", spec_stats_acc.steal_count as f64);
+        // Virtual-clock overlap accounting (ARCHITECTURE.md §11): zero on
+        // real devices, populated when the pool runs on clocked mocks.
+        rec.insert("overlap_makespan", spec_stats_acc.overlap_makespan);
+        rec.insert("serial_makespan", spec_stats_acc.serial_makespan);
         rec.insert("cache_tokens", self.spec.cache.total_tokens() as f64);
         rec.insert("cache_evictions", spec_stats_acc.cache_evictions as f64);
         rec.insert("cache_evicted_tokens", spec_stats_acc.cache_evicted_tokens as f64);

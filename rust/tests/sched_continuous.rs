@@ -242,14 +242,16 @@ fn pipe_requests() -> Vec<RolloutRequest> {
 /// Drive `epochs` steps of one path against a fresh engine pool + cache.
 /// `shards == 0` selects the blocking two-phase oracle (single engine);
 /// `shards >= 1` runs the interleaved pipeline over that many mock
-/// replicas. Negative log-lenience stands in for policy drift: with the
-/// mock's frozen policy, `p_curr == p_prev` exactly, so `log l < 0` yields
-/// varied mid-draft rejections (the skew the pipeline must handle).
-fn drive(
+/// replicas under `placement` (the overlapped steal driver or PR 3's
+/// static spill). Negative log-lenience stands in for policy drift: with
+/// the mock's frozen policy, `p_curr == p_prev` exactly, so `log l < 0`
+/// yields varied mid-draft rejections (the skew the pipeline must handle).
+fn drive_placed(
     variant: ReuseVariant,
     shards: usize,
     epochs: usize,
     seed: u64,
+    placement: Placement,
 ) -> (Vec<Vec<SeqResult>>, Vec<PipelineStats>) {
     let mocks = MockEngine::replicas(shards.max(1), 4, P, T, V);
     let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
@@ -258,7 +260,7 @@ fn drive(
         (shards > 0).then(|| EnginePool::new(mocks.iter(), "mock").unwrap());
     let mut eng =
         (shards == 0).then(|| RolloutEngine::new(&mocks[0], "mock").unwrap());
-    let mut spec = SpecRollout::new(variant, Lenience::Fixed(-0.4));
+    let mut spec = SpecRollout::new(variant, Lenience::Fixed(-0.4)).with_placement(placement);
     let mut rng = Rng::new(seed);
     let mut timer = StageTimer::new();
     let mut all_results = Vec::new();
@@ -276,13 +278,25 @@ fn drive(
     (all_results, all_stats)
 }
 
+fn drive(
+    variant: ReuseVariant,
+    shards: usize,
+    epochs: usize,
+    seed: u64,
+) -> (Vec<Vec<SeqResult>>, Vec<PipelineStats>) {
+    drive_placed(variant, shards, epochs, seed, Placement::Steal)
+}
+
 #[test]
 fn pipeline_matches_two_phase_across_all_variants_and_shard_counts() {
     // 3 epochs: epoch 0 fills the cache, epoch 1 drafts from `latest`,
     // epoch 2 additionally exercises the Delayed variant's `previous`
     // slot. shards ∈ {1, 2, 4} must all match the two-phase oracle
-    // byte-for-byte: per-task RNG streams make results invariant to
-    // placement, so the shard count cannot show up in the outputs.
+    // byte-for-byte under BOTH placement disciplines — the overlapped
+    // steal driver (the default) and the static one-pass spill: per-task
+    // RNG streams make results invariant to placement and to how the
+    // drive loop interleaves submits and completes, so neither the shard
+    // count nor the driver can show up in the outputs.
     for variant in [
         ReuseVariant::Off,
         ReuseVariant::Spec,
@@ -291,6 +305,19 @@ fn pipeline_matches_two_phase_across_all_variants_and_shard_counts() {
         ReuseVariant::Full,
     ] {
         let (two, ts) = drive(variant, 0, 3, 77);
+        for shards in [2usize, 4] {
+            let (stat, _) = drive_placed(variant, shards, 3, 77, Placement::Static);
+            for (epoch, (ra, rb)) in stat.iter().zip(&two).enumerate() {
+                assert_eq!(ra.len(), rb.len(), "{variant:?} static {shards} epoch {epoch}");
+                for (x, y) in ra.iter().zip(rb) {
+                    assert_eq!(
+                        (x.id, &x.response, &x.logps),
+                        (y.id, &y.response, &y.logps),
+                        "{variant:?} static {shards} epoch {epoch}"
+                    );
+                }
+            }
+        }
         let mut ps1: Vec<PipelineStats> = Vec::new();
         for shards in [1usize, 2, 4] {
             let (pipe, ps) = drive(variant, shards, 3, 77);
@@ -757,6 +784,118 @@ fn verify_seat_min_sweep_is_byte_identical() {
             );
             assert!(stats.verify_calls > 0, "drafted step must verify ({stats:?})");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// overlapped shard stepping (PR 5): submit/complete + the virtual clock
+// ---------------------------------------------------------------------------
+
+/// [`stale_collect`] on replicas sharing a virtual clock (eos_bias = 0),
+/// so the run reports makespans.
+fn stale_collect_clocked(
+    shards: usize,
+    placement: Placement,
+) -> (Vec<SeqResult>, PipelineStats, Vec<MockEngine>) {
+    let mut mocks = MockEngine::clocked_replicas(shards, 4, P, T, V);
+    for m in &mut mocks {
+        m.eos_bias = 0.0;
+    }
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+    let mut spec = stale::warmed(stale::N_TASKS, STALE_LEN, V, STALE_LENIENCE)
+        .with_placement(placement);
+    let mut rng = Rng::new(STALE_SEED);
+    let mut timer = StageTimer::new();
+    let reqs = stale::requests(stale::N_TASKS, V);
+    let (res, stats) = spec
+        .collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    (res, stats, mocks)
+}
+
+#[test]
+fn overlapped_driver_beats_the_serialized_makespan() {
+    // The overlapped steal driver submits every live shard's chain before
+    // completing any, so on the virtual clock the realized makespan must
+    // come out strictly below the serialized baseline (the summed
+    // device-busy time a host-serialized driver would realize) — while
+    // results stay byte-identical to the two-phase oracle.
+    let oracle = stale_oracle();
+    for shards in [2usize, 4] {
+        let (res, stats, mocks) = stale_collect_clocked(shards, Placement::Steal);
+        assert_same_results(&res, &oracle, &format!("overlap vs oracle, {shards} shards"));
+        assert!(
+            stats.overlap_makespan > 0.0,
+            "{shards} shards: the virtual clock never moved ({stats:?})"
+        );
+        assert!(
+            stats.overlap_makespan < stats.serial_makespan,
+            "{shards} shards: overlapped makespan {} must be strictly below serialized {}",
+            stats.overlap_makespan,
+            stats.serial_makespan
+        );
+        // The serialized column really is the summed device-busy time.
+        let busy: f64 = mocks.iter().map(spec_rl::runtime::Backend::device_busy_secs).sum();
+        assert!(
+            (stats.serial_makespan - busy).abs() < 1e-6,
+            "serial_makespan {} != summed busy {busy}",
+            stats.serial_makespan
+        );
+    }
+}
+
+#[test]
+fn serialized_disciplines_realize_the_serial_makespan() {
+    // Static placement (and a one-shard pool) drive each chain through
+    // the blocking composed step, never overlapping two forwards: their
+    // realized makespan must equal the serialized column (up to f64
+    // summation order). This is the degenerate end the overlap
+    // accounting is calibrated against.
+    for (shards, placement) in [(1usize, Placement::Steal), (2, Placement::Static)] {
+        let (_, stats, _) = stale_collect_clocked(shards, placement);
+        assert!(stats.serial_makespan > 0.0, "{stats:?}");
+        assert!(
+            (stats.overlap_makespan - stats.serial_makespan).abs() < 1e-6,
+            "{shards} shards / {placement:?}: nothing overlapped, yet realized {} != serialized {}",
+            stats.overlap_makespan,
+            stats.serial_makespan
+        );
+    }
+}
+
+#[test]
+fn idle_shards_of_an_overlapped_pool_submit_nothing() {
+    // 4 clocked shards, one 1-token task: shards that find the queue
+    // empty must make zero device calls AND consume zero virtual device
+    // time — an idle shard is free under the overlapped driver too.
+    let mocks = MockEngine::clocked_replicas(4, B, P, T, V);
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+    let mut timer = StageTimer::new();
+    let (res, stats) = pool
+        .run_pipeline(
+            &blob_refs,
+            vec![with_prefix(0, 7)],
+            Vec::new(),
+            0.0,
+            SampleCfg::default(),
+            3,
+            4,
+            &mut timer,
+        )
+        .unwrap();
+    assert_eq!(res.len(), 1);
+    assert!(stats.overlap_makespan > 0.0, "shard 0 did run the task ({stats:?})");
+    for (i, m) in mocks.iter().enumerate().skip(1) {
+        assert_eq!(m.counters().calls.len(), 0, "shard {i} should submit nothing");
+        assert_eq!(
+            spec_rl::runtime::Backend::device_busy_secs(m),
+            0.0,
+            "shard {i} should consume no virtual device time"
+        );
     }
 }
 

@@ -122,6 +122,14 @@ impl Literal {
     pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
         T::unwrap_ref(&self.data).map(|s| s.to_vec())
     }
+
+    /// Borrow the typed storage without copying (the stub's analog of the
+    /// bindings' raw literal view): callers that own reusable scratch can
+    /// `extend_from_slice` out of this instead of paying `to_vec`'s fresh
+    /// allocation on every readback.
+    pub fn as_slice<T: NativeType>(&self) -> Result<&[T]> {
+        T::unwrap_ref(&self.data)
+    }
 }
 
 /// Loading literals from raw on-disk formats (the subset used: `.npy`).
