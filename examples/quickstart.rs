@@ -85,6 +85,14 @@ fn sharded_mock_demo() -> Result<()> {
         s1.serial_makespan,
         s1.serial_makespan / s1.overlap_makespan.max(1e-9)
     );
+    // Traffic accounting (the `readback_bytes` / `upload_bytes` CSV
+    // columns): sampling runs on-device (ARCHITECTURE.md §12), so each
+    // decode round reads back only [B tok | B ptok | B aux] instead of
+    // the O(B*V) probs payload the host-sampling path would ship.
+    println!(
+        "  traffic: {} bytes read back, {} bytes uploaded (device sampling)",
+        s1.readback_bytes, s1.upload_bytes
+    );
     for (shard, m) in shards.iter().enumerate() {
         println!(
             "  shard {shard} counters: {} total entry calls, {} uploads",

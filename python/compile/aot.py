@@ -72,6 +72,13 @@ def entry_signatures(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         "refill": [a("blob", F32, s), a("gen", F32, sg)] + common_tv + [
             a("rowmask", F32, b), a("last", I32, b), a("temp", F32, 1)],
         "read_gen": [a("gen", F32, sg)],
+        # device-resident sampling (ARCHITECTURE.md §12): ctrl rows are
+        # (task id, draws consumed so far, arm mode), nonce is the u64 step
+        # nonce bit-split into (hi, lo) i32 words
+        "sample": [a("gen", F32, sg), a("ctrl", I32, b, 3), a("nonce", I32, 2),
+                   a("top_p", F32, 1)],
+        # the fused O(B) readback that replaces read_gen on the hot path
+        "read_step": [a("gen", F32, sg)],
         "read_metrics": [a("blob", F32, s)],
         "score": [a("blob", F32, s)] + common_tv + [a("temp", F32, 1)],
         "verify": [a("blob", F32, s)] + common_tv + [
@@ -105,13 +112,17 @@ def output_fields(name: str, cfg, geo, batch: int, value_head: bool):
     b, t, g, v = batch, geo.total_len, geo.gen_len, cfg.vocab
     n = C.n_params(cfg, geo, value_head)
     l, d = cfg.n_layers, cfg.d_model
-    if name in ("prefill", "decode", "refill", "verify_seat"):
+    if name in ("prefill", "decode", "refill", "verify_seat", "sample"):
+        base = 2 * l * b * t * d
         return [
             {"name": "cache_k", "offset": 0, "shape": [l, b, t, d]},
             {"name": "cache_v", "offset": l * b * t * d, "shape": [l, b, t, d]},
-            {"name": "valid", "offset": 2 * l * b * t * d, "shape": [b, t]},
-            {"name": "probs", "offset": 2 * l * b * t * d + b * t, "shape": [b, v]},
-            {"name": "aux", "offset": 2 * l * b * t * d + b * t + b * v, "shape": [b]},
+            {"name": "valid", "offset": base, "shape": [b, t]},
+            {"name": "probs", "offset": base + b * t, "shape": [b, v]},
+            {"name": "aux", "offset": base + b * t + b * v, "shape": [b]},
+            {"name": "live", "offset": base + b * t + b * v + b, "shape": [b]},
+            {"name": "tok", "offset": base + b * t + b * v + 2 * b, "shape": [b]},
+            {"name": "ptok", "offset": base + b * t + b * v + 3 * b, "shape": [b]},
         ]
     if name == "score":
         return [
@@ -136,6 +147,12 @@ def output_fields(name: str, cfg, geo, batch: int, value_head: bool):
         return [
             {"name": "probs", "offset": 0, "shape": [b, v]},
             {"name": "aux", "offset": b * v, "shape": [b]},
+        ]
+    if name == "read_step":
+        return [
+            {"name": "tok", "offset": 0, "shape": [b]},
+            {"name": "ptok", "offset": b, "shape": [b]},
+            {"name": "aux", "offset": 2 * b, "shape": [b]},
         ]
     if name == "read_metrics":
         return [

@@ -127,7 +127,8 @@ def blob_size(cfg: ModelConfig, geo: SeqGeometry, value_head: bool = False) -> i
     return 3 * n_params(cfg, geo, value_head) + 1 + NUM_METRICS
 
 
-# Gen blob layout (per batch): [cache_k | cache_v | valid | probs | aux].
+# Gen blob layout (per batch):
+#   [cache_k | cache_v | valid | probs | aux | live | tok | ptok].
 # The [B, T] valid mask is part of the device-resident generation state:
 # prefill seeds it, decode extends it in place via a one-hot slot write,
 # refill replaces it for masked rows. The host never re-uploads it per
@@ -138,6 +139,15 @@ def blob_size(cfg: ModelConfig, geo: SeqGeometry, value_head: bool = False) -> i
 # seated row's accepted-prefix length there (prefill zeroes it; decode and
 # refill pass it through). ``read_gen`` returns [probs | aux], so the host
 # learns acceptance results from the read it already performs per step.
+#
+# `live`/`tok`/`ptok` are the device-resident sampling lanes
+# (ARCHITECTURE.md §12): ``verify_seat`` raises `live` to 1.0 for seated
+# rows whose accepted prefix is not yet terminal, the ``sample`` entry draws
+# one token per armed row (writing the token id into `tok` and its raw
+# probability into `ptok` — the host applies ``ln`` so logps stay
+# bit-identical to the host sampler), and ``read_step`` returns just
+# [tok | ptok | aux] — the fused O(B) readback that replaces ``read_gen``'s
+# O(B*V) probs payload on the pipeline hot path.
 def gen_blob_spec(cfg: ModelConfig, geo: SeqGeometry, batch: int):
     """Returns ordered (name, shape) fields of the generation-state blob."""
     l, b, t, d = cfg.n_layers, batch, geo.total_len, cfg.d_model
@@ -147,6 +157,9 @@ def gen_blob_spec(cfg: ModelConfig, geo: SeqGeometry, batch: int):
         ("valid", (b, t)),
         ("probs", (b, cfg.vocab)),
         ("aux", (b,)),
+        ("live", (b,)),
+        ("tok", (b,)),
+        ("ptok", (b,)),
     ]
 
 

@@ -1,0 +1,357 @@
+"""Device-side replay of the coordinator's RNG + top-p sampler.
+
+The rust coordinator derives one xoshiro256** stream per task
+(``task_rng(nonce, id)``, ARCHITECTURE.md §6) and consumes exactly one
+``f32`` per sampled token. The ``sample`` entry replays those streams on
+the device so the per-step readback can shrink from O(B*V) probs to O(B)
+tokens (§12): for each row it re-seeds from ``(nonce, id)``, skips the
+``draws`` values the host already consumed, draws the next one, and runs
+the same nucleus inverse-CDF the host's ``TopPSampler`` runs.
+
+Bit-exactness contract: every integer op here is the u64 pipeline from
+``rust/src/util/rng.rs`` (SplitMix64 seeding, xoshiro256** core) emulated
+as (hi, lo) pairs of uint32 — jax's default x64-disabled mode has no u64
+— and every float op is a plain IEEE f32 add/sub/mul/compare evaluated in
+the same sequential order as the rust sampler (``lax.scan``, never
+``jnp.sum``, which may reassociate). No transcendental is evaluated on
+device: the entry reports the sampled token's raw probability and the
+host applies ``ln`` itself, so result logps are bit-identical to the
+host-sampling path by construction.
+
+This is deliberately plain jnp rather than a Pallas kernel: the work is
+O(B * G) scalar integer ops plus an O(B * V) scan — memory-trivial, no
+tiling to exploit — the same split DESIGN.md makes for the decode path.
+
+A pure-python reference (``ref_*``) mirrors rust semantics exactly (u64
+masks + ``np.float32`` arithmetic) and pins the device stream in
+``python/tests/test_aot.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax import lax
+import jax.numpy as jnp
+
+# splitmix64 / task-seed constants (rust/src/util/rng.rs)
+GAMMA = 0x9E37_79B9_7F4A_7C15
+SM_MUL1 = 0xBF58_476D_1CE4_E5B9
+SM_MUL2 = 0x94D0_49BB_1331_11EB
+MASK64 = (1 << 64) - 1
+
+_U24_SCALE = np.float32(1.0 / (1 << 24))
+
+
+# --------------------------------------------------------------------------
+# u64 arithmetic over (hi, lo) uint32 pairs
+# --------------------------------------------------------------------------
+def _u32(x):
+    return jnp.asarray(x, jnp.uint32)
+
+
+def const64(value: int):
+    """A python int as a broadcastable (hi, lo) uint32 pair."""
+    return _u32((value >> 32) & 0xFFFF_FFFF), _u32(value & 0xFFFF_FFFF)
+
+
+def xor64(a, b):
+    return a[0] ^ b[0], a[1] ^ b[1]
+
+
+def add64(a, b):
+    lo = a[1] + b[1]
+    carry = (lo < a[1]).astype(jnp.uint32)
+    return a[0] + b[0] + carry, lo
+
+
+def shl64(x, k: int):
+    if k == 0:
+        return x
+    if k < 32:
+        return (x[0] << k) | (x[1] >> (32 - k)), x[1] << k
+    if k == 32:
+        return x[1], jnp.zeros_like(x[1])
+    return x[1] << (k - 32), jnp.zeros_like(x[1])
+
+
+def shr64(x, k: int):
+    if k == 0:
+        return x
+    if k < 32:
+        return x[0] >> k, (x[1] >> k) | (x[0] << (32 - k))
+    if k == 32:
+        return jnp.zeros_like(x[0]), x[0]
+    return jnp.zeros_like(x[0]), x[0] >> (k - 32)
+
+
+def rotl64(x, k: int):
+    a = shl64(x, k)
+    b = shr64(x, 64 - k)
+    return a[0] | b[0], a[1] | b[1]
+
+
+def _mul32(a, b):
+    """Full 64-bit product of two uint32 arrays, as (hi, lo) uint32."""
+    m16 = _u32(0xFFFF)
+    a0, a1 = a & m16, a >> 16
+    b0, b1 = b & m16, b >> 16
+    t = a0 * b0
+    w0 = t & m16
+    t = a1 * b0 + (t >> 16)
+    w1 = t & m16
+    w2 = t >> 16
+    t = a0 * b1 + w1
+    hi = a1 * b1 + w2 + (t >> 16)
+    lo = (t << 16) | w0
+    return hi, lo
+
+
+def mul64(a, b):
+    """Low 64 bits of the u64 product (rust ``wrapping_mul``)."""
+    hi, lo = _mul32(a[1], b[1])
+    cross = a[1] * b[0] + a[0] * b[1]
+    return hi + cross, lo
+
+
+# --------------------------------------------------------------------------
+# splitmix64 seeding + xoshiro256** core (vectorized over rows)
+# --------------------------------------------------------------------------
+def _splitmix64(state):
+    state = add64(state, const64(GAMMA))
+    z = state
+    z = mul64(xor64(z, shr64(z, 30)), const64(SM_MUL1))
+    z = mul64(xor64(z, shr64(z, 27)), const64(SM_MUL2))
+    return state, xor64(z, shr64(z, 31))
+
+
+def xoshiro_init(seed):
+    """Rng::new — four splitmix64 draws fill s[0..4]."""
+    s = []
+    for _ in range(4):
+        seed, z = _splitmix64(seed)
+        s.append(z)
+    return s
+
+
+def xoshiro_next(s):
+    """One xoshiro256** step: returns (new_state, result)."""
+    s0, s1, s2, s3 = s
+    result = mul64(rotl64(mul64(s1, const64(5)), 7), const64(9))
+    t = shl64(s1, 17)
+    s2 = xor64(s2, s0)
+    s3 = xor64(s3, s1)
+    s1 = xor64(s1, s2)
+    s0 = xor64(s0, s3)
+    s2 = xor64(s2, t)
+    s3 = rotl64(s3, 45)
+    return [s0, s1, s2, s3], result
+
+
+def task_uniform(nonce_hi, nonce_lo, ids, draws, max_draws: int):
+    """Each row's next sampler uniform, replayed from its task stream.
+
+    ``task_rng(nonce, id)`` seeds ``nonce ^ (id+1)*GAMMA``; the row has
+    already consumed ``draws`` f32 values, so its next uniform is draw
+    index ``draws``: step the generator ``max_draws + 1`` times and keep
+    each row's value at its own index (draws <= max_draws always — the
+    host arms at most one draw per generated token).
+
+    nonce_hi/nonce_lo: i32 scalars (the u64 step nonce, bit-split);
+    ids/draws: i32[B]. Returns f32[B] uniforms in [0, 1).
+    """
+    nonce = (
+        jnp.broadcast_to(lax.bitcast_convert_type(nonce_hi, jnp.uint32), ids.shape),
+        jnp.broadcast_to(lax.bitcast_convert_type(nonce_lo, jnp.uint32), ids.shape),
+    )
+    idp1 = (jnp.zeros_like(ids, jnp.uint32), (ids + 1).astype(jnp.uint32))
+    seed = xor64(nonce, mul64(idp1, const64(GAMMA)))
+    state = xoshiro_init(seed)
+    draws = draws.astype(jnp.uint32)
+
+    def body(k, carry):
+        s, sel = carry
+        s, result = xoshiro_next(s)
+        # rust f32(): top 24 bits of the u64 result = hi >> 8
+        bits24 = result[0] >> 8
+        sel = jnp.where(draws == k, bits24, sel)
+        return s, sel
+
+    _, sel = lax.fori_loop(
+        0, max_draws + 1, body, (state, jnp.zeros_like(ids, jnp.uint32))
+    )
+    return sel.astype(jnp.float32) * _U24_SCALE
+
+
+# --------------------------------------------------------------------------
+# the host TopPSampler's inverse CDF, sequential-f32-exact
+# --------------------------------------------------------------------------
+def _seq_sum(cols):
+    """Left-to-right f32 accumulation over the leading axis of [V, B]."""
+
+    def f(acc, p):
+        return acc + p, None
+
+    total, _ = lax.scan(f, jnp.zeros(cols.shape[1], jnp.float32), cols)
+    return total
+
+
+def _categorical(probs, u01):
+    """top_p >= 1 branch: inverse CDF over the raw distribution."""
+    b, v = probs.shape
+    cols = probs.T  # [V, B]
+    u0 = u01 * _seq_sum(cols)
+
+    def f(carry, xs):
+        u, chosen, found = carry
+        i, p = xs
+        u = u - p
+        take = jnp.logical_and(jnp.logical_not(found), u <= 0.0)
+        chosen = jnp.where(take, i, chosen)
+        return (u, chosen, jnp.logical_or(found, take)), None
+
+    init = (u0, jnp.full((b,), v - 1, jnp.int32), jnp.zeros((b,), bool))
+    (_, chosen, _), _ = lax.scan(f, init, (jnp.arange(v, dtype=jnp.int32), cols))
+    return chosen
+
+
+def _nucleus(probs, u01, top_p):
+    """top_p < 1 branch: sort desc (ties by index), cut at the mass
+    budget, inverse CDF over the kept prefix, fallback last kept."""
+    b, v = probs.shape
+    # stable argsort of -p == prob-desc with index-asc tie-break, the
+    # host sampler's exact comparator
+    order = jnp.argsort(-probs, axis=-1, stable=True)  # [B, V]
+    sp = jnp.take_along_axis(probs, order, axis=-1).T  # [V, B] sorted
+    budget = top_p * _seq_sum(probs.T)
+
+    # one pass finds the cut and the kept mass: `mass` accumulates in
+    # sorted order and freezes once it crosses `budget`, which is both
+    # the host's break condition and (same adds, same order) its
+    # separately-summed kept_mass
+    def f(carry, p):
+        mass, found = carry
+        kept = jnp.logical_not(found)
+        mass = jnp.where(kept, mass + p, mass)
+        found = jnp.logical_or(found, mass >= budget)
+        return (mass, found), kept
+
+    (kept_mass, _), kept = lax.scan(
+        f, (jnp.zeros((b,), jnp.float32), jnp.zeros((b,), bool)), sp
+    )
+    kept = kept.T  # [B, V] rank-kept flags
+    last_kept = jnp.maximum(
+        jnp.sum(kept.astype(jnp.int32), axis=-1) - 1, 0
+    )  # = cut - 1
+
+    def g(carry, xs):
+        u, chosen, found = carry
+        r, p, k = xs
+        u = jnp.where(k, u - p, u)
+        take = jnp.logical_and(k, jnp.logical_and(jnp.logical_not(found), u <= 0.0))
+        chosen = jnp.where(take, r, chosen)
+        return (u, chosen, jnp.logical_or(found, take)), None
+
+    init = (u01 * kept_mass, jnp.zeros((b,), jnp.int32), jnp.zeros((b,), bool))
+    (_, chosen, found), _ = lax.scan(
+        g, init, (jnp.arange(v, dtype=jnp.int32), sp, kept.T)
+    )
+    rank = jnp.where(found, chosen, last_kept)
+    return jnp.take_along_axis(order, rank[:, None], axis=-1)[:, 0]
+
+
+def device_sample(probs, u01, top_p):
+    """Sample one token per row, bit-matching ``TopPSampler::sample``.
+
+    probs: f32[B, V] (need not be normalized); u01: f32[B] uniforms;
+    top_p: f32 scalar (shared across rows, like the host's SampleCfg).
+    Returns (tok i32[B], ptok f32[B]) — ptok is the raw probability of
+    the sampled token (the host takes the log).
+    """
+    tok = lax.cond(
+        top_p >= np.float32(0.999_999),
+        lambda: _categorical(probs, u01),
+        lambda: _nucleus(probs, u01, top_p),
+    )
+    ptok = jnp.take_along_axis(probs, tok[:, None], axis=-1)[:, 0]
+    return tok, ptok
+
+
+# --------------------------------------------------------------------------
+# pure-python reference (pins the device stream in test_aot.py)
+# --------------------------------------------------------------------------
+def ref_splitmix64(state: int):
+    state = (state + GAMMA) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * SM_MUL1) & MASK64
+    z = ((z ^ (z >> 27)) * SM_MUL2) & MASK64
+    return state, z ^ (z >> 31)
+
+
+def ref_xoshiro_init(seed: int):
+    s = []
+    for _ in range(4):
+        seed, z = ref_splitmix64(seed)
+        s.append(z)
+    return s
+
+
+def ref_xoshiro_next(s):
+    def rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & MASK64
+
+    result = (rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+    t = (s[1] << 17) & MASK64
+    s[2] ^= s[0]
+    s[3] ^= s[1]
+    s[1] ^= s[2]
+    s[0] ^= s[3]
+    s[2] ^= t
+    s[3] = rotl(s[3], 45)
+    return s, result
+
+
+def ref_task_uniform(nonce: int, task_id: int, draws: int) -> np.float32:
+    """rust ``task_rng(nonce, id)`` advanced ``draws`` f32s, next f32."""
+    seed = nonce ^ (((task_id + 1) * GAMMA) & MASK64)
+    s = ref_xoshiro_init(seed)
+    for _ in range(draws + 1):
+        s, result = ref_xoshiro_next(s)
+    return np.float32(result >> 40) * _U24_SCALE
+
+
+def ref_sample(probs: np.ndarray, top_p: float, u01: np.float32) -> int:
+    """``TopPSampler::sample`` in np.float32 arithmetic, token only."""
+    probs = probs.astype(np.float32)
+    if top_p >= 0.999_999:
+        total = np.float32(0.0)
+        for p in probs:
+            total = np.float32(total + p)
+        u = np.float32(u01 * total)
+        for i, p in enumerate(probs):
+            u = np.float32(u - p)
+            if u <= 0.0:
+                return i
+        return len(probs) - 1
+    order = sorted(range(len(probs)), key=lambda i: (-probs[i], i))
+    total = np.float32(0.0)
+    for p in probs:
+        total = np.float32(total + p)
+    budget = np.float32(np.float32(top_p) * total)
+    mass = np.float32(0.0)
+    cut = len(order)
+    for rank, i in enumerate(order):
+        mass = np.float32(mass + probs[i])
+        if mass >= budget:
+            cut = rank + 1
+            break
+    kept = order[:cut]
+    kept_mass = np.float32(0.0)
+    for i in kept:
+        kept_mass = np.float32(kept_mass + probs[i])
+    u = np.float32(u01 * kept_mass)
+    for i in kept:
+        u = np.float32(u - probs[i])
+        if u <= 0.0:
+            return i
+    return kept[-1]

@@ -10,7 +10,7 @@ host round-trip per call to split. Every entry point therefore consumes
 and produces **single flat f32 arrays**:
 
 - ``policy blob``  = [params | adam_m | adam_v | step | metrics16]
-- ``gen blob``     = [cache_k | cache_v | valid | probs | aux]
+- ``gen blob``     = [cache_k | cache_v | valid | probs | aux | live | tok | ptok]
 - ``score/verify`` = [logp | entropy | ...]
 
 so parameters, optimizer state and the KV cache stay device-resident
@@ -43,6 +43,7 @@ from .kernels import attention as attn_k
 from .kernels import logprob as logprob_k
 from .kernels import ref as kref
 from .kernels import spec_accept as accept_k
+from .kernels import xoshiro as rng_k
 
 EPS = 1e-6
 
@@ -273,10 +274,10 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
             off += n
         return out
 
-    def pack_gen(ck, cv, valid, probs, aux):
+    def pack_gen(ck, cv, valid, probs, aux, live, tok, ptok):
         return jnp.concatenate(
             [ck.reshape(-1), cv.reshape(-1), valid.reshape(-1), probs.reshape(-1),
-             aux.reshape(-1)]
+             aux.reshape(-1), live.reshape(-1), tok.reshape(-1), ptok.reshape(-1)]
         )
 
     def policy_params(blob):
@@ -298,7 +299,8 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         params = policy_params(blob)
         logits, ck, cv = forward_full(params, tokens, valid, cfg, geo, attn_pallas)
         probs = gather_last_probs(logits, last, temp)
-        return pack_gen(ck, cv, valid, probs, jnp.zeros((b,), jnp.float32))
+        zero = jnp.zeros((b,), jnp.float32)
+        return pack_gen(ck, cv, valid, probs, zero, zero, zero, zero)
 
     # -- decode -------------------------------------------------------------
     def decode(blob, gen_blob, token, slot, lpos, temp):
@@ -313,7 +315,8 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
             params, gs["cache_k"], gs["cache_v"], token, slot, lpos, valid,
             temp[0], cfg, geo,
         )
-        return pack_gen(ck, cv, valid, probs, gs["aux"])
+        return pack_gen(ck, cv, valid, probs, gs["aux"], gs["live"], gs["tok"],
+                        gs["ptok"])
 
     # -- refill: masked per-row (re)prefill into live generation state ------
     def refill(blob, gen_blob, tokens, valid, rowmask, last, temp):
@@ -331,7 +334,8 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         cv = gs["cache_v"] * (1.0 - m_cache) + cv_new * m_cache
         vmask = gs["valid"] * (1.0 - m_row) + valid * m_row
         probs = gs["probs"] * (1.0 - m_row) + probs_new * m_row
-        return pack_gen(ck, cv, vmask, probs, gs["aux"])
+        return pack_gen(ck, cv, vmask, probs, gs["aux"], gs["live"], gs["tok"],
+                        gs["ptok"])
 
     # -- score --------------------------------------------------------------
     def score(blob, tokens, valid, temp):
@@ -393,7 +397,19 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         vmask = gs["valid"] * (1.0 - m_row) + acc_valid * m_row
         probs = gs["probs"] * (1.0 - m_row) + probs_new * m_row
         aux = gs["aux"] * (1.0 - rowmask) + rej.astype(jnp.float32) * rowmask
-        return pack_gen(ck, cv, vmask, probs, aux)
+        # device-side termination flag for the `sample` entry (§12): a
+        # seated row is live iff its accepted prefix is not yet terminal —
+        # the same predicate the host's resolve_verified applies (accepted
+        # length reached gen_len, or the last accepted token is EOS)
+        last_tok = jnp.take_along_axis(
+            tokens, jnp.clip(p + rej - 1, 0, t - 1)[:, None].astype(jnp.int32),
+            axis=1,
+        )[:, 0]
+        ends_eos = jnp.logical_and(rej > 0, last_tok == C.EOS_ID)
+        terminal = jnp.logical_or(rej >= g, ends_eos)
+        live_new = 1.0 - terminal.astype(jnp.float32)
+        live = gs["live"] * (1.0 - rowmask) + live_new * rowmask
+        return pack_gen(ck, cv, vmask, probs, aux, live, gs["tok"], gs["ptok"])
 
     # -- losses ---------------------------------------------------------------
     def policy_loss(pflat, tokens, valid, resp_mask, adv, old_logp, ref_logp, hp):
@@ -499,6 +515,38 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         gs = unpack_gen(gen_blob)
         return jnp.concatenate([gs["probs"].reshape(-1), gs["aux"].reshape(-1)])
 
+    # -- sample: device-resident per-task sampling (ARCHITECTURE.md §12) -----
+    def sample(gen_blob, ctrl, nonce, top_p):
+        """Draw one token per armed row from the gen blob's probs, replaying
+        the host's per-task RNG streams (§6) device-side. `ctrl` carries per
+        row (task id, draws-so-far, mode): mode 0 skips the row, mode 1
+        samples unconditionally (decode survivors and refill seats), mode 2
+        samples iff the row's `live` lane is set (verify_seat seats whose
+        termination only the device knows this round). Writes the token id
+        into the `tok` lane (-1 for unarmed rows) and its raw probability
+        into `ptok`; everything else passes through untouched."""
+        gs = unpack_gen(gen_blob)
+        ids, draws, mode = ctrl[:, 0], ctrl[:, 1], ctrl[:, 2]
+        armed = jnp.logical_or(
+            mode == 1, jnp.logical_and(mode == 2, gs["live"] > 0.5)
+        )
+        u = rng_k.task_uniform(nonce[0], nonce[1], ids, draws, g)
+        tok, ptok = rng_k.device_sample(gs["probs"], u, top_p[0])
+        tok_lane = jnp.where(armed, tok.astype(jnp.float32), -1.0)
+        ptok_lane = jnp.where(armed, ptok, 0.0)
+        return pack_gen(gs["cache_k"], gs["cache_v"], gs["valid"], gs["probs"],
+                        gs["aux"], gs["live"], tok_lane, ptok_lane)
+
+    # -- read_step: the fused O(B) end-of-step readback (§12) ----------------
+    # (replaces read_gen's [B*V] probs payload on the pipeline hot path:
+    # after `sample` the host only needs each row's token, its probability,
+    # and verify_seat's acceptance offsets)
+    def read_step(gen_blob):
+        gs = unpack_gen(gen_blob)
+        return jnp.concatenate(
+            [gs["tok"].reshape(-1), gs["ptok"].reshape(-1), gs["aux"].reshape(-1)]
+        )
+
     # -- read_metrics: extract [step | metrics] from a train blob ------------
     # (same rationale as read_gen: avoids a full blob copy per train step
     # just to read 17 floats of diagnostics)
@@ -510,6 +558,8 @@ def make_entries(cfg: C.ModelConfig, geo: C.SeqGeometry, batch: int,
         "decode": decode,
         "refill": refill,
         "read_gen": read_gen,
+        "sample": sample,
+        "read_step": read_step,
         "read_metrics": read_metrics,
         "score": score,
         "verify": verify,

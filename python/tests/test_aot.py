@@ -26,10 +26,17 @@ def test_entry_signatures_cover_all_entries():
     assert set(sigs) == {
         "prefill", "decode", "refill", "read_gen", "read_metrics", "score",
         "verify", "verify_seat", "train_policy", "train_sft",
+        "sample", "read_step",
     }
-    # every signature starts with the policy blob
+    # every signature starts with the policy blob, except the gen-blob-only
+    # entries (readbacks + the device sampler, which never touch params)
+    gen_first = {"read_gen", "read_step", "sample"}
+    sg = C.flat_size(C.gen_blob_spec(cfg, GEO, 4))
     for name, sig in sigs.items():
-        if name != "read_gen":
+        if name in gen_first:
+            assert sig[0]["name"] == "gen", name
+            assert sig[0]["shape"] == [sg], name
+        else:
             assert sig[0]["name"] == "blob", name
             assert sig[0]["shape"] == [C.blob_size(cfg, GEO)], name
 
@@ -42,8 +49,8 @@ def test_critic_signatures():
 
 def test_output_fields_offsets_are_contiguous():
     cfg = C.PRESETS["nano"]
-    for entry in ["prefill", "decode", "refill", "verify_seat", "read_gen",
-                  "score", "verify", "train_policy"]:
+    for entry in ["prefill", "decode", "refill", "verify_seat", "sample",
+                  "read_gen", "read_step", "score", "verify", "train_policy"]:
         fields = aot.output_fields(entry, cfg, GEO, 4, False)
         off = 0
         for f in fields:
@@ -74,6 +81,134 @@ def test_gen_blob_and_read_gen_carry_aux_lane():
     assert sum(int(np.prod(f["shape"])) for f in seat.values()) == C.flat_size(
         C.gen_blob_spec(cfg, GEO, b)
     )
+
+
+def test_gen_blob_out_lanes_and_read_step_layout():
+    """PR 6 contract: the gen blob carries the live/tok/ptok out-lanes after
+    aux, and read_step returns the fused [B tok | B ptok | B aux] payload."""
+    cfg = C.PRESETS["nano"]
+    b, v = 4, cfg.vocab
+    spec = C.gen_blob_spec(cfg, GEO, b)
+    names = [n for n, _ in spec]
+    assert names[-4:] == ["aux", "live", "tok", "ptok"]
+    assert dict(spec)["tok"] == (b,)
+    fields = {f["name"]: f for f in aot.output_fields("read_step", cfg, GEO, b, False)}
+    assert fields["tok"]["offset"] == 0
+    assert fields["ptok"]["offset"] == b
+    assert fields["aux"]["offset"] == 2 * b
+    # the sample entry's output is the full gen blob, lanes included
+    sample = {f["name"]: f for f in aot.output_fields("sample", cfg, GEO, b, False)}
+    assert sample["live"]["shape"] == [b]
+    assert sample["tok"]["offset"] + b == sample["ptok"]["offset"]
+    assert sum(int(np.prod(f["shape"])) for f in sample.values()) == C.flat_size(spec)
+
+
+def test_device_rng_stream_matches_host_reference():
+    """The `sample` entry's uniforms replay the coordinator's per-task
+    xoshiro256** streams bit-for-bit: jax's (hi, lo)-u32 emulation must
+    agree with the pure-python u64 reference (which mirrors
+    rust/src/util/rng.rs exactly) at every (nonce, id, draws)."""
+    import jax.numpy as jnp
+
+    from compile.kernels import xoshiro as X
+
+    max_draws = GEO.gen_len
+    for nonce in [0, 1, 0xDEAD_BEEF_CAFE_F00D, (1 << 64) - 1, 0x9E37_79B9_7F4A_7C15]:
+        ids = np.array([0, 1, 7, 1000, 2**31 - 1], np.int32)
+        draws = np.array([0, 1, max_draws, 3, max_draws - 1], np.int32)
+        nonce_w = np.array(
+            [(nonce >> 32) & 0xFFFF_FFFF, nonce & 0xFFFF_FFFF], np.uint32
+        ).astype(np.int32)  # the i32 bit-split the rust side uploads
+        dev = np.asarray(
+            X.task_uniform(
+                jnp.asarray(nonce_w[0]), jnp.asarray(nonce_w[1]),
+                jnp.asarray(ids), jnp.asarray(draws), max_draws,
+            )
+        )
+        ref = np.array(
+            [X.ref_task_uniform(nonce, int(i), int(d)) for i, d in zip(ids, draws)],
+            np.float32,
+        )
+        np.testing.assert_array_equal(dev, ref, err_msg=f"nonce {nonce:#x}")
+
+
+def test_device_sampler_matches_host_top_p_bitwise():
+    """device_sample must reproduce TopPSampler::sample exactly — including
+    the prob-desc/index-asc tie-break and the sequential f32 mass sums —
+    for both the categorical (top_p >= 1) and nucleus branches."""
+    import jax.numpy as jnp
+
+    from compile.kernels import xoshiro as X
+
+    rng = np.random.default_rng(42)
+    b, v = 8, 16
+    for top_p in [1.0, 0.95, 0.8, 0.5]:
+        probs = rng.random((b, v), np.float32)
+        probs[0, 3] = probs[0, 11]  # force an exact tie
+        probs[1] = 1.0 / v  # uniform row: every slot ties
+        u01 = rng.random(b, np.float32)
+        tok, ptok = X.device_sample(
+            jnp.asarray(probs), jnp.asarray(u01), jnp.float32(top_p)
+        )
+        tok, ptok = np.asarray(tok), np.asarray(ptok)
+        for r in range(b):
+            want = X.ref_sample(probs[r], top_p, np.float32(u01[r]))
+            assert tok[r] == want, f"top_p {top_p} row {r}: {tok[r]} != {want}"
+            assert ptok[r] == probs[r, want], f"top_p {top_p} row {r}"
+
+
+def test_sample_entry_pins_rng_stream_and_arming_modes():
+    """End-to-end through the lowered-entry functions: `sample` writes the
+    reference token/prob into the tok/ptok lanes for armed rows (mode 1
+    always, mode 2 iff live), -1/0 otherwise, and `read_step` returns the
+    fused [tok | ptok | aux] payload."""
+    import jax.numpy as jnp
+
+    from compile.kernels import xoshiro as X
+
+    cfg = C.PRESETS["nano"]
+    b, v = 4, cfg.vocab
+    entries = M.make_entries(cfg, GEO, b, use_pallas=False)
+    spec = C.gen_blob_spec(cfg, GEO, b)
+    offs, off = {}, 0
+    for name, shape in spec:
+        offs[name] = off
+        off += int(np.prod(shape))
+    blob = np.zeros(off, np.float32)
+    rng = np.random.default_rng(7)
+    probs = rng.random((b, v), np.float32)
+    blob[offs["probs"]:offs["probs"] + b * v] = probs.reshape(-1)
+    aux = np.array([3.0, 0.0, 5.0, 1.0], np.float32)
+    blob[offs["aux"]:offs["aux"] + b] = aux
+    live = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+    blob[offs["live"]:offs["live"] + b] = live
+
+    nonce = 0xFEED_FACE_1234_5678
+    top_p = 0.9
+    # row 0: mode 2 + live -> armed; row 1: mode 2 + dead -> skipped;
+    # row 2: mode 1 (decode survivor, 3 draws consumed); row 3: mode 0
+    ctrl = np.array([[11, 0, 2], [12, 0, 2], [13, 3, 1], [14, 0, 0]], np.int32)
+    nonce_w = np.array(
+        [(nonce >> 32) & 0xFFFF_FFFF, nonce & 0xFFFF_FFFF], np.uint32
+    ).astype(np.int32)
+    out = np.asarray(entries["sample"](
+        jnp.asarray(blob), jnp.asarray(ctrl), jnp.asarray(nonce_w),
+        jnp.asarray([top_p], np.float32),
+    ))
+    step = np.asarray(entries["read_step"](jnp.asarray(out)))
+    assert step.shape == (3 * b,)
+    tok, ptok, aux_out = step[:b], step[b:2 * b], step[2 * b:]
+    np.testing.assert_array_equal(aux_out, aux, err_msg="aux passes through")
+    for r, armed in enumerate([True, False, True, False]):
+        if not armed:
+            assert tok[r] == -1.0 and ptok[r] == 0.0, f"row {r} must be unarmed"
+            continue
+        u = X.ref_task_uniform(nonce, int(ctrl[r, 0]), int(ctrl[r, 1]))
+        want = X.ref_sample(probs[r], top_p, u)
+        assert tok[r] == float(want), f"row {r}: {tok[r]} != {want}"
+        assert ptok[r] == probs[r, want], f"row {r}"
+    # the non-lane region (probs etc.) passes through untouched
+    np.testing.assert_array_equal(out[:offs["aux"]], blob[:offs["aux"]])
 
 
 @pytest.mark.slow

@@ -70,7 +70,8 @@ def greedy_rollout(entries, blob, tokens, valid, steps):
     gen = entries["prefill"](blob, jnp.asarray(tokens), jnp.asarray(valid), last, temp)
     ck_n = CFG.n_layers * B * T * CFG.d_model
     probs = np.asarray(entries["read_gen"](gen))[: B * V].reshape(B, V)
-    assert gen.shape[0] == 2 * ck_n + B * T + B * V + B  # [ck | cv | valid | probs | aux]
+    # [ck | cv | valid | probs | aux | live | tok | ptok]
+    assert gen.shape[0] == 2 * ck_n + B * T + B * V + 4 * B
     toks, val = tokens.copy(), valid.copy()
     logps = []
     for j in range(steps):
@@ -137,13 +138,16 @@ def test_left_pad_shift_invariance(entries, blob):
 
 
 def unpack_gen_np(gen):
-    """Split a flat gen blob into (ck, cv, valid, probs, aux) numpy views."""
+    """Split a flat gen blob into (ck, cv, valid, probs, aux) numpy views
+    (the trailing live/tok/ptok out-lanes are dropped — the sample-entry
+    tests in test_aot.py cover them)."""
     ck_n = CFG.n_layers * B * T * CFG.d_model
     ck = np.asarray(gen[:ck_n]).reshape(CFG.n_layers, B, T, CFG.d_model)
     cv = np.asarray(gen[ck_n : 2 * ck_n]).reshape(CFG.n_layers, B, T, CFG.d_model)
     vm = np.asarray(gen[2 * ck_n : 2 * ck_n + B * T]).reshape(B, T)
     pr = np.asarray(gen[2 * ck_n + B * T : 2 * ck_n + B * T + B * V]).reshape(B, V)
-    aux = np.asarray(gen[2 * ck_n + B * T + B * V :])
+    base = 2 * ck_n + B * T + B * V
+    aux = np.asarray(gen[base : base + B])
     return ck, cv, vm, pr, aux
 
 

@@ -1,0 +1,123 @@
+//! Readback bench (PR 6): device-resident sampling + the fused O(B) step
+//! readback against the host-sampling baseline, at equal outputs.
+//!
+//! The hot pipeline path ends each decode round with the `sample` entry
+//! (per-task RNG streams replayed device-side, ARCHITECTURE.md §12) and a
+//! `read_step` readback of just `[B tok | B ptok | B aux]`, where the
+//! baseline reads the full `[B*V probs | B aux]` payload and samples on
+//! the host. On clocked mock replicas (readback latency scales with
+//! payload size) that shows up twice in `PipelineStats`: per-step
+//! `readback_bytes` drops from O(B·V) to O(B), and the overlapped
+//! makespan drops with it. Asserts, for `shards ∈ {2, 4}`: byte-identical
+//! outputs across the two sampling paths, strictly lower readback bytes,
+//! and a strictly lower overlapped makespan than the host baseline.
+//! Writes `BENCH_readback.json` for machine diffing / the CI smoke run.
+
+use spec_rl::benchkit::drafted::{B, LOG_LENIENCE, P, SEED, T, V};
+use spec_rl::benchkit::{fmt_secs, stale, Bench, JsonReport};
+use spec_rl::rollout::{EnginePool, Placement, SampleCfg};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::util::{Rng, StageTimer};
+
+/// Draft length: identical for every task (same workload as
+/// `bench_overlap`, so the two JSON reports compare directly).
+const DRAFT_LEN: usize = 30;
+
+fn main() {
+    println!(
+        "== readback bench (clocked mock replicas: B={B}/shard V={V}, {} stale-mod-{} drafts) ==",
+        stale::N_TASKS,
+        stale::STALE_MOD,
+    );
+    let bench = Bench::new(1, 8);
+    let mut j = JsonReport::new();
+    j.int("batch_per_shard", B)
+        .int("vocab", V)
+        .int("tasks", stale::N_TASKS)
+        .int("draft_len", DRAFT_LEN)
+        .num("log_lenience", LOG_LENIENCE as f64);
+
+    println!("\nshards  path    readback bytes  overlap makespan  wall-clock (median)");
+    for shards in [2usize, 4] {
+        let mut mocks = MockEngine::clocked_replicas(shards, B, P, T, V);
+        for m in &mut mocks {
+            // Deterministic full-length tails: every rejected row decodes
+            // exactly to the cap, so the traffic totals are structural.
+            m.eos_bias = 0.0;
+        }
+        let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        let cfg = SampleCfg::default();
+        let mut timer = StageTimer::new();
+
+        let mut run = |host: bool| {
+            pool.set_host_sampling(host);
+            let mut spec = stale::warmed(stale::N_TASKS, DRAFT_LEN, V, LOG_LENIENCE)
+                .with_placement(Placement::Steal);
+            let mut rng = Rng::new(SEED);
+            let reqs = stale::requests(stale::N_TASKS, V);
+            spec.collect(&mut pool, &blob_refs, &reqs, cfg, &mut rng, &mut timer).unwrap()
+        };
+
+        let (dev_res, dev_stats) = run(false);
+        let (host_res, host_stats) = run(true);
+
+        // The two sampling paths must agree byte-for-byte (length first:
+        // zip alone would pass on truncation).
+        assert_eq!(dev_res.len(), stale::N_TASKS, "device run dropped results");
+        assert_eq!(host_res.len(), stale::N_TASKS, "host run dropped results");
+        for (a, b) in dev_res.iter().zip(&host_res) {
+            assert_eq!((a.id, &a.response), (b.id, &b.response), "sampling path changed outputs");
+            assert_eq!(a.logps, b.logps, "sampling path changed logps");
+        }
+
+        // The fused path must read strictly less per step...
+        assert!(
+            dev_stats.readback_bytes < host_stats.readback_bytes,
+            "{shards} shards: device readback {} must come out strictly below host {}",
+            dev_stats.readback_bytes,
+            host_stats.readback_bytes
+        );
+        // ...and win the clock even after paying for the extra `sample`
+        // launch each round.
+        let (dev_ov, host_ov) = (dev_stats.overlap_makespan, host_stats.overlap_makespan);
+        assert!(host_ov > 0.0, "{shards} shards: the virtual clock never moved");
+        assert!(
+            dev_ov < host_ov,
+            "{shards} shards: device-sampling makespan {dev_ov} must come out strictly \
+             below the host-sampling {host_ov}"
+        );
+
+        let r_dev = bench.run(&format!("device sampling over {shards} shard(s)"), || run(false));
+        let r_host = bench.run(&format!("host sampling over {shards} shard(s)"), || run(true));
+
+        let ratio = host_stats.readback_bytes as f64 / dev_stats.readback_bytes.max(1) as f64;
+        println!(
+            "{shards:>6}  device  {:>14}  {dev_ov:>16.1}  {:>19}",
+            dev_stats.readback_bytes,
+            fmt_secs(r_dev.median_secs)
+        );
+        println!(
+            "{shards:>6}  host    {:>14}  {host_ov:>16.1}  {:>19}  ({ratio:.1}x more readback)",
+            host_stats.readback_bytes,
+            fmt_secs(r_host.median_secs)
+        );
+        j.int(&format!("s{shards}_device_readback_bytes"), dev_stats.readback_bytes)
+            .int(&format!("s{shards}_host_readback_bytes"), host_stats.readback_bytes)
+            .int(&format!("s{shards}_device_upload_bytes"), dev_stats.upload_bytes)
+            .int(&format!("s{shards}_host_upload_bytes"), host_stats.upload_bytes)
+            .num(&format!("s{shards}_readback_ratio"), ratio)
+            .num(&format!("s{shards}_device_overlap_makespan"), dev_ov)
+            .num(&format!("s{shards}_host_overlap_makespan"), host_ov)
+            .num(&format!("s{shards}_device_serial_makespan"), dev_stats.serial_makespan)
+            .num(&format!("s{shards}_host_serial_makespan"), host_stats.serial_makespan)
+            .bench(&format!("s{shards}_device"), &r_dev)
+            .bench(&format!("s{shards}_host"), &r_host);
+    }
+
+    println!("\n{}", j.render());
+    if let Err(e) = j.save("BENCH_readback.json") {
+        eprintln!("could not write BENCH_readback.json: {e}");
+    }
+}

@@ -14,8 +14,9 @@
 //! decode round at a time, pulling replacement work from a caller-supplied
 //! [`WorkQueue`] whenever slots free up. Since PR 5 each round is itself
 //! split in two: [`RolloutEngine::step_submit`] issues the round's whole
-//! device chain (decode → refill → verify-seat → read_gen, linked through
-//! pending handles) without blocking, and
+//! device chain (decode → refill → verify-seat → sample → read_step,
+//! linked through pending handles; read_gen replaces the last two links
+//! under forced host sampling) without blocking, and
 //! [`RolloutEngine::step_complete`] cashes the returned [`StepTicket`] in
 //! — the only host-blocking half. `pipeline_step` is the composed
 //! (blocking) form; `run_pipeline` is the one-engine driver over it
@@ -34,17 +35,26 @@
 //! executing plans packed by [`VerifyPlanner`] (which itself makes no
 //! engine calls).
 //!
-//! Host↔device traffic per decode step is three `[B]` i32 vectors; the
-//! `[B, T]` valid mask lives device-side in the generation blob and is
-//! extended there by the decode entry. All host scratch (layout, verify
-//! planner, step vectors, probs readback, sampler order) is allocated once
-//! per engine and reused across runs and trainer steps.
+//! Host↔device traffic per decode step is three `[B]` i32 vectors plus
+//! the `[B, 3]` sampler ctrl block up, and the fused `[B tok | B ptok |
+//! B aux]` readback down (PR 6, `ARCHITECTURE.md` §12): sampling runs on
+//! device through the `sample` entry, which replays each task's host RNG
+//! stream statelessly, so the O(B·V) probs payload of `read_gen` leaves
+//! the hot path entirely. The `[B, T]` valid mask lives device-side in
+//! the generation blob and is extended there by the decode entry. All
+//! host scratch (layout, verify planner, step vectors, readbacks, sampler
+//! order) is allocated once per engine and reused across runs and trainer
+//! steps; `readback_bytes` / `upload_bytes` in [`PipelineStats`] account
+//! the traffic.
 //!
 //! Every discipline shares one sample-token/finish-row decode block
 //! (`sample_row`, plus `sample_round` / `decode_advance` /
 //! `prefill_layout` / `refill_slots`), so the oracles cannot drift from
-//! the pipeline silently. One engine serves one backend; the sharded
-//! multi-engine layer is [`crate::rollout::pool::EnginePool`].
+//! the pipeline silently — the host-sampling path stays byte-identical to
+//! the device path ([`RolloutEngine::set_host_sampling`] forces it, and
+//! bundles without the `sample`/`read_step` entries fall back to it). One
+//! engine serves one backend; the sharded multi-engine layer is
+//! [`crate::rollout::pool::EnginePool`].
 
 use std::time::Instant;
 
@@ -112,6 +122,16 @@ pub struct PipelineStats {
     /// serialized driver never lets two forwards overlap, so its
     /// makespan is exactly that sum). 0 without a virtual clock.
     pub serial_makespan: f64,
+    /// Bytes read device→host this step (`read_gen` / `read_step`
+    /// payloads). The quantity the fused `[B tokens | B aux]` readback
+    /// shrinks from O(B·V) to O(B) per decode round
+    /// (`ARCHITECTURE.md` §12); `bench_readback` pins the drop.
+    pub readback_bytes: usize,
+    /// Bytes uploaded host→device for per-call entry arguments this step
+    /// (prefill/refill layouts, decode step vectors, verify plans, sample
+    /// ctrl rows). One-time cached scalars (temperature, log-lenience,
+    /// top-p, nonce) are excluded — they are not per-step traffic.
+    pub upload_bytes: usize,
 }
 
 impl PipelineStats {
@@ -159,6 +179,8 @@ impl PipelineStats {
         self.cache_evicted_tokens += o.cache_evicted_tokens;
         self.overlap_makespan += o.overlap_makespan;
         self.serial_makespan += o.serial_makespan;
+        self.readback_bytes += o.readback_bytes;
+        self.upload_bytes += o.upload_bytes;
         if self.shard_device_calls.len() < o.shard_device_calls.len() {
             self.shard_device_calls.resize(o.shard_device_calls.len(), 0);
         }
@@ -204,6 +226,13 @@ struct SlotState {
     reused: usize,
     logps: Vec<f32>,
     rng: Rng,
+    /// Uniform draws this task's RNG stream has consumed so far — the
+    /// `draws` word of the device `sample` entry's ctrl row. The device
+    /// replays the stream statelessly from `(nonce, id)` and skips this
+    /// many values, so device and host sampling consume the *same*
+    /// per-task stream position (`ARCHITECTURE.md` §12). Unused (stays 0)
+    /// on the host sampling path, which advances `rng` directly.
+    draws: usize,
 }
 
 impl SlotState {
@@ -213,6 +242,7 @@ impl SlotState {
             id: task.id,
             reused: task.prefix.len(),
             logps: task.prefix_logps,
+            draws: 0,
         }
     }
 }
@@ -238,6 +268,21 @@ pub struct PipelineRun<B: Backend = Engine> {
     gen: Option<B::Buf>,
     /// Uploaded log-lenience scalar, reused by every verify-seat call.
     ll: Option<B::Buf>,
+    /// Uploaded top-p scalar for the device `sample` entry (device path
+    /// only; the host path passes `cfg.top_p` to the host sampler).
+    top_p_buf: Option<B::Buf>,
+    /// Uploaded `(hi, lo)` bit-split of `rnonce` for the device `sample`
+    /// entry (device path only; constant for the whole run).
+    nonce_buf: Option<B::Buf>,
+    /// Whether this run samples on the device (`sample` + `read_step`
+    /// entries resolved and host sampling not forced). Captured at start
+    /// so a run never switches paths mid-flight.
+    device: bool,
+    /// Device-sampled `(token, raw prob)` per row, ingested from the
+    /// previous round's `read_step` payload and consumed by the next
+    /// sampling round. `None` for rows the device left unarmed
+    /// (tok lane < 0). Host-path runs never populate this.
+    pending_tok: Vec<Option<(i32, f32)>>,
     cfg: SampleCfg,
     vnonce: u64,
     rnonce: u64,
@@ -308,6 +353,15 @@ pub struct RolloutEngine<'e, B: Backend = Engine> {
     h_refill: B::Entry,
     h_verify: Option<B::Entry>,
     h_verify_seat: Option<B::Entry>,
+    // Device-resident sampling pair (`ARCHITECTURE.md` §12). Optional so
+    // bundles built before the `sample` entry existed keep working — the
+    // pipeline silently falls back to host sampling + `read_gen` when
+    // either is absent.
+    h_sample: Option<B::Entry>,
+    h_read_step: Option<B::Entry>,
+    /// Force the host sampling path even when the bundle has the device
+    /// pair — the byte-identity oracle and `bench_readback` baseline.
+    force_host: bool,
     // Persistent host scratch, reused across runs and trainer steps: the
     // decode loop allocates nothing per step, and the verify executor
     // re-resolves nothing per step (it used to rebuild a SpecVerifier —
@@ -319,8 +373,14 @@ pub struct RolloutEngine<'e, B: Backend = Engine> {
     lpos_in: Vec<i32>,
     rowmask: Vec<f32>,
     /// `read_gen` readback: `[B*V probs | B aux]` — the aux tail carries
-    /// `verify_seat`'s accepted-prefix lengths.
+    /// `verify_seat`'s accepted-prefix lengths. Host sampling path only.
     readback: Vec<f32>,
+    /// `read_step` readback: `[B tok | B ptok | B aux]` — the fused O(B)
+    /// per-round payload of the device sampling path.
+    step_read: Vec<f32>,
+    /// Scratch for the `sample` entry's `[B, 3]` ctrl rows
+    /// (task id, draws consumed so far, arm mode).
+    ctrl: Vec<i32>,
     /// Cached temperature scalar buffer, keyed by bit pattern.
     temp_buf: Option<(u32, B::Buf)>,
 }
@@ -341,6 +401,9 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             h_refill: eng.resolve(bundle, "refill")?,
             h_verify: eng.resolve(bundle, "verify").ok(),
             h_verify_seat: eng.resolve(bundle, "verify_seat").ok(),
+            h_sample: eng.resolve(bundle, "sample").ok(),
+            h_read_step: eng.resolve(bundle, "read_step").ok(),
+            force_host: false,
             layout: BatchLayout::new(shape.batch, shape.prompt_len, shape.total_len),
             vplan: VerifyPlanner::new(shape),
             token_in: vec![0; shape.batch],
@@ -348,6 +411,8 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             lpos_in: vec![0; shape.batch],
             rowmask: vec![0.0; shape.batch],
             readback: vec![0.0; shape.batch * shape.vocab + shape.batch],
+            step_read: vec![0.0; 3 * shape.batch],
+            ctrl: vec![0; 3 * shape.batch],
             temp_buf: None,
         })
     }
@@ -360,6 +425,23 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
     /// reads its virtual clock through this).
     pub(crate) fn backend(&self) -> &B {
         self.eng
+    }
+
+    /// Force (or un-force) the host sampling path. With `true`, pipeline
+    /// runs sample on the host from the `[B·V]` `read_gen` probs payload
+    /// even when the bundle carries the device `sample`/`read_step` pair —
+    /// the baseline side of `bench_readback` and the byte-identity sweeps.
+    /// Outputs are identical either way (`ARCHITECTURE.md` §12).
+    pub fn set_host_sampling(&mut self, force: bool) {
+        self.force_host = force;
+    }
+
+    /// Whether pipeline runs started now will sample on the device: the
+    /// bundle resolved both `sample` and `read_step` and host sampling is
+    /// not forced. The oracles (`run`, `run_lockstep`, `run_wave`,
+    /// `verify_wave`) always sample on the host regardless.
+    pub fn device_sampling(&self) -> bool {
+        !self.force_host && self.h_sample.is_some() && self.h_read_step.is_some()
     }
 
     /// Prime the cached temperature buffer for this run's config.
@@ -407,9 +489,11 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         pending
     }
 
-    /// Refresh `self.readback` (`[B*V probs | B aux]`) from the gen blob.
-    fn read_probs(&mut self, gen: &B::Buf) -> Result<()> {
+    /// Refresh `self.readback` (`[B*V probs | B aux]`) from the gen blob —
+    /// the host sampling path's O(B·V) per-round readback.
+    fn read_probs(&mut self, gen: &B::Buf, stats: &mut PipelineStats) -> Result<()> {
         let out = self.eng.call_entry(&self.h_read_gen, &[gen])?;
+        stats.readback_bytes += self.readback.len() * 4;
         self.eng.read_f32_into(&out, &mut self.readback)
     }
 
@@ -495,6 +579,101 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         writes
     }
 
+    /// The device-path twin of [`RolloutEngine::sample_round`]: tokens
+    /// were already drawn by the previous round's `sample` entry and
+    /// ingested from its `read_step` payload into `pending_tok`, so this
+    /// round only ingests them — append to the host layout, emit finished
+    /// rows, arm the decode-entry inputs for survivors. The logp is
+    /// computed *here*, on the host, from the raw device probability
+    /// (`ln(max(p, 1e-30))`), so logps stay bit-identical to the host
+    /// sampler's — the device ships `p`, never `ln p`
+    /// (`ARCHITECTURE.md` §12).
+    fn sample_round_device(
+        &mut self,
+        sched: &mut SlotScheduler,
+        slots: &mut [Option<SlotState>],
+        pending_tok: &mut [Option<(i32, f32)>],
+        results: &mut Vec<SeqResult>,
+        stats: &mut PipelineStats,
+    ) -> usize {
+        let mut writes = 0usize;
+        for r in 0..self.batch {
+            self.reset_step_row(r);
+            if slots[r].is_none() {
+                continue;
+            }
+            let (tok, ptok) =
+                pending_tok[r].take().expect("decoding row has a device-sampled token");
+            let lp = ptok.max(1e-30).ln();
+            let slot_pos = self.layout.push_token(r, tok);
+            stats.new_tokens += 1;
+            let done_eos = tok == EOS;
+            let done = done_eos || self.layout.resp_len[r] >= self.gen_len();
+            if !done {
+                self.token_in[r] = tok;
+                self.slot_in[r] = slot_pos as i32;
+                self.lpos_in[r] = (self.layout.n_valid(r) - 1) as i32;
+            }
+            {
+                let st = slots[r].as_mut().unwrap();
+                st.draws += 1;
+                st.logps.push(lp);
+            }
+            if done {
+                let st = slots[r].take().unwrap();
+                let response = self.layout.response(r);
+                stats.reused_tokens += st.reused;
+                results.push(SeqResult {
+                    id: st.id,
+                    reused: st.reused,
+                    new_tokens: response.len() - st.reused,
+                    finished: done_eos,
+                    logps: st.logps,
+                    response,
+                });
+                sched.release(r);
+            } else {
+                writes += 1;
+            }
+        }
+        writes
+    }
+
+    /// Submit the round's device-side sampling over `gen`: one `[B, 3]`
+    /// ctrl upload (task id, draws consumed so far, arm mode) against the
+    /// run's cached nonce and top-p scalars. Decoding occupants arm
+    /// unconditionally (mode 1) at their stream position; rows just
+    /// seated by `verify_seat` arm conditionally on the blob's live lane
+    /// (mode 2, draws 0) — the device knows their terminality before the
+    /// host does, which is what keeps sampling on-chain. Everything else
+    /// is inert (mode 0). The pending's buffer is the gen blob with the
+    /// tok/ptok out-lanes written.
+    fn sample_submit(
+        &mut self,
+        slots: &[Option<SlotState>],
+        verifying: &[Option<VerifyTask>],
+        nonce: &B::Buf,
+        top_p: &B::Buf,
+        gen: &B::Buf,
+        stats: &mut PipelineStats,
+    ) -> Result<B::Pending> {
+        let b = self.batch;
+        for r in 0..b {
+            let (id, draws, mode) = match (&slots[r], &verifying[r]) {
+                (Some(st), _) => (st.id as i32, st.draws as i32, 1),
+                (None, Some(task)) => (task.id as i32, 0, 2),
+                (None, None) => (0, 0, 0),
+            };
+            self.ctrl[3 * r] = id;
+            self.ctrl[3 * r + 1] = draws;
+            self.ctrl[3 * r + 2] = mode;
+        }
+        let ctrl_b = self.eng.upload_i32(&self.ctrl, &[b, 3])?;
+        stats.upload_bytes += 3 * b * 4;
+        let h = self.h_sample.as_ref().expect("device sampling path resolved 'sample'");
+        self.eng.submit_entry(h, &[gen, &ctrl_b, nonce, top_p])
+    }
+
     /// Submit one decode step over `gen`: three `[B]` uploads, never the
     /// `[B, T]` mask (inert rows carry out-of-range slots). Non-blocking;
     /// the returned pending's buffer is the advanced generation blob.
@@ -515,6 +694,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         )?;
         stats.decode_steps += 1;
         stats.slot_idle_steps += b - writes;
+        stats.upload_bytes += 3 * b * 4;
         Ok(pending)
     }
 
@@ -533,19 +713,29 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         Ok(())
     }
 
-    /// Prefill the current host layout into a fresh generation blob — the
-    /// only full-mask upload of a run (counts one wave).
-    fn prefill_layout(&mut self, blob: &B::Buf, stats: &mut PipelineStats) -> Result<B::Buf> {
+    /// Submit the prefill of the current host layout — the only full-mask
+    /// upload of a run (counts one wave). Non-blocking; the pending's
+    /// buffer is the fresh generation blob. The pool submits every
+    /// shard's prefill before completing any (`ARCHITECTURE.md` §12).
+    fn prefill_submit(&mut self, blob: &B::Buf, stats: &mut PipelineStats) -> Result<B::Pending> {
         let (b, t) = (self.batch, self.total_len);
         let tok_b = self.eng.upload_i32(&self.layout.tokens, &[b, t])?;
         let val_b = self.eng.upload_f32(&self.layout.valid, &[b, t])?;
         let last_b = self.eng.upload_i32(&self.layout.last, &[b])?;
-        let gen = self.eng.call_entry(
+        let pending = self.eng.submit_entry(
             &self.h_prefill,
             &[blob, &tok_b, &val_b, &last_b, self.temp_ref()],
         )?;
         stats.waves += 1;
-        Ok(gen)
+        stats.upload_bytes += (2 * b * t + b) * 4;
+        Ok(pending)
+    }
+
+    /// Blocking [`RolloutEngine::prefill_submit`] + complete (the
+    /// single-chain drivers' form).
+    fn prefill_layout(&mut self, blob: &B::Buf, stats: &mut PipelineStats) -> Result<B::Buf> {
+        let pending = self.prefill_submit(blob, stats)?;
+        self.eng.complete(pending)
     }
 
     /// Re-seat freed slots from the queue's decode lane via the masked
@@ -585,6 +775,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             &[blob, gen, &tok_b, &val_b, &rm_b, &last_b, self.temp_ref()],
         )?;
         stats.refills += 1;
+        stats.upload_bytes += (2 * b * t + 2 * b) * 4;
         self.rowmask.fill(0.0);
         Ok(Some(pending))
     }
@@ -710,39 +901,18 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             &[blob, gen, &tok, &val, &lp, &un, &dv, &rm, ll, self.temp_ref()],
         )?;
         stats.verify_calls += 1;
+        stats.upload_bytes += (2 * b * self.total_len + 3 * b * self.gen_len() + b) * 4;
         self.rowmask.fill(0.0);
         timer.add("verification", span.elapsed().as_secs_f64());
         Ok(Some(pending))
     }
 
-    /// Blocking [`RolloutEngine::seat_submit`] + complete (the
-    /// single-chain drivers' form).
-    #[allow(clippy::too_many_arguments)]
-    fn seat_drafts(
-        &mut self,
-        sched: &mut SlotScheduler,
-        verifying: &mut [Option<VerifyTask>],
-        queue: &mut WorkQueue,
-        seat_min: usize,
-        blob: &B::Buf,
-        gen: &mut B::Buf,
-        vnonce: u64,
-        ll: &B::Buf,
-        stats: &mut PipelineStats,
-        timer: &mut StageTimer,
-    ) -> Result<()> {
-        if let Some(p) = self.seat_submit(
-            sched, verifying, queue, seat_min, blob, gen, vnonce, ll, stats, timer,
-        )? {
-            *gen = self.eng.complete(p)?;
-        }
-        Ok(())
-    }
-
-    /// Read back the aux lane for rows seated by `seat_drafts`: terminal
+    /// Read back the aux lane for rows seated by `seat_submit`: terminal
     /// accepted prefixes emit results and free the slot; the rest
     /// transition `Verify -> Decode` with their accepted prefix mirrored
-    /// into the host layout.
+    /// into the host layout. The aux lane arrives at `[B·V + slot]` of
+    /// the `read_gen` payload on the host path, `[2B + slot]` of the
+    /// fused `read_step` payload on the device path.
     #[allow(clippy::too_many_arguments)]
     fn resolve_verified(
         &mut self,
@@ -750,6 +920,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         verifying: &mut [Option<VerifyTask>],
         slots: &mut [Option<SlotState>],
         rnonce: u64,
+        device: bool,
         results: &mut Vec<SeqResult>,
         stats: &mut PipelineStats,
     ) {
@@ -757,7 +928,12 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         let gen_len = self.gen_len();
         for slot in 0..b {
             let Some(task) = verifying[slot].take() else { continue };
-            let n_acc = self.vplan.accepted(self.readback[b * v + slot], &task);
+            let raw = if device {
+                self.step_read[2 * b + slot]
+            } else {
+                self.readback[b * v + slot]
+            };
+            let n_acc = self.vplan.accepted(raw, &task);
             stats.drafts += 1;
             stats.prefix_tokens += n_acc;
             if n_acc == task.draft_len() {
@@ -783,6 +959,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
                     id: task.id,
                     reused: n_acc,
                     logps: task.entry.logps[..n_acc].to_vec(),
+                    draws: 0,
                 });
                 sched.to_decode(slot);
             }
@@ -838,7 +1015,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             slots[slot] = Some(SlotState::new(task, run_nonce));
         }
         let mut gen = self.prefill_layout(blob, &mut stats)?;
-        self.read_probs(&gen)?;
+        self.read_probs(&gen, &mut stats)?;
         timer.add("rollout", span.elapsed().as_secs_f64());
 
         // --- decode loop -------------------------------------------------
@@ -862,7 +1039,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
                 timer.add("rollout", span.elapsed().as_secs_f64());
                 break;
             }
-            self.read_probs(&gen)?;
+            self.read_probs(&gen, &mut stats)?;
             timer.add("rollout", span.elapsed().as_secs_f64());
         }
 
@@ -934,6 +1111,12 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
     /// [`crate::rollout::pool::EnginePool`]). Step nonces and `cfg` are
     /// captured in the run; results are byte-identical however the steps
     /// of concurrent runs interleave (`ARCHITECTURE.md` §6).
+    ///
+    /// This is the blocking composition of
+    /// [`RolloutEngine::start_submit`] + [`RolloutEngine::start_complete`];
+    /// the pool drives the halves separately so every shard's first
+    /// prefill/seat chain is in flight before any shard blocks
+    /// (`ARCHITECTURE.md` §12).
     #[allow(clippy::too_many_arguments)]
     pub fn pipeline_start(
         &mut self,
@@ -945,6 +1128,33 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         rnonce: u64,
         timer: &mut StageTimer,
     ) -> Result<PipelineRun<B>> {
+        let (mut run, ticket) =
+            self.start_submit(blob, queue, loglen, cfg, vnonce, rnonce, timer)?;
+        self.start_complete(&mut run, ticket, queue, timer)?;
+        Ok(run)
+    }
+
+    /// Submit a pipeline run's opening device chain without blocking on
+    /// any of it: pull the initial decode fills from `queue`, submit the
+    /// prefill, chain the first packed verify-seat onto it, and chain the
+    /// first readback (device path: the opening `sample` + `read_step`;
+    /// host path: `read_gen`). Like [`RolloutEngine::step_submit`], the
+    /// host returns as soon as everything is queued — the pool submits
+    /// every shard's opening chain before cashing any ticket in, so
+    /// first-step forwards overlap across shards exactly like steady-state
+    /// rounds do. A shard that finds the queue empty returns a done run
+    /// and an empty ticket, still at zero device calls.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_submit(
+        &mut self,
+        blob: &B::Buf,
+        queue: &mut WorkQueue,
+        loglen: f32,
+        cfg: SampleCfg,
+        vnonce: u64,
+        rnonce: u64,
+        timer: &mut StageTimer,
+    ) -> Result<(PipelineRun<B>, StepTicket<B>)> {
         let b = self.batch;
         let mut run = PipelineRun {
             sched: SlotScheduler::new(b),
@@ -952,6 +1162,10 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             verifying: (0..b).map(|_| None).collect(),
             gen: None,
             ll: None,
+            top_p_buf: None,
+            nonce_buf: None,
+            device: self.device_sampling(),
+            pending_tok: (0..b).map(|_| None).collect(),
             cfg,
             vnonce,
             rnonce,
@@ -959,6 +1173,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             results: Vec::new(),
             done: false,
         };
+        let mut ticket = StepTicket { gen: None, read: None };
 
         let span = Instant::now();
         self.layout.clear();
@@ -966,42 +1181,102 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         if fills.is_empty() && queue.pending_drafts() == 0 {
             // Nothing left for this shard: no prefill, no uploads.
             run.done = true;
-            return Ok(run);
+            return Ok((run, ticket));
         }
         self.ensure_temp(cfg.temperature)?;
         run.ll = Some(self.eng.upload_f32(&[loglen], &[1])?);
+        if run.device {
+            run.top_p_buf = Some(self.eng.upload_f32(&[cfg.top_p], &[1])?);
+            let words = [(rnonce >> 32) as u32 as i32, rnonce as u32 as i32];
+            run.nonce_buf = Some(self.eng.upload_i32(&words, &[2])?);
+        }
         for (slot, task) in fills {
             self.layout.set_row(slot, &task.prompt, &task.prefix);
             run.slots[slot] = Some(SlotState::new(task, rnonce));
         }
-        run.gen = Some(self.prefill_layout(blob, &mut run.stats)?);
+        ticket.gen = Some(self.prefill_submit(blob, &mut run.stats)?);
         timer.add("rollout", span.elapsed().as_secs_f64());
 
-        self.seat_drafts(
-            &mut run.sched,
-            &mut run.verifying,
-            queue,
-            cfg.verify_seat_min,
-            blob,
-            run.gen.as_mut().expect("gen blob set above"),
-            vnonce,
-            run.ll.as_ref().expect("loglen uploaded above"),
-            &mut run.stats,
-            timer,
-        )?;
-        let span = Instant::now();
-        self.read_probs(run.gen.as_ref().expect("gen blob set above"))?;
-        self.resolve_verified(
-            &mut run.sched,
-            &mut run.verifying,
-            &mut run.slots,
-            rnonce,
-            &mut run.results,
-            &mut run.stats,
-        );
-        timer.add("rollout", span.elapsed().as_secs_f64());
-        run.done = run.sched.is_done(queue);
-        Ok(run)
+        let seated = {
+            let gen = self.eng.pending_buf(ticket.gen.as_ref().expect("prefill submitted"));
+            self.seat_submit(
+                &mut run.sched,
+                &mut run.verifying,
+                queue,
+                cfg.verify_seat_min,
+                blob,
+                gen,
+                vnonce,
+                run.ll.as_ref().expect("loglen uploaded above"),
+                &mut run.stats,
+                timer,
+            )?
+        };
+        if let Some(p) = seated {
+            ticket.gen = Some(p);
+        }
+        self.submit_readback(&mut run, &mut ticket)?;
+        Ok((run, ticket))
+    }
+
+    /// Cash in the opening chain's ticket — identical to
+    /// [`RolloutEngine::step_complete`] (named separately so pool drivers
+    /// read as submit-all-starts / complete-all-starts).
+    pub fn start_complete(
+        &mut self,
+        run: &mut PipelineRun<B>,
+        ticket: StepTicket<B>,
+        queue: &WorkQueue,
+        timer: &mut StageTimer,
+    ) -> Result<()> {
+        self.step_complete(run, ticket, queue, timer)
+    }
+
+    /// Chain the round's readback onto the ticket: the device path first
+    /// chains the `sample` entry (drawing next round's tokens on-device
+    /// from the freshest probs) and reads the fused O(B)
+    /// `[B tok | B ptok | B aux]` payload via `read_step`; the host path
+    /// reads the O(B·V) `[B·V probs | B aux]` payload via `read_gen`.
+    fn submit_readback(
+        &mut self,
+        run: &mut PipelineRun<B>,
+        ticket: &mut StepTicket<B>,
+    ) -> Result<()> {
+        if run.device {
+            let sampled = {
+                let fallback = run.gen.as_ref();
+                let gen = match ticket.gen.as_ref() {
+                    Some(p) => self.eng.pending_buf(p),
+                    None => fallback.expect("started run has a gen blob"),
+                };
+                self.sample_submit(
+                    &run.slots,
+                    &run.verifying,
+                    run.nonce_buf.as_ref().expect("device run uploaded its nonce"),
+                    run.top_p_buf.as_ref().expect("device run uploaded its top-p"),
+                    gen,
+                    &mut run.stats,
+                )?
+            };
+            ticket.gen = Some(sampled);
+            let read = {
+                let gen = self.eng.pending_buf(ticket.gen.as_ref().expect("sample just chained"));
+                let h = self.h_read_step.as_ref().expect("device path resolved 'read_step'");
+                self.eng.submit_entry(h, &[gen])?
+            };
+            ticket.read = Some(read);
+        } else {
+            let read = {
+                let fallback = run.gen.as_ref();
+                let gen = match ticket.gen.as_ref() {
+                    Some(p) => self.eng.pending_buf(p),
+                    None => fallback.expect("started run has a gen blob"),
+                };
+                self.eng.submit_entry(&self.h_read_gen, &[gen])?
+            };
+            ticket.read = Some(read);
+        }
+        Ok(())
     }
 
     /// Issue one pipeline round's device work without blocking on any of
@@ -1038,10 +1313,22 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         let cfg = run.cfg;
         let span = Instant::now();
         // 1. sample one token for every decoding slot (verify-phase rows
-        //    are inert: their slot_in entries stay out-of-range)
-        let writes = self.sample_round(
-            &mut run.sched, &mut run.slots, &mut run.results, cfg.top_p, &mut run.stats,
-        );
+        //    are inert: their slot_in entries stay out-of-range). On the
+        //    device path the tokens were drawn by the previous round's
+        //    `sample` entry; this only ingests them.
+        let writes = if run.device {
+            self.sample_round_device(
+                &mut run.sched,
+                &mut run.slots,
+                &mut run.pending_tok,
+                &mut run.results,
+                &mut run.stats,
+            )
+        } else {
+            self.sample_round(
+                &mut run.sched, &mut run.slots, &mut run.results, cfg.top_p, &mut run.stats,
+            )
+        };
 
         // 2. submit the decode step for surviving rows
         if writes > 0 {
@@ -1095,22 +1382,20 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         }
 
         // 5. submit the round's readback: one read serves both phases —
-        //    fresh probs for the next sampling round, aux offsets for the
-        //    rows just seated
-        let read = {
-            let fallback = run.gen.as_ref().expect("started run has a gen blob");
-            let gen = ticket.chain_head(self.eng, fallback);
-            self.eng.submit_entry(&self.h_read_gen, &[gen])?
-        };
-        ticket.read = Some(read);
+        //    next round's tokens (device) or fresh probs (host) for the
+        //    next sampling round, aux offsets for the rows just seated
+        self.submit_readback(run, &mut ticket)?;
         Ok(ticket)
     }
 
     /// Cash in a round's ticket: block on the device chain's final
-    /// pending (the round's new generation blob), then on the `read_gen`
-    /// output, refresh the host readback, and resolve just-verified
-    /// rows. This is the only host-blocking half of the two-phase round;
-    /// completing an empty ticket is free.
+    /// pending (the round's new generation blob), then on the readback
+    /// output — the fused O(B) `[B tok | B ptok | B aux]` `read_step`
+    /// payload on the device path, the O(B·V) `read_gen` payload on the
+    /// host path — resolve just-verified rows, and (device path) ingest
+    /// the device-sampled tokens for the next round. This is the only
+    /// host-blocking half of the two-phase round; completing an empty
+    /// ticket is free.
     pub fn step_complete(
         &mut self,
         run: &mut PipelineRun<B>,
@@ -1126,15 +1411,37 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         };
         let span = Instant::now();
         let out = self.eng.complete(read)?;
-        self.eng.read_f32_into(&out, &mut self.readback)?;
+        if run.device {
+            self.eng.read_f32_into(&out, &mut self.step_read)?;
+            run.stats.readback_bytes += self.step_read.len() * 4;
+        } else {
+            self.eng.read_f32_into(&out, &mut self.readback)?;
+            run.stats.readback_bytes += self.readback.len() * 4;
+        }
         self.resolve_verified(
             &mut run.sched,
             &mut run.verifying,
             &mut run.slots,
             run.rnonce,
+            run.device,
             &mut run.results,
             &mut run.stats,
         );
+        if run.device {
+            // Ingest the tok/ptok out-lanes: any row the device armed
+            // (mode 1, or mode 2 with a live seat) carries its next token;
+            // unarmed rows ship -1. Terminal mode-2 seats were just
+            // released by `resolve_verified`, and their lane is -1 too.
+            let b = self.batch;
+            for r in 0..b {
+                let t = self.step_read[r];
+                run.pending_tok[r] = if t >= 0.0 {
+                    Some((t as i32, self.step_read[b + r]))
+                } else {
+                    None
+                };
+            }
+        }
         timer.add("rollout", span.elapsed().as_secs_f64());
         run.done = run.sched.is_done(queue);
         Ok(())
@@ -1218,7 +1525,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         let mut eos_emitted = vec![false; n];
 
         let mut gen = self.prefill_layout(blob, stats)?;
-        self.read_probs(&gen)?;
+        self.read_probs(&gen, stats)?;
         timer.add("rollout", span.elapsed().as_secs_f64());
 
         loop {
@@ -1243,7 +1550,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
                 break;
             }
             self.decode_advance(blob, &mut gen, writes, stats)?;
-            self.read_probs(&gen)?;
+            self.read_probs(&gen, stats)?;
             timer.add("rollout", span.elapsed().as_secs_f64());
         }
 

@@ -11,10 +11,13 @@
 //! packed sub-batches beside them — there is no global verify barrier, and
 //! a verified row pays no refill forward.
 //!
-//! Per-decode-step host→device traffic is three `[B]` vectors (the
-//! `[B, T]` valid mask is maintained device-side inside the generation
-//! blob — full contract in `sched.rs`); the per-step readback is
-//! `[B*V probs | B aux]`, the aux tail carrying verify acceptance results.
+//! Per-decode-step host→device traffic is three `[B]` vectors plus the
+//! sampler ctrl block (the `[B, T]` valid mask is maintained device-side
+//! inside the generation blob — full contract in `sched.rs`); the
+//! per-step readback is the fused `[B tok | B ptok | B aux]` of the
+//! `read_step` entry — sampling happens on device (`ARCHITECTURE.md`
+//! §12), so the `[B*V probs | B aux]` payload of `read_gen` is read only
+//! on the host-sampling oracle/fallback path.
 //!
 //! Two oracles are retained, both byte-identical to the pipeline thanks to
 //! per-task sampling and verification RNG streams:

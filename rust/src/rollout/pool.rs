@@ -42,9 +42,12 @@
 //!   index order — exactly the sequence the old host-serialized driver
 //!   produced — so placement, steal counts, and outputs are unchanged
 //!   while engines on distinct devices run their forwards concurrently.
-//!   `PipelineStats::overlap_makespan` vs `serial_makespan` measures the
-//!   win on the mock's virtual clock (`ARCHITECTURE.md` §11,
-//!   `bench_overlap`).
+//!   Since PR 6 the *opening* pass is overlapped the same way
+//!   ([`RolloutEngine::start_submit`] across all shards, then
+//!   [`RolloutEngine::start_complete`]), so first-step prefills no longer
+//!   host-serialize either. `PipelineStats::overlap_makespan` vs
+//!   `serial_makespan` measures the win on the mock's virtual clock
+//!   (`ARCHITECTURE.md` §11, `bench_overlap`).
 //! - **Replicas must be interchangeable.** Every backend must serve the
 //!   same bundle geometry (checked at construction) and hold the same
 //!   policy weights (the caller passes one blob per shard); per-row
@@ -178,6 +181,15 @@ impl<'e, B: Backend> EnginePool<'e, B> {
     /// for decode-only consumers (evaluation, the scheduler benches).
     pub fn shard_mut(&mut self, i: usize) -> &mut RolloutEngine<'e, B> {
         &mut self.shards[i]
+    }
+
+    /// Force (or un-force) the host sampling path on every shard — the
+    /// `bench_readback` baseline and the §12 byte-identity sweeps. See
+    /// [`RolloutEngine::set_host_sampling`].
+    pub fn set_host_sampling(&mut self, force: bool) {
+        for s in &mut self.shards {
+            s.set_host_sampling(force);
+        }
     }
 
     /// PR 3's one-pass LPT placement: order the work by descending
@@ -382,11 +394,23 @@ impl<'e, B: Backend> EnginePool<'e, B> {
 
         let (t0, busy0) = self.clock_begin();
         let mut queue = WorkQueue::new(pending, drafts);
+        // Overlapped start (ARCHITECTURE.md §12): submit every shard's
+        // opening prefill/seat chain before completing any, so first-step
+        // forwards run concurrently exactly like steady-state rounds. All
+        // queue pulls still happen in the submit pass, in shard index
+        // order, so placement is unchanged from the old serial start; a
+        // shard that finds the queue empty still makes zero device calls.
         let mut runs: Vec<PipelineRun<B>> = Vec::with_capacity(n);
+        let mut starts: Vec<StepTicket<B>> = Vec::with_capacity(n);
         for i in 0..n {
-            runs.push(self.shards[i].pipeline_start(
+            let (run, ticket) = self.shards[i].start_submit(
                 blobs[i], &mut queue, loglen, cfg, vnonce, rnonce, timer,
-            )?);
+            )?;
+            runs.push(run);
+            starts.push(ticket);
+        }
+        for (i, ticket) in starts.into_iter().enumerate() {
+            self.shards[i].start_complete(&mut runs[i], ticket, &queue, timer)?;
         }
         // Everything popped from here on is work the one-pass placement
         // would have pinned to a single engine up front.

@@ -71,7 +71,11 @@
 //!   seats the accepted prefix's KV/probs, and reports the accepted length
 //!   in the aux lane;
 //! - `read_gen(gen)` returns `[probs | aux]` (`B*V + B` floats), so
-//!   acceptance results ride the read the decode loop already performs.
+//!   acceptance results ride the read the decode loop already performs —
+//!   on the host-sampling path; the device-sampling hot path (PR 6,
+//!   `ARCHITECTURE.md` §12) ends each round with `sample` + the fused
+//!   `read_step(gen)` readback (`3*B` floats: token, probability, aux)
+//!   instead.
 //!
 //! Queue order is deterministic LPT: decode tasks sort by **ascending
 //! verified-prefix length** (then ascending id) — i.e. longest *remaining*

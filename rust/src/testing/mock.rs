@@ -33,6 +33,14 @@
 //! reports its length in the gen state's `aux` lane; `read_gen` returns
 //! `[probs | aux]` per the contract in `rollout/sched.rs`.
 //!
+//! The device-resident sampling lanes (`ARCHITECTURE.md` §12) are
+//! mirrored too: `verify_seat` raises the `live` lane for seated rows
+//! whose accepted prefix is not terminal, the `sample` entry replays the
+//! crate's own per-task RNG streams (`task_rng` + [`TopPSampler`] — the
+//! literal host sampler, so tokens match bit-for-bit by construction),
+//! and `read_step` returns the fused `[tok | ptok | aux]` O(B) readback
+//! that replaces `read_gen` on the pipeline hot path.
+//!
 //! ## The virtual clock (overlap accounting)
 //!
 //! A [`VirtualClock`] attached via [`MockEngine::attach_clock`] (or
@@ -54,9 +62,10 @@ use std::rc::Rc;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::rollout::engine::task_rng;
 use crate::runtime::{Backend, BatchShape};
 use crate::tokenizer::{BOS, EOS, PAD};
-use crate::util::Rng;
+use crate::util::{Rng, TopPSampler};
 
 /// The host timeline one replica group shares for overlap accounting.
 /// Engine-local device timelines live in each [`MockEngine`]'s busy
@@ -102,6 +111,14 @@ pub struct GenState {
     /// Per-row f32 side channel: `verify_seat` writes accepted-prefix
     /// lengths here; prefill zeroes it, decode/refill pass it through.
     aux: Vec<f32>,
+    /// Device-side liveness lane (§12): `verify_seat` sets 1.0 for seated
+    /// rows whose accepted prefix is not yet terminal — the `sample`
+    /// entry's mode-2 arming predicate.
+    live: Vec<f32>,
+    /// Sampled token ids written by the `sample` entry (-1.0 = unarmed).
+    tok: Vec<f32>,
+    /// Raw probability of each sampled token (the host takes the log).
+    ptok: Vec<f32>,
 }
 
 /// A mock device buffer.
@@ -227,21 +244,28 @@ impl MockEngine {
         self.clock = Some(clock);
     }
 
-    /// Fixed per-entry latency (virtual seconds) of the clock model.
-    /// Values are arbitrary but ordered like the real entries: full
-    /// `[B, T]` forwards (prefill / refill / verify) dominate, the
-    /// one-token decode step is cheaper, and `read_gen` is a readback,
-    /// not a forward. Zero without an attached clock.
+    /// Per-entry latency (virtual seconds) of the clock model. Values
+    /// are arbitrary but ordered like the real entries: full `[B, T]`
+    /// forwards (prefill / refill / verify) dominate, the one-token
+    /// decode step is cheaper, and the readback entries (`read_gen`,
+    /// `read_step`) cost a fixed issue overhead plus a per-float transfer
+    /// term — so `overlap_makespan` reflects bytes actually moved, not
+    /// call counts alone (the O(B·V)→O(B) readback shrink is measurable,
+    /// `bench_readback`). The `sample` entry is a trivial elementwise op
+    /// next to a forward. Zero without an attached clock.
     fn entry_latency(&self, entry: &str) -> f64 {
         if self.clock.is_none() {
             return 0.0;
         }
+        let (b, v) = (self.shape.batch, self.shape.vocab);
         match entry {
             "prefill" => 2.0,
             "refill" => 1.5,
             "verify" | "verify_seat" => 1.6,
             "decode" => 1.0,
-            "read_gen" => 0.2,
+            "sample" => 0.05,
+            "read_gen" => 0.05 + 5.0e-4 * (b * v + b) as f64,
+            "read_step" => 0.05 + 5.0e-4 * (3 * b) as f64,
             _ => 0.0,
         }
     }
@@ -394,9 +418,8 @@ impl Backend for MockEngine {
 
     fn resolve(&self, _bundle: &str, entry: &str) -> Result<String> {
         match entry {
-            "prefill" | "decode" | "read_gen" | "refill" | "verify" | "verify_seat" => {
-                Ok(entry.to_string())
-            }
+            "prefill" | "decode" | "read_gen" | "refill" | "verify" | "verify_seat"
+            | "sample" | "read_step" => Ok(entry.to_string()),
             other => bail!("mock backend has no entry '{other}'"),
         }
     }
@@ -487,7 +510,13 @@ impl MockEngine {
                     self.trace_seat(tokens, valid, r);
                 }
                 let rows = (0..b).map(|r| self.row_from_layout(tokens, valid, r)).collect();
-                Ok(MockBuf::Gen(GenState { rows, aux: vec![0.0; b] }))
+                Ok(MockBuf::Gen(GenState {
+                    rows,
+                    aux: vec![0.0; b],
+                    live: vec![0.0; b],
+                    tok: vec![0.0; b],
+                    ptok: vec![0.0; b],
+                }))
             }
             "decode" => {
                 // (blob, gen, token[B], slot[B], lpos[B], temp[1]) — a 7th
@@ -611,6 +640,7 @@ impl MockEngine {
                 ensure!(args[8].dims() == [1], "verify_seat: loglen dims {:?}", args[8].dims());
                 let ll = args[8].f32s()?[0];
                 ensure!(gen.aux.len() == b, "verify_seat: gen state has no aux lane");
+                ensure!(gen.live.len() == b, "verify_seat: gen state has no live lane");
                 for r in 0..b {
                     if rowmask[r] <= 0.5 {
                         continue;
@@ -626,8 +656,70 @@ impl MockEngine {
                     let probs = self.row_probs(&toks);
                     gen.rows[r] = RowState { toks, probs };
                     gen.aux[r] = n_acc as f32;
+                    // §12 liveness: terminal iff the accepted prefix hit the
+                    // generation cap or ended in EOS — the same predicate
+                    // the host's resolve_verified applies
+                    let ends_eos = n_acc > 0 && tokens[row + p + n_acc - 1] == EOS;
+                    gen.live[r] = if n_acc >= g || ends_eos { 0.0 } else { 1.0 };
                 }
                 Ok(MockBuf::Gen(gen))
+            }
+            "sample" => {
+                // (gen, ctrl[B,3], nonce[2], top_p[1]) — ctrl rows are
+                // (task id, draws consumed so far, arm mode)
+                ensure!(args.len() == 4, "sample: expected 4 args, got {}", args.len());
+                let mut gen = args[0].gen()?.clone();
+                let ctrl = args[1].i32s()?;
+                let nonce_w = args[2].i32s()?;
+                let top_p = args[3].f32s()?[0];
+                ensure!(args[1].dims() == [b, 3], "sample: ctrl dims {:?}", args[1].dims());
+                ensure!(args[2].dims() == [2], "sample: nonce dims {:?}", args[2].dims());
+                ensure!(args[3].dims() == [1], "sample: top_p dims {:?}", args[3].dims());
+                ensure!(gen.live.len() == b, "sample: gen state has no live lane");
+                ensure!(
+                    gen.tok.len() == b && gen.ptok.len() == b,
+                    "sample: gen state is missing the tok/ptok out-lanes"
+                );
+                let nonce =
+                    ((nonce_w[0] as u32 as u64) << 32) | (nonce_w[1] as u32 as u64);
+                let v = self.shape.vocab;
+                let mut sampler = TopPSampler::new(v);
+                for r in 0..b {
+                    let (id, draws, mode) = (ctrl[r * 3], ctrl[r * 3 + 1], ctrl[r * 3 + 2]);
+                    let armed = mode == 1 || (mode == 2 && gen.live[r] > 0.5);
+                    if !armed {
+                        gen.tok[r] = -1.0;
+                        gen.ptok[r] = 0.0;
+                        continue;
+                    }
+                    let probs = &gen.rows[r].probs;
+                    ensure!(probs.len() == v, "sample: armed row {r} has no probs");
+                    // replay the host's per-task stream (§6): skip the draws
+                    // already consumed, then draw this token's uniform — the
+                    // literal host sampler, so tokens match bit-for-bit
+                    let mut rng = task_rng(nonce, id as usize);
+                    for _ in 0..draws {
+                        rng.f32();
+                    }
+                    let tok = sampler.sample(probs, top_p, &mut rng);
+                    gen.tok[r] = tok as f32;
+                    gen.ptok[r] = probs[tok];
+                }
+                Ok(MockBuf::Gen(gen))
+            }
+            "read_step" => {
+                ensure!(args.len() == 1, "read_step: expected 1 arg, got {}", args.len());
+                let gen = args[0].gen()?;
+                ensure!(
+                    gen.tok.len() == b && gen.ptok.len() == b && gen.aux.len() == b,
+                    "read_step: gen state is missing sampling lanes"
+                );
+                // the fused O(B) readback: [tok | ptok | aux]
+                let mut out = Vec::with_capacity(3 * b);
+                out.extend_from_slice(&gen.tok);
+                out.extend_from_slice(&gen.ptok);
+                out.extend_from_slice(&gen.aux);
+                Ok(MockBuf::F32(out, vec![3 * b]))
             }
             other => bail!("mock backend cannot execute '{other}'"),
         }
@@ -678,7 +770,11 @@ mod tests {
         let m = MockEngine::new(1, 2, 4, 8);
         let blob = m.blob();
         let dec = m.resolve("x", "decode").unwrap();
-        let g = MockBuf::Gen(GenState { rows: vec![RowState::default()], aux: vec![0.0] });
+        let g = MockBuf::Gen(GenState {
+            rows: vec![RowState::default()],
+            aux: vec![0.0],
+            ..GenState::default()
+        });
         let tok = m.upload_i32(&[5], &[1]).unwrap();
         let slot = m.upload_i32(&[2], &[1]).unwrap();
         let lpos = m.upload_i32(&[2], &[1]).unwrap();
@@ -854,7 +950,11 @@ mod tests {
     fn decode_preserves_aux_lane() {
         let m = MockEngine::new(1, 2, 6, 8);
         let blob = m.blob();
-        let mut g = GenState { rows: vec![RowState::default()], aux: vec![3.0] };
+        let mut g = GenState {
+            rows: vec![RowState::default()],
+            aux: vec![3.0],
+            ..GenState::default()
+        };
         g.rows[0].toks = vec![1, 4];
         g.rows[0].probs = m.row_probs(&g.rows[0].toks);
         let gen = MockBuf::Gen(g);

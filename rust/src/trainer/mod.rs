@@ -57,7 +57,7 @@ pub const STEP_COLUMNS: &[&str] = &[
     "step", "epoch", "reward", "tokens_new", "tokens_reused", "tokens_cum",
     "prefix_len", "full_reuse", "drafts", "gen_rounds", "verify_calls",
     "shards", "device_calls", "shard_calls_max", "shard_calls_min", "steal_count",
-    "overlap_makespan", "serial_makespan",
+    "overlap_makespan", "serial_makespan", "readback_bytes", "upload_bytes",
     "cache_tokens", "cache_evictions", "cache_evicted_tokens",
     "rollout_s", "verification_s", "assembly_s", "reward_s", "old_logp_s",
     "ref_s", "values_s", "adv_s", "update_critic_s", "update_actor_s",
@@ -430,6 +430,11 @@ impl<'e> Trainer<'e> {
         // real devices, populated when the pool runs on clocked mocks.
         rec.insert("overlap_makespan", spec_stats_acc.overlap_makespan);
         rec.insert("serial_makespan", spec_stats_acc.serial_makespan);
+        // Host<->device traffic (ARCHITECTURE.md §12): the fused O(B)
+        // readback should hold readback_bytes far below the O(B*V) probs
+        // payload the host-sampling oracle reads each decode round.
+        rec.insert("readback_bytes", spec_stats_acc.readback_bytes as f64);
+        rec.insert("upload_bytes", spec_stats_acc.upload_bytes as f64);
         rec.insert("cache_tokens", self.spec.cache.total_tokens() as f64);
         rec.insert("cache_evictions", spec_stats_acc.cache_evictions as f64);
         rec.insert("cache_evicted_tokens", spec_stats_acc.cache_evicted_tokens as f64);

@@ -151,8 +151,12 @@ impl TopPSampler {
         for (i, o) in self.order.iter_mut().enumerate() {
             *o = i as u32;
         }
-        self.order
-            .sort_unstable_by(|&a, &b| probs[b as usize].total_cmp(&probs[a as usize]));
+        // prob-descending with an index-ascending tie-break: a total order,
+        // so the sort is deterministic and the device-side stable argsort of
+        // `-probs` reproduces it exactly (ARCHITECTURE.md §12)
+        self.order.sort_unstable_by(|&a, &b| {
+            probs[b as usize].total_cmp(&probs[a as usize]).then(a.cmp(&b))
+        });
         let total: f32 = probs.iter().sum();
         let budget = top_p * total;
         let mut mass = 0.0f32;

@@ -899,6 +899,96 @@ fn idle_shards_of_an_overlapped_pool_submit_nothing() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// device-resident sampling vs the forced-host pipeline (PR 6)
+// ---------------------------------------------------------------------------
+
+/// Drive `epochs` pipeline steps over `shards` shards with sampling either
+/// on-device (the default wherever the bundle exports `sample`/`read_step`)
+/// or forced back onto the host `read_gen` + `TopPSampler` path.
+fn drive_sampling(
+    variant: ReuseVariant,
+    shards: usize,
+    epochs: usize,
+    seed: u64,
+    host: bool,
+) -> (Vec<Vec<SeqResult>>, Vec<PipelineStats>) {
+    let mocks = MockEngine::replicas(shards, 4, P, T, V);
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+    pool.set_host_sampling(host);
+    let mut spec = SpecRollout::new(variant, Lenience::Fixed(-0.4));
+    let mut rng = Rng::new(seed);
+    let mut timer = StageTimer::new();
+    let mut all_results = Vec::new();
+    let mut all_stats = Vec::new();
+    for _ in 0..epochs {
+        let (r, s) = spec
+            .collect(&mut pool, &blob_refs, &pipe_requests(), SampleCfg::default(), &mut rng, &mut timer)
+            .unwrap();
+        all_results.push(r);
+        all_stats.push(s);
+    }
+    (all_results, all_stats)
+}
+
+#[test]
+fn device_sampling_is_byte_identical_to_host_and_cuts_readback() {
+    // ARCHITECTURE.md §12: the device replays each task's host RNG stream
+    // statelessly (seed from the step nonce + task id, skip draws-so-far)
+    // and mirrors TopPSampler bit-for-bit, so outputs must match the
+    // forced-host pipeline byte-for-byte across every reuse variant, shard
+    // count, and cache generation — while the per-round readback drops from
+    // the [B*V probs | B aux] payload to the fused [B tok | B ptok | B aux].
+    for variant in [
+        ReuseVariant::Off,
+        ReuseVariant::Spec,
+        ReuseVariant::Random,
+        ReuseVariant::Delayed,
+        ReuseVariant::Full,
+    ] {
+        for shards in [1usize, 2, 4] {
+            let (dev, ds) = drive_sampling(variant, shards, 3, 77, false);
+            let (host, hs) = drive_sampling(variant, shards, 3, 77, true);
+            for (epoch, (ra, rb)) in dev.iter().zip(&host).enumerate() {
+                let tag = format!("{variant:?} shards {shards} epoch {epoch}");
+                assert_eq!(ra.len(), rb.len(), "{tag}");
+                for (x, y) in ra.iter().zip(rb) {
+                    assert_eq!(
+                        (x.id, &x.response, &x.logps),
+                        (y.id, &y.response, &y.logps),
+                        "{tag}"
+                    );
+                    assert_eq!(
+                        (x.reused, x.new_tokens, x.finished),
+                        (y.reused, y.new_tokens, y.finished),
+                        "{tag} id {}",
+                        x.id
+                    );
+                }
+            }
+            for (epoch, (a, b)) in ds.iter().zip(&hs).enumerate() {
+                let tag = format!("{variant:?} shards {shards} epoch {epoch}");
+                assert_eq!(a.new_tokens, b.new_tokens, "{tag}");
+                assert_eq!(a.decode_steps, b.decode_steps, "{tag}");
+                // Every epoch with any device traffic must read strictly
+                // less on the fused path (V = 16 already dwarfs the 3-lane
+                // step readback; real vocabularies widen the gap).
+                if b.readback_bytes > 0 {
+                    assert!(
+                        a.readback_bytes < b.readback_bytes,
+                        "{tag}: device readback {} !< host readback {}",
+                        a.readback_bytes,
+                        b.readback_bytes
+                    );
+                }
+                assert!(a.upload_bytes > 0, "{tag}: uploads must be accounted");
+            }
+        }
+    }
+}
+
 #[test]
 fn refill_preserves_live_neighbour_state() {
     // A long row must produce the same tokens whether or not its
