@@ -34,18 +34,28 @@ fn sharded_mock_demo() -> Result<()> {
     let blob_refs: Vec<_> = blobs.iter().collect();
     let mut pool = EnginePool::new(shards.iter(), "mock")?;
 
-    // 20 sequences over 2x8 slots: the 4-task tail beyond the initial
-    // seats drains through the shared steal-queue mid-step.
+    // 20 sequences over 2x8 slots — 5 prompts x 4 GRPO samples, the
+    // trainer's grouped id layout (id = prompt * group + sample); the
+    // 4-task tail beyond the initial seats drains through the shared
+    // steal-queue mid-step.
+    let group = 4usize;
     let reqs: Vec<RolloutRequest> = (0..20)
-        .map(|i| RolloutRequest { id: i, prompt: vec![BOS, 3 + (i as i32 % 9), 5] })
+        .map(|i| RolloutRequest {
+            id: i,
+            prompt: vec![BOS, 3 + (i as i32 / group as i32), 5],
+        })
         .collect();
     // `spec.cache_budget` (config) / `with_cache_budget` (API) caps the
-    // rollout cache in *tokens*; past it, oldest-version entries are
-    // evicted before any latest entry (ARCHITECTURE.md §8). Deliberately
-    // tight here so the budget can bind on a 20-sequence demo — size a
-    // real run from the `cache_tokens` CSV column (ARCHITECTURE.md §10).
+    // rollout cache in *resident tokens* — the prefix trie counts each
+    // run shared by a group's samples or by consecutive generations only
+    // once (ARCHITECTURE.md §8); past the cap, oldest-version leaves are
+    // evicted before any latest entry. Deliberately tight here so the
+    // budget can bind on a 20-sequence demo — size a real run from the
+    // `cache_tokens` CSV column (ARCHITECTURE.md §10). `with_group` keys
+    // the trie by prompt so the group's samples intern one shared spine.
     let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5))
-        .with_cache_budget(Some(48));
+        .with_cache_budget(Some(48))
+        .with_group(group);
     let mut rng = Rng::new(42);
     let mut timer = StageTimer::new();
 
@@ -102,12 +112,19 @@ fn sharded_mock_demo() -> Result<()> {
     }
     // Cache telemetry from the same merged report: the token budget binds
     // globally across shards (one cache, one budget), and every eviction
-    // it forces is surfaced per step.
+    // it forces is surfaced per step. `cache_nodes` / `cache_shared_tokens`
+    // are the trie's dedup gauges — shared tokens is what flat
+    // per-trajectory storage would hold *on top of* the resident total
+    // (ARCHITECTURE.md §8).
     println!(
-        "  cache: {} tokens held, {} entries evicted this step ({} tokens freed)",
+        "  cache: {} tokens held, {} leaves evicted this step ({} tokens freed)",
         spec.cache.total_tokens(),
         s1.cache_evictions,
         s1.cache_evicted_tokens
+    );
+    println!(
+        "  trie: {} interned runs, {} tokens deduplicated by prefix sharing",
+        s1.cache_nodes, s1.cache_shared_tokens
     );
     Ok(())
 }

@@ -1,0 +1,207 @@
+//! Cache bench: the prefix-trie rollout cache vs the flat
+//! per-trajectory baseline on the grouped workload (n samples per prompt
+//! across epochs).
+//!
+//! Pins the tentpole claim: at group sizes 4 and 8 the trie holds
+//! **strictly fewer resident cached tokens** than flat storage while the
+//! drafts it materializes are **byte-identical** field-by-field —
+//! identical drafts feed identical acceptance decisions, so accepted
+//! draft tokens cannot degrade. A live identity sweep re-runs the
+//! grouped batch through the trie-backed pipeline across every
+//! `ReuseVariant` × shards {1, 2, 4} against the two-phase oracle.
+//! Writes `BENCH_cache.json` for machine diffing / the CI smoke run.
+
+use spec_rl::benchkit::grouped::{self, GroupedCfg};
+use spec_rl::benchkit::{Bench, JsonReport};
+use spec_rl::rollout::{EnginePool, RolloutEngine, SampleCfg};
+use spec_rl::spec::{FlatCache, Lenience, ReuseVariant, RolloutCache, SpecRollout};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::util::{Rng, StageTimer};
+
+/// Mock geometry (same envelope as the drafted workload benches).
+const B: usize = 8;
+const P: usize = 16;
+const T: usize = 64;
+const V: usize = 51;
+/// Crafted and live epochs per measurement.
+const EPOCHS: u64 = 3;
+const LOG_LENIENCE: f32 = -0.4;
+const SEED: u64 = 21;
+
+fn cfg_for(group: usize) -> GroupedCfg {
+    GroupedCfg { group, ..GroupedCfg::default() }
+}
+
+/// Stream [`EPOCHS`] of crafted grouped rollouts into both cache
+/// flavors, asserting after every epoch that the trie materializes
+/// byte-identical entries (latest *and* previous) to the flat baseline.
+/// Returns `(trie_tokens, flat_tokens, shared_tokens, cache_nodes)`.
+fn footprints(cfg: &GroupedCfg) -> (usize, usize, usize, usize) {
+    let mut trie = RolloutCache::new().with_group(cfg.group);
+    let mut flat = FlatCache::new();
+    for epoch in 0..EPOCHS {
+        let batch = grouped::entries(cfg, epoch);
+        trie.insert_batch(batch.clone());
+        flat.insert_batch(batch);
+        for id in 0..cfg.batch() {
+            let a = trie.latest(id).expect("trie entry");
+            let b = flat.latest(id).expect("flat entry");
+            assert_eq!(a.response, b.response, "id {id} epoch {epoch}: tokens must match");
+            assert_eq!(a.logps, b.logps, "id {id} epoch {epoch}: logps must match");
+            assert_eq!((a.version, a.finished), (b.version, b.finished));
+            match (trie.previous(id), flat.previous(id)) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.response, y.response, "id {id}: previous tokens");
+                    assert_eq!(x.logps, y.logps, "id {id}: previous logps");
+                }
+                (None, None) => {}
+                (x, y) => panic!("previous presence diverged: {x:?} vs {y:?}"),
+            }
+        }
+    }
+    trie.check_invariants().expect("trie invariants");
+    (trie.total_tokens(), flat.total_tokens(), trie.shared_tokens(), trie.cache_nodes())
+}
+
+/// One live grouped run: [`EPOCHS`] steps of the grouped request batch
+/// through the trie-backed rollout path. `shards == 0` uses the
+/// two-phase oracle on a single engine; `shards > 0` the interleaved
+/// pipeline over an [`EnginePool`]. Returns per-epoch id-sorted
+/// `(id, response, logps)` plus the total accepted draft tokens.
+#[allow(clippy::type_complexity)]
+fn drive(
+    variant: ReuseVariant,
+    shards: usize,
+    group: usize,
+) -> (Vec<Vec<(usize, Vec<i32>, Vec<f32>)>>, usize) {
+    let cfg = cfg_for(group);
+    let reqs = grouped::requests(&cfg);
+    let scfg = SampleCfg::default();
+    let mut spec =
+        SpecRollout::new(variant, Lenience::Fixed(LOG_LENIENCE)).with_group(group);
+    let mut rng = Rng::new(SEED);
+    let mut timer = StageTimer::new();
+    let mut outs = Vec::new();
+    let mut accepted = 0usize;
+    if shards == 0 {
+        let m = MockEngine::new(B, P, T, V);
+        let blob = m.blob();
+        let mut eng = RolloutEngine::new(&m, "mock").unwrap();
+        for _ in 0..EPOCHS {
+            let (res, stats) =
+                spec.run_two_phase(&mut eng, &blob, &reqs, scfg, &mut rng, &mut timer).unwrap();
+            accepted += stats.prefix_tokens;
+            outs.push(res.into_iter().map(|r| (r.id, r.response, r.logps)).collect());
+        }
+    } else {
+        let mocks = MockEngine::replicas(shards, B, P, T, V);
+        let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        for _ in 0..EPOCHS {
+            let (res, stats) =
+                spec.collect(&mut pool, &blob_refs, &reqs, scfg, &mut rng, &mut timer).unwrap();
+            accepted += stats.prefix_tokens;
+            outs.push(res.into_iter().map(|r| (r.id, r.response, r.logps)).collect());
+        }
+    }
+    (outs, accepted)
+}
+
+fn main() {
+    let bench = Bench::new(2, 10);
+    let mut j = JsonReport::new();
+    j.int("epochs", EPOCHS as usize).num("log_lenience", LOG_LENIENCE as f64);
+
+    for group in [4usize, 8] {
+        let cfg = cfg_for(group);
+        println!(
+            "== cache bench (group={group}: {} prompts x {} samples, depth={}, overlap={}, {} epochs) ==",
+            cfg.prompts, cfg.group, cfg.divergence_depth, cfg.epoch_overlap, EPOCHS
+        );
+
+        // -- footprint: trie vs flat on identical insert streams -----------
+        let (trie_tokens, flat_tokens, shared, nodes) = footprints(&cfg);
+        assert!(
+            trie_tokens < flat_tokens,
+            "group {group}: trie must hold strictly fewer resident tokens ({trie_tokens} vs {flat_tokens})"
+        );
+        println!(
+            "resident tokens: trie {trie_tokens} vs flat {flat_tokens} ({:.2}x, {shared} shared over {nodes} runs)",
+            flat_tokens as f64 / trie_tokens as f64
+        );
+
+        // -- live identity sweep: variants x shards vs the oracle ----------
+        // Per-task RNG streams + the trie's byte-exact materialization
+        // keep outputs AND accepted draft tokens invariant across shard
+        // counts and disciplines.
+        for variant in [
+            ReuseVariant::Off,
+            ReuseVariant::Spec,
+            ReuseVariant::Random,
+            ReuseVariant::Delayed,
+            ReuseVariant::Full,
+        ] {
+            let (oracle, oracle_accepted) = drive(variant, 0, group);
+            for shards in [1usize, 2, 4] {
+                let (live, live_accepted) = drive(variant, shards, group);
+                assert_eq!(
+                    oracle, live,
+                    "group {group} {} shards={shards}: outputs must be byte-identical",
+                    variant.name()
+                );
+                assert_eq!(
+                    oracle_accepted, live_accepted,
+                    "group {group} {}: accepted draft tokens drifted",
+                    variant.name()
+                );
+            }
+            if variant == ReuseVariant::Spec {
+                j.int(&format!("accepted_tokens_g{group}"), oracle_accepted);
+            }
+        }
+        println!("identity sweep: 5 variants x shards {{1,2,4}} byte-identical to the oracle");
+
+        // -- timings -------------------------------------------------------
+        let r_trie = bench.run(&format!("trie insert g{group} ({EPOCHS} epochs)"), || {
+            let mut c = RolloutCache::new().with_group(group);
+            for e in 0..EPOCHS {
+                c.insert_batch(grouped::entries(&cfg, e));
+            }
+            c.total_tokens()
+        });
+        let r_flat = bench.run(&format!("flat insert g{group} ({EPOCHS} epochs)"), || {
+            let mut c = FlatCache::new();
+            for e in 0..EPOCHS {
+                c.insert_batch(grouped::entries(&cfg, e));
+            }
+            c.total_tokens()
+        });
+        let walk_cache = {
+            let mut c = RolloutCache::new().with_group(group);
+            for e in 0..EPOCHS {
+                c.insert_batch(grouped::entries(&cfg, e));
+            }
+            c
+        };
+        let r_walk = bench.run(&format!("trie draft walk g{group} (all ids)"), || {
+            (0..cfg.batch())
+                .map(|id| walk_cache.latest(id).map(|e| e.response.len()).unwrap_or(0))
+                .sum::<usize>()
+        });
+
+        j.int(&format!("trie_tokens_g{group}"), trie_tokens)
+            .int(&format!("flat_tokens_g{group}"), flat_tokens)
+            .int(&format!("shared_tokens_g{group}"), shared)
+            .int(&format!("cache_nodes_g{group}"), nodes)
+            .bench(&format!("trie_insert_g{group}"), &r_trie)
+            .bench(&format!("flat_insert_g{group}"), &r_flat)
+            .bench(&format!("trie_walk_g{group}"), &r_walk);
+        println!();
+    }
+
+    println!("{}", j.render());
+    if let Err(e) = j.save("BENCH_cache.json") {
+        eprintln!("could not write BENCH_cache.json: {e}");
+    }
+}

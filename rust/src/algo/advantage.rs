@@ -3,13 +3,26 @@
 /// Group-relative advantages: for each group of `group` consecutive
 /// rewards, `A = (r - mean) / (std + eps)`. Returns one advantage per
 /// sequence (broadcast over its tokens by the caller).
+///
+/// Degenerate groups clamp to zero advantage instead of poisoning the
+/// update: a zero-variance group (every sample got the same reward — no
+/// learning signal), a group with a non-finite reward, and a short tail
+/// when `rewards.len()` is not a multiple of `group` (a partial final
+/// batch; a singleton has no group baseline at all) all yield zeros. The
+/// tail's statistics use its actual length, never padding.
 pub fn grpo_advantages(rewards: &[f32], group: usize) -> Vec<f32> {
-    assert!(group > 0 && rewards.len() % group == 0, "{} % {group}", rewards.len());
+    assert!(group > 0, "group must be positive");
     let mut adv = vec![0f32; rewards.len()];
-    for g in rewards.chunks(group).enumerate() {
-        let (gi, rs) = g;
-        let mean = rs.iter().sum::<f32>() / group as f32;
-        let var = rs.iter().map(|r| (r - mean) * (r - mean)).sum::<f32>() / group as f32;
+    for (gi, rs) in rewards.chunks(group).enumerate() {
+        if rs.len() < 2 || rs.iter().any(|r| !r.is_finite()) {
+            continue;
+        }
+        let n = rs.len() as f32;
+        let mean = rs.iter().sum::<f32>() / n;
+        let var = rs.iter().map(|r| (r - mean) * (r - mean)).sum::<f32>() / n;
+        if var <= 1e-8 {
+            continue;
+        }
         let std = var.sqrt();
         for (k, &r) in rs.iter().enumerate() {
             adv[gi * group + k] = (r - mean) / (std + 1e-6);
@@ -87,6 +100,43 @@ mod tests {
         let adv = grpo_advantages(&[1.0, 0.0, 0.0, 0.0], 4);
         assert!(adv[0] > 0.0);
         assert!(adv[1] < 0.0);
+    }
+
+    #[test]
+    fn grpo_zero_variance_group_yields_exact_zeros() {
+        // all-correct (DAPO's degenerate case) and all-wrong groups carry
+        // no signal: exact zeros, not 0/eps noise or NaN
+        for r in [0.0f32, 1.0] {
+            let adv = grpo_advantages(&[r; 4], 4);
+            assert!(adv.iter().all(|&a| a == 0.0), "{adv:?}");
+        }
+    }
+
+    #[test]
+    fn grpo_partial_tail_group_uses_actual_length() {
+        // 6 rewards with group 4: the 2-long tail normalizes over its own
+        // statistics instead of panicking or dividing by `group`
+        let adv = grpo_advantages(&[1.0, 0.0, 0.0, 1.0, 1.0, 0.0], 4);
+        assert_eq!(adv.len(), 6);
+        let tail: f32 = adv[4..].iter().sum();
+        assert!(tail.abs() < 1e-4, "tail sums to zero: {tail}");
+        assert!(adv[4] > 0.0 && adv[5] < 0.0);
+    }
+
+    #[test]
+    fn grpo_singleton_tail_gets_zero_advantage() {
+        // a 1-long tail has no group baseline: its advantage clamps to 0
+        let adv = grpo_advantages(&[1.0, 0.0, 1.0], 2);
+        assert!(adv[0] > 0.0 && adv[1] < 0.0);
+        assert_eq!(adv[2], 0.0);
+    }
+
+    #[test]
+    fn grpo_non_finite_rewards_clamp_their_group_to_zero() {
+        let adv = grpo_advantages(&[f32::NAN, 1.0, 1.0, 0.0], 2);
+        assert_eq!(&adv[..2], &[0.0, 0.0], "poisoned group zeroed");
+        assert!(adv[2] > 0.0 && adv[3] < 0.0, "healthy group unaffected");
+        assert!(adv.iter().all(|a| a.is_finite()));
     }
 
     #[test]

@@ -134,6 +134,130 @@ pub mod stale {
     }
 }
 
+/// The grouped GRPO-style workload: `prompts` prompts × `group` samples
+/// each, with a controllable shared spine (divergence depth) and
+/// cross-epoch prefix overlap.
+///
+/// `bench_cache` streams the crafted per-epoch rollouts into the trie
+/// [`crate::spec::RolloutCache`] and the flat baseline
+/// [`crate::spec::FlatCache`] to pin the dedup win; the byte-identity
+/// sweeps (`bench_cache`, `sched_continuous.rs`) use the grouped request
+/// batches, whose ids follow the trainer's `prompt × group + sample`
+/// layout.
+pub mod grouped {
+    use crate::spec::{CacheEntry, RolloutRequest};
+    use crate::tokenizer::BOS;
+
+    /// Log-prob recorded on every crafted token: constant, so group
+    /// samples and epochs share trie runs (sharing requires bitwise-equal
+    /// log-probs — they are the acceptance rule's `p_prev`).
+    pub const LOGP: f32 = -0.5;
+
+    /// Shape of the crafted grouped workload.
+    #[derive(Clone, Copy, Debug)]
+    pub struct GroupedCfg {
+        /// Distinct prompts per epoch.
+        pub prompts: usize,
+        /// Samples per prompt (the GRPO group size).
+        pub group: usize,
+        /// Response tokens all of a prompt's samples share before they
+        /// diverge (the spine the trie should intern once per prompt).
+        pub divergence_depth: usize,
+        /// Leading response positions that stay identical across epochs —
+        /// the accepted-prefix analogue. Positions past it mix the epoch
+        /// into the content, so they never share across epochs.
+        pub epoch_overlap: usize,
+        /// Private tail tokens per sample after the spine.
+        pub tail: usize,
+        /// Crafted tokens stay in `[3, vocab)`.
+        pub vocab: usize,
+    }
+
+    impl Default for GroupedCfg {
+        fn default() -> Self {
+            GroupedCfg {
+                prompts: 6,
+                group: 4,
+                divergence_depth: 12,
+                epoch_overlap: 16,
+                tail: 6,
+                vocab: 51,
+            }
+        }
+    }
+
+    impl GroupedCfg {
+        /// Response length of every crafted rollout.
+        pub fn resp_len(&self) -> usize {
+            self.divergence_depth + self.tail
+        }
+
+        /// Rollouts per epoch.
+        pub fn batch(&self) -> usize {
+            self.prompts * self.group
+        }
+
+        /// What one epoch costs a flat per-trajectory cache.
+        pub fn flat_tokens_per_epoch(&self) -> usize {
+            self.batch() * self.resp_len()
+        }
+    }
+
+    /// One step's grouped request batch: ids `pi * group + k`, one prompt
+    /// per group (the trainer's id layout).
+    pub fn requests(cfg: &GroupedCfg) -> Vec<RolloutRequest> {
+        let mut reqs = Vec::with_capacity(cfg.batch());
+        for pi in 0..cfg.prompts {
+            let prompt = vec![
+                BOS,
+                3 + (pi as i32 % (cfg.vocab as i32 - 3)),
+                4 + (pi as i32 % 7),
+            ];
+            for k in 0..cfg.group {
+                reqs.push(RolloutRequest { id: pi * cfg.group + k, prompt: prompt.clone() });
+            }
+        }
+        reqs
+    }
+
+    /// Deterministic crafted token for response position `j` of sample
+    /// `k` of prompt `pi` at `epoch`: positions inside the divergence
+    /// depth ignore `k` (the shared spine), positions inside the epoch
+    /// overlap ignore the epoch (the cross-epoch shared prefix).
+    fn token(cfg: &GroupedCfg, pi: usize, k: usize, j: usize, epoch: u64) -> i32 {
+        let sample = if j < cfg.divergence_depth { 0 } else { k + 1 };
+        let e = if j < cfg.epoch_overlap { 0 } else { epoch as usize + 1 };
+        let mix = pi
+            .wrapping_mul(31)
+            .wrapping_add(j.wrapping_mul(7))
+            .wrapping_add(sample.wrapping_mul(131))
+            .wrapping_add(e.wrapping_mul(977));
+        3 + (mix % (cfg.vocab - 3)) as i32
+    }
+
+    /// The crafted rollouts of one epoch as cache-insert pairs (versioned
+    /// by the epoch), ready for `insert_batch` into either cache flavor.
+    pub fn entries(cfg: &GroupedCfg, epoch: u64) -> Vec<(usize, CacheEntry)> {
+        let mut out = Vec::with_capacity(cfg.batch());
+        for pi in 0..cfg.prompts {
+            for k in 0..cfg.group {
+                let response: Vec<i32> =
+                    (0..cfg.resp_len()).map(|j| token(cfg, pi, k, j, epoch)).collect();
+                out.push((
+                    pi * cfg.group + k,
+                    CacheEntry {
+                        logps: vec![LOGP; response.len()],
+                        response,
+                        version: epoch,
+                        finished: true,
+                    },
+                ));
+            }
+        }
+        out
+    }
+}
+
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {

@@ -102,10 +102,21 @@ pub struct PipelineStats {
     /// that one-pass placement would have pinned to a single engine up
     /// front. Always 0 for single-engine runs and static placement.
     pub steal_count: usize,
-    /// Rollout-cache entries evicted by the token budget this step.
+    /// Rollout-cache leaves evicted by the token budget this step.
     pub cache_evictions: usize,
-    /// Tokens freed by those evictions.
+    /// Resident tokens freed by those evictions (a fully shared leaf's
+    /// eviction frees 0 — its runs stay for the surviving paths).
     pub cache_evicted_tokens: usize,
+    /// Live interned runs in the prefix-trie rollout cache after this
+    /// step's refresh. A post-refresh gauge set once by
+    /// [`crate::spec::SpecRollout`] on the merged step report (the single
+    /// cache is global across shards), not a per-shard counter — `absorb`
+    /// takes the max rather than summing.
+    pub cache_nodes: usize,
+    /// Tokens the trie saves over flat per-trajectory storage
+    /// (`flat_tokens - total_tokens`) after this step's refresh. Same
+    /// gauge semantics as [`PipelineStats::cache_nodes`].
+    pub cache_shared_tokens: usize,
     /// Per-shard `device_calls()` totals when the step ran through an
     /// [`crate::rollout::pool::EnginePool`] (one entry per shard, in shard
     /// order). Empty for engine-level runs that bypass the pool.
@@ -177,6 +188,10 @@ impl PipelineStats {
         self.steal_count += o.steal_count;
         self.cache_evictions += o.cache_evictions;
         self.cache_evicted_tokens += o.cache_evicted_tokens;
+        // cache_nodes / cache_shared_tokens are whole-cache gauges, not
+        // per-shard counters: merging keeps the larger observation
+        self.cache_nodes = self.cache_nodes.max(o.cache_nodes);
+        self.cache_shared_tokens = self.cache_shared_tokens.max(o.cache_shared_tokens);
         self.overlap_makespan += o.overlap_makespan;
         self.serial_makespan += o.serial_makespan;
         self.readback_bytes += o.readback_bytes;

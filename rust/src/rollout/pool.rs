@@ -71,6 +71,12 @@
 //! (`shards ∈ {1, 2, 4}` vs the `run_two_phase` oracle across all
 //! `ReuseVariant`s, plus the steal-vs-static and `verify_seat_min` sweeps)
 //! and measured by `bench_shards` / `bench_steal`.
+//!
+//! The pool returns one id-sorted result set per step; the caller's
+//! single shared prefix-trie rollout cache (`ARCHITECTURE.md` §8)
+//! refreshes from it once, so trie structure, dedup gauges, and
+//! `spec.cache_budget` eviction evolve identically for every shard count
+//! and the token budget binds globally — N shards never hold N budgets.
 
 use anyhow::{ensure, Result};
 

@@ -1,25 +1,50 @@
-//! The rollout cache: previous trajectories + their sampling log-probs.
+//! The rollout cache: previous trajectories + their sampling log-probs,
+//! stored as a **prefix trie** so shared spines are resident once.
 //!
-//! Keyed by sequence id (prompt index × group + sample slot). Each entry
+//! Keyed by sequence id (prompt index × group + sample slot). Each id
 //! keeps the latest rollout and the one before it (the Delayed-Reuse
 //! ablation draws drafts from two steps back). "Log-probs" are the
 //! current-policy log-probs recorded when the trajectory was produced —
 //! exactly the `p_prev` of the acceptance rule next time the prompt
 //! reappears.
 //!
-//! Memory is bounded by an optional **token budget**: the cache tracks its
-//! total cached tokens incrementally (O(1) [`RolloutCache::total_tokens`])
-//! and, when an insert pushes it over budget, evicts oldest-version
-//! material first — `previous` entries (only the Delayed ablation reads
-//! them) before whole slots — until it fits. Eviction counters feed the
-//! per-step pipeline telemetry.
+//! # Trie layout (`ARCHITECTURE.md` §8)
+//!
+//! Trajectories of the same prompt key (`id / group`) live in one trie of
+//! interned token **runs**: a node holds a maximal run of (token,
+//! log-prob) pairs shared by every trajectory through it, with children
+//! at the points where samples diverged. Two trajectories share a run
+//! only when both the tokens *and* the log-prob bits agree — the cached
+//! log-probs are the `p_prev` of the acceptance rule, so sharing anything
+//! less than bitwise-equal pairs would change verification outcomes.
+//! Each cached trajectory is a **leaf**: a pointer at the node where its
+//! path ends (insertion splits runs so a path always ends at a node
+//! boundary) plus its length/version/finished flags.
+//!
+//! - [`RolloutCache::latest`] / [`RolloutCache::previous`] materialize a
+//!   leaf by the root-to-leaf walk — the draft a [`super::ReuseVariant`]
+//!   hands to verification is byte-identical to what a flat cache would
+//!   have stored.
+//! - Refresh ([`RolloutCache::insert_batch`]) interns each finished
+//!   trajectory, splitting runs at the first divergence from the cached
+//!   spine.
+//! - [`RolloutCache::total_tokens`] stays O(1) and counts each shared run
+//!   **once** — the n trajectories of a GRPO/DAPO group and consecutive
+//!   epochs' accepted prefixes no longer duplicate their common spine
+//!   (`bench_cache` pins the footprint win vs [`FlatCache`]).
+//!
+//! Memory is bounded by an optional **token budget** over that
+//! deduplicated total: when an insert pushes it over budget, leaves are
+//! evicted oldest-version-first — `previous` leaves (only the Delayed
+//! ablation reads them) before whole slots — and each evicted leaf frees
+//! its *exclusive* subtree (runs still on a surviving path stay). The
+//! eviction counters feed the per-step pipeline telemetry.
 
-use std::collections::hash_map::Entry;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::rollout::SeqResult;
 
-/// One cached trajectory.
+/// One cached trajectory (materialized form).
 #[derive(Clone, Debug)]
 pub struct CacheEntry {
     pub response: Vec<i32>,
@@ -42,9 +67,690 @@ impl CacheEntry {
     }
 }
 
-/// Latest + previous entry per sequence id, under an optional token budget.
-#[derive(Default, Debug)]
+/// A cached trajectory's handle: where its root-to-leaf path ends, plus
+/// the per-generation metadata that is not shared with other paths.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Leaf {
+    /// Terminal trie node (`None` for an empty response).
+    node: Option<usize>,
+    /// Total response length (sum of the runs on the path).
+    len: usize,
+    version: u64,
+    finished: bool,
+}
+
+/// One interned token run. `refs` counts the leaves terminating at or
+/// below this node; `terminals` lists the ids terminating exactly here
+/// (with multiplicity — an id's latest *and* previous generation can end
+/// at the same node), so a split can re-point their leaves.
+#[derive(Debug)]
+struct Node {
+    /// Prompt key (`id / group`) — identifies the root list this trie
+    /// hangs from.
+    key: usize,
+    tokens: Vec<i32>,
+    logps: Vec<f32>,
+    parent: Option<usize>,
+    children: Vec<usize>,
+    terminals: Vec<usize>,
+    refs: usize,
+}
+
+/// Prefix-trie rollout cache: latest + previous leaf per sequence id over
+/// interned token runs, under an optional deduplicated-token budget.
+#[derive(Debug)]
 pub struct RolloutCache {
+    /// Node arena; freed slots are recycled through `free`.
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    /// Top-level runs per prompt key (a forest: group samples may differ
+    /// from the first token).
+    roots: HashMap<usize, Vec<usize>>,
+    slots: HashMap<usize, (Leaf, Option<Leaf>)>,
+    /// Ids `[k * group, (k+1) * group)` share prompt key `k` (GRPO/DAPO
+    /// id layout). 1 = every id its own trie (still dedups across epochs).
+    group: usize,
+    /// Max resident (deduplicated) tokens (None = unbounded).
+    token_budget: Option<usize>,
+    /// Incrementally-tracked resident tokens, each shared run counted
+    /// once (never rescanned).
+    tokens: usize,
+    /// What a flat per-trajectory cache would hold: the sum of every
+    /// leaf's length. `flat_tokens - tokens` = tokens saved by sharing.
+    flat_tokens: usize,
+    live_nodes: usize,
+    evictions: u64,
+    evicted_tokens: u64,
+}
+
+impl Default for RolloutCache {
+    fn default() -> Self {
+        RolloutCache {
+            nodes: Vec::new(),
+            free: Vec::new(),
+            roots: HashMap::new(),
+            slots: HashMap::new(),
+            group: 1,
+            token_budget: None,
+            tokens: 0,
+            flat_tokens: 0,
+            live_nodes: 0,
+            evictions: 0,
+            evicted_tokens: 0,
+        }
+    }
+}
+
+impl RolloutCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cache that evicts oldest-version leaves past `budget` resident
+    /// (deduplicated) tokens.
+    pub fn with_budget(budget: usize) -> Self {
+        RolloutCache { token_budget: Some(budget), ..Self::default() }
+    }
+
+    /// (Re)set the token budget, enforcing it immediately.
+    pub fn set_token_budget(&mut self, budget: Option<usize>) {
+        self.token_budget = budget;
+        self.enforce_budget();
+    }
+
+    /// Set the group size so ids `[k * group, (k+1) * group)` share one
+    /// prompt trie. Must be called before any insert — re-keying resident
+    /// tries is not supported.
+    pub fn set_group(&mut self, group: usize) {
+        assert!(group > 0, "group must be positive");
+        assert!(
+            self.slots.is_empty(),
+            "group keying must be configured before the first insert"
+        );
+        self.group = group;
+    }
+
+    /// Builder form of [`RolloutCache::set_group`].
+    pub fn with_group(mut self, group: usize) -> Self {
+        self.set_group(group);
+        self
+    }
+
+    /// Configured group size (ids per shared prompt trie).
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    /// Most recent cached rollout for `id`, materialized by the
+    /// root-to-leaf walk.
+    pub fn latest(&self, id: usize) -> Option<CacheEntry> {
+        self.slots.get(&id).map(|(latest, _)| self.materialize(latest))
+    }
+
+    /// The rollout before the latest (Delayed-Reuse ablation),
+    /// materialized by the root-to-leaf walk.
+    pub fn previous(&self, id: usize) -> Option<CacheEntry> {
+        self.slots.get(&id).and_then(|(_, prev)| prev.as_ref()).map(|p| self.materialize(p))
+    }
+
+    /// Insert a fresh rollout, demoting the current latest to `previous`,
+    /// then enforce the budget.
+    pub fn insert(&mut self, id: usize, entry: CacheEntry) {
+        self.insert_unenforced(id, entry);
+        self.enforce_budget();
+    }
+
+    /// Insert a whole step's rollouts, enforcing the token budget once at
+    /// the end — a binding budget would otherwise trigger a victim scan
+    /// per insert. Same eviction policy (oldest (version, id) leaf
+    /// first), so the surviving set matches per-insert enforcement for
+    /// fresh-version batches.
+    pub fn insert_batch(&mut self, entries: impl IntoIterator<Item = (usize, CacheEntry)>) {
+        for (id, entry) in entries {
+            self.insert_unenforced(id, entry);
+        }
+        self.enforce_budget();
+    }
+
+    fn insert_unenforced(&mut self, id: usize, entry: CacheEntry) {
+        let key = id / self.group;
+        let leaf =
+            self.intern(key, id, &entry.response, &entry.logps, entry.version, entry.finished);
+        let dropped = match self.slots.remove(&id) {
+            Some((old_latest, old_prev)) => {
+                self.slots.insert(id, (leaf, Some(old_latest)));
+                old_prev
+            }
+            None => {
+                self.slots.insert(id, (leaf, None));
+                None
+            }
+        };
+        // A displaced two-generations-old leaf is routine turnover, not a
+        // budget eviction: it leaves the counters alone (same contract as
+        // the flat cache's silent `previous` replacement).
+        if let Some(p) = dropped {
+            self.drop_leaf(id, p);
+        }
+    }
+
+    /// Walk `resp` root-to-leaf through the `key` trie, splitting the run
+    /// at the first divergence and interning the unshared tail, then
+    /// register the new leaf at its terminal node. Sharing requires the
+    /// tokens *and* the log-prob bits to agree.
+    fn intern(
+        &mut self,
+        key: usize,
+        id: usize,
+        resp: &[i32],
+        lps: &[f32],
+        version: u64,
+        finished: bool,
+    ) -> Leaf {
+        debug_assert_eq!(resp.len(), lps.len());
+        self.flat_tokens += resp.len();
+        if resp.is_empty() {
+            return Leaf { node: None, len: 0, version, finished };
+        }
+        let mut pos = 0usize;
+        let mut parent: Option<usize> = None;
+        let terminal = loop {
+            match self.matching_child(key, parent, resp[pos], lps[pos]) {
+                None => {
+                    // nothing cached continues this way: intern the whole
+                    // remaining tail as one run
+                    let tail =
+                        self.alloc_node(key, parent, resp[pos..].to_vec(), lps[pos..].to_vec());
+                    match parent {
+                        Some(p) => self.node_mut(p).children.push(tail),
+                        None => self.roots.entry(key).or_default().push(tail),
+                    }
+                    break tail;
+                }
+                Some(nid) => {
+                    let shared = {
+                        let n = self.node(nid);
+                        let cap = n.tokens.len().min(resp.len() - pos);
+                        let mut m = 0usize;
+                        while m < cap
+                            && n.tokens[m] == resp[pos + m]
+                            && n.logps[m].to_bits() == lps[pos + m].to_bits()
+                        {
+                            m += 1;
+                        }
+                        m
+                    };
+                    debug_assert!(shared >= 1, "matching_child matched the first pair");
+                    if shared < self.node(nid).tokens.len() {
+                        self.split_node(nid, shared);
+                    }
+                    pos += shared;
+                    if pos == resp.len() {
+                        break nid;
+                    }
+                    parent = Some(nid);
+                }
+            }
+        };
+        self.add_leaf_at(terminal, id);
+        Leaf { node: Some(terminal), len: resp.len(), version, finished }
+    }
+
+    /// The child of `parent` (or root run of `key`) whose run starts with
+    /// exactly `(tok, lp)`. At most one exists: siblings always differ in
+    /// their first (token, log-prob-bits) pair.
+    fn matching_child(
+        &self,
+        key: usize,
+        parent: Option<usize>,
+        tok: i32,
+        lp: f32,
+    ) -> Option<usize> {
+        let list: &[usize] = match parent {
+            Some(p) => &self.node(p).children,
+            None => match self.roots.get(&key) {
+                Some(v) => v,
+                None => return None,
+            },
+        };
+        list.iter().copied().find(|&c| {
+            let n = self.node(c);
+            n.tokens[0] == tok && n.logps[0].to_bits() == lp.to_bits()
+        })
+    }
+
+    /// Split the run of `nid` at offset `at`: the head keeps `nid`'s
+    /// identity (so its parent's child list is untouched), the tail moves
+    /// to a new child that inherits `nid`'s children and terminating
+    /// leaves. The resident-token total is unchanged.
+    fn split_node(&mut self, nid: usize, at: usize) {
+        let (key, tail_tokens, tail_logps, moved_children, moved_terminals, refs) = {
+            let n = self.node_mut(nid);
+            debug_assert!(at >= 1 && at < n.tokens.len(), "split strictly inside the run");
+            let tt = n.tokens.split_off(at);
+            let tl = n.logps.split_off(at);
+            (
+                n.key,
+                tt,
+                tl,
+                std::mem::take(&mut n.children),
+                std::mem::take(&mut n.terminals),
+                n.refs,
+            )
+        };
+        // the head shrank by the tail's length and alloc_node re-adds it:
+        // a split never changes the resident total
+        self.tokens -= tail_tokens.len();
+        let tail = self.alloc_node(key, Some(nid), tail_tokens, tail_logps);
+        for &c in &moved_children {
+            self.node_mut(c).parent = Some(tail);
+        }
+        // leaves that ended at the full (pre-split) run now end at the
+        // tail — their handles move with the terminal list
+        for &lid in &moved_terminals {
+            if let Some((latest, prev)) = self.slots.get_mut(&lid) {
+                if latest.node == Some(nid) {
+                    latest.node = Some(tail);
+                }
+                if let Some(p) = prev {
+                    if p.node == Some(nid) {
+                        p.node = Some(tail);
+                    }
+                }
+            }
+        }
+        {
+            let t = self.node_mut(tail);
+            t.children = moved_children;
+            t.terminals = moved_terminals;
+            t.refs = refs;
+        }
+        self.node_mut(nid).children.push(tail);
+    }
+
+    /// Register a leaf of `id` terminating at `terminal`: every node on
+    /// the path to the root gains one reference.
+    fn add_leaf_at(&mut self, terminal: usize, id: usize) {
+        self.node_mut(terminal).terminals.push(id);
+        let mut cur = Some(terminal);
+        while let Some(nid) = cur {
+            let n = self.node_mut(nid);
+            n.refs += 1;
+            cur = n.parent;
+        }
+    }
+
+    /// Drop a leaf of `id`: walk terminal-to-root releasing one reference
+    /// per node; nodes whose last reference goes (the leaf's *exclusive*
+    /// subtree — by the refs invariant their children are already gone)
+    /// are detached and freed. Returns the resident tokens freed, which
+    /// is 0 when the whole path is still shared by surviving leaves.
+    fn drop_leaf(&mut self, id: usize, leaf: Leaf) -> usize {
+        self.flat_tokens -= leaf.len;
+        let Some(terminal) = leaf.node else { return 0 };
+        {
+            let n = self.node_mut(terminal);
+            let at = n
+                .terminals
+                .iter()
+                .position(|&t| t == id)
+                .expect("leaf recorded at its terminal node");
+            n.terminals.swap_remove(at);
+        }
+        let mut freed = 0usize;
+        let mut cur = Some(terminal);
+        while let Some(nid) = cur {
+            let parent = self.node(nid).parent;
+            let now_dead = {
+                let n = self.node_mut(nid);
+                n.refs -= 1;
+                n.refs == 0
+            };
+            if now_dead {
+                match parent {
+                    Some(p) => {
+                        let ch = &mut self.node_mut(p).children;
+                        let at = ch.iter().position(|&c| c == nid).expect("child linked");
+                        ch.swap_remove(at);
+                    }
+                    None => {
+                        let key = self.node(nid).key;
+                        let list = self.roots.get_mut(&key).expect("root list present");
+                        let at = list.iter().position(|&c| c == nid).expect("root linked");
+                        list.swap_remove(at);
+                        if list.is_empty() {
+                            self.roots.remove(&key);
+                        }
+                    }
+                }
+                freed += self.free_node(nid);
+            }
+            cur = parent;
+        }
+        freed
+    }
+
+    fn evict_leaf(&mut self, id: usize, leaf: Leaf) {
+        let freed = self.drop_leaf(id, leaf);
+        self.evictions += 1;
+        self.evicted_tokens += freed as u64;
+    }
+
+    /// Evict oldest-version leaves until the budget holds: `previous`
+    /// leaves first (pure ablation fodder), then whole slots. One scan
+    /// per tier (victims sorted by (version, id) for determinism).
+    /// Evicting a leaf frees only its exclusive subtree, so a fully
+    /// shared victim frees nothing and the loop moves to the next —
+    /// termination is still guaranteed (an empty cache holds 0 tokens).
+    fn enforce_budget(&mut self) {
+        let Some(budget) = self.token_budget else { return };
+        if self.tokens <= budget {
+            return;
+        }
+        let mut prev_victims: Vec<(u64, usize)> = self
+            .slots
+            .iter()
+            .filter_map(|(id, (_, p))| p.as_ref().map(|l| (l.version, *id)))
+            .collect();
+        prev_victims.sort_unstable();
+        for (_, id) in prev_victims {
+            if self.tokens <= budget {
+                return;
+            }
+            let leaf = {
+                let (_, prev) = self.slots.get_mut(&id).expect("victim vanished");
+                prev.take().expect("victim had a previous")
+            };
+            self.evict_leaf(id, leaf);
+        }
+        let mut latest_victims: Vec<(u64, usize)> =
+            self.slots.iter().map(|(id, (l, _))| (l.version, *id)).collect();
+        latest_victims.sort_unstable();
+        for (_, id) in latest_victims {
+            if self.tokens <= budget {
+                return;
+            }
+            let (leaf, prev) = self.slots.remove(&id).expect("victim vanished");
+            debug_assert!(prev.is_none(), "previous tier drained first");
+            self.evict_leaf(id, leaf);
+        }
+    }
+
+    /// Rebuild a leaf's trajectory by the root-to-leaf walk — the
+    /// "longest cached continuation" the variants hand to verification.
+    fn materialize(&self, leaf: &Leaf) -> CacheEntry {
+        let mut chain = Vec::new();
+        let mut cur = leaf.node;
+        while let Some(nid) = cur {
+            chain.push(nid);
+            cur = self.node(nid).parent;
+        }
+        let mut response = Vec::with_capacity(leaf.len);
+        let mut logps = Vec::with_capacity(leaf.len);
+        for &nid in chain.iter().rev() {
+            let n = self.node(nid);
+            response.extend_from_slice(&n.tokens);
+            logps.extend_from_slice(&n.logps);
+        }
+        debug_assert_eq!(response.len(), leaf.len);
+        CacheEntry { response, logps, version: leaf.version, finished: leaf.finished }
+    }
+
+    fn alloc_node(
+        &mut self,
+        key: usize,
+        parent: Option<usize>,
+        tokens: Vec<i32>,
+        logps: Vec<f32>,
+    ) -> usize {
+        debug_assert!(!tokens.is_empty(), "runs are never empty");
+        debug_assert_eq!(tokens.len(), logps.len());
+        self.tokens += tokens.len();
+        self.live_nodes += 1;
+        let node = Node {
+            key,
+            tokens,
+            logps,
+            parent,
+            children: Vec::new(),
+            terminals: Vec::new(),
+            refs: 0,
+        };
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(node);
+                i
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Free a dead node (refs == 0; children already detached themselves)
+    /// and return its run length.
+    fn free_node(&mut self, nid: usize) -> usize {
+        let n = self.nodes[nid].take().expect("double free");
+        debug_assert!(n.children.is_empty(), "dead node with live children");
+        debug_assert!(n.terminals.is_empty(), "dead node with terminating leaves");
+        self.tokens -= n.tokens.len();
+        self.live_nodes -= 1;
+        self.free.push(nid);
+        n.tokens.len()
+    }
+
+    fn node(&self, nid: usize) -> &Node {
+        self.nodes[nid].as_ref().expect("dangling node id")
+    }
+
+    fn node_mut(&mut self, nid: usize) -> &mut Node {
+        self.nodes[nid].as_mut().expect("dangling node id")
+    }
+
+    /// Cumulative (leaves evicted, resident tokens freed by eviction)
+    /// since construction; the pipeline driver diffs this across a step
+    /// for telemetry. A fully shared victim frees 0 tokens but still
+    /// counts as one eviction.
+    pub fn eviction_stats(&self) -> (u64, u64) {
+        (self.evictions, self.evicted_tokens)
+    }
+
+    /// Number of ids with at least one cached generation.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.nodes.clear();
+        self.free.clear();
+        self.roots.clear();
+        self.slots.clear();
+        self.tokens = 0;
+        self.flat_tokens = 0;
+        self.live_nodes = 0;
+    }
+
+    /// Resident cached tokens, each shared run counted **once** (the
+    /// memory the trie actually holds; what `spec.cache_budget` bounds).
+    /// O(1): tracked on every insert/split/eviction, never recomputed by
+    /// scanning.
+    pub fn total_tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// What a flat per-trajectory cache would hold for the same contents
+    /// (every leaf's length summed). O(1).
+    pub fn flat_tokens(&self) -> usize {
+        self.flat_tokens
+    }
+
+    /// Tokens saved by prefix sharing: [`RolloutCache::flat_tokens`]
+    /// minus [`RolloutCache::total_tokens`]. O(1).
+    pub fn shared_tokens(&self) -> usize {
+        debug_assert!(self.flat_tokens >= self.tokens);
+        self.flat_tokens.saturating_sub(self.tokens)
+    }
+
+    /// Live interned runs (trie nodes). O(1).
+    pub fn cache_nodes(&self) -> usize {
+        self.live_nodes
+    }
+
+    /// Full structural audit, used by the invariant tests: arena/counter
+    /// agreement, parent/child linkage, sibling divergence, the refs
+    /// invariant, leaf/terminal agreement, no orphaned or unreachable
+    /// nodes, and both token counters against a fresh scan.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let live: Vec<usize> =
+            (0..self.nodes.len()).filter(|&i| self.nodes[i].is_some()).collect();
+        if live.len() != self.live_nodes {
+            return Err(format!("live_nodes {} != arena scan {}", self.live_nodes, live.len()));
+        }
+        if self.free.len() + live.len() != self.nodes.len() {
+            return Err(format!(
+                "free list {} + live {} != arena {}",
+                self.free.len(),
+                live.len(),
+                self.nodes.len()
+            ));
+        }
+        if self.free.iter().any(|&f| self.nodes[f].is_some()) {
+            return Err("free list points at a live node".into());
+        }
+        let mut token_scan = 0usize;
+        for &nid in &live {
+            let n = self.node(nid);
+            if n.tokens.is_empty() {
+                return Err(format!("node {nid} holds an empty run"));
+            }
+            if n.tokens.len() != n.logps.len() {
+                return Err(format!("node {nid} token/logp length mismatch"));
+            }
+            token_scan += n.tokens.len();
+            match n.parent {
+                Some(p) => {
+                    let Some(pn) = self.nodes.get(p).and_then(|o| o.as_ref()) else {
+                        return Err(format!("node {nid} has a dead parent {p}"));
+                    };
+                    if !pn.children.contains(&nid) {
+                        return Err(format!("node {nid} missing from parent {p}'s children"));
+                    }
+                    if pn.key != n.key {
+                        return Err(format!("node {nid} crosses prompt keys via parent {p}"));
+                    }
+                }
+                None => {
+                    if !self.roots.get(&n.key).is_some_and(|l| l.contains(&nid)) {
+                        return Err(format!("top-level node {nid} missing from roots"));
+                    }
+                }
+            }
+            let mut firsts = HashSet::new();
+            let mut child_refs = 0usize;
+            for &c in &n.children {
+                let Some(cn) = self.nodes.get(c).and_then(|o| o.as_ref()) else {
+                    return Err(format!("node {nid} links dead child {c}"));
+                };
+                if cn.parent != Some(nid) {
+                    return Err(format!("child {c} does not point back at {nid}"));
+                }
+                if !firsts.insert((cn.tokens[0], cn.logps[0].to_bits())) {
+                    return Err(format!("node {nid} has duplicate branch pairs"));
+                }
+                child_refs += cn.refs;
+            }
+            if n.refs != n.terminals.len() + child_refs {
+                return Err(format!(
+                    "node {nid} refs {} != terminals {} + child refs {child_refs}",
+                    n.refs,
+                    n.terminals.len()
+                ));
+            }
+        }
+        if token_scan != self.tokens {
+            return Err(format!("resident tokens {} != scan {token_scan}", self.tokens));
+        }
+        // reachability: everything hangs off a root exactly once
+        let mut seen = HashSet::new();
+        let mut stack: Vec<usize> = self.roots.values().flatten().copied().collect();
+        while let Some(nid) = stack.pop() {
+            if !seen.insert(nid) {
+                return Err(format!("node {nid} reached twice (cycle or double link)"));
+            }
+            stack.extend(self.node(nid).children.iter().copied());
+        }
+        if seen.len() != self.live_nodes {
+            return Err(format!(
+                "{} of {} live nodes unreachable from roots (orphans)",
+                self.live_nodes - seen.len(),
+                self.live_nodes
+            ));
+        }
+        // leaves: lengths, terminal registration, flat counter
+        let mut flat_scan = 0usize;
+        let mut leaf_terms: HashMap<(usize, usize), usize> = HashMap::new();
+        for (&id, (latest, prev)) in &self.slots {
+            for leaf in std::iter::once(latest).chain(prev.iter()) {
+                flat_scan += leaf.len;
+                match leaf.node {
+                    None => {
+                        if leaf.len != 0 {
+                            return Err(format!("id {id}: nodeless leaf with {} tokens", leaf.len));
+                        }
+                    }
+                    Some(t) => {
+                        let mut sum = 0usize;
+                        let mut cur = Some(t);
+                        while let Some(nid) = cur {
+                            let n = self.node(nid);
+                            sum += n.tokens.len();
+                            cur = n.parent;
+                        }
+                        if sum != leaf.len {
+                            return Err(format!(
+                                "id {id}: leaf length {} != path length {sum}",
+                                leaf.len
+                            ));
+                        }
+                        *leaf_terms.entry((t, id)).or_default() += 1;
+                    }
+                }
+            }
+        }
+        if flat_scan != self.flat_tokens {
+            return Err(format!("flat tokens {} != scan {flat_scan}", self.flat_tokens));
+        }
+        let mut listed_terms: HashMap<(usize, usize), usize> = HashMap::new();
+        for &nid in &live {
+            for &id in &self.node(nid).terminals {
+                *listed_terms.entry((nid, id)).or_default() += 1;
+            }
+        }
+        if leaf_terms != listed_terms {
+            return Err(format!(
+                "terminal lists disagree with leaves: listed {listed_terms:?} vs leaves {leaf_terms:?}"
+            ));
+        }
+        if let Some(b) = self.token_budget {
+            if self.tokens > b {
+                return Err(format!("budget violated: {} > {b}", self.tokens));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The pre-trie flat cache — one owned `CacheEntry` per generation per
+/// id, no sharing. Kept as the `bench_cache` baseline: identical insert
+/// streams into [`FlatCache`] and [`RolloutCache`] pin the trie's
+/// resident-token win and the byte-identity of materialized drafts.
+#[derive(Default, Debug)]
+pub struct FlatCache {
     slots: HashMap<usize, (CacheEntry, Option<CacheEntry>)>,
     /// Max total cached tokens (None = unbounded).
     token_budget: Option<usize>,
@@ -54,14 +760,14 @@ pub struct RolloutCache {
     evicted_tokens: u64,
 }
 
-impl RolloutCache {
+impl FlatCache {
     pub fn new() -> Self {
         Self::default()
     }
 
     /// A cache that evicts oldest-version entries past `budget` tokens.
     pub fn with_budget(budget: usize) -> Self {
-        RolloutCache { token_budget: Some(budget), ..Self::default() }
+        FlatCache { token_budget: Some(budget), ..Self::default() }
     }
 
     /// (Re)set the token budget, enforcing it immediately.
@@ -75,23 +781,20 @@ impl RolloutCache {
         self.slots.get(&id).map(|(latest, _)| latest)
     }
 
-    /// The rollout before the latest (Delayed-Reuse ablation).
+    /// The rollout before the latest.
     pub fn previous(&self, id: usize) -> Option<&CacheEntry> {
         self.slots.get(&id).and_then(|(_, prev)| prev.as_ref())
     }
 
-    /// Insert a fresh rollout, demoting the current latest to `previous`
-    /// (one hash lookup via the entry API), then enforce the budget.
+    /// Insert a fresh rollout, demoting the current latest to `previous`,
+    /// then enforce the budget.
     pub fn insert(&mut self, id: usize, entry: CacheEntry) {
         self.insert_unenforced(id, entry);
         self.enforce_budget();
     }
 
-    /// Insert a whole step's rollouts, enforcing the token budget once at
-    /// the end — a binding budget would otherwise trigger a victim scan
-    /// per insert. Same eviction policy (oldest (version, id) first), so
-    /// the surviving set matches per-insert enforcement for fresh-version
-    /// batches.
+    /// Insert a whole step's rollouts, enforcing the budget once at the
+    /// end (same policy as [`RolloutCache::insert_batch`]).
     pub fn insert_batch(&mut self, entries: impl IntoIterator<Item = (usize, CacheEntry)>) {
         for (id, entry) in entries {
             self.insert_unenforced(id, entry);
@@ -100,6 +803,7 @@ impl RolloutCache {
     }
 
     fn insert_unenforced(&mut self, id: usize, entry: CacheEntry) {
+        use std::collections::hash_map::Entry;
         let added = entry.response.len();
         let mut dropped = 0usize;
         match self.slots.entry(id) {
@@ -118,10 +822,7 @@ impl RolloutCache {
     }
 
     /// Evict oldest-version material until the budget holds: `previous`
-    /// entries first (pure ablation fodder), then whole slots. One scan
-    /// per tier (victims sorted by (version, id) for determinism) rather
-    /// than a rescan per evicted entry, so a tight budget costs O(n log n)
-    /// per overflowing insert, not O(n) per eviction.
+    /// entries first, then whole slots, ordered by (version, id).
     fn enforce_budget(&mut self) {
         let Some(budget) = self.token_budget else { return };
         if self.tokens <= budget {
@@ -159,8 +860,7 @@ impl RolloutCache {
         self.evicted_tokens += freed as u64;
     }
 
-    /// Cumulative (entries evicted, tokens evicted) since construction;
-    /// the pipeline driver diffs this across a step for telemetry.
+    /// Cumulative (entries evicted, tokens evicted) since construction.
     pub fn eviction_stats(&self) -> (u64, u64) {
         (self.evictions, self.evicted_tokens)
     }
@@ -178,8 +878,8 @@ impl RolloutCache {
         self.tokens = 0;
     }
 
-    /// Total cached tokens (memory telemetry). O(1): tracked on every
-    /// insert/eviction, never recomputed by scanning.
+    /// Total cached tokens — every trajectory counted in full (the
+    /// duplication [`RolloutCache`] removes). O(1).
     pub fn total_tokens(&self) -> usize {
         self.tokens
     }
@@ -198,20 +898,30 @@ mod tests {
         }
     }
 
-    fn scan_tokens(c: &RolloutCache) -> usize {
-        c.slots
-            .values()
-            .map(|(l, p)| l.response.len() + p.as_ref().map_or(0, |e| e.response.len()))
-            .sum()
+    /// Entry with per-position logps (sharing requires bitwise-equal
+    /// pairs, so tests that pin divergence-by-logp need control here).
+    fn entry_lp(tokens: &[i32], logps: &[f32], version: u64) -> CacheEntry {
+        assert_eq!(tokens.len(), logps.len());
+        CacheEntry { response: tokens.to_vec(), logps: logps.to_vec(), version, finished: true }
+    }
+
+    fn assert_entry(c: &RolloutCache, id: usize, tokens: &[i32]) {
+        let e = c.latest(id).expect("entry present");
+        assert_eq!(e.response, tokens, "id {id}");
+        assert_eq!(e.logps.len(), e.response.len(), "id {id}");
+        c.check_invariants().unwrap();
     }
 
     #[test]
-    fn insert_and_latest() {
+    fn insert_and_latest_roundtrip() {
         let mut c = RolloutCache::new();
         assert!(c.latest(0).is_none());
         c.insert(0, entry(&[1, 2], 0));
-        assert_eq!(c.latest(0).unwrap().response, vec![1, 2]);
+        assert_entry(&c, 0, &[1, 2]);
         assert!(c.previous(0).is_none());
+        assert_eq!(c.total_tokens(), 2);
+        assert_eq!(c.flat_tokens(), 2);
+        assert_eq!(c.shared_tokens(), 0);
     }
 
     #[test]
@@ -224,6 +934,7 @@ mod tests {
         c.insert(7, entry(&[3], 2));
         assert_eq!(c.latest(7).unwrap().response, vec![3]);
         assert_eq!(c.previous(7).unwrap().response, vec![2]);
+        c.check_invariants().unwrap();
     }
 
     #[test]
@@ -236,45 +947,121 @@ mod tests {
     }
 
     #[test]
-    fn token_accounting() {
-        let mut c = RolloutCache::new();
-        c.insert(0, entry(&[1, 2, 3], 0));
-        c.insert(0, entry(&[4, 5], 1));
-        assert_eq!(c.total_tokens(), 5);
-        assert_eq!(c.total_tokens(), scan_tokens(&c));
-        assert_eq!(c.len(), 1);
-        c.clear();
-        assert!(c.is_empty());
-        assert_eq!(c.total_tokens(), 0);
-    }
-
-    #[test]
-    fn incremental_tokens_match_scan_under_churn() {
-        let mut c = RolloutCache::new();
-        for step in 0..6u64 {
-            for id in 0..4usize {
-                c.insert(id, entry(&vec![3; 1 + (id + step as usize) % 5], step));
-            }
-            assert_eq!(c.total_tokens(), scan_tokens(&c), "step {step}");
+    fn group_samples_share_their_spine_once() {
+        // 4 samples of one prompt share a 4-token spine, then diverge:
+        // resident = 4 (spine) + 4 * 2 (tails); flat would hold 4 * 6.
+        let mut c = RolloutCache::new().with_group(4);
+        for k in 0..4usize {
+            c.insert(k, entry(&[5, 6, 7, 8, 10 + k as i32, 20 + k as i32], 0));
+        }
+        assert_eq!(c.total_tokens(), 4 + 4 * 2);
+        assert_eq!(c.flat_tokens(), 4 * 6);
+        assert_eq!(c.shared_tokens(), 4 * 6 - (4 + 4 * 2));
+        // spine + 4 tails = 5 nodes
+        assert_eq!(c.cache_nodes(), 5);
+        for k in 0..4usize {
+            assert_entry(&c, k, &[5, 6, 7, 8, 10 + k as i32, 20 + k as i32]);
         }
     }
 
     #[test]
-    fn budget_evicts_previous_entries_first() {
+    fn cross_epoch_extension_shares_the_accepted_prefix() {
+        // epoch 1 fully accepts epoch 0's rollout and extends it: the
+        // previous generation is an interior termination, resident count
+        // holds the union once.
+        let mut c = RolloutCache::new();
+        c.insert(3, entry(&[1, 2, 3, 4], 0));
+        c.insert(3, entry(&[1, 2, 3, 4, 5, 6], 1));
+        assert_eq!(c.total_tokens(), 6);
+        assert_eq!(c.flat_tokens(), 10);
+        assert_eq!(c.shared_tokens(), 4);
+        assert_eq!(c.latest(3).unwrap().response, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(c.previous(3).unwrap().response, vec![1, 2, 3, 4]);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mid_run_split_repoints_existing_leaves() {
+        let mut c = RolloutCache::new().with_group(2);
+        c.insert(0, entry(&[1, 2, 3, 4], 0));
+        // id 1 diverges inside id 0's run: the run splits at offset 2 and
+        // id 0's leaf must follow the tail
+        c.insert(1, entry(&[1, 2, 9], 0));
+        assert_eq!(c.total_tokens(), 2 + 2 + 1);
+        assert_eq!(c.cache_nodes(), 3);
+        assert_entry(&c, 0, &[1, 2, 3, 4]);
+        assert_entry(&c, 1, &[1, 2, 9]);
+    }
+
+    #[test]
+    fn identical_tokens_different_logps_never_share() {
+        // log-probs are the acceptance rule's p_prev: bitwise inequality
+        // must force separate runs even for identical token content.
+        let mut c = RolloutCache::new().with_group(2);
+        c.insert(0, entry_lp(&[4, 5, 6], &[-1.0, -1.0, -1.0], 0));
+        c.insert(1, entry_lp(&[4, 5, 6], &[-2.0, -2.0, -2.0], 0));
+        assert_eq!(c.total_tokens(), 6, "no sharing across logp-divergent paths");
+        let a = c.latest(0).unwrap();
+        let b = c.latest(1).unwrap();
+        assert_eq!(a.response, b.response);
+        assert_ne!(a.logps, b.logps);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn group_keying_isolates_prompts() {
+        // same content under different prompt keys stays separate
+        let mut c = RolloutCache::new().with_group(2);
+        c.insert(0, entry(&[7, 8, 9], 0)); // key 0
+        c.insert(2, entry(&[7, 8, 9], 0)); // key 1
+        assert_eq!(c.total_tokens(), 6);
+        assert_eq!(c.shared_tokens(), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn empty_responses_are_cached_without_nodes() {
+        let mut c = RolloutCache::new();
+        c.insert(5, entry(&[], 0));
+        let e = c.latest(5).unwrap();
+        assert!(e.response.is_empty());
+        assert_eq!(c.total_tokens(), 0);
+        assert_eq!(c.cache_nodes(), 0);
+        c.insert(5, entry(&[1], 1));
+        assert_eq!(c.latest(5).unwrap().response, vec![1]);
+        assert!(c.previous(5).unwrap().response.is_empty());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn incremental_tokens_match_scan_under_churn() {
+        let mut c = RolloutCache::new().with_group(2);
+        for step in 0..6u64 {
+            for id in 0..4usize {
+                let len = 1 + (id + step as usize) % 5;
+                let toks: Vec<i32> = (0..len as i32).map(|j| 3 + j + (id as i32 % 2)).collect();
+                c.insert(id, entry(&toks, step));
+            }
+            c.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn budget_evicts_previous_leaves_first() {
+        // disjoint contents: the trie degenerates to flat accounting, so
+        // the flat cache's eviction arithmetic carries over exactly
         let mut c = RolloutCache::with_budget(6);
         c.insert(0, entry(&[1, 1, 1], 0));
         c.insert(1, entry(&[2, 2, 2], 0));
         assert_eq!(c.total_tokens(), 6);
         assert_eq!(c.eviction_stats(), (0, 0));
-        // demoting id 0 to previous pushes to 9 tokens: its old latest
-        // (now `previous`, version 0) must be the first casualty
         c.insert(0, entry(&[4, 4, 4], 1));
         assert_eq!(c.total_tokens(), 6);
         assert!(c.previous(0).is_none(), "previous evicted");
         assert_eq!(c.latest(0).unwrap().response, vec![4, 4, 4], "fresh latest kept");
         assert_eq!(c.latest(1).unwrap().response, vec![2, 2, 2], "neighbour kept");
         assert_eq!(c.eviction_stats(), (1, 3));
-        assert_eq!(c.total_tokens(), scan_tokens(&c));
+        c.check_invariants().unwrap();
     }
 
     #[test]
@@ -287,9 +1074,45 @@ mod tests {
         assert!(c.latest(1).is_some());
         assert!(c.latest(2).is_some());
         assert_eq!(c.total_tokens(), 4);
-        let (n, tok) = c.eviction_stats();
-        assert_eq!((n, tok), (1, 2));
-        assert_eq!(c.total_tokens(), scan_tokens(&c));
+        assert_eq!(c.eviction_stats(), (1, 2));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fully_shared_victims_free_nothing_but_still_count() {
+        // previous == latest (full cross-epoch reuse): evicting the
+        // previous leaf frees no resident tokens — the budget then falls
+        // back to whole-slot eviction, and no node is ever orphaned.
+        let mut c = RolloutCache::new();
+        c.insert(0, entry(&[1, 2, 3, 4], 0));
+        c.insert(0, entry(&[1, 2, 3, 4], 1));
+        assert_eq!(c.total_tokens(), 4);
+        assert_eq!(c.flat_tokens(), 8);
+        c.set_token_budget(Some(3));
+        // previous evicted (freeing 0), then the latest slot (freeing 4)
+        assert_eq!(c.eviction_stats(), (2, 4));
+        assert_eq!(c.total_tokens(), 0);
+        assert!(c.latest(0).is_none());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn subtree_eviction_keeps_shared_spine_for_survivors() {
+        // 3 group samples share a spine; evicting one sample must free
+        // only its private tail
+        let mut c = RolloutCache::new().with_group(4);
+        c.insert(0, entry(&[5, 6, 10, 11], 0));
+        c.insert(1, entry(&[5, 6, 20, 21], 1));
+        c.insert(2, entry(&[5, 6, 30, 31], 2));
+        assert_eq!(c.total_tokens(), 2 + 3 * 2);
+        // budget 6 forces out the oldest leaf (id 0, version 0): its
+        // private tail [10, 11] frees, the spine [5, 6] survives
+        c.set_token_budget(Some(6));
+        assert_eq!(c.total_tokens(), 6);
+        assert_eq!(c.eviction_stats(), (1, 2));
+        assert!(c.latest(0).is_none());
+        assert_entry(&c, 1, &[5, 6, 20, 21]);
+        assert_entry(&c, 2, &[5, 6, 30, 31]);
     }
 
     #[test]
@@ -304,6 +1127,7 @@ mod tests {
         assert_eq!(c.len(), 2);
         // the newest versions survive
         assert!(c.latest(3).is_some() && c.latest(4).is_some());
+        c.check_invariants().unwrap();
         c.set_token_budget(None);
         c.insert(9, entry(&[1; 50], 9));
         assert_eq!(c.total_tokens(), 58, "unbounded again");
@@ -314,11 +1138,11 @@ mod tests {
         let mut c = RolloutCache::with_budget(6);
         c.insert_batch((0..5).map(|id| (id, entry(&[7; 3], 1))));
         assert!(c.total_tokens() <= 6);
-        assert_eq!(c.total_tokens(), scan_tokens(&c));
         // same-version ties evict ascending id: the highest ids survive
         assert!(c.latest(3).is_some() && c.latest(4).is_some());
         assert!(c.latest(0).is_none());
         assert_eq!(c.eviction_stats(), (3, 9));
+        c.check_invariants().unwrap();
     }
 
     #[test]
@@ -328,6 +1152,132 @@ mod tests {
             c.insert(0, entry(&[5; 40], step));
         }
         assert_eq!(c.eviction_stats(), (0, 0));
-        assert_eq!(c.total_tokens(), 80);
+        // every generation is identical: latest + previous share one run
+        assert_eq!(c.total_tokens(), 40);
+        assert_eq!(c.flat_tokens(), 80);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn clear_resets_everything_but_eviction_counters() {
+        let mut c = RolloutCache::with_budget(4);
+        for id in 0..4 {
+            c.insert(id, entry(&[2, 2], id as u64));
+        }
+        let stats = c.eviction_stats();
+        assert!(stats.0 > 0);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.total_tokens(), 0);
+        assert_eq!(c.flat_tokens(), 0);
+        assert_eq!(c.cache_nodes(), 0);
+        assert_eq!(c.eviction_stats(), stats, "counters are cumulative");
+        c.check_invariants().unwrap();
+        c.insert(0, entry(&[1], 9));
+        assert_entry(&c, 0, &[1]);
+    }
+
+    #[test]
+    fn grouped_churn_matches_flat_materialization_and_never_orphans() {
+        // Deterministic grouped churn with divergence at varying depths:
+        // every generation materialized from the trie must equal what the
+        // flat cache stored, and the structural audit must pass after
+        // every insert (insert/split/walk round-trip + no orphans).
+        let group = 4usize;
+        let mut trie = RolloutCache::new().with_group(group);
+        let mut flat = FlatCache::new();
+        for step in 0..6u64 {
+            for pi in 0..3usize {
+                for k in 0..group {
+                    let id = pi * group + k;
+                    // shared spine per (prompt, step with overlap): the
+                    // first tokens depend only on pi, the divergence point
+                    // on k, the tail on (k, step)
+                    let spine = 2 + (pi + step as usize) % 3;
+                    let tail = 1 + (k + step as usize) % 4;
+                    let mut toks: Vec<i32> =
+                        (0..spine as i32).map(|j| 10 + pi as i32 + j).collect();
+                    toks.extend((0..tail as i32).map(|j| 40 + k as i32 * 4 + j + step as i32 % 2));
+                    let e = entry(&toks, step);
+                    trie.insert(id, e.clone());
+                    flat.insert(id, e);
+                    trie.check_invariants().unwrap();
+                }
+            }
+            for id in 0..3 * group {
+                match (trie.latest(id), flat.latest(id)) {
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.response, b.response, "id {id} step {step}");
+                        assert_eq!(a.logps, b.logps, "id {id} step {step}");
+                        assert_eq!((a.version, a.finished), (b.version, b.finished));
+                    }
+                    (a, b) => panic!("presence diverged: {a:?} vs {b:?}"),
+                }
+                match (trie.previous(id), flat.previous(id)) {
+                    (Some(a), Some(b)) => assert_eq!(a.response, b.response, "prev id {id}"),
+                    (None, None) => {}
+                    (a, b) => panic!("prev presence diverged: {a:?} vs {b:?}"),
+                }
+            }
+            assert_eq!(trie.flat_tokens(), flat.total_tokens(), "step {step}");
+            assert!(trie.total_tokens() < flat.total_tokens(), "sharing must engage");
+        }
+    }
+
+    // ---- flat baseline ---------------------------------------------------
+
+    fn flat_scan_tokens(c: &FlatCache) -> usize {
+        c.slots
+            .values()
+            .map(|(l, p)| l.response.len() + p.as_ref().map_or(0, |e| e.response.len()))
+            .sum()
+    }
+
+    #[test]
+    fn flat_insert_and_latest() {
+        let mut c = FlatCache::new();
+        assert!(c.latest(0).is_none());
+        c.insert(0, entry(&[1, 2], 0));
+        assert_eq!(c.latest(0).unwrap().response, vec![1, 2]);
+        assert!(c.previous(0).is_none());
+    }
+
+    #[test]
+    fn flat_token_accounting() {
+        let mut c = FlatCache::new();
+        c.insert(0, entry(&[1, 2, 3], 0));
+        c.insert(0, entry(&[4, 5], 1));
+        assert_eq!(c.total_tokens(), 5);
+        assert_eq!(c.total_tokens(), flat_scan_tokens(&c));
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.total_tokens(), 0);
+    }
+
+    #[test]
+    fn flat_budget_evicts_previous_entries_first() {
+        let mut c = FlatCache::with_budget(6);
+        c.insert(0, entry(&[1, 1, 1], 0));
+        c.insert(1, entry(&[2, 2, 2], 0));
+        assert_eq!(c.total_tokens(), 6);
+        // demoting id 0 to previous pushes to 9 tokens: its old latest
+        // (now `previous`, version 0) must be the first casualty
+        c.insert(0, entry(&[4, 4, 4], 1));
+        assert_eq!(c.total_tokens(), 6);
+        assert!(c.previous(0).is_none(), "previous evicted");
+        assert_eq!(c.eviction_stats(), (1, 3));
+        assert_eq!(c.total_tokens(), flat_scan_tokens(&c));
+    }
+
+    #[test]
+    fn flat_insert_batch_enforces_once_at_end() {
+        let mut c = FlatCache::with_budget(6);
+        c.insert_batch((0..5).map(|id| (id, entry(&[7; 3], 1))));
+        assert!(c.total_tokens() <= 6);
+        assert_eq!(c.total_tokens(), flat_scan_tokens(&c));
+        assert!(c.latest(3).is_some() && c.latest(4).is_some());
+        assert!(c.latest(0).is_none());
+        assert_eq!(c.eviction_stats(), (3, 9));
     }
 }

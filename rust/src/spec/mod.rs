@@ -8,9 +8,14 @@
 //! ```
 //!
 //! - **Draft**: [`cache::RolloutCache`] stores each sequence's previous
-//!   rollout (tokens + the log-probs the sampling policy assigned them),
-//!   refreshed immediately after every step and bounded by an optional
-//!   token budget. [`variants::ReuseVariant`] picks the draft (or none).
+//!   rollout (tokens + the log-probs the sampling policy assigned them) in
+//!   a per-prompt **prefix trie**: the n group samples of a prompt and
+//!   consecutive epochs' accepted prefixes share interned token runs, so
+//!   the resident footprint counts each shared spine once. Drafts
+//!   materialize by the root-to-leaf walk; refresh splits runs at the
+//!   first divergence; an optional token budget evicts the oldest leaves'
+//!   exclusive subtrees. [`variants::ReuseVariant`] picks the draft (or
+//!   none).
 //! - **Verify**: drafts whose acceptance needs the current policy
 //!   (Spec/Delayed) become [`VerifyTask`]s and are verified *inside* the
 //!   rollout engine's slot pool: the `verify_seat` entry scores a packed
@@ -55,7 +60,7 @@ use crate::rollout::{
 use crate::runtime::Backend;
 use crate::util::{Rng, StageTimer};
 
-pub use cache::{CacheEntry, RolloutCache};
+pub use cache::{CacheEntry, FlatCache, RolloutCache};
 pub use lenience::Lenience;
 pub use variants::ReuseVariant;
 pub use verifier::{VerifyPlanner, VerifyTask};
@@ -109,10 +114,19 @@ impl SpecRollout {
         Self::new(ReuseVariant::Off, Lenience::Fixed(0.0))
     }
 
-    /// Bound the rollout cache to `budget` tokens (oldest-version
-    /// eviction; `None` = unbounded).
+    /// Bound the rollout cache to `budget` resident (deduplicated)
+    /// tokens (oldest-version leaf eviction; `None` = unbounded).
     pub fn with_cache_budget(mut self, budget: Option<usize>) -> Self {
         self.cache.set_token_budget(budget);
+        self
+    }
+
+    /// Group size for the cache's prompt keying: sequence ids
+    /// `[k * group, (k + 1) * group)` share one prefix trie, so a GRPO
+    /// group's samples intern their common spine once. Must be set before
+    /// the first rollout.
+    pub fn with_group(mut self, group: usize) -> Self {
+        self.cache.set_group(group);
         self
     }
 
@@ -180,6 +194,8 @@ impl SpecRollout {
         let (e1, t1) = self.cache.eviction_stats();
         stats.cache_evictions = (e1 - e0) as usize;
         stats.cache_evicted_tokens = (t1 - t0) as usize;
+        stats.cache_nodes = self.cache.cache_nodes();
+        stats.cache_shared_tokens = self.cache.shared_tokens();
         stats.finalize_draft_means();
         self.step += 1;
         stats

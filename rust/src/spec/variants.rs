@@ -40,16 +40,17 @@ impl ReuseVariant {
         }
     }
 
-    /// Pick the draft for a sequence, if this variant reuses one.
+    /// Pick the draft for a sequence, if this variant reuses one: the
+    /// root-to-leaf trie walk materializes the longest cached
+    /// continuation for `id` (latest generation, or the one before for
+    /// Delayed Reuse).
     pub fn draft_for(&self, cache: &RolloutCache, id: usize, _step: u64) -> Option<CacheEntry> {
         match self {
             ReuseVariant::Off => None,
             ReuseVariant::Spec | ReuseVariant::Random | ReuseVariant::Full => {
-                cache.latest(id).filter(|e| !e.response.is_empty()).cloned()
+                cache.latest(id).filter(|e| !e.response.is_empty())
             }
-            ReuseVariant::Delayed => {
-                cache.previous(id).filter(|e| !e.response.is_empty()).cloned()
-            }
+            ReuseVariant::Delayed => cache.previous(id).filter(|e| !e.response.is_empty()),
         }
     }
 }

@@ -58,7 +58,8 @@ pub const STEP_COLUMNS: &[&str] = &[
     "prefix_len", "full_reuse", "drafts", "gen_rounds", "verify_calls",
     "shards", "device_calls", "shard_calls_max", "shard_calls_min", "steal_count",
     "overlap_makespan", "serial_makespan", "readback_bytes", "upload_bytes",
-    "cache_tokens", "cache_evictions", "cache_evicted_tokens",
+    "cache_tokens", "cache_nodes", "cache_shared_tokens",
+    "cache_evictions", "cache_evicted_tokens",
     "rollout_s", "verification_s", "assembly_s", "reward_s", "old_logp_s",
     "ref_s", "values_s", "adv_s", "update_critic_s", "update_actor_s",
     "others_s", "total_s",
@@ -131,7 +132,9 @@ impl<'e> Trainer<'e> {
         Ok(Trainer {
             eng,
             rng: Rng::new(cfg.seed),
-            spec: SpecRollout::new(spec_variant, cfg.lenience).with_cache_budget(cache_budget),
+            spec: SpecRollout::new(spec_variant, cfg.lenience)
+                .with_cache_budget(cache_budget)
+                .with_group(cfg.group),
             pool,
             tok,
             train_set,
@@ -201,9 +204,7 @@ impl<'e> Trainer<'e> {
             // the ROUGE-1 overlap series (Figure 2) can be computed below.
             let prev_drafts: BTreeMap<usize, Vec<i32>> = requests
                 .iter()
-                .filter_map(|r| {
-                    self.spec.cache.latest(r.id).map(|e| (r.id, e.response.clone()))
-                })
+                .filter_map(|r| self.spec.cache.latest(r.id).map(|e| (r.id, e.response)))
                 .collect();
 
             // Interleaved phase-aware pipeline over the engine pool (the
@@ -436,6 +437,10 @@ impl<'e> Trainer<'e> {
         rec.insert("readback_bytes", spec_stats_acc.readback_bytes as f64);
         rec.insert("upload_bytes", spec_stats_acc.upload_bytes as f64);
         rec.insert("cache_tokens", self.spec.cache.total_tokens() as f64);
+        // Trie gauges after the step's last refresh: live interned runs
+        // and the tokens prefix sharing saves over flat storage.
+        rec.insert("cache_nodes", spec_stats_acc.cache_nodes as f64);
+        rec.insert("cache_shared_tokens", spec_stats_acc.cache_shared_tokens as f64);
         rec.insert("cache_evictions", spec_stats_acc.cache_evictions as f64);
         rec.insert("cache_evicted_tokens", spec_stats_acc.cache_evicted_tokens as f64);
         rec.insert("rollout_s", timer.get("rollout"));

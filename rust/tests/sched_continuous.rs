@@ -7,7 +7,7 @@
 
 use std::collections::HashSet;
 
-use spec_rl::benchkit::stale;
+use spec_rl::benchkit::{grouped, stale};
 use spec_rl::rollout::{
     EnginePool, PipelineStats, Placement, RolloutEngine, SampleCfg, SeqResult, SeqTask,
 };
@@ -626,6 +626,162 @@ fn cache_budget_is_global_and_shard_count_invariant() {
         "previous {previous:?} survived while latest entries were evicted ({latest:?})"
     );
     assert!(total <= budget);
+}
+
+// ---------------------------------------------------------------------------
+// prefix-trie cache on grouped workloads
+// ---------------------------------------------------------------------------
+
+/// Grouped request geometry fit to the test envelope (prompts stay
+/// inside `V`; the crafted-entry knobs are unused by live runs).
+fn grouped_cfg(prompts: usize, group: usize) -> grouped::GroupedCfg {
+    grouped::GroupedCfg { prompts, group, vocab: V, ..grouped::GroupedCfg::default() }
+}
+
+/// Post-step cache observables: (resident tokens, shared tokens, live
+/// nodes, cumulative eviction stats).
+type TrieTrace = (usize, usize, usize, (u64, u64));
+
+/// Drive `epochs` grouped steps with the group-keyed trie cache.
+/// `shards == 0` selects the two-phase oracle; `shards >= 1` the
+/// interleaved pipeline. After every step the trie's structural audit
+/// must pass, the budget (if any) must hold, and the merged report's
+/// gauges must agree with the cache itself.
+fn drive_grouped(
+    variant: ReuseVariant,
+    shards: usize,
+    cfg: &grouped::GroupedCfg,
+    epochs: usize,
+    budget: Option<usize>,
+) -> (Vec<Vec<SeqResult>>, Vec<PipelineStats>, Vec<TrieTrace>) {
+    let mocks = MockEngine::replicas(shards.max(1), 4, P, T, V);
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = (shards > 0).then(|| EnginePool::new(mocks.iter(), "mock").unwrap());
+    let mut eng = (shards == 0).then(|| RolloutEngine::new(&mocks[0], "mock").unwrap());
+    let mut spec = SpecRollout::new(variant, Lenience::Fixed(-0.4))
+        .with_group(cfg.group)
+        .with_cache_budget(budget);
+    let reqs = grouped::requests(cfg);
+    let mut rng = Rng::new(29);
+    let mut timer = StageTimer::new();
+    let mut results = Vec::new();
+    let mut stats = Vec::new();
+    let mut trace = Vec::new();
+    for epoch in 0..epochs {
+        let (r, s) = if let Some(eng) = eng.as_mut() {
+            spec.run_two_phase(eng, &blobs[0], &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        } else {
+            let pool = pool.as_mut().unwrap();
+            spec.collect(pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        }
+        .unwrap();
+        spec.cache
+            .check_invariants()
+            .unwrap_or_else(|e| panic!("{variant:?} shards {shards} epoch {epoch}: {e}"));
+        if let Some(b) = budget {
+            assert!(
+                spec.cache.total_tokens() <= b,
+                "{variant:?} shards {shards} epoch {epoch}: budget violated ({} > {b})",
+                spec.cache.total_tokens()
+            );
+        }
+        // the merged report's trie gauges are the cache's own numbers
+        assert_eq!(s.cache_nodes, spec.cache.cache_nodes(), "shards {shards} epoch {epoch}");
+        assert_eq!(
+            s.cache_shared_tokens,
+            spec.cache.shared_tokens(),
+            "shards {shards} epoch {epoch}"
+        );
+        trace.push((
+            spec.cache.total_tokens(),
+            spec.cache.shared_tokens(),
+            spec.cache.cache_nodes(),
+            spec.cache.eviction_stats(),
+        ));
+        results.push(r);
+        stats.push(s);
+    }
+    (results, stats, trace)
+}
+
+#[test]
+fn grouped_pipeline_matches_two_phase_across_variants_and_shards() {
+    // The trainer's grouped id layout (prompt × group + sample) with the
+    // group-keyed trie cache: every variant × shards {1, 2, 4} must stay
+    // byte-identical to the two-phase oracle over 3 epochs, with the
+    // whole cache evolution (resident/shared/node counts, evictions)
+    // shard-count-invariant — drafts materialized by the trie walk are
+    // byte-exact, so acceptance cannot drift.
+    for (prompts, group) in [(3usize, 4usize), (2, 8)] {
+        let cfg = grouped_cfg(prompts, group);
+        for variant in [
+            ReuseVariant::Off,
+            ReuseVariant::Spec,
+            ReuseVariant::Random,
+            ReuseVariant::Delayed,
+            ReuseVariant::Full,
+        ] {
+            let (two, _, two_trace) = drive_grouped(variant, 0, &cfg, 3, None);
+            for shards in [1usize, 2, 4] {
+                let (pipe, ps, pipe_trace) = drive_grouped(variant, shards, &cfg, 3, None);
+                for (epoch, (ra, rb)) in pipe.iter().zip(&two).enumerate() {
+                    let tag = format!("{variant:?} g{group} shards {shards} epoch {epoch}");
+                    assert_eq!(ra.len(), rb.len(), "{tag}");
+                    for (x, y) in ra.iter().zip(rb) {
+                        assert_eq!(x.id, y.id, "{tag}");
+                        assert_eq!(x.response, y.response, "{tag} id {}", x.id);
+                        assert_eq!(x.logps, y.logps, "{tag} id {}", x.id);
+                    }
+                }
+                assert_eq!(
+                    pipe_trace, two_trace,
+                    "{variant:?} g{group} shards {shards}: cache evolution diverged"
+                );
+                assert_eq!(ps.len(), 3, "one merged report per epoch");
+            }
+            // Full reuse re-inserts the reused trajectory verbatim: from
+            // epoch 1 on, latest and previous share their whole path, so
+            // the dedup gauge must actually engage.
+            if variant == ReuseVariant::Full {
+                let (_, shared, _, _) = two_trace[1];
+                assert!(shared > 0, "full reuse must share tokens across generations");
+            }
+        }
+    }
+}
+
+#[test]
+fn grouped_trie_budget_is_global_and_shard_count_invariant() {
+    // The grouped extension of `cache_budget_is_global_and_shard_count_
+    // invariant`: one shared group-keyed trie refreshes from the merged,
+    // id-sorted results, so subtree-budget eviction must evolve
+    // identically for every shard count, and the budget binds on resident
+    // (deduplicated) tokens globally — never per shard.
+    let cfg = grouped_cfg(3, 4);
+    let budget = 32usize;
+    let single = drive_grouped(ReuseVariant::Spec, 1, &cfg, 3, Some(budget));
+    let double = drive_grouped(ReuseVariant::Spec, 2, &cfg, 3, Some(budget));
+    let quad = drive_grouped(ReuseVariant::Spec, 4, &cfg, 3, Some(budget));
+    assert_eq!(single.2, double.2, "cache evolution must be shard-count-invariant");
+    assert_eq!(single.2, quad.2, "cache evolution must be shard-count-invariant");
+    for (epoch, ((ra, rb), rc)) in
+        single.0.iter().zip(&double.0).zip(&quad.0).enumerate()
+    {
+        for ((x, y), z) in ra.iter().zip(rb).zip(rc) {
+            assert_eq!(
+                (x.id, &x.response, &x.logps),
+                (y.id, &y.response, &y.logps),
+                "epoch {epoch}"
+            );
+            assert_eq!((x.id, &x.response), (z.id, &z.response), "epoch {epoch}");
+        }
+    }
+    let (_, _, _, (evictions, _)) = *single.2.last().unwrap();
+    assert!(evictions > 0, "budget {budget} must bind on this workload");
+    // PipelineStats aggregates every eviction across steps
+    let step_sum: usize = single.1.iter().map(|s| s.cache_evictions).sum();
+    assert_eq!(evictions as usize, step_sum);
 }
 
 // ---------------------------------------------------------------------------
