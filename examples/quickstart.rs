@@ -1,6 +1,8 @@
 //! Quickstart: one speculative draft-and-verify round, first sharded
-//! across two mock engines (no artifacts needed), then against the real
-//! PJRT runtime when `artifacts/` exists.
+//! across two mock engines (no artifacts needed), then over remote
+//! shards on the loopback transport — including surviving one shard
+//! dying mid-step — then against the real PJRT runtime when
+//! `artifacts/` exists.
 //!
 //! ```text
 //! cargo run --release --example quickstart          # mock shard demo
@@ -10,7 +12,7 @@
 use anyhow::Result;
 use spec_rl::exp;
 use spec_rl::rollout::{EnginePool, SampleCfg};
-use spec_rl::runtime::Engine;
+use spec_rl::runtime::{Backend, Engine, Loopback, RemoteBackend, TransportFaults};
 use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
 use spec_rl::testing::mock::MockEngine;
 use spec_rl::tokenizer::{Tokenizer, BOS};
@@ -129,14 +131,73 @@ fn sharded_mock_demo() -> Result<()> {
     Ok(())
 }
 
-/// Part 2 — the same flow against the real PJRT runtime (requires
+/// Part 2 — the same two-shard pool driven over the wire: each shard is
+/// a `RemoteBackend` whose `Loopback` transport wraps a mock engine
+/// in-process (ARCHITECTURE.md §13). Entry calls ship u64 handles across
+/// the transport; generation blobs never round-trip. Mid-demo one
+/// shard's peer dies and the pool finishes the step on the survivor with
+/// every task completed exactly once.
+fn remote_pool_demo() -> Result<()> {
+    println!("\n== part 2: the same pool over the loopback remote transport ==");
+    // `EnginePool` is generic over a single `Backend` type, so every
+    // shard wraps its engine in `RemoteBackend<Loopback<..>>`; in
+    // production each transport would dial a different host or device
+    // instead of looping back into this process.
+    let shards = MockEngine::clocked_replicas(2, 8, 8, 24, 24);
+    let remotes: Vec<_> = shards.iter().map(|m| RemoteBackend::new(Loopback::new(m))).collect();
+    // Weights cross the wire once at setup; afterwards only handles do.
+    let blobs = remotes
+        .iter()
+        .map(|r| r.upload_f32(&[0.0], &[1]))
+        .collect::<Result<Vec<_>>>()?;
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(remotes.iter(), "mock")?;
+
+    let reqs: Vec<RolloutRequest> = (0..12)
+        .map(|i| RolloutRequest { id: i, prompt: vec![BOS, 3 + (i as i32 % 9), 5] })
+        .collect();
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5));
+    let mut rng = Rng::new(42);
+    let mut timer = StageTimer::new();
+
+    // epoch 1: both remote peers healthy. The overlapped submit/complete
+    // driver works through the wire unchanged — the makespan win from
+    // part 1 survives because submits return tickets without blocking
+    // (tests/remote_loopback.rs pins both properties byte-for-byte).
+    let (_, s0) =
+        spec.collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
+    println!(
+        "epoch 1 (healthy): new tokens={} makespan {:.1} virtual-s overlapped vs {:.1} serialized",
+        s0.new_tokens, s0.overlap_makespan, s0.serial_makespan
+    );
+
+    // Kill shard 1's peer: every data-plane op it sees from now on is
+    // refused. The pool retries (`rollout.max_retries`), declares the
+    // shard dead, rebuilds its seated rows as drafts from the rollout
+    // cache, and completes the step on shard 0 — outputs stay
+    // byte-identical to the no-failure run (ARCHITECTURE.md §13,
+    // "Dead-shard recovery").
+    let faults = TransportFaults { dead_from_op: Some(0), ..Default::default() };
+    remotes[1].transport().set_faults(faults);
+    let (results, s1) =
+        spec.collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)?;
+    println!(
+        "epoch 2 (shard 1 dead): {} sequences finished, shard failures={}, rows requeued={}",
+        results.len(),
+        s1.shard_failures,
+        s1.requeued_tasks
+    );
+    Ok(())
+}
+
+/// Part 3 — the same flow against the real PJRT runtime (requires
 /// `make artifacts`; skipped when missing).
 fn pjrt_demo() -> Result<()> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("\n== part 2 skipped: no artifacts/ (run `make artifacts`) ==");
+        println!("\n== part 3 skipped: no artifacts/ (run `make artifacts`) ==");
         return Ok(());
     }
-    println!("\n== part 2: PJRT engine ==");
+    println!("\n== part 3: PJRT engine ==");
     let eng = Engine::load("artifacts")?;
     println!(
         "loaded manifest: vocab={} prompt_len={} total_len={}",
@@ -201,5 +262,6 @@ fn pjrt_demo() -> Result<()> {
 fn main() -> Result<()> {
     logging::init();
     sharded_mock_demo()?;
+    remote_pool_demo()?;
     pjrt_demo()
 }

@@ -1,0 +1,159 @@
+//! Remote-transport bench: the adversarial stale-draft step driven
+//! through `RemoteBackend<Loopback<MockEngine>>` vs the in-process pool
+//! (`ARCHITECTURE.md` §13).
+//!
+//! Pins two things the chaos/conformance tests check functionally, as
+//! numbers CI can diff:
+//!
+//! - **Loopback-transport overhead** at 1 shard: the handle-table
+//!   indirection (every upload/submit/complete/read crosses the
+//!   `Transport` boundary) against driving the mock directly, at
+//!   byte-identical outputs.
+//! - **Overlapped makespan through the wire** at 2/4 shards on the
+//!   shared virtual clock, with and without one injected dead peer:
+//!   remote submits must stay cheap (overlap strictly below serialized),
+//!   and a dead shard's recovery must complete every task exactly once —
+//!   the makespan and requeue columns price that recovery.
+//!
+//! Writes `BENCH_remote.json` for machine diffing / the CI smoke run.
+
+use spec_rl::benchkit::drafted::{B, LOG_LENIENCE, P, SEED, T, V};
+use spec_rl::benchkit::{fmt_secs, stale, Bench, JsonReport};
+use spec_rl::rollout::{EnginePool, PipelineStats, Placement, SampleCfg, SeqResult};
+use spec_rl::runtime::{Backend, Loopback, RemoteBackend, TransportFaults};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::util::{Rng, StageTimer};
+
+/// Same draft length as `bench_steal`: uninformative for placement, long
+/// enough that stale rows re-decode a real tail.
+const DRAFT_LEN: usize = 30;
+
+/// One adversarial drafted step on an existing pool (fresh warmed cache
+/// and RNG per call, so repeated timing iterations are identical work).
+fn step<Bk: Backend>(
+    pool: &mut EnginePool<'_, Bk>,
+    blob_refs: &[&Bk::Buf],
+) -> (Vec<SeqResult>, PipelineStats) {
+    let mut spec = stale::warmed(stale::N_TASKS, DRAFT_LEN, V, LOG_LENIENCE)
+        .with_placement(Placement::Steal);
+    let mut rng = Rng::new(SEED);
+    let mut timer = StageTimer::new();
+    let reqs = stale::requests(stale::N_TASKS, V);
+    spec.collect(pool, blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer).unwrap()
+}
+
+/// Full remote step on shared-clock replicas, optionally killing the last
+/// shard's transport mid-step (everything rebuilt per call: a dead
+/// transport stays dead, so timing iterations must not share state).
+fn clocked_remote(
+    shards: usize,
+    faults: Option<TransportFaults>,
+) -> (Vec<SeqResult>, PipelineStats) {
+    let mut mocks = MockEngine::clocked_replicas(shards, B, P, T, V);
+    for m in &mut mocks {
+        m.eos_bias = 0.0;
+    }
+    let remotes: Vec<_> = mocks.iter().map(|m| RemoteBackend::new(Loopback::new(m))).collect();
+    let blobs: Vec<_> = remotes.iter().map(|r| r.upload_f32(&[0.0], &[1]).unwrap()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    if let Some(f) = faults {
+        remotes[shards - 1].transport().set_faults(f);
+    }
+    let mut pool = EnginePool::new(remotes.iter(), "mock").unwrap();
+    step(&mut pool, &blob_refs)
+}
+
+fn main() {
+    println!(
+        "== remote/loopback bench (mock replicas: B={B}/shard T={T}, {} drafts, log l={LOG_LENIENCE}) ==",
+        stale::N_TASKS,
+    );
+    let bench = Bench::new(1, 8);
+    let mut j = JsonReport::new();
+    j.int("batch_per_shard", B).int("tasks", stale::N_TASKS).int("draft_len", DRAFT_LEN);
+
+    // -- loopback-transport overhead, 1 shard ------------------------------
+    let mut mocks = MockEngine::replicas(1, B, P, T, V);
+    for m in &mut mocks {
+        m.eos_bias = 0.0;
+    }
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+    let (direct_res, _) = step(&mut pool, &blob_refs);
+
+    let remotes: Vec<_> = mocks.iter().map(|m| RemoteBackend::new(Loopback::new(m))).collect();
+    let rblobs: Vec<_> = remotes.iter().map(|r| r.upload_f32(&[0.0], &[1]).unwrap()).collect();
+    let rblob_refs: Vec<_> = rblobs.iter().collect();
+    let mut rpool = EnginePool::new(remotes.iter(), "mock").unwrap();
+    let (remote_res, _) = step(&mut rpool, &rblob_refs);
+
+    assert_eq!(direct_res.len(), stale::N_TASKS, "direct run dropped results");
+    assert_eq!(remote_res.len(), stale::N_TASKS, "remote run dropped results");
+    for (a, b) in direct_res.iter().zip(&remote_res) {
+        assert_eq!((a.id, &a.response), (b.id, &b.response), "the wire changed outputs");
+        assert_eq!(a.logps, b.logps, "the wire changed logps");
+    }
+
+    let t_direct = bench.run("in-process pipeline, 1 shard", || step(&mut pool, &blob_refs));
+    let t_remote =
+        bench.run("loopback-remote pipeline, 1 shard", || step(&mut rpool, &rblob_refs));
+    let overhead = t_remote.median_secs / t_direct.median_secs.max(1e-12);
+    println!(
+        "\n1 shard: direct {}  remote {}  (x{overhead:.2} loopback overhead)",
+        fmt_secs(t_direct.median_secs),
+        fmt_secs(t_remote.median_secs),
+    );
+    j.bench("direct_s1", &t_direct)
+        .bench("remote_s1", &t_remote)
+        .num("loopback_overhead_x", overhead);
+
+    // -- overlapped makespan through the wire, with/without a dead peer ----
+    println!("\nshards  overlap/serial (healthy)   overlap (one dead)  requeued  wall (one dead)");
+    for shards in [2usize, 4] {
+        let dead = TransportFaults { dead_from_op: Some(40), ..Default::default() };
+        let (healthy_res, healthy) = clocked_remote(shards, None);
+        let (faulted_res, faulted) = clocked_remote(shards, Some(dead.clone()));
+
+        // recovery is invisible in the outputs: byte-identical, complete
+        assert_eq!(healthy_res.len(), stale::N_TASKS, "healthy run dropped results");
+        assert_eq!(faulted_res.len(), stale::N_TASKS, "recovery dropped results");
+        for (a, b) in healthy_res.iter().zip(&faulted_res) {
+            assert_eq!((a.id, &a.response), (b.id, &b.response), "recovery changed outputs");
+            assert_eq!(a.logps, b.logps, "recovery changed logps");
+        }
+        assert_eq!(healthy.shard_failures, 0, "healthy run reported a failure");
+        assert_eq!(faulted.shard_failures, 1, "the dead peer must surface as one failure");
+        // remote submits stay cheap: the overlap survives the wire
+        assert!(
+            healthy.overlap_makespan > 0.0
+                && healthy.overlap_makespan < healthy.serial_makespan,
+            "{shards} shards: the wire serialized the pool ({healthy:?})"
+        );
+
+        let healthy_label = format!("remote pipeline, {shards} shards (incl. setup)");
+        let t_healthy = bench.run(&healthy_label, || clocked_remote(shards, None));
+        let faulted_label = format!("remote pipeline, {shards} shards, one dead (incl. setup)");
+        let t_faulted = bench.run(&faulted_label, || clocked_remote(shards, Some(dead.clone())));
+
+        println!(
+            "{shards:>6}  {:>10.2} / {:<10.2}   {:>18.2}  {:>8}  {:>15}",
+            healthy.overlap_makespan,
+            healthy.serial_makespan,
+            faulted.overlap_makespan,
+            faulted.requeued_tasks,
+            fmt_secs(t_faulted.median_secs),
+        );
+        j.num(&format!("s{shards}_overlap_makespan"), healthy.overlap_makespan)
+            .num(&format!("s{shards}_serial_makespan"), healthy.serial_makespan)
+            .num(&format!("s{shards}_overlap_makespan_one_dead"), faulted.overlap_makespan)
+            .int(&format!("s{shards}_requeued_one_dead"), faulted.requeued_tasks)
+            .bench(&format!("s{shards}_healthy"), &t_healthy)
+            .bench(&format!("s{shards}_one_dead"), &t_faulted);
+    }
+
+    println!("\n{}", j.render());
+    if let Err(e) = j.save("BENCH_remote.json") {
+        eprintln!("could not write BENCH_remote.json: {e}");
+    }
+}

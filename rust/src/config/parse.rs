@@ -103,6 +103,14 @@ impl ConfigDoc {
         self.get(key).and_then(|v| v.as_i64()).map(|x| x as usize).unwrap_or(default)
     }
 
+    /// Unsigned 64-bit getter (the RPC knobs in §13 are millisecond and
+    /// retry counts): negative integers floor at zero instead of
+    /// wrapping, so a typo'd `-1` cannot become a 584-million-year
+    /// timeout.
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.as_i64()).map(|x| x.max(0) as u64).unwrap_or(default)
+    }
+
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
@@ -212,5 +220,21 @@ mod tests {
         let doc = ConfigDoc::parse("").unwrap();
         assert_eq!(doc.usize_or("x", 7), 7);
         assert_eq!(doc.str_or("y", "d"), "d");
+    }
+
+    #[test]
+    fn rpc_knob_keys_parse_with_defaults_and_negative_floor() {
+        // the remote-backend knobs (`ARCHITECTURE.md` §13) ride the plain
+        // TOML-subset path: integers under [rollout]
+        let doc =
+            ConfigDoc::parse("[rollout]\nrpc_timeout_ms = 250\nmax_retries = 5").unwrap();
+        assert_eq!(doc.u64_or("rollout.rpc_timeout_ms", 5_000), 250);
+        assert_eq!(doc.u64_or("rollout.max_retries", 2), 5);
+        // missing keys fall back to the caller's default
+        let doc = ConfigDoc::parse("").unwrap();
+        assert_eq!(doc.u64_or("rollout.rpc_timeout_ms", 5_000), 5_000);
+        // negative integers floor at zero rather than wrapping to huge
+        let doc = ConfigDoc::parse("[rollout]\nmax_retries = -3").unwrap();
+        assert_eq!(doc.u64_or("rollout.max_retries", 2), 0);
     }
 }

@@ -4,6 +4,7 @@ use anyhow::{Context, Result};
 
 use super::parse::ConfigDoc;
 use crate::algo::{Algo, AlgoParams};
+use crate::runtime::remote::{DEFAULT_MAX_RETRIES, DEFAULT_RPC_TIMEOUT_MS};
 use crate::spec::{Lenience, ReuseVariant};
 
 /// Everything a training run needs.
@@ -36,6 +37,17 @@ pub struct RunConfig {
     /// shard runs its own slot pool; work spills across them LPT-first
     /// (see `rollout::pool`). Results are shard-count-invariant.
     pub rollout_shards: usize,
+    /// Per-complete RPC timeout in milliseconds for remote-backend shards
+    /// (`rollout.rpc_timeout_ms`, default 5000, clamped to
+    /// [1, 3_600_000]). Only consulted by
+    /// `runtime::remote::RemoteBackend`; in-process shards ignore it.
+    pub rpc_timeout_ms: u64,
+    /// Retry budget per ticketed RPC (`rollout.max_retries`, default 2,
+    /// clamped to <= 64). Retries are idempotent-safe by the transport
+    /// contract — a resubmitted ticket can never double-apply a forward
+    /// (`ARCHITECTURE.md` §13) — so raising this trades latency under
+    /// flaky links for fewer shard failures, never correctness.
+    pub rpc_max_retries: u64,
 
     // -- SPEC-RL -----------------------------------------------------------------
     pub variant: ReuseVariant,
@@ -81,6 +93,8 @@ impl Default for RunConfig {
             temperature: 1.0,
             top_p: 1.0,
             rollout_shards: 1,
+            rpc_timeout_ms: DEFAULT_RPC_TIMEOUT_MS,
+            rpc_max_retries: DEFAULT_MAX_RETRIES,
             variant: ReuseVariant::Spec,
             lenience: Lenience::Fixed(0.5),
             cache_budget_tokens: 0,
@@ -128,6 +142,9 @@ impl RunConfig {
         c.temperature = doc.f64_or("run.temperature", c.temperature as f64) as f32;
         c.top_p = doc.f64_or("run.top_p", c.top_p as f64) as f32;
         c.rollout_shards = doc.usize_or("rollout.shards", c.rollout_shards);
+        c.rpc_timeout_ms =
+            doc.u64_or("rollout.rpc_timeout_ms", c.rpc_timeout_ms).clamp(1, 3_600_000);
+        c.rpc_max_retries = doc.u64_or("rollout.max_retries", c.rpc_max_retries).min(64);
         if let Some(v) = doc.get("spec.variant").and_then(|v| v.as_str()) {
             c.variant =
                 ReuseVariant::parse(v).with_context(|| format!("unknown variant '{v}'"))?;
@@ -165,6 +182,8 @@ impl RunConfig {
         anyhow::ensure!(self.temperature > 0.0, "temperature must be > 0");
         anyhow::ensure!((0.0..=1.0).contains(&self.top_p), "top_p in (0, 1]");
         anyhow::ensure!(self.rollout_shards >= 1, "rollout.shards must be >= 1");
+        anyhow::ensure!(self.rpc_timeout_ms >= 1, "rollout.rpc_timeout_ms must be >= 1");
+        anyhow::ensure!(self.rpc_max_retries <= 64, "rollout.max_retries must be <= 64");
         anyhow::ensure!(self.verify_seat_min >= 1, "spec.verify_seat_min must be >= 1");
         Ok(())
     }
@@ -208,6 +227,33 @@ mod tests {
         assert_eq!(RunConfig::default().rollout_shards, 1, "single engine by default");
         let doc = ConfigDoc::parse("[rollout]\nshards = 0").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err(), "zero shards rejected");
+    }
+
+    #[test]
+    fn rpc_knobs_parse_default_and_clamp() {
+        let doc =
+            ConfigDoc::parse("[rollout]\nrpc_timeout_ms = 250\nmax_retries = 5").unwrap();
+        let c = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.rpc_timeout_ms, 250);
+        assert_eq!(c.rpc_max_retries, 5);
+        let d = RunConfig::default();
+        assert_eq!(d.rpc_timeout_ms, DEFAULT_RPC_TIMEOUT_MS);
+        assert_eq!(d.rpc_max_retries, DEFAULT_MAX_RETRIES);
+        // clamps: a zero timeout floors at 1ms, an absurd one caps at an
+        // hour, and the retry budget caps at 64
+        let doc = ConfigDoc::parse("[rollout]\nrpc_timeout_ms = 0").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().rpc_timeout_ms, 1);
+        let doc = ConfigDoc::parse("[rollout]\nrpc_timeout_ms = 999999999").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().rpc_timeout_ms, 3_600_000);
+        let doc = ConfigDoc::parse("[rollout]\nmax_retries = 1000").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().rpc_max_retries, 64);
+        // validate still guards hand-built configs that skip from_doc
+        let mut c = RunConfig::default();
+        c.rpc_timeout_ms = 0;
+        assert!(c.validate().is_err(), "zero timeout rejected");
+        let mut c = RunConfig::default();
+        c.rpc_max_retries = 65;
+        assert!(c.validate().is_err(), "over-budget retries rejected");
     }
 
     #[test]

@@ -165,6 +165,15 @@ impl BatchLayout {
         let row = r * self.total_len;
         (0..self.resp_len[r]).map(|i| self.tokens[row + self.prompt_len + i]).collect()
     }
+
+    /// Extract row `r`'s prompt tokens (right-aligned region, in logical
+    /// order). The dead-shard requeue path rebuilds a seated row's
+    /// original task from this plus [`BatchLayout::response`].
+    pub fn prompt(&self, r: usize) -> Vec<i32> {
+        let row = r * self.total_len;
+        let start = self.prompt_len - self.prompt_tokens[r];
+        (0..self.prompt_tokens[r]).map(|i| self.tokens[row + start + i]).collect()
+    }
 }
 
 #[cfg(test)]

@@ -63,6 +63,7 @@ use anyhow::{bail, Result};
 use super::batch::{BatchLayout, SeqResult, SeqTask};
 use super::sched::{SlotScheduler, WorkQueue};
 use crate::runtime::{Backend, Engine};
+use crate::spec::cache::CacheEntry;
 use crate::spec::verifier::{VerifyPlanner, VerifyTask};
 use crate::tokenizer::EOS;
 use crate::util::{Rng, StageTimer, TopPSampler};
@@ -101,7 +102,19 @@ pub struct PipelineStats {
     /// steal-queue *after* the pool's initial seating pass — i.e. work
     /// that one-pass placement would have pinned to a single engine up
     /// front. Always 0 for single-engine runs and static placement.
+    /// Under failure recovery, requeued work re-entering on a survivor
+    /// also counts here (it is, literally, a mid-step pull).
     pub steal_count: usize,
+    /// Shards marked dead this step: a transport error or injected fault
+    /// surfaced from one of the shard's entry calls, its unfinished work
+    /// was requeued, and the step completed on the survivors
+    /// (`ARCHITECTURE.md` §13). Always 0 on the no-failure path.
+    pub shard_failures: usize,
+    /// Seated rows harvested off dead shards and re-entered into the
+    /// work queue as fresh items (decode rows as tasks, accepted
+    /// prefixes as drafts). Never-seated queue items returning to the
+    /// pool are not counted — they were never bound to the dead shard.
+    pub requeued_tasks: usize,
     /// Rollout-cache leaves evicted by the token budget this step.
     pub cache_evictions: usize,
     /// Resident tokens freed by those evictions (a fully shared leaf's
@@ -186,6 +199,8 @@ impl PipelineStats {
         self.full_reuses += o.full_reuses;
         self.verify_calls += o.verify_calls;
         self.steal_count += o.steal_count;
+        self.shard_failures += o.shard_failures;
+        self.requeued_tasks += o.requeued_tasks;
         self.cache_evictions += o.cache_evictions;
         self.cache_evicted_tokens += o.cache_evicted_tokens;
         // cache_nodes / cache_shared_tokens are whole-cache gauges, not
@@ -248,6 +263,14 @@ struct SlotState {
     /// per-task stream position (`ARCHITECTURE.md` §12). Unused (stays 0)
     /// on the host sampling path, which advances `rng` directly.
     draws: usize,
+    /// The row's reused prefix was *verified on this engine* (seated via
+    /// `verify_seat` and resolved by `resolve_verified`), as opposed to
+    /// arriving pre-resolved inside a [`SeqTask`]. The dead-shard harvest
+    /// uses this to pick the requeue shape: verified prefixes re-enter as
+    /// drafts (re-verification replays the same per-task uniform stream
+    /// and re-accepts every token, §6), while variant-resolved prefixes —
+    /// which never consumed verify uniforms — must re-enter as tasks.
+    from_draft: bool,
 }
 
 impl SlotState {
@@ -258,6 +281,7 @@ impl SlotState {
             reused: task.prefix.len(),
             logps: task.prefix_logps,
             draws: 0,
+            from_draft: false,
         }
     }
 }
@@ -975,6 +999,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
                     reused: n_acc,
                     logps: task.entry.logps[..n_acc].to_vec(),
                     draws: 0,
+                    from_draft: true,
                 });
                 sched.to_decode(slot);
             }
@@ -1144,8 +1169,8 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         timer: &mut StageTimer,
     ) -> Result<PipelineRun<B>> {
         let (mut run, ticket) =
-            self.start_submit(blob, queue, loglen, cfg, vnonce, rnonce, timer)?;
-        self.start_complete(&mut run, ticket, queue, timer)?;
+            self.start_submit(blob, queue, loglen, cfg, vnonce, rnonce, timer);
+        self.start_complete(&mut run, ticket?, queue, timer)?;
         Ok(run)
     }
 
@@ -1159,6 +1184,12 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
     /// first-step forwards overlap across shards exactly like steady-state
     /// rounds do. A shard that finds the queue empty returns a done run
     /// and an empty ticket, still at zero device calls.
+    ///
+    /// The run is returned even when the submission errors (the `Err`
+    /// side of the ticket): by then the run may already hold rows popped
+    /// from the shared queue, and the pool's dead-shard recovery
+    /// ([`RolloutEngine::harvest_requeue`], `ARCHITECTURE.md` §13) must
+    /// be able to return them — dropping the run would lose tasks.
     #[allow(clippy::too_many_arguments)]
     pub fn start_submit(
         &mut self,
@@ -1169,7 +1200,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         vnonce: u64,
         rnonce: u64,
         timer: &mut StageTimer,
-    ) -> Result<(PipelineRun<B>, StepTicket<B>)> {
+    ) -> (PipelineRun<B>, Result<StepTicket<B>>) {
         let b = self.batch;
         let mut run = PipelineRun {
             sched: SlotScheduler::new(b),
@@ -1188,6 +1219,19 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             results: Vec::new(),
             done: false,
         };
+        let ticket = self.start_submit_inner(&mut run, blob, queue, loglen, timer);
+        (run, ticket)
+    }
+
+    fn start_submit_inner(
+        &mut self,
+        run: &mut PipelineRun<B>,
+        blob: &B::Buf,
+        queue: &mut WorkQueue,
+        loglen: f32,
+        timer: &mut StageTimer,
+    ) -> Result<StepTicket<B>> {
+        let (cfg, vnonce, rnonce) = (run.cfg, run.vnonce, run.rnonce);
         let mut ticket = StepTicket { gen: None, read: None };
 
         let span = Instant::now();
@@ -1196,7 +1240,14 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         if fills.is_empty() && queue.pending_drafts() == 0 {
             // Nothing left for this shard: no prefill, no uploads.
             run.done = true;
-            return Ok((run, ticket));
+            return Ok(ticket);
+        }
+        // Seat the fills host-side *before* any fallible device call, so a
+        // failing upload leaves the popped tasks recoverable in `run.slots`
+        // (the dead-shard harvest walks them) instead of dropped.
+        for (slot, task) in fills {
+            self.layout.set_row(slot, &task.prompt, &task.prefix);
+            run.slots[slot] = Some(SlotState::new(task, rnonce));
         }
         self.ensure_temp(cfg.temperature)?;
         run.ll = Some(self.eng.upload_f32(&[loglen], &[1])?);
@@ -1204,10 +1255,6 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             run.top_p_buf = Some(self.eng.upload_f32(&[cfg.top_p], &[1])?);
             let words = [(rnonce >> 32) as u32 as i32, rnonce as u32 as i32];
             run.nonce_buf = Some(self.eng.upload_i32(&words, &[2])?);
-        }
-        for (slot, task) in fills {
-            self.layout.set_row(slot, &task.prompt, &task.prefix);
-            run.slots[slot] = Some(SlotState::new(task, rnonce));
         }
         ticket.gen = Some(self.prefill_submit(blob, &mut run.stats)?);
         timer.add("rollout", span.elapsed().as_secs_f64());
@@ -1230,8 +1277,8 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         if let Some(p) = seated {
             ticket.gen = Some(p);
         }
-        self.submit_readback(&mut run, &mut ticket)?;
-        Ok((run, ticket))
+        self.submit_readback(run, &mut ticket)?;
+        Ok(ticket)
     }
 
     /// Cash in the opening chain's ticket — identical to
@@ -1245,6 +1292,91 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         timer: &mut StageTimer,
     ) -> Result<()> {
         self.step_complete(run, ticket, queue, timer)
+    }
+
+    /// An already-done empty run: zero device calls, zero stats, nothing
+    /// seated. The pool's dead-shard recovery path (`ARCHITECTURE.md`
+    /// §13) parks dead shards on one of these so a recovery cycle can
+    /// still drive `shards[i]` uniformly by index.
+    pub(crate) fn idle_run(&self, cfg: SampleCfg, vnonce: u64, rnonce: u64) -> PipelineRun<B> {
+        let b = self.batch;
+        PipelineRun {
+            sched: SlotScheduler::new(b),
+            slots: (0..b).map(|_| None).collect(),
+            verifying: (0..b).map(|_| None).collect(),
+            gen: None,
+            ll: None,
+            top_p_buf: None,
+            nonce_buf: None,
+            device: self.device_sampling(),
+            pending_tok: (0..b).map(|_| None).collect(),
+            cfg,
+            vnonce,
+            rnonce,
+            stats: PipelineStats::default(),
+            results: Vec::new(),
+            done: true,
+        }
+    }
+
+    /// Strip a dead shard's unfinished seated rows back into queueable
+    /// work (`ARCHITECTURE.md` §13). Finished rows (already in
+    /// `run.results`) are kept; every live occupant is reconstructed as
+    /// the task that would reproduce it from scratch:
+    ///
+    /// - a row still awaiting verification returns its original
+    ///   [`VerifyTask`] untouched;
+    /// - a decoding row whose prefix was verified *on this engine*
+    ///   (`SlotState::from_draft`) re-enters as a draft truncated to the
+    ///   accepted length — re-verification replays the same per-task
+    ///   uniform stream over the same `logp_prev` values and re-accepts
+    ///   every token (§6), so the survivor reproduces this row's tokens
+    ///   byte-for-byte;
+    /// - any other decoding row (fresh, or seated from a pre-resolved
+    ///   [`SeqTask`] prefix) re-enters as a task carrying its prefix and
+    ///   log-probs verbatim. Variant-resolved prefixes never consumed
+    ///   verify uniforms, so routing them through verification could
+    ///   *reject* tokens the no-failure run kept — they must not become
+    ///   drafts.
+    ///
+    /// Partial decode progress past the reused prefix is discarded: the
+    /// per-task RNG stream is stateless (§6), so the survivor re-derives
+    /// the identical continuation from stream position zero. Reads row
+    /// content from this engine's private `layout`, which stays intact —
+    /// a dead shard is never driven again, so nothing overwrites it.
+    /// Leaves the run done (results/stats still harvestable via
+    /// [`PipelineRun::into_parts`]).
+    pub(crate) fn harvest_requeue(
+        &mut self,
+        run: &mut PipelineRun<B>,
+    ) -> (Vec<SeqTask>, Vec<VerifyTask>) {
+        let mut tasks = Vec::new();
+        let mut drafts = Vec::new();
+        for slot in 0..self.batch {
+            if let Some(vt) = run.verifying[slot].take() {
+                run.sched.release(slot);
+                drafts.push(vt);
+            } else if let Some(st) = run.slots[slot].take() {
+                run.sched.release(slot);
+                let prompt = self.layout.prompt(slot);
+                let mut prefix = self.layout.response(slot);
+                prefix.truncate(st.reused);
+                let mut logps = st.logps;
+                logps.truncate(st.reused);
+                if st.from_draft && st.reused > 0 {
+                    drafts.push(VerifyTask {
+                        id: st.id,
+                        prompt,
+                        entry: CacheEntry::requeue_draft(prefix, logps),
+                    });
+                } else {
+                    tasks.push(SeqTask { id: st.id, prompt, prefix, prefix_logps: logps });
+                }
+            }
+            run.pending_tok[slot] = None;
+        }
+        run.done = true;
+        (tasks, drafts)
     }
 
     /// Chain the round's readback onto the ticket: the device path first

@@ -60,6 +60,22 @@
 //! outputs must be byte-identical either way, only the device-call split
 //! may differ.
 //!
+//! ## Shard failure recovery (`ARCHITECTURE.md` §13)
+//!
+//! A backend/transport error (a [`crate::runtime::remote::RemoteBackend`]
+//! losing its peer, an injected
+//! [`crate::testing::mock::FaultPlan`] fault) marks the shard **dead** for
+//! the rest of the step instead of failing it: never-seated work stays in
+//! the queue, the dead shard's seated rows are harvested back into
+//! queueable items (verified prefixes as drafts, anything else as tasks —
+//! [`RolloutEngine::harvest_requeue`]) and the step completes on the
+//! survivors. Because sampling and verification use stateless per-task
+//! streams, a re-executed row reproduces its tokens exactly: outputs stay
+//! byte-identical to the no-failure run, every task finishes exactly
+//! once, and only `PipelineStats::{shard_failures, requeued_tasks}` and
+//! the device-call split betray that anything happened. A step only
+//! errors when *every* shard dies with work still pending.
+//!
 //! ## Determinism
 //!
 //! Sampling uses per-task streams (`task_rng(rnonce, id)`) and
@@ -144,6 +160,30 @@ pub struct EnginePool<'e, B: Backend = Engine> {
 /// One shard's statically-placed work: (decode-ready tasks, drafts).
 type ShardWork = (Vec<SeqTask>, Vec<VerifyTask>);
 
+/// Dead-shard bookkeeping for one recovering step (`ARCHITECTURE.md`
+/// §13): which shards are still drivable, plus the errors that killed
+/// the rest (surfaced only if every shard dies with work pending —
+/// a completed step never re-raises a recovered failure).
+struct Recovery {
+    alive: Vec<bool>,
+    errors: Vec<anyhow::Error>,
+}
+
+impl Recovery {
+    fn new(n: usize) -> Self {
+        Recovery { alive: vec![true; n], errors: Vec::new() }
+    }
+
+    fn ensure_survivor(&self) -> Result<()> {
+        ensure!(
+            self.alive.iter().any(|&a| a),
+            "EnginePool: every shard failed with work still pending: {:?}",
+            self.errors
+        );
+        Ok(())
+    }
+}
+
 impl<'e, B: Backend> EnginePool<'e, B> {
     /// Bind one [`RolloutEngine`] per backend, all serving `bundle`.
     /// Fails when the pool is empty or the shard geometries differ (the
@@ -207,6 +247,19 @@ impl<'e, B: Backend> EnginePool<'e, B> {
     /// engine it was pinned to, which is exactly the imbalance the
     /// steal-queue exists to drain.
     fn place(&self, tasks: Vec<SeqTask>, drafts: Vec<VerifyTask>) -> Vec<ShardWork> {
+        self.place_on(tasks, drafts, &vec![true; self.shards.len()])
+    }
+
+    /// [`EnginePool::place`] restricted to the shards still alive: the
+    /// static-placement recovery path re-places a dead shard's recovered
+    /// work over the survivors only (`ARCHITECTURE.md` §13). Dead shards
+    /// get empty work lists. At least one entry of `alive` must be true.
+    fn place_on(
+        &self,
+        tasks: Vec<SeqTask>,
+        drafts: Vec<VerifyTask>,
+        alive: &[bool],
+    ) -> Vec<ShardWork> {
         enum Item {
             Task(SeqTask),
             Draft(VerifyTask),
@@ -233,7 +286,10 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         let mut out: Vec<ShardWork> = (0..n).map(|_| (Vec::new(), Vec::new())).collect();
         let mut load = vec![0usize; n];
         for (cost, _, item) in work {
-            let shard = (0..n).min_by_key(|&i| load[i]).expect("pool has shards");
+            let shard = (0..n)
+                .filter(|&i| alive[i])
+                .min_by_key(|&i| load[i])
+                .expect("place_on needs a live shard");
             load[shard] += cost;
             match item {
                 Item::Task(t) => out[shard].0.push(t),
@@ -241,6 +297,31 @@ impl<'e, B: Backend> EnginePool<'e, B> {
             }
         }
         out
+    }
+
+    /// Mark shard `i` dead after a backend/transport error
+    /// (`ARCHITECTURE.md` §13): record the failure, harvest the shard's
+    /// unfinished seated rows back into queueable work
+    /// ([`RolloutEngine::harvest_requeue`]), and return every recovered
+    /// item to `queue`. The run is left done — its finished rows stay in
+    /// it for the normal absorb pass — and the shard is never driven
+    /// again this step. Only harvested (once-seated) rows count in
+    /// `requeued_tasks`; never-seated work simply stays wherever it was
+    /// queued.
+    fn fail_shard(
+        &mut self,
+        i: usize,
+        err: anyhow::Error,
+        rec: &mut Recovery,
+        run: &mut PipelineRun<B>,
+        queue: &mut WorkQueue,
+        agg: &mut PipelineStats,
+    ) {
+        rec.alive[i] = false;
+        agg.shard_failures += 1;
+        let (t, d) = self.shards[i].harvest_requeue(run);
+        agg.requeued_tasks += queue.requeue(t, d);
+        rec.errors.push(err.context(format!("shard {i} marked dead")));
     }
 
     /// Snapshot the backends' virtual clock for overlap accounting: the
@@ -338,6 +419,14 @@ impl<'e, B: Backend> EnginePool<'e, B> {
 
     /// The PR 3 discipline: one-pass placement, then each shard's
     /// pipeline runs to completion on its private queue.
+    ///
+    /// Failure recovery (`ARCHITECTURE.md` §13): a shard that errors
+    /// mid-drive is marked dead, its seated rows are harvested back into
+    /// queueable work, its private queue is drained, and everything
+    /// recovered spills into the next placement pass — re-placed
+    /// LPT-greedy over the survivors only. With no failures the spill
+    /// stays empty and the loop body runs exactly once, placing and
+    /// driving precisely as PR 3 did.
     #[allow(clippy::too_many_arguments)]
     fn run_static(
         &mut self,
@@ -350,17 +439,64 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         rnonce: u64,
         timer: &mut StageTimer,
     ) -> Result<(Vec<SeqResult>, PipelineStats)> {
-        let placed = self.place(tasks, drafts);
+        let n = self.shards.len();
         let mut results: Vec<SeqResult> = Vec::new();
         let mut agg = PipelineStats::default();
+        let mut per_shard = vec![0usize; n];
+        let mut rec = Recovery::new(n);
         let (t0, busy0) = self.clock_begin();
-        for (shard, (t, d)) in placed.into_iter().enumerate() {
-            let (r, s) = self.shards[shard]
-                .run_pipeline(blobs[shard], t, d, loglen, cfg, vnonce, rnonce, timer)?;
-            agg.absorb(&s);
-            agg.shard_device_calls.push(s.device_calls());
-            results.extend(r);
+        let (mut work_t, mut work_d) = (tasks, drafts);
+        loop {
+            let placed = self.place_on(work_t, work_d, &rec.alive);
+            let mut spill_t: Vec<SeqTask> = Vec::new();
+            let mut spill_d: Vec<VerifyTask> = Vec::new();
+            for (i, (t, d)) in placed.into_iter().enumerate() {
+                let pending = self.shards[i].split_terminal(t, &mut results, &mut agg);
+                if pending.is_empty() && d.is_empty() {
+                    continue;
+                }
+                let mut queue = WorkQueue::new(pending, d);
+                let mut failed = false;
+                let (mut run, ticket) = self.shards[i].start_submit(
+                    blobs[i], &mut queue, loglen, cfg, vnonce, rnonce, timer,
+                );
+                let started = match ticket {
+                    Ok(tk) => self.shards[i].start_complete(&mut run, tk, &queue, timer),
+                    Err(e) => Err(e),
+                };
+                if let Err(e) = started {
+                    self.fail_shard(i, e, &mut rec, &mut run, &mut queue, &mut agg);
+                    failed = true;
+                }
+                while !failed && !run.done() {
+                    if let Err(e) =
+                        self.shards[i].pipeline_step(&mut run, blobs[i], &mut queue, timer)
+                    {
+                        self.fail_shard(i, e, &mut rec, &mut run, &mut queue, &mut agg);
+                        failed = true;
+                    }
+                }
+                if failed {
+                    // Never-seated items (harvested rows included — they
+                    // re-entered via the requeue above) spill to the next
+                    // placement pass over the survivors.
+                    let (qt, qd) = queue.drain();
+                    spill_t.extend(qt);
+                    spill_d.extend(qd);
+                }
+                let (r, s) = run.into_parts();
+                agg.absorb(&s);
+                per_shard[i] += s.device_calls();
+                results.extend(r);
+            }
+            if spill_t.is_empty() && spill_d.is_empty() {
+                break;
+            }
+            rec.ensure_survivor()?;
+            work_t = spill_t;
+            work_d = spill_d;
         }
+        agg.shard_device_calls = per_shard;
         self.clock_end(&mut agg, t0, &busy0);
         results.sort_by_key(|r| r.id);
         Ok((results, agg))
@@ -400,57 +536,97 @@ impl<'e, B: Backend> EnginePool<'e, B> {
 
         let (t0, busy0) = self.clock_begin();
         let mut queue = WorkQueue::new(pending, drafts);
-        // Overlapped start (ARCHITECTURE.md §12): submit every shard's
-        // opening prefill/seat chain before completing any, so first-step
-        // forwards run concurrently exactly like steady-state rounds. All
-        // queue pulls still happen in the submit pass, in shard index
-        // order, so placement is unchanged from the old serial start; a
-        // shard that finds the queue empty still makes zero device calls.
-        let mut runs: Vec<PipelineRun<B>> = Vec::with_capacity(n);
-        let mut starts: Vec<StepTicket<B>> = Vec::with_capacity(n);
-        for i in 0..n {
-            let (run, ticket) = self.shards[i].start_submit(
-                blobs[i], &mut queue, loglen, cfg, vnonce, rnonce, timer,
-            )?;
-            runs.push(run);
-            starts.push(ticket);
-        }
-        for (i, ticket) in starts.into_iter().enumerate() {
-            self.shards[i].start_complete(&mut runs[i], ticket, &queue, timer)?;
-        }
-        // Everything popped from here on is work the one-pass placement
-        // would have pinned to a single engine up front.
-        queue.mark_started();
-        let mut tickets: Vec<Option<StepTicket<B>>> = (0..n).map(|_| None).collect();
-        while runs.iter().any(|r| !r.done()) {
-            // Submit pass: issue every live shard's chain for this round.
-            // All queue pulls happen here, in shard index order.
+        let mut rec = Recovery::new(n);
+        let mut per_shard = vec![0usize; n];
+        // Recovery cycles (`ARCHITECTURE.md` §13): a failure-free cycle
+        // always drains the queue (a run is only done once the queue is
+        // empty), so with no failures the loop body runs exactly once and
+        // this is byte-for-byte the PR 5 overlapped driver. A shard
+        // failure requeues its recovered work; if every survivor had
+        // already gone done by then, the leftover queue forces one more
+        // cycle over the survivors — at most n cycles total.
+        loop {
+            // Overlapped start (ARCHITECTURE.md §12): submit every shard's
+            // opening prefill/seat chain before completing any, so
+            // first-step forwards run concurrently exactly like
+            // steady-state rounds. All queue pulls still happen in the
+            // submit pass, in shard index order, so placement is unchanged
+            // from the old serial start; a shard that finds the queue
+            // empty still makes zero device calls. Dead shards park on an
+            // idle run and are never driven again.
+            let mut runs: Vec<PipelineRun<B>> = Vec::with_capacity(n);
+            let mut starts: Vec<Option<StepTicket<B>>> = Vec::with_capacity(n);
             for i in 0..n {
-                if !runs[i].done() {
-                    tickets[i] = Some(self.shards[i].step_submit(
-                        &mut runs[i],
-                        blobs[i],
-                        &mut queue,
-                        timer,
-                    )?);
+                if !rec.alive[i] {
+                    runs.push(self.shards[i].idle_run(cfg, vnonce, rnonce));
+                    starts.push(None);
+                    continue;
+                }
+                let (mut run, ticket) = self.shards[i].start_submit(
+                    blobs[i], &mut queue, loglen, cfg, vnonce, rnonce, timer,
+                );
+                match ticket {
+                    Ok(tk) => starts.push(Some(tk)),
+                    Err(e) => {
+                        self.fail_shard(i, e, &mut rec, &mut run, &mut queue, &mut agg);
+                        starts.push(None);
+                    }
+                }
+                runs.push(run);
+            }
+            for (i, start) in starts.into_iter().enumerate() {
+                let Some(ticket) = start else { continue };
+                if let Err(e) = self.shards[i].start_complete(&mut runs[i], ticket, &queue, timer)
+                {
+                    self.fail_shard(i, e, &mut rec, &mut runs[i], &mut queue, &mut agg);
                 }
             }
-            // Complete pass: now block on the readbacks, same order. On
-            // devices this is where the overlap is realized — shard i's
-            // wait runs concurrently with shards i+1..n's forwards.
-            for i in 0..n {
-                if let Some(ticket) = tickets[i].take() {
-                    self.shards[i].step_complete(&mut runs[i], ticket, &queue, timer)?;
+            // Everything popped from here on is work the one-pass
+            // placement would have pinned to a single engine up front.
+            queue.mark_started();
+            let mut tickets: Vec<Option<StepTicket<B>>> = (0..n).map(|_| None).collect();
+            while runs.iter().any(|r| !r.done()) {
+                // Submit pass: issue every live shard's chain for this
+                // round. All queue pulls happen here, in shard index
+                // order.
+                for i in 0..n {
+                    if runs[i].done() {
+                        continue;
+                    }
+                    match self.shards[i].step_submit(&mut runs[i], blobs[i], &mut queue, timer) {
+                        Ok(tk) => tickets[i] = Some(tk),
+                        Err(e) => {
+                            self.fail_shard(i, e, &mut rec, &mut runs[i], &mut queue, &mut agg)
+                        }
+                    }
+                }
+                // Complete pass: now block on the readbacks, same order.
+                // On devices this is where the overlap is realized —
+                // shard i's wait runs concurrently with shards i+1..n's
+                // forwards.
+                for i in 0..n {
+                    if let Some(ticket) = tickets[i].take() {
+                        if let Err(e) =
+                            self.shards[i].step_complete(&mut runs[i], ticket, &queue, timer)
+                        {
+                            self.fail_shard(i, e, &mut rec, &mut runs[i], &mut queue, &mut agg);
+                        }
+                    }
                 }
             }
+            for (i, run) in runs.into_iter().enumerate() {
+                let (r, s) = run.into_parts();
+                agg.absorb(&s);
+                per_shard[i] += s.device_calls();
+                results.extend(r);
+            }
+            if queue.is_empty() {
+                break;
+            }
+            rec.ensure_survivor()?;
         }
         agg.steal_count = queue.steals();
-        for run in runs {
-            let (r, s) = run.into_parts();
-            agg.absorb(&s);
-            agg.shard_device_calls.push(s.device_calls());
-            results.extend(r);
-        }
+        agg.shard_device_calls = per_shard;
         self.clock_end(&mut agg, t0, &busy0);
         results.sort_by_key(|r| r.id);
         Ok((results, agg))

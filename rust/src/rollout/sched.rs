@@ -169,6 +169,34 @@ impl WorkQueue {
     pub fn steals(&self) -> usize {
         self.steals
     }
+
+    /// Return a dead shard's recovered work to the queue, restoring the
+    /// global LPT order of both lanes (`ARCHITECTURE.md` §13): the merged
+    /// lanes re-sort with the exact [`WorkQueue::new`] comparators, so a
+    /// survivor's next pull sees the same deterministic order a fresh
+    /// queue over the combined work would. Keeps the `started` flag —
+    /// requeued items popped mid-step count as steals, like any other
+    /// mid-step pull. Returns the number of items re-entered.
+    pub fn requeue(&mut self, tasks: Vec<SeqTask>, drafts: Vec<VerifyTask>) -> usize {
+        let n = tasks.len() + drafts.len();
+        let mut t: Vec<SeqTask> = std::mem::take(&mut self.tasks).into();
+        t.extend(tasks);
+        t.sort_by(|a, b| a.prefix.len().cmp(&b.prefix.len()).then(a.id.cmp(&b.id)));
+        self.tasks = t.into();
+        let mut d: Vec<VerifyTask> = std::mem::take(&mut self.drafts).into();
+        d.extend(drafts);
+        d.sort_by(|a, b| a.draft_len().cmp(&b.draft_len()).then(a.id.cmp(&b.id)));
+        self.drafts = d.into();
+        n
+    }
+
+    /// Empty both lanes, returning everything still unstarted (in current
+    /// queue order). The static-placement recovery path drains a dead
+    /// shard's private queue into the survivor spill; pops here are not
+    /// steals (the items were never handed to an engine).
+    pub fn drain(&mut self) -> (Vec<SeqTask>, Vec<VerifyTask>) {
+        (std::mem::take(&mut self.tasks).into(), std::mem::take(&mut self.drafts).into())
+    }
 }
 
 /// What currently occupies a slot.
@@ -488,6 +516,40 @@ mod tests {
             assert_eq!(s.busy(), 0, "shard {i} should have nothing seated");
             assert!(s.is_done(&q), "an empty shard over a drained queue is done");
         }
+    }
+
+    #[test]
+    fn requeue_restores_global_lpt_order_in_both_lanes() {
+        let mut q = WorkQueue::new(vec![task(0, 4)], vec![draft(10, 5)]);
+        let n = q.requeue(vec![task(1, 1), task(2, 4)], vec![draft(11, 2)]);
+        assert_eq!(n, 3);
+        let mut s = SlotScheduler::new(4);
+        let ids: Vec<usize> = s.fill(&mut q).into_iter().map(|(_, t)| t.id).collect();
+        assert_eq!(ids, vec![1, 0, 2], "shortest prefix first, ties by id");
+        let dids: Vec<usize> = s.fill_verify(&mut q, 1).into_iter().map(|(_, d)| d.id).collect();
+        assert_eq!(dids, vec![11], "one free slot left: shortest draft first");
+        assert_eq!(q.pending_drafts(), 1);
+    }
+
+    #[test]
+    fn requeued_items_popped_mid_step_count_as_steals() {
+        let mut q = WorkQueue::new(Vec::new(), Vec::new());
+        q.mark_started();
+        assert_eq!(q.requeue(vec![task(0, 0)], vec![draft(1, 2)]), 2);
+        let mut s = SlotScheduler::new(2);
+        assert_eq!(s.fill(&mut q).len() + s.fill_verify(&mut q, 1).len(), 2);
+        assert_eq!(q.steals(), 2);
+    }
+
+    #[test]
+    fn drain_empties_both_lanes_without_counting_steals() {
+        let mut q = WorkQueue::new(vec![task(0, 0), task(1, 2)], vec![draft(9, 3)]);
+        q.mark_started();
+        let (t, d) = q.drain();
+        assert_eq!(t.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(d.len(), 1);
+        assert!(q.is_empty());
+        assert_eq!(q.steals(), 0, "drained items were never handed to an engine");
     }
 
     #[test]

@@ -36,9 +36,10 @@
 //! `submit_entry = call_entry`, `complete = identity` — which is exactly
 //! what the PJRT [`super::Engine`] does (PJRT buffers are futures the
 //! runtime resolves on first host read, so the degenerate submit is
-//! still a real asynchronous dispatch there). A remote backend would
-//! return its RPC ticket as `Pending` instead; nothing in the scheduler
-//! layer changes.
+//! still a real asynchronous dispatch there). [`super::remote::RemoteBackend`]
+//! is the other extreme: its `Pending` is an RPC ticket and its `Buf` a
+//! remote buffer handle, shipped over a [`super::remote::Transport`] —
+//! and nothing in the scheduler layer changes (`ARCHITECTURE.md` §13).
 
 use anyhow::Result;
 

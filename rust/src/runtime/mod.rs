@@ -3,6 +3,10 @@
 //! - [`manifest`] — typed view of `artifacts/manifest.json`.
 //! - [`engine`] — the PJRT CPU client, lazily-compiled executables, typed
 //!   upload/execute/read helpers, and per-entry timing stats.
+//! - [`remote`] — the [`backend::Backend`] contract over a wire: RPC
+//!   tickets as `Pending`, remote buffer handles as `Buf`, and the
+//!   in-process [`remote::Loopback`] transport for offline testing
+//!   (`ARCHITECTURE.md` §13).
 //!
 //! Design constraint discovered by probing this image's plugin (see
 //! DESIGN.md): multi-output executables return a *single tuple buffer* and
@@ -14,7 +18,9 @@
 pub mod backend;
 pub mod engine;
 pub mod manifest;
+pub mod remote;
 
 pub use backend::{Backend, BatchShape};
 pub use engine::{Engine, EntryHandle, EntryStats};
 pub use manifest::{ArgInfo, BundleInfo, EntryInfo, FieldInfo, Manifest, ModelInfo};
+pub use remote::{Loopback, RemoteBackend, Transport, TransportFaults};

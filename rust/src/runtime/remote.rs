@@ -1,0 +1,651 @@
+//! Remote backends: the [`Backend`] contract over a wire
+//! (`ARCHITECTURE.md` §13).
+//!
+//! [`RemoteBackend`] is a [`Backend`] whose entry calls ship over a
+//! pluggable [`Transport`]. The design rule is **handles cross the wire,
+//! buffers do not**: every device buffer lives on the remote side and is
+//! named here by an opaque `u64` handle ([`RemoteBuf`]), so the
+//! generation blob — the big `[ck | cv | valid | probs | aux]` state the
+//! decode loop chains through every round — never round-trips per call.
+//! The host only ever moves the small things it always moved: token
+//! vectors up, `O(B)` readbacks down.
+//!
+//! ## The transport contract
+//!
+//! A [`Transport`] is five data-plane operations (`upload_f32` /
+//! `upload_i32` / `submit` / `complete` / `read_f32`) plus two
+//! control-plane lookups (`resolve`, `shape`). The semantics that make
+//! retries safe:
+//!
+//! - **Caller-assigned tickets.** `submit` takes a caller-chosen ticket
+//!   id and is **idempotent**: if the transport has already executed a
+//!   submit under that ticket (the classic dropped-ack failure — work
+//!   applied, acknowledgement lost), resubmitting returns the recorded
+//!   output handle *without re-running the forward*. This is what makes
+//!   [`RemoteBackend`]'s retry loop safe: a retried submit can never
+//!   double-apply a forward.
+//! - **Idempotent completes.** `complete(ticket)` blocks until that
+//!   ticket's forward is finished remotely; completing an
+//!   already-complete ticket is a no-op `Ok`. A timed-out complete is
+//!   therefore always retryable.
+//! - **Submit is cheap, complete blocks.** `submit` only enqueues (the
+//!   returned handle may name a still-executing forward, usable as an
+//!   argument to further submits — device-side chaining exactly like
+//!   [`Backend::pending_buf`]); `complete` is the one host-blocking
+//!   point. This preserves the pool's overlapped shard stepping
+//!   (`ARCHITECTURE.md` §11) across the wire.
+//!
+//! Retry policy lives in [`RemoteBackend`], not the transport: ticketed
+//! operations (`submit`, `complete`) retry up to
+//! `rollout.max_retries` times with `rollout.rpc_timeout_ms` per
+//! complete; uploads and reads are *not* retried (they carry no ticket —
+//! a failed upload just errors out to the pool, which handles it as a
+//! shard failure, `ARCHITECTURE.md` §13).
+//!
+//! ## Loopback: offline testability
+//!
+//! [`Loopback`] is an in-process [`Transport`] wrapping any existing
+//! [`Backend`] (the [`crate::testing::mock::MockEngine`] in tests): a
+//! handle table maps `u64`s to inner buffers or in-flight pendings, and
+//! the ticket table provides the idempotency the contract demands. It
+//! also carries [`TransportFaults`] — dropped submit-acks, complete
+//! timeouts, and a dead-peer cutoff — so the retry loop and the pool's
+//! dead-shard recovery run as plain unit tests with zero network
+//! dependencies. `RemoteBackend<Loopback<MockEngine>>` over any workload
+//! is byte-identical to driving the `MockEngine` directly (pinned by
+//! `rust/tests/remote_loopback.rs`), including the virtual-clock overlap
+//! accounting, which the loopback forwards verbatim.
+//!
+//! Handles are never garbage-collected: the table grows for the lifetime
+//! of the transport, like an arena. Real transports would add an
+//! explicit release op; the rollout layer's buffer lifetimes are step-
+//! scoped and small (handles are `u64`s — the *payloads* stay remote),
+//! so the bookkeeping cost here is negligible for tests and benches.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::{Backend, BatchShape};
+
+/// Wire-level operations a [`RemoteBackend`] ships its calls over. See
+/// the module docs for the contract (ticket idempotency, cheap submits,
+/// blocking completes).
+pub trait Transport {
+    /// Resolve `bundle/entry` remotely; the returned token names the
+    /// entry in subsequent [`Transport::submit`] calls.
+    fn resolve(&self, bundle: &str, entry: &str) -> Result<String>;
+
+    /// Remote bundle geometry.
+    fn shape(&self, bundle: &str) -> Result<BatchShape>;
+
+    /// Ship host floats to the remote side; returns the buffer handle.
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<u64>;
+
+    /// Ship host ints to the remote side; returns the buffer handle.
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<u64>;
+
+    /// Enqueue one forward under a caller-assigned `ticket`; returns the
+    /// output buffer handle (usable as an argument to further submits
+    /// before completion). **Idempotent**: resubmitting a ticket the
+    /// transport already executed returns the recorded handle without
+    /// re-running the forward.
+    fn submit(&self, ticket: u64, entry: &str, args: &[u64]) -> Result<u64>;
+
+    /// Block until `ticket`'s forward finishes remotely (up to
+    /// `timeout_ms`). **Idempotent**: completing a finished ticket is a
+    /// no-op `Ok`.
+    fn complete(&self, ticket: u64, timeout_ms: u64) -> Result<()>;
+
+    /// Read a completed buffer's floats back into caller scratch.
+    fn read_f32(&self, handle: u64, out: &mut Vec<f32>) -> Result<()>;
+
+    /// Remote virtual clock, if the far side models one (the loopback
+    /// forwards the wrapped backend's — overlap accounting keeps working
+    /// through the wire).
+    fn virtual_now(&self) -> Option<f64> {
+        None
+    }
+
+    /// Remote cumulative forward time (see [`Backend::device_busy_secs`]).
+    fn device_busy_secs(&self) -> f64 {
+        0.0
+    }
+}
+
+/// A remote buffer: just its handle. The payload never leaves the far
+/// side; cloning a handle is free and aliases the same remote buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RemoteBuf {
+    /// Transport-scoped buffer id.
+    pub handle: u64,
+}
+
+/// An in-flight remote forward: the RPC ticket plus the output handle
+/// the transport assigned at submit time — which is what lets
+/// [`Backend::pending_buf`] hand out a chaining argument without any
+/// round-trip.
+#[derive(Debug)]
+pub struct RemoteTicket {
+    /// Caller-assigned submit ticket (the idempotency key).
+    pub ticket: u64,
+    buf: RemoteBuf,
+}
+
+/// Default RPC completion timeout (ms) — `rollout.rpc_timeout_ms`.
+pub const DEFAULT_RPC_TIMEOUT_MS: u64 = 5_000;
+/// Default retry budget per ticketed op — `rollout.max_retries`.
+pub const DEFAULT_MAX_RETRIES: u64 = 2;
+
+/// A [`Backend`] whose `Pending` is an RPC ticket and whose buffers are
+/// remote handles. Generic over the [`Transport`]; the rollout layer
+/// above cannot tell it from an in-process backend (byte-identical
+/// outputs, pinned by `rust/tests/remote_loopback.rs`).
+pub struct RemoteBackend<T: Transport> {
+    transport: T,
+    /// Monotone ticket source — ticket ids never repeat, so a transport
+    /// can key its executed-submit table by them forever.
+    next_ticket: Cell<u64>,
+    timeout_ms: u64,
+    max_retries: u64,
+}
+
+impl<T: Transport> RemoteBackend<T> {
+    /// Wrap a transport with the default RPC knobs.
+    pub fn new(transport: T) -> Self {
+        RemoteBackend {
+            transport,
+            next_ticket: Cell::new(0),
+            timeout_ms: DEFAULT_RPC_TIMEOUT_MS,
+            max_retries: DEFAULT_MAX_RETRIES,
+        }
+    }
+
+    /// Override the RPC knobs (`rollout.rpc_timeout_ms`,
+    /// `rollout.max_retries`).
+    pub fn with_rpc(mut self, timeout_ms: u64, max_retries: u64) -> Self {
+        self.timeout_ms = timeout_ms;
+        self.max_retries = max_retries;
+        self
+    }
+
+    /// Borrow the transport (tests reach through to the loopback's fault
+    /// and telemetry state).
+    pub fn transport(&self) -> &T {
+        &self.transport
+    }
+
+    fn alloc_ticket(&self) -> u64 {
+        let t = self.next_ticket.get();
+        self.next_ticket.set(t + 1);
+        t
+    }
+}
+
+impl<T: Transport> Backend for RemoteBackend<T> {
+    type Buf = RemoteBuf;
+    type Entry = String;
+    type Pending = RemoteTicket;
+
+    fn resolve(&self, bundle: &str, entry: &str) -> Result<String> {
+        self.transport.resolve(bundle, entry)
+    }
+
+    fn call_entry(&self, entry: &String, args: &[&RemoteBuf]) -> Result<RemoteBuf> {
+        let pending = self.submit_entry(entry, args)?;
+        self.complete(pending)
+    }
+
+    /// Submit with retry: the same ticket id is resubmitted on every
+    /// attempt, so a transport that executed the forward but lost the
+    /// ack returns the recorded handle instead of running it twice.
+    fn submit_entry(&self, entry: &String, args: &[&RemoteBuf]) -> Result<RemoteTicket> {
+        let handles: Vec<u64> = args.iter().map(|b| b.handle).collect();
+        let ticket = self.alloc_ticket();
+        let mut last: Option<anyhow::Error> = None;
+        for _ in 0..=self.max_retries {
+            match self.transport.submit(ticket, entry, &handles) {
+                Ok(handle) => {
+                    return Ok(RemoteTicket { ticket, buf: RemoteBuf { handle } })
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last
+            .expect("at least one submit attempt ran")
+            .context(format!(
+                "remote submit of '{entry}' (ticket {ticket}) failed after {} attempts",
+                self.max_retries + 1
+            )))
+    }
+
+    /// Complete with retry: completes are idempotent, so a timed-out
+    /// attempt is safely reissued until the retry budget runs out.
+    fn complete(&self, pending: RemoteTicket) -> Result<RemoteBuf> {
+        let mut last: Option<anyhow::Error> = None;
+        for _ in 0..=self.max_retries {
+            match self.transport.complete(pending.ticket, self.timeout_ms) {
+                Ok(()) => return Ok(pending.buf),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last
+            .expect("at least one complete attempt ran")
+            .context(format!(
+                "remote complete of ticket {} failed after {} attempts",
+                pending.ticket,
+                self.max_retries + 1
+            )))
+    }
+
+    fn pending_buf<'a>(&self, pending: &'a RemoteTicket) -> &'a RemoteBuf {
+        &pending.buf
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<RemoteBuf> {
+        Ok(RemoteBuf { handle: self.transport.upload_f32(data, dims)? })
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<RemoteBuf> {
+        Ok(RemoteBuf { handle: self.transport.upload_i32(data, dims)? })
+    }
+
+    fn read_f32(&self, buf: &RemoteBuf) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.transport.read_f32(buf.handle, &mut out)?;
+        Ok(out)
+    }
+
+    fn read_f32_into(&self, buf: &RemoteBuf, out: &mut Vec<f32>) -> Result<()> {
+        self.transport.read_f32(buf.handle, out)
+    }
+
+    fn virtual_now(&self) -> Option<f64> {
+        self.transport.virtual_now()
+    }
+
+    fn device_busy_secs(&self) -> f64 {
+        self.transport.device_busy_secs()
+    }
+
+    fn shape(&self, bundle: &str) -> Result<BatchShape> {
+        self.transport.shape(bundle)
+    }
+}
+
+/// Injected transport failures for the chaos tests (the wire-level
+/// counterpart of [`crate::testing::mock::FaultPlan`], which kills the
+/// *backend* under the transport). Indices are 0-based op counts over
+/// this transport's lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct TransportFaults {
+    /// The n-th `submit` executes and records its ticket, but the ack is
+    /// dropped: the caller sees `Err` and must resubmit the same ticket —
+    /// the idempotency case [`RemoteBackend::submit_entry`]'s retry loop
+    /// exists for. One-shot.
+    pub drop_submit_ack_at: Option<usize>,
+    /// The n-th `complete` times out (transient — a retry succeeds).
+    /// One-shot.
+    pub timeout_complete_at: Option<usize>,
+    /// Every data-plane op (upload/submit/complete/read) from this
+    /// global op index on fails: the dead-peer model that exhausts the
+    /// retry budget and surfaces to the pool as a shard failure.
+    pub dead_from_op: Option<usize>,
+}
+
+/// A remote buffer's loopback-side backing: materialized, or still the
+/// wrapped backend's in-flight pending (resolvable as a chaining arg via
+/// [`Backend::pending_buf`], like the real thing).
+enum Slot<B: Backend> {
+    Ready(B::Buf),
+    InFlight(B::Pending),
+}
+
+/// Executed-submit record: the output handle, and whether the inner
+/// forward has been completed.
+struct TicketState {
+    out: u64,
+    done: bool,
+}
+
+/// In-process [`Transport`] over any wrapped [`Backend`] — the offline
+/// stand-in for a real RPC peer. See the module docs.
+pub struct Loopback<'b, B: Backend> {
+    inner: &'b B,
+    entries: RefCell<HashMap<String, B::Entry>>,
+    bufs: RefCell<HashMap<u64, Slot<B>>>,
+    tickets: RefCell<HashMap<u64, TicketState>>,
+    next_handle: Cell<u64>,
+    faults: RefCell<TransportFaults>,
+    /// Data-plane ops seen (uploads + submits + completes + reads).
+    ops_seen: Cell<usize>,
+    submits_seen: Cell<usize>,
+    completes_seen: Cell<usize>,
+}
+
+impl<'b, B: Backend> Loopback<'b, B> {
+    pub fn new(inner: &'b B) -> Self {
+        Loopback {
+            inner,
+            entries: RefCell::new(HashMap::new()),
+            bufs: RefCell::new(HashMap::new()),
+            tickets: RefCell::new(HashMap::new()),
+            next_handle: Cell::new(0),
+            faults: RefCell::new(TransportFaults::default()),
+            ops_seen: Cell::new(0),
+            submits_seen: Cell::new(0),
+            completes_seen: Cell::new(0),
+        }
+    }
+
+    /// Arm injected transport failures (replaces any previous plan).
+    pub fn set_faults(&self, faults: TransportFaults) {
+        *self.faults.borrow_mut() = faults;
+    }
+
+    /// Builder form of [`Loopback::set_faults`].
+    pub fn with_faults(self, faults: TransportFaults) -> Self {
+        self.set_faults(faults);
+        self
+    }
+
+    /// Live remote-side buffer count (tests pin the no-GC arena model).
+    pub fn handles(&self) -> usize {
+        self.bufs.borrow().len()
+    }
+
+    /// Executed submits recorded in the ticket table.
+    pub fn tickets(&self) -> usize {
+        self.tickets.borrow().len()
+    }
+
+    fn alloc_handle(&self) -> u64 {
+        let h = self.next_handle.get();
+        self.next_handle.set(h + 1);
+        h
+    }
+
+    /// Count one data-plane op; fail it if the dead-peer cutoff passed.
+    fn op_check(&self, what: &str) -> Result<()> {
+        let idx = self.ops_seen.get();
+        self.ops_seen.set(idx + 1);
+        if let Some(dead) = self.faults.borrow().dead_from_op {
+            if idx >= dead {
+                bail!("loopback transport: peer dead, {what} op {idx} refused");
+            }
+        }
+        Ok(())
+    }
+
+    fn insert_buf(&self, slot: Slot<B>) -> u64 {
+        let h = self.alloc_handle();
+        self.bufs.borrow_mut().insert(h, slot);
+        h
+    }
+}
+
+impl<B: Backend> Transport for Loopback<'_, B> {
+    fn resolve(&self, bundle: &str, entry: &str) -> Result<String> {
+        let handle = self.inner.resolve(bundle, entry)?;
+        let token = format!("{bundle}/{entry}");
+        self.entries.borrow_mut().insert(token.clone(), handle);
+        Ok(token)
+    }
+
+    fn shape(&self, bundle: &str) -> Result<BatchShape> {
+        self.inner.shape(bundle)
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<u64> {
+        self.op_check("upload_f32")?;
+        let buf = self.inner.upload_f32(data, dims)?;
+        Ok(self.insert_buf(Slot::Ready(buf)))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<u64> {
+        self.op_check("upload_i32")?;
+        let buf = self.inner.upload_i32(data, dims)?;
+        Ok(self.insert_buf(Slot::Ready(buf)))
+    }
+
+    fn submit(&self, ticket: u64, entry: &str, args: &[u64]) -> Result<u64> {
+        self.op_check("submit")?;
+        let sub_idx = self.submits_seen.get();
+        self.submits_seen.set(sub_idx + 1);
+        // Idempotency: a ticket this transport already executed returns
+        // its recorded output handle — the forward must not run again.
+        if let Some(st) = self.tickets.borrow().get(&ticket) {
+            return Ok(st.out);
+        }
+        let handle = self
+            .entries
+            .borrow()
+            .get(entry)
+            .cloned()
+            .ok_or_else(|| anyhow!("loopback transport: unresolved entry '{entry}'"))?;
+        let pending = {
+            let bufs = self.bufs.borrow();
+            let arg_refs: Vec<&B::Buf> = args
+                .iter()
+                .map(|h| match bufs.get(h) {
+                    Some(Slot::Ready(b)) => Ok(b),
+                    Some(Slot::InFlight(p)) => Ok(self.inner.pending_buf(p)),
+                    None => Err(anyhow!("loopback transport: unknown buffer handle {h}")),
+                })
+                .collect::<Result<_>>()?;
+            self.inner.submit_entry(&handle, &arg_refs)?
+        };
+        let out = self.insert_buf(Slot::InFlight(pending));
+        self.tickets.borrow_mut().insert(ticket, TicketState { out, done: false });
+        // Dropped ack (after the work is applied and recorded): the
+        // caller never learns the handle and must retry the ticket.
+        let drop_ack = {
+            let mut f = self.faults.borrow_mut();
+            if f.drop_submit_ack_at == Some(sub_idx) {
+                f.drop_submit_ack_at = None;
+                true
+            } else {
+                false
+            }
+        };
+        if drop_ack {
+            bail!("loopback transport: submit ack dropped (ticket {ticket})");
+        }
+        Ok(out)
+    }
+
+    fn complete(&self, ticket: u64, timeout_ms: u64) -> Result<()> {
+        self.op_check("complete")?;
+        let cpl_idx = self.completes_seen.get();
+        self.completes_seen.set(cpl_idx + 1);
+        let timeout = {
+            let mut f = self.faults.borrow_mut();
+            if f.timeout_complete_at == Some(cpl_idx) {
+                f.timeout_complete_at = None;
+                true
+            } else {
+                false
+            }
+        };
+        if timeout {
+            bail!(
+                "loopback transport: complete of ticket {ticket} timed out after {timeout_ms} ms"
+            );
+        }
+        let out = {
+            let tickets = self.tickets.borrow();
+            let st = tickets
+                .get(&ticket)
+                .ok_or_else(|| anyhow!("loopback transport: unknown ticket {ticket}"))?;
+            if st.done {
+                return Ok(()); // idempotent: already completed
+            }
+            st.out
+        };
+        let slot = self
+            .bufs
+            .borrow_mut()
+            .remove(&out)
+            .ok_or_else(|| anyhow!("loopback transport: ticket {ticket} lost its buffer"))?;
+        let ready = match slot {
+            Slot::InFlight(p) => self.inner.complete(p)?,
+            Slot::Ready(b) => b,
+        };
+        self.bufs.borrow_mut().insert(out, Slot::Ready(ready));
+        self.tickets.borrow_mut().get_mut(&ticket).expect("ticket recorded above").done = true;
+        Ok(())
+    }
+
+    fn read_f32(&self, handle: u64, out: &mut Vec<f32>) -> Result<()> {
+        self.op_check("read_f32")?;
+        let bufs = self.bufs.borrow();
+        match bufs.get(&handle) {
+            Some(Slot::Ready(b)) => self.inner.read_f32_into(b, out),
+            Some(Slot::InFlight(_)) => {
+                bail!("loopback transport: read of handle {handle} before its complete")
+            }
+            None => bail!("loopback transport: unknown buffer handle {handle}"),
+        }
+    }
+
+    fn virtual_now(&self) -> Option<f64> {
+        self.inner.virtual_now()
+    }
+
+    fn device_busy_secs(&self) -> f64 {
+        self.inner.device_busy_secs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::mock::MockEngine;
+    use crate::tokenizer::BOS;
+
+    fn remote_over(
+        mock: &MockEngine,
+    ) -> RemoteBackend<Loopback<'_, MockEngine>> {
+        RemoteBackend::new(Loopback::new(mock))
+    }
+
+    /// Upload a 1-row prompt layout and run `prefill` through `backend`,
+    /// returning the read-back `read_gen` payload.
+    fn prefill_read<B: Backend>(backend: &B) -> Vec<f32> {
+        let hp = backend.resolve("mock", "prefill").unwrap();
+        let hr = backend.resolve("mock", "read_gen").unwrap();
+        let blob = backend.upload_f32(&[0.0], &[1]).unwrap();
+        let tok = backend.upload_i32(&[BOS, 5, 0, 0], &[1, 4]).unwrap();
+        let val = backend.upload_f32(&[1.0, 1.0, 0.0, 0.0], &[1, 4]).unwrap();
+        let last = backend.upload_i32(&[1], &[1]).unwrap();
+        let temp = backend.upload_f32(&[1.0], &[1]).unwrap();
+        let gen = backend.call_entry(&hp, &[&blob, &tok, &val, &last, &temp]).unwrap();
+        let out = backend.call_entry(&hr, &[&gen]).unwrap();
+        backend.read_f32(&out).unwrap()
+    }
+
+    #[test]
+    fn loopback_prefill_readback_matches_the_wrapped_mock() {
+        let direct = MockEngine::new(1, 2, 4, 8);
+        let wrapped = MockEngine::new(1, 2, 4, 8);
+        let remote = remote_over(&wrapped);
+        assert_eq!(prefill_read(&direct), prefill_read(&remote));
+        // shape passes through too
+        let s = Backend::shape(&remote, "mock").unwrap();
+        assert_eq!((s.batch, s.prompt_len, s.total_len, s.vocab), (1, 2, 4, 8));
+    }
+
+    #[test]
+    fn dropped_submit_ack_retries_without_double_applying() {
+        let mock = MockEngine::new(1, 2, 4, 8);
+        let remote = remote_over(&mock);
+        remote
+            .transport()
+            .set_faults(TransportFaults { drop_submit_ack_at: Some(0), ..Default::default() });
+        let hp = remote.resolve("mock", "prefill").unwrap();
+        let blob = remote.upload_f32(&[0.0], &[1]).unwrap();
+        let tok = remote.upload_i32(&[BOS, 5, 0, 0], &[1, 4]).unwrap();
+        let val = remote.upload_f32(&[1.0, 1.0, 0.0, 0.0], &[1, 4]).unwrap();
+        let last = remote.upload_i32(&[1], &[1]).unwrap();
+        let temp = remote.upload_f32(&[1.0], &[1]).unwrap();
+        remote.call_entry(&hp, &[&blob, &tok, &val, &last, &temp]).unwrap();
+        // the forward ran exactly once: the retried submit hit the ticket
+        // table, not the engine
+        assert_eq!(mock.calls_of("prefill"), 1);
+        assert_eq!(remote.transport().tickets(), 1);
+    }
+
+    #[test]
+    fn dropped_ack_without_retry_budget_is_an_error() {
+        let mock = MockEngine::new(1, 2, 4, 8);
+        let remote = remote_over(&mock).with_rpc(1_000, 0);
+        remote
+            .transport()
+            .set_faults(TransportFaults { drop_submit_ack_at: Some(0), ..Default::default() });
+        let hp = remote.resolve("mock", "prefill").unwrap();
+        let blob = remote.upload_f32(&[0.0], &[1]).unwrap();
+        let tok = remote.upload_i32(&[BOS, 5, 0, 0], &[1, 4]).unwrap();
+        let val = remote.upload_f32(&[1.0, 1.0, 0.0, 0.0], &[1, 4]).unwrap();
+        let last = remote.upload_i32(&[1], &[1]).unwrap();
+        let temp = remote.upload_f32(&[1.0], &[1]).unwrap();
+        let err =
+            remote.call_entry(&hp, &[&blob, &tok, &val, &last, &temp]).unwrap_err();
+        assert!(format!("{err:#}").contains("after 1 attempts"), "{err:#}");
+        // the work itself was applied remotely (ack lost, not the work)
+        assert_eq!(mock.calls_of("prefill"), 1);
+    }
+
+    #[test]
+    fn complete_timeout_is_retried_idempotently() {
+        let mock = MockEngine::new(1, 2, 4, 8);
+        let remote = remote_over(&mock);
+        remote
+            .transport()
+            .set_faults(TransportFaults { timeout_complete_at: Some(0), ..Default::default() });
+        assert_eq!(prefill_read(&remote), prefill_read(&MockEngine::new(1, 2, 4, 8)));
+        assert_eq!(mock.calls_of("prefill"), 1);
+        assert_eq!(mock.calls_of("read_gen"), 1);
+    }
+
+    #[test]
+    fn dead_peer_exhausts_retries_and_errors() {
+        let mock = MockEngine::new(1, 2, 4, 8);
+        let remote = remote_over(&mock);
+        remote.resolve("mock", "prefill").unwrap();
+        remote
+            .transport()
+            .set_faults(TransportFaults { dead_from_op: Some(0), ..Default::default() });
+        let err = remote.upload_f32(&[0.0], &[1]).unwrap_err();
+        assert!(format!("{err:#}").contains("peer dead"), "{err:#}");
+        assert_eq!(mock.counters().uploads.len(), 0, "nothing reached the engine");
+    }
+
+    #[test]
+    fn chained_submits_resolve_inflight_handles() {
+        // decode(submit) consuming prefill's still-in-flight output via
+        // pending_buf, exactly like the engine's device chains.
+        let mock = MockEngine::new(1, 2, 4, 8);
+        let remote = remote_over(&mock);
+        let hp = remote.resolve("mock", "prefill").unwrap();
+        let hd = remote.resolve("mock", "decode").unwrap();
+        let blob = remote.upload_f32(&[0.0], &[1]).unwrap();
+        let tok = remote.upload_i32(&[BOS, 5, 0, 0], &[1, 4]).unwrap();
+        let val = remote.upload_f32(&[1.0, 1.0, 0.0, 0.0], &[1, 4]).unwrap();
+        let last = remote.upload_i32(&[1], &[1]).unwrap();
+        let temp = remote.upload_f32(&[1.0], &[1]).unwrap();
+        let p_gen = remote.submit_entry(&hp, &[&blob, &tok, &val, &last, &temp]).unwrap();
+        let tok1 = remote.upload_i32(&[7], &[1]).unwrap();
+        let slot = remote.upload_i32(&[2], &[1]).unwrap();
+        let lpos = remote.upload_i32(&[2], &[1]).unwrap();
+        let p_dec = {
+            let gen = remote.pending_buf(&p_gen);
+            remote.submit_entry(&hd, &[&blob, gen, &tok1, &slot, &lpos, &temp]).unwrap()
+        };
+        remote.complete(p_dec).unwrap();
+        assert_eq!(mock.calls_of("prefill"), 1);
+        assert_eq!(mock.calls_of("decode"), 1);
+        // handle table is an arena: every upload + 2 outputs stay live
+        assert_eq!(remote.transport().handles(), 8 + 2);
+    }
+}

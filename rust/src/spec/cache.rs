@@ -65,6 +65,16 @@ impl CacheEntry {
             finished: r.finished,
         }
     }
+
+    /// A synthetic draft built from a dead shard's accepted prefix
+    /// (`ARCHITECTURE.md` §13). `version` is 0 and `finished` is false:
+    /// the prefix is a mid-flight truncation, not a cached trajectory —
+    /// it exists only to re-enter the verify lane, where the §6 uniform
+    /// stream re-accepts every token on a surviving shard.
+    pub fn requeue_draft(response: Vec<i32>, logps: Vec<f32>) -> Self {
+        debug_assert_eq!(response.len(), logps.len());
+        CacheEntry { response, logps, version: 0, finished: false }
+    }
 }
 
 /// A cached trajectory's handle: where its root-to-leaf path ends, plus
@@ -191,6 +201,21 @@ impl RolloutCache {
     /// materialized by the root-to-leaf walk.
     pub fn previous(&self, id: usize) -> Option<CacheEntry> {
         self.slots.get(&id).and_then(|(_, prev)| prev.as_ref()).map(|p| self.materialize(p))
+    }
+
+    /// Rebuild a dead shard's draft for `id` from the trie: the latest
+    /// cached trajectory truncated to its `accepted` prefix, shaped as a
+    /// requeue draft ([`CacheEntry::requeue_draft`], `ARCHITECTURE.md`
+    /// §13). Equals the entry the pool harvests from the shard's own
+    /// layout whenever the seated draft came from this cache — the
+    /// trie-backed recovery path for callers that no longer hold the
+    /// dead shard's host state. `None` if `id` was never cached.
+    pub fn requeue_draft(&self, id: usize, accepted: usize) -> Option<CacheEntry> {
+        self.latest(id).map(|mut e| {
+            e.response.truncate(accepted);
+            e.logps.truncate(accepted);
+            CacheEntry::requeue_draft(e.response, e.logps)
+        })
     }
 
     /// Insert a fresh rollout, demoting the current latest to `previous`,
@@ -944,6 +969,26 @@ mod tests {
         c.insert(1, entry(&[2], 11));
         assert_eq!(c.latest(1).unwrap().version, 11);
         assert_eq!(c.previous(1).unwrap().version, 10);
+    }
+
+    #[test]
+    fn requeue_draft_truncates_latest_from_the_trie() {
+        let mut c = RolloutCache::new();
+        c.insert(3, entry_lp(&[5, 6, 7, 8], &[-0.1, -0.2, -0.3, -0.4], 9));
+        let d = c.requeue_draft(3, 2).expect("cached id");
+        assert_eq!(d.response, vec![5, 6]);
+        assert_eq!(d.logps, vec![-0.1, -0.2]);
+        // Shaped as CacheEntry::requeue_draft: synthetic version, unfinished.
+        assert_eq!(d.version, 0);
+        assert!(!d.finished);
+        // Matches the direct constructor over the harvested prefix.
+        let direct = CacheEntry::requeue_draft(vec![5, 6], vec![-0.1, -0.2]);
+        assert_eq!(d.response, direct.response);
+        assert_eq!(d.logps, direct.logps);
+        // Truncation past the cached length keeps the whole trajectory;
+        // an id never cached yields None.
+        assert_eq!(c.requeue_draft(3, 10).unwrap().response, vec![5, 6, 7, 8]);
+        assert!(c.requeue_draft(99, 1).is_none());
     }
 
     #[test]

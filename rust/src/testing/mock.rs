@@ -164,7 +164,9 @@ impl MockBuf {
 pub struct MockCounters {
     /// Dims of every host→device upload, in order.
     pub uploads: Vec<Vec<usize>>,
-    /// Entry names of every call, in order.
+    /// Entry names of every call, in order. Only *executed* forwards are
+    /// logged: a call killed by an armed [`FaultPlan`] fails before it
+    /// runs and leaves no trace here.
     pub calls: Vec<String>,
     /// Prompt-region signature of every row seated on this engine (via
     /// `prefill`, `refill`, or `verify_seat`), in seating order. With
@@ -172,6 +174,58 @@ pub struct MockCounters {
     /// the steal tests assert no signature ever appears on two engines —
     /// the lifecycle-pinning invariant made observable.
     pub seated: Vec<Vec<i32>>,
+    /// [`MockCounters::seated`] with the seating entry attached:
+    /// `(entry name, prompt signature)` per seated row, in order. The
+    /// chaos property tests use this to tell a row seated on a live
+    /// engine from one stranded on a dead engine when a requeued task
+    /// legitimately appears on two engines across a recovery
+    /// (`ARCHITECTURE.md` §13).
+    pub seats: Vec<(String, Vec<i32>)>,
+}
+
+/// One injected backend failure, armed on a [`MockEngine`] via
+/// [`MockEngine::arm_faults`] (`ARCHITECTURE.md` §13). A tripped plan
+/// makes `execute` bail *before* the forward runs — the mock analog of a
+/// transport error killing an RPC before the remote applies it — so the
+/// engine's functional state (the last completed gen blob held by the
+/// caller) is unchanged, exactly like a real idempotent backend.
+///
+/// Triggers are OR-ed: the plan trips at the `at_call`-th executed
+/// device call (0-based, this engine's whole lifetime as counted by
+/// `MockCounters::calls`) and/or at the first call of entry `at_entry`
+/// (the lifecycle-phase knob: `prefill`/`verify_seat`/`decode`/`refill`
+/// /`read_gen`/`read_step` pin the Draft/Verify/Decode/Done boundaries).
+/// A non-sticky plan disarms after tripping once — later calls succeed,
+/// modeling a transient blip; a `sticky` plan keeps failing every
+/// subsequent call, modeling a dead host.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Fail the call whose 0-based executed-call index equals this.
+    pub at_call: Option<usize>,
+    /// Fail the first call of this entry name.
+    pub at_entry: Option<String>,
+    /// Keep failing every call after the first trip.
+    pub sticky: bool,
+    /// Set once the plan has tripped (drives sticky persistence).
+    tripped: bool,
+}
+
+impl FaultPlan {
+    /// Trip at the `n`-th executed device call (0-based).
+    pub fn at_call(n: usize) -> FaultPlan {
+        FaultPlan { at_call: Some(n), ..FaultPlan::default() }
+    }
+
+    /// Trip at the first call of `entry`.
+    pub fn at_entry(entry: &str) -> FaultPlan {
+        FaultPlan { at_entry: Some(entry.to_string()), ..FaultPlan::default() }
+    }
+
+    /// Same plan, sticky: every call after the trip fails too.
+    pub fn sticky(mut self) -> FaultPlan {
+        self.sticky = true;
+        self
+    }
 }
 
 /// Deterministic mock rollout backend.
@@ -181,6 +235,8 @@ pub struct MockEngine {
     /// larger = shorter, more length-skewed rollouts.
     pub eos_bias: f32,
     counters: RefCell<MockCounters>,
+    /// Armed fault injection (None = healthy engine).
+    faults: RefCell<Option<FaultPlan>>,
     /// Shared host timeline (None = no latency model, all costs zero).
     clock: Option<Rc<VirtualClock>>,
     /// This engine's device timeline: virtual time its last forward ends.
@@ -195,6 +251,7 @@ impl MockEngine {
             shape: BatchShape { batch, prompt_len, total_len, vocab },
             eos_bias: 0.6,
             counters: RefCell::new(MockCounters::default()),
+            faults: RefCell::new(None),
             clock: None,
             busy: Cell::new(0.0),
             busy_secs: Cell::new(0.0),
@@ -323,11 +380,47 @@ impl MockEngine {
         self.counters.borrow().seated.clone()
     }
 
-    /// Record the prompt signature of a row being seated.
-    fn trace_seat(&self, tokens: &[i32], valid: &[f32], r: usize) {
+    /// Arm (or, with `None`-equivalent semantics via a fresh default
+    /// plan, effectively disarm) fault injection on this engine. The
+    /// plan applies to all subsequent entry calls; see [`FaultPlan`].
+    pub fn arm_faults(&self, plan: FaultPlan) {
+        *self.faults.borrow_mut() = Some(plan);
+    }
+
+    /// Remove any armed [`FaultPlan`].
+    pub fn clear_faults(&self) {
+        *self.faults.borrow_mut() = None;
+    }
+
+    /// Bail if the armed [`FaultPlan`] says this call must die. Runs
+    /// before the forward executes or is logged, so a killed call leaves
+    /// no trace in [`MockCounters::calls`] and no state change anywhere —
+    /// retrying it (or requeueing its work) can never double-apply.
+    fn fault_check(&self, entry: &str) -> Result<()> {
+        let mut slot = self.faults.borrow_mut();
+        let Some(plan) = slot.as_mut() else { return Ok(()) };
+        let n_exec = self.counters.borrow().calls.len();
+        let hit = plan.tripped
+            || plan.at_call == Some(n_exec)
+            || plan.at_entry.as_deref() == Some(entry);
+        if !hit {
+            return Ok(());
+        }
+        if plan.sticky {
+            plan.tripped = true;
+        } else {
+            *slot = None;
+        }
+        bail!("injected fault: entry '{entry}' killed at executed-call index {n_exec}")
+    }
+
+    /// Record the prompt signature of a row being seated by `entry`.
+    fn trace_seat(&self, entry: &str, tokens: &[i32], valid: &[f32], r: usize) {
         let sig = self.prompt_of(tokens, valid, r);
         if !sig.is_empty() {
-            self.counters.borrow_mut().seated.push(sig);
+            let mut c = self.counters.borrow_mut();
+            c.seated.push(sig.clone());
+            c.seats.push((entry.to_string(), sig));
         }
     }
 
@@ -495,6 +588,7 @@ impl MockEngine {
     /// `submit_entry` only reserves time on this engine's device
     /// timeline and leaves the host free to submit elsewhere.
     fn execute(&self, entry: &str, args: &[&MockBuf]) -> Result<MockBuf> {
+        self.fault_check(entry)?;
         self.counters.borrow_mut().calls.push(entry.to_string());
         let (b, t) = (self.shape.batch, self.shape.total_len);
         match entry {
@@ -507,7 +601,7 @@ impl MockEngine {
                 ensure!(args[2].dims() == [b, t], "prefill: valid dims {:?}", args[2].dims());
                 ensure!(args[3].dims() == [b], "prefill: last dims {:?}", args[3].dims());
                 for r in 0..b {
-                    self.trace_seat(tokens, valid, r);
+                    self.trace_seat("prefill", tokens, valid, r);
                 }
                 let rows = (0..b).map(|r| self.row_from_layout(tokens, valid, r)).collect();
                 Ok(MockBuf::Gen(GenState {
@@ -555,7 +649,7 @@ impl MockEngine {
                 ensure!(args[5].dims() == [b], "refill: last dims {:?}", args[5].dims());
                 for r in 0..b {
                     if rowmask[r] > 0.5 {
-                        self.trace_seat(tokens, valid, r);
+                        self.trace_seat("refill", tokens, valid, r);
                         gen.rows[r] = self.row_from_layout(tokens, valid, r);
                     }
                 }
@@ -645,7 +739,7 @@ impl MockEngine {
                     if rowmask[r] <= 0.5 {
                         continue;
                     }
-                    self.trace_seat(tokens, valid, r);
+                    self.trace_seat("verify_seat", tokens, valid, r);
                     let (n_acc, _) = self.accept_row(tokens, valid, r, lp_prev, un, dv, ll);
                     // seat the accepted prefix: the mock analog of reusing
                     // the verify forward's KV under a truncated valid mask
@@ -944,6 +1038,78 @@ mod tests {
         let t1 = Backend::virtual_now(m).unwrap();
         assert!((t1 - t0 - 3.0).abs() < 1e-9, "prefill 2.0 + decode 1.0: {}", t1 - t0);
         assert_eq!(gen2.gen().unwrap().rows[0].toks, vec![BOS, 5, 7]);
+    }
+
+    #[test]
+    fn fault_plan_kills_the_indexed_call_without_logging_it() {
+        let m = MockEngine::new(1, 2, 4, 8);
+        let blob = m.blob();
+        let tok = m.upload_i32(&[BOS, 5, 0, 0], &[1, 4]).unwrap();
+        let val = m.upload_f32(&[1.0, 1.0, 0.0, 0.0], &[1, 4]).unwrap();
+        let last = m.upload_i32(&[1], &[1]).unwrap();
+        let temp = m.upload_f32(&[1.0], &[1]).unwrap();
+        let h = m.resolve("x", "prefill").unwrap();
+        let args = [&blob, &tok, &val, &last, &temp];
+        m.arm_faults(FaultPlan::at_call(1));
+        m.call_entry(&h, &args).unwrap(); // call 0 executes
+        let err = m.call_entry(&h, &args).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        // the killed call is not in the executed log; a non-sticky plan
+        // disarms after one trip, so the retry goes through
+        assert_eq!(m.calls_of("prefill"), 1);
+        m.call_entry(&h, &args).unwrap();
+        assert_eq!(m.calls_of("prefill"), 2);
+    }
+
+    #[test]
+    fn fault_plan_entry_trigger_and_sticky_persistence() {
+        let m = MockEngine::new(1, 2, 4, 8);
+        let blob = m.blob();
+        let tok = m.upload_i32(&[BOS, 5, 0, 0], &[1, 4]).unwrap();
+        let val = m.upload_f32(&[1.0, 1.0, 0.0, 0.0], &[1, 4]).unwrap();
+        let last = m.upload_i32(&[1], &[1]).unwrap();
+        let temp = m.upload_f32(&[1.0], &[1]).unwrap();
+        let hp = m.resolve("x", "prefill").unwrap();
+        let hr = m.resolve("x", "read_gen").unwrap();
+        m.arm_faults(FaultPlan::at_entry("read_gen").sticky());
+        // other entries are untouched until the trigger entry is called
+        let gen = m.call_entry(&hp, &[&blob, &tok, &val, &last, &temp]).unwrap();
+        assert!(m.call_entry(&hr, &[&gen]).is_err(), "trigger entry dies");
+        // sticky: every later call fails too, whatever the entry
+        assert!(m.call_entry(&hp, &[&blob, &tok, &val, &last, &temp]).is_err());
+        assert_eq!(m.calls_of("prefill"), 1);
+        assert_eq!(m.calls_of("read_gen"), 0);
+        m.clear_faults();
+        m.call_entry(&hp, &[&blob, &tok, &val, &last, &temp]).unwrap();
+        assert_eq!(m.calls_of("prefill"), 2);
+    }
+
+    #[test]
+    fn seats_attribute_rows_to_their_seating_entry() {
+        let m = MockEngine::new(2, 2, 6, 8);
+        let blob = m.blob();
+        let tokens = m.upload_i32(&[0, 1, 3, 0, 0, 0, 0, 1, 4, 0, 0, 0], &[2, 6]).unwrap();
+        let valid = m
+            .upload_f32(&[0., 1., 1., 0., 0., 0., 0., 1., 1., 0., 0., 0.], &[2, 6])
+            .unwrap();
+        let last = m.upload_i32(&[2, 2], &[2]).unwrap();
+        let temp = m.upload_f32(&[1.0], &[1]).unwrap();
+        let hp = m.resolve("x", "prefill").unwrap();
+        let gen = m.call_entry(&hp, &[&blob, &tokens, &valid, &last, &temp]).unwrap();
+        // refill only row 1
+        let rm = m.upload_f32(&[0.0, 1.0], &[2]).unwrap();
+        let hf = m.resolve("x", "refill").unwrap();
+        m.call_entry(&hf, &[&blob, &gen, &tokens, &valid, &rm, &last, &temp]).unwrap();
+        let seats = m.counters().seats;
+        assert_eq!(seats.len(), 3, "2 prefill rows + 1 refilled row");
+        assert_eq!(seats[0], ("prefill".to_string(), vec![1, 3]));
+        assert_eq!(seats[1], ("prefill".to_string(), vec![1, 4]));
+        assert_eq!(seats[2], ("refill".to_string(), vec![1, 4]));
+        // seated stays the entry-less view of the same trace
+        assert_eq!(
+            m.seated_rows(),
+            seats.iter().map(|(_, s)| s.clone()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -57,6 +57,7 @@ pub const STEP_COLUMNS: &[&str] = &[
     "step", "epoch", "reward", "tokens_new", "tokens_reused", "tokens_cum",
     "prefix_len", "full_reuse", "drafts", "gen_rounds", "verify_calls",
     "shards", "device_calls", "shard_calls_max", "shard_calls_min", "steal_count",
+    "shard_failures", "requeued_tasks",
     "overlap_makespan", "serial_makespan", "readback_bytes", "upload_bytes",
     "cache_tokens", "cache_nodes", "cache_shared_tokens",
     "cache_evictions", "cache_evicted_tokens",
@@ -427,6 +428,11 @@ impl<'e> Trainer<'e> {
         rec.insert("shard_calls_max", shard_calls.iter().copied().max().unwrap_or(0) as f64);
         rec.insert("shard_calls_min", shard_calls.iter().copied().min().unwrap_or(0) as f64);
         rec.insert("steal_count", spec_stats_acc.steal_count as f64);
+        // Shard failure recovery (ARCHITECTURE.md §13): dead shards this
+        // step and the once-seated rows requeued onto survivors. Both
+        // stay 0 on healthy pools.
+        rec.insert("shard_failures", spec_stats_acc.shard_failures as f64);
+        rec.insert("requeued_tasks", spec_stats_acc.requeued_tasks as f64);
         // Virtual-clock overlap accounting (ARCHITECTURE.md §11): zero on
         // real devices, populated when the pool runs on clocked mocks.
         rec.insert("overlap_makespan", spec_stats_acc.overlap_makespan);

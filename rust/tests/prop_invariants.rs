@@ -5,12 +5,17 @@
 //! cache, advantage computation, samplers, lenience, diversity metrics.
 
 use spec_rl::algo;
+use spec_rl::benchkit::stale;
 use spec_rl::metrics;
-use spec_rl::rollout::{BatchLayout, SeqTask};
+use spec_rl::rollout::{
+    BatchLayout, EnginePool, PipelineStats, Placement, RolloutEngine, SampleCfg, SeqResult,
+    SeqTask,
+};
 use spec_rl::spec::{CacheEntry, Lenience, RolloutCache};
-use spec_rl::testing::{forall, tokens};
+use spec_rl::testing::mock::{FaultPlan, MockEngine};
+use spec_rl::testing::{forall, forall_ok, tokens};
 use spec_rl::tokenizer::{Tokenizer, BOS, EOS};
-use spec_rl::util::{sample_top_p, Rng};
+use spec_rl::util::{sample_top_p, Rng, StageTimer};
 
 const P: usize = 16;
 const T: usize = 64;
@@ -273,6 +278,153 @@ fn prop_rouge_symmetric() {
             (f - g).abs() < 1e-12 && (0.0..=1.0 + 1e-12).contains(&f)
         },
     );
+}
+
+// ---------------------------------------------------------------------------
+// chaos schedules: shard failure under random fault plans (ARCHITECTURE.md §13)
+// ---------------------------------------------------------------------------
+
+/// Geometry for the chaos property: 4 slots per shard over the small
+/// sched-test bundle shape, `eos_bias = 0` so rejected rows decode to the
+/// cap (maximum seated lifetime for a fault to interrupt).
+const CB: usize = 4;
+const CP: usize = 8;
+const CT: usize = 16;
+const CV: usize = 16;
+/// Step RNG seed shared by the chaos run and its single-shard oracle: the
+/// §6 contract keys every stream off (nonce, task id), so byte-identity
+/// across pool shapes only needs the same step seed.
+const CHAOS_STEP_SEED: u64 = 23;
+
+#[derive(Debug)]
+struct ChaosCase {
+    shards: usize,
+    placement: Placement,
+    fault_shard: usize,
+    plan: FaultPlan,
+    n_tasks: usize,
+    draft_len: usize,
+    lenience: f32,
+}
+
+fn chaos_case(rng: &mut Rng) -> ChaosCase {
+    let shards = 2 + rng.below(3); // 2..=4
+    let placement = if rng.f32() < 0.5 { Placement::Steal } else { Placement::Static };
+    // Any entry the pool path can issue. A plan that never trips (entry
+    // unused on the armed shard, or call index past its traffic) is a
+    // healthy run and must satisfy the same invariants with zero failures.
+    const ENTRIES: [&str; 6] =
+        ["prefill", "refill", "verify_seat", "decode", "sample", "read_step"];
+    let plan = match rng.below(3) {
+        0 => FaultPlan::at_call(rng.below(120)).sticky(),
+        1 => FaultPlan::at_entry(ENTRIES[rng.below(ENTRIES.len())]).sticky(),
+        // Transient: trips once, then the host heals — the pool still
+        // declares the shard dead (fail-fast policy, §13) and recovery
+        // must behave identically.
+        _ => FaultPlan::at_call(rng.below(120)),
+    };
+    ChaosCase {
+        shards,
+        placement,
+        fault_shard: rng.below(shards),
+        plan,
+        n_tasks: 6 + rng.below(31),  // 6..=36: stale prompts stay per-id unique
+        draft_len: 2 + rng.below(5), // 2..=6 at gen_len 8
+        lenience: -0.8 * rng.f32(),
+    }
+}
+
+/// One drafted pool step with the case's fault armed on one shard.
+fn chaos_run(c: &ChaosCase) -> (Vec<SeqResult>, PipelineStats, Vec<MockEngine>) {
+    let mut mocks = MockEngine::replicas(c.shards, CB, CP, CT, CV);
+    for m in &mut mocks {
+        m.eos_bias = 0.0;
+    }
+    mocks[c.fault_shard].arm_faults(c.plan.clone());
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+    let mut spec =
+        stale::warmed(c.n_tasks, c.draft_len, CV, c.lenience).with_placement(c.placement);
+    let mut rng = Rng::new(CHAOS_STEP_SEED);
+    let mut timer = StageTimer::new();
+    let reqs = stale::requests(c.n_tasks, CV);
+    let (res, stats) = spec
+        .collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    (res, stats, mocks)
+}
+
+/// The blocking single-shard two-phase oracle on the same workload.
+fn chaos_oracle(c: &ChaosCase) -> Vec<SeqResult> {
+    let mut mocks = MockEngine::replicas(1, CB, CP, CT, CV);
+    mocks[0].eos_bias = 0.0;
+    let blob = mocks[0].blob();
+    let mut eng = RolloutEngine::new(&mocks[0], "mock").unwrap();
+    let mut spec = stale::warmed(c.n_tasks, c.draft_len, CV, c.lenience);
+    let mut rng = Rng::new(CHAOS_STEP_SEED);
+    let mut timer = StageTimer::new();
+    let reqs = stale::requests(c.n_tasks, CV);
+    let (res, _) = spec
+        .run_two_phase(&mut eng, &blob, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    res
+}
+
+/// Chaos schedules (ARCHITECTURE.md §13): under a random [`FaultPlan`] on
+/// a random shard — any phase, sticky or transient, sometimes never
+/// tripping at all — the step still completes byte-identical to the
+/// single-shard two-phase oracle (so no task is lost and none completes
+/// twice), and no row is ever seated on two engines that both survived.
+#[test]
+fn prop_chaos_faults_lose_nothing_and_never_double_seat() {
+    // CI's chaos smoke job sweeps this seed (CHAOS_SEED=n); the default
+    // keeps local runs deterministic.
+    let seed = std::env::var("CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(114);
+    forall_ok(seed, 24, chaos_case, |c| {
+        let (res, stats, mocks) = chaos_run(c);
+        let oracle = chaos_oracle(c);
+
+        // exactly-once completion with pinned outputs: byte-identical to
+        // the no-pool oracle whether or not the fault tripped
+        if res.len() != oracle.len() {
+            return Err(format!("{} results, oracle has {}", res.len(), oracle.len()));
+        }
+        for (x, y) in res.iter().zip(&oracle) {
+            let same = x.id == y.id
+                && x.response == y.response
+                && x.logps == y.logps
+                && (x.reused, x.new_tokens, x.finished)
+                    == (y.reused, y.new_tokens, y.finished);
+            if !same {
+                return Err(format!("id {} diverged from the oracle", x.id));
+            }
+        }
+
+        // only the armed shard can die; a healthy step requeues nothing
+        if stats.shard_failures > 1 {
+            return Err(format!("{} shard failures from one armed plan", stats.shard_failures));
+        }
+        if stats.shard_failures == 0 && stats.requeued_tasks != 0 {
+            return Err(format!("{} tasks requeued with no failure", stats.requeued_tasks));
+        }
+
+        // seat attribution (MockCounters::seats): among surviving engines
+        // every row signature is unique — a requeued row may re-seat on a
+        // survivor only because its first seat was on the engine that died
+        let dead = (stats.shard_failures > 0).then_some(c.fault_shard);
+        let mut live_seats: Vec<Vec<i32>> = mocks
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| Some(*i) != dead)
+            .flat_map(|(_, m)| m.seated_rows())
+            .collect();
+        live_seats.sort();
+        if let Some(w) = live_seats.windows(2).find(|w| w[0] == w[1]) {
+            return Err(format!("row {:?} seated on two live engines", w[0]));
+        }
+        Ok(())
+    });
 }
 
 /// Terminal prefixes (EOS-ended or full-length) never enter decoding.

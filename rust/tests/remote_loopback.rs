@@ -1,0 +1,319 @@
+//! Remote-backend conformance over the loopback transport
+//! (`ARCHITECTURE.md` §13): `RemoteBackend<Loopback<MockEngine>>` must be
+//! indistinguishable from driving the wrapped `MockEngine` directly —
+//! byte-identical rollout outputs across every reuse variant and shard
+//! count, an identical call/upload trace on the wrapped engine, and the
+//! virtual-clock overlap accounting preserved through the wire. Injected
+//! transport faults (dropped acks, timeouts, a dead peer) must either be
+//! absorbed invisibly by the retry loop or surface as a clean shard
+//! failure the pool recovers from with every task finished exactly once.
+
+use spec_rl::benchkit::stale;
+use spec_rl::rollout::{EnginePool, PipelineStats, Placement, RolloutEngine, SampleCfg, SeqResult};
+use spec_rl::runtime::{Backend, Loopback, RemoteBackend, TransportFaults};
+use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::tokenizer::BOS;
+use spec_rl::util::{Rng, StageTimer};
+
+/// Pool geometry shared with the sched tests: 4 slots per shard over the
+/// small bundle shape.
+const B: usize = 4;
+const P: usize = 8;
+const T: usize = 16;
+const V: usize = 16;
+
+const STALE_LEN: usize = 5;
+const STALE_LENIENCE: f32 = -0.4;
+const STALE_SEED: u64 = 13;
+
+/// 11 requests over 4 slots (the sched-test workload): more tasks than
+/// slots forces mid-stream refills/seats.
+fn pipe_requests() -> Vec<RolloutRequest> {
+    (0..11)
+        .map(|i| RolloutRequest {
+            id: i,
+            prompt: vec![BOS, 3 + (i as i32 % 9), 4 + (i as i32 % 7)],
+        })
+        .collect()
+}
+
+/// Wrap each mock in its own loopback `RemoteBackend`.
+fn remotes_over(mocks: &[MockEngine]) -> Vec<RemoteBackend<Loopback<'_, MockEngine>>> {
+    mocks.iter().map(|m| RemoteBackend::new(Loopback::new(m))).collect()
+}
+
+/// The blocking two-phase oracle, driven on the backend directly.
+fn drive_oracle(variant: ReuseVariant, epochs: usize, seed: u64) -> Vec<Vec<SeqResult>> {
+    let mocks = MockEngine::replicas(1, B, P, T, V);
+    let blob = mocks[0].blob();
+    let mut eng = RolloutEngine::new(&mocks[0], "mock").unwrap();
+    let mut spec = SpecRollout::new(variant, Lenience::Fixed(-0.4));
+    let mut rng = Rng::new(seed);
+    let mut timer = StageTimer::new();
+    (0..epochs)
+        .map(|_| {
+            spec.run_two_phase(
+                &mut eng,
+                &blob,
+                &pipe_requests(),
+                SampleCfg::default(),
+                &mut rng,
+                &mut timer,
+            )
+            .unwrap()
+            .0
+        })
+        .collect()
+}
+
+/// The interleaved pipeline over `shards` loopback remotes.
+fn drive_remote(
+    variant: ReuseVariant,
+    shards: usize,
+    epochs: usize,
+    seed: u64,
+) -> Vec<Vec<SeqResult>> {
+    let mocks = MockEngine::replicas(shards, B, P, T, V);
+    let remotes = remotes_over(&mocks);
+    // the policy blob lives remotely too: upload once per shard, chain by
+    // handle from then on
+    let blobs: Vec<_> = remotes.iter().map(|r| r.upload_f32(&[0.0], &[1]).unwrap()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(remotes.iter(), "mock").unwrap();
+    let mut spec = SpecRollout::new(variant, Lenience::Fixed(-0.4));
+    let mut rng = Rng::new(seed);
+    let mut timer = StageTimer::new();
+    (0..epochs)
+        .map(|_| {
+            spec.collect(
+                &mut pool,
+                &blob_refs,
+                &pipe_requests(),
+                SampleCfg::default(),
+                &mut rng,
+                &mut timer,
+            )
+            .unwrap()
+            .0
+        })
+        .collect()
+}
+
+fn assert_same_results(a: &[SeqResult], b: &[SeqResult], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{tag}");
+        assert_eq!(x.response, y.response, "{tag} id {}", x.id);
+        assert_eq!(x.logps, y.logps, "{tag} id {}", x.id);
+        assert_eq!(
+            (x.reused, x.new_tokens, x.finished),
+            (y.reused, y.new_tokens, y.finished),
+            "{tag} id {}",
+            x.id
+        );
+    }
+}
+
+/// Acceptance criterion: with zero faults, the remote pool is
+/// byte-identical to the in-process two-phase oracle across all reuse
+/// variants × shards {1, 2, 4}. Epoch 0 fills the cache, epoch 1 drafts,
+/// epoch 2 exercises the Delayed variant's `previous` slot.
+#[test]
+fn remote_pool_matches_the_oracle_across_variants_and_shards() {
+    for variant in [
+        ReuseVariant::Off,
+        ReuseVariant::Spec,
+        ReuseVariant::Random,
+        ReuseVariant::Delayed,
+        ReuseVariant::Full,
+    ] {
+        let oracle = drive_oracle(variant, 3, 77);
+        for shards in [1usize, 2, 4] {
+            let remote = drive_remote(variant, shards, 3, 77);
+            for (epoch, (r, o)) in remote.iter().zip(&oracle).enumerate() {
+                assert_same_results(r, o, &format!("{variant:?} shards {shards} epoch {epoch}"));
+            }
+        }
+    }
+}
+
+/// One adversarial drafted step over `shards` loopback remotes, with
+/// optional transport faults armed on one shard after the blob uploads.
+fn remote_stale_run(
+    shards: usize,
+    placement: Placement,
+    faults: Option<(usize, TransportFaults)>,
+) -> (Vec<SeqResult>, PipelineStats, Vec<MockEngine>) {
+    let mut mocks = MockEngine::replicas(shards, B, P, T, V);
+    for m in &mut mocks {
+        m.eos_bias = 0.0;
+    }
+    let remotes = remotes_over(&mocks);
+    let blobs: Vec<_> = remotes.iter().map(|r| r.upload_f32(&[0.0], &[1]).unwrap()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    if let Some((shard, f)) = &faults {
+        remotes[*shard].transport().set_faults(f.clone());
+    }
+    let mut pool = EnginePool::new(remotes.iter(), "mock").unwrap();
+    let mut spec =
+        stale::warmed(stale::N_TASKS, STALE_LEN, V, STALE_LENIENCE).with_placement(placement);
+    let mut rng = Rng::new(STALE_SEED);
+    let mut timer = StageTimer::new();
+    let reqs = stale::requests(stale::N_TASKS, V);
+    let (res, stats) = spec
+        .collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    drop(pool);
+    drop(remotes);
+    (res, stats, mocks)
+}
+
+/// The same step on a single in-process engine (continuous path), for
+/// call-trace comparison.
+fn direct_stale_run(placement: Placement) -> (Vec<SeqResult>, MockEngine) {
+    let mut mocks = MockEngine::replicas(1, B, P, T, V);
+    mocks[0].eos_bias = 0.0;
+    let blob = mocks[0].blob();
+    let mut pool = EnginePool::single(&mocks[0], "mock").unwrap();
+    let mut spec =
+        stale::warmed(stale::N_TASKS, STALE_LEN, V, STALE_LENIENCE).with_placement(placement);
+    let mut rng = Rng::new(STALE_SEED);
+    let mut timer = StageTimer::new();
+    let reqs = stale::requests(stale::N_TASKS, V);
+    let (res, _) = spec
+        .collect(&mut pool, &[&blob], &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    drop(pool);
+    (res, mocks.remove(0))
+}
+
+/// Every entry the rollout layer issues round-trips through the wire
+/// without the wrapped engine being able to tell: the *exact* call and
+/// upload traces match the in-process run, op for op.
+#[test]
+fn wrapped_engine_sees_an_identical_trace_through_the_wire() {
+    let (direct_res, direct_mock) = direct_stale_run(Placement::Steal);
+    let (remote_res, _, remote_mocks) = remote_stale_run(1, Placement::Steal, None);
+    assert_same_results(&remote_res, &direct_res, "remote vs direct, 1 shard");
+
+    let d = direct_mock.counters();
+    let r = remote_mocks[0].counters();
+    // the remote side uploads the blob itself (the direct run reuses
+    // `blob()` without an upload); everything after is identical
+    assert_eq!(r.uploads[0], vec![1], "first remote upload is the blob");
+    assert_eq!(r.uploads[1..], d.uploads[..], "upload dims trace diverged");
+    assert_eq!(r.calls, d.calls, "entry call trace diverged");
+    assert_eq!(r.seated, d.seated, "seat trace diverged");
+
+    // the trace actually covers the decode contract's entries
+    for entry in ["verify_seat", "decode", "sample", "read_step"] {
+        assert!(
+            d.calls.iter().any(|c| c == entry),
+            "workload never exercised '{entry}' — the trace comparison is vacuous"
+        );
+    }
+}
+
+/// Submit/complete overlap survives the wire: on shared-virtual-clock
+/// replicas the remote pool realizes the same makespans as the in-process
+/// pool — overlapped strictly below serialized — because loopback submits
+/// only enqueue on the wrapped backend and forward its clock verbatim.
+#[test]
+fn virtual_clock_overlap_accounting_survives_the_wire() {
+    fn clocked(shards: usize, remote: bool) -> PipelineStats {
+        let mut mocks = MockEngine::clocked_replicas(shards, B, P, T, V);
+        for m in &mut mocks {
+            m.eos_bias = 0.0;
+        }
+        let mut spec = stale::warmed(stale::N_TASKS, STALE_LEN, V, STALE_LENIENCE)
+            .with_placement(Placement::Steal);
+        let mut rng = Rng::new(STALE_SEED);
+        let mut timer = StageTimer::new();
+        let reqs = stale::requests(stale::N_TASKS, V);
+        if remote {
+            let remotes = remotes_over(&mocks);
+            let blobs: Vec<_> =
+                remotes.iter().map(|r| r.upload_f32(&[0.0], &[1]).unwrap()).collect();
+            let blob_refs: Vec<_> = blobs.iter().collect();
+            let mut pool = EnginePool::new(remotes.iter(), "mock").unwrap();
+            spec.collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+                .unwrap()
+                .1
+        } else {
+            let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+            let blob_refs: Vec<_> = blobs.iter().collect();
+            let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+            spec.collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+                .unwrap()
+                .1
+        }
+    }
+    for shards in [2usize, 4] {
+        let wire = clocked(shards, true);
+        let direct = clocked(shards, false);
+        assert!(
+            wire.overlap_makespan > 0.0 && wire.overlap_makespan < wire.serial_makespan,
+            "{shards} shards: remote pool lost the overlap ({wire:?})"
+        );
+        assert!(
+            (wire.overlap_makespan - direct.overlap_makespan).abs() < 1e-9
+                && (wire.serial_makespan - direct.serial_makespan).abs() < 1e-9,
+            "{shards} shards: makespans diverged through the wire \
+             (wire {}/{}, direct {}/{})",
+            wire.overlap_makespan,
+            wire.serial_makespan,
+            direct.overlap_makespan,
+            direct.serial_makespan
+        );
+    }
+}
+
+/// Transient wire trouble — a dropped submit ack and a timed-out
+/// complete — is absorbed by the ticketed retry loop: outputs stay
+/// byte-identical, no shard failure is declared, and the wrapped engines
+/// execute exactly the same forwards (nothing double-applied).
+#[test]
+fn transient_transport_faults_are_invisible_end_to_end() {
+    let (clean_res, clean_stats, clean_mocks) = remote_stale_run(2, Placement::Steal, None);
+    assert_eq!(clean_stats.shard_failures, 0);
+    let faults = TransportFaults {
+        drop_submit_ack_at: Some(6),
+        timeout_complete_at: Some(4),
+        ..Default::default()
+    };
+    let (res, stats, mocks) = remote_stale_run(2, Placement::Steal, Some((0, faults)));
+    assert_same_results(&res, &clean_res, "transient faults vs clean");
+    assert_eq!(stats.shard_failures, 0, "retries must absorb transient faults");
+    assert_eq!(stats.requeued_tasks, 0);
+    for (i, (m, c)) in mocks.iter().zip(&clean_mocks).enumerate() {
+        assert_eq!(
+            m.counters().calls,
+            c.counters().calls,
+            "shard {i}: retried ops must not double-apply forwards"
+        );
+    }
+}
+
+/// A dead remote peer exhausts the retry budget, surfaces as a shard
+/// failure, and the pool recovers on the survivor: every task finishes
+/// exactly once, byte-identical to the in-process run.
+#[test]
+fn dead_remote_peer_recovers_with_every_task_exactly_once() {
+    let (clean_res, _, _) = remote_stale_run(2, Placement::Steal, None);
+    // cut the peer at two depths: immediately after the blob upload
+    // (death during seating) and mid-step (death with seated rows)
+    for dead_from in [0usize, 37] {
+        let faults = TransportFaults { dead_from_op: Some(dead_from), ..Default::default() };
+        let (res, stats, _) = remote_stale_run(2, Placement::Steal, Some((1, faults.clone())));
+        assert_same_results(&res, &clean_res, &format!("dead peer at op {dead_from}"));
+        assert_eq!(stats.shard_failures, 1, "dead_from={dead_from}: {stats:?}");
+        let ids: Vec<usize> = res.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..stale::N_TASKS).collect::<Vec<_>>(), "dead_from={dead_from}");
+
+        // static placement recovers identically
+        let (sres, sstats, _) = remote_stale_run(2, Placement::Static, Some((1, faults)));
+        assert_same_results(&sres, &clean_res, &format!("static, dead peer at op {dead_from}"));
+        assert_eq!(sstats.shard_failures, 1);
+    }
+}

@@ -12,7 +12,7 @@ use spec_rl::rollout::{
     EnginePool, PipelineStats, Placement, RolloutEngine, SampleCfg, SeqResult, SeqTask,
 };
 use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
-use spec_rl::testing::mock::MockEngine;
+use spec_rl::testing::mock::{FaultPlan, MockEngine};
 use spec_rl::tokenizer::{BOS, EOS};
 use spec_rl::util::{Rng, StageTimer};
 
@@ -1142,6 +1142,137 @@ fn device_sampling_is_byte_identical_to_host_and_cuts_readback() {
                 assert!(a.upload_bytes > 0, "{tag}: uploads must be accounted");
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shard-failure recovery: the chaos matrix (ARCHITECTURE.md §13)
+// ---------------------------------------------------------------------------
+
+/// [`stale_collect`] with a [`FaultPlan`] armed on one shard before the
+/// step runs. The pool must mark that shard dead at the injected error,
+/// requeue its work, and finish on the survivors.
+fn stale_collect_chaos(
+    shards: usize,
+    placement: Placement,
+    fault_shard: usize,
+    plan: FaultPlan,
+) -> (Vec<SeqResult>, PipelineStats, Vec<MockEngine>) {
+    let mocks = stale_mocks(shards);
+    mocks[fault_shard].arm_faults(plan);
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+    let mut spec = stale::warmed(stale::N_TASKS, STALE_LEN, V, STALE_LENIENCE)
+        .with_placement(placement);
+    let mut rng = Rng::new(STALE_SEED);
+    let mut timer = StageTimer::new();
+    let (res, stats) = spec
+        .collect(
+            &mut pool,
+            &blob_refs,
+            &stale::requests(stale::N_TASKS, V),
+            SampleCfg::default(),
+            &mut rng,
+            &mut timer,
+        )
+        .unwrap();
+    (res, stats, mocks)
+}
+
+#[test]
+fn chaos_matrix_kills_every_phase_and_stays_pinned_to_the_oracle() {
+    // Shard death at every lifecycle boundary × shards {2, 4} × both
+    // placement disciplines, outputs pinned byte-identical to the
+    // single-shard two-phase oracle. The phase knobs (a sticky plan
+    // models a dead host — every call after the trip fails too):
+    //   - at_call(0): the shard dies on its very first device call, before
+    //     anything seats (the Draft-submission boundary);
+    //   - verify_seat: dies inside the Verify wave;
+    //   - decode: dies mid-Decode, with seated rows holding accepted
+    //     prefixes AND partially-decoded tails that must be discarded and
+    //     re-derived on a survivor (the §6 stream-replay case);
+    //   - read_step: dies at the Done-boundary readback after the forwards
+    //     ran.
+    // Recovery is deterministic because a requeued draft carries the
+    // original p_prev logps (`CacheEntry::requeue_draft`), so the
+    // survivor's re-verification replays the same uniforms over the same
+    // acceptance inputs, and the sample stream replays from draw 0.
+    let oracle = stale_oracle();
+    for shards in [2usize, 4] {
+        for placement in [Placement::Steal, Placement::Static] {
+            for (phase, plan) in [
+                ("first-call", FaultPlan::at_call(0).sticky()),
+                ("verify", FaultPlan::at_entry("verify_seat").sticky()),
+                ("decode", FaultPlan::at_entry("decode").sticky()),
+                ("readback", FaultPlan::at_entry("read_step").sticky()),
+            ] {
+                let (res, stats, mocks) =
+                    stale_collect_chaos(shards, placement, 1, plan);
+                let tag = format!("{placement:?} {shards} shards, kill at {phase}");
+                assert_same_results(&res, &oracle, &tag);
+                assert_eq!(
+                    stats.shard_failures, 1,
+                    "{tag}: exactly one shard death ({stats:?})"
+                );
+                // every result id appears exactly once (no task lost, none
+                // duplicated) — the oracle pin already implies it, but spell
+                // the invariant out
+                let ids: Vec<usize> = res.iter().map(|r| r.id).collect();
+                assert_eq!(ids, (0..stale::N_TASKS).collect::<Vec<_>>(), "{tag}");
+                // the dead shard seated nothing after its trip: its call log
+                // froze at the failure point
+                let dead_calls = mocks[1].counters().calls.len();
+                let (_, _, healthy_mocks) = stale_collect_chaos(
+                    shards,
+                    placement,
+                    1,
+                    FaultPlan::default(), // armed but trips nothing
+                );
+                assert!(
+                    dead_calls < healthy_mocks[1].counters().calls.len(),
+                    "{tag}: the fault never actually cut shard 1 short"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_with_zero_tripped_faults_is_byte_identical_to_the_healthy_run() {
+    // An armed-but-never-tripped plan must leave the step bit-for-bit
+    // equal to the unfaulted run: the fault check itself is free.
+    for placement in [Placement::Steal, Placement::Static] {
+        let (healthy, hs, _) = stale_collect(2, placement, 1);
+        let (armed, armed_stats, _) =
+            stale_collect_chaos(2, placement, 1, FaultPlan::at_call(usize::MAX));
+        assert_same_results(&armed, &healthy, &format!("{placement:?} armed-idle"));
+        assert_eq!(armed_stats.shard_failures, 0);
+        assert_eq!(armed_stats.requeued_tasks, 0);
+        assert_eq!(armed_stats.device_calls(), hs.device_calls(), "{placement:?}");
+    }
+}
+
+#[test]
+fn decode_phase_death_requeues_the_seated_rows() {
+    // A shard killed mid-Decode holds once-seated rows; the recovery path
+    // must requeue them (requeued_tasks > 0) and the survivors must seat
+    // them again — so across the whole run those task rows legitimately
+    // appear on two engines, but never on two LIVE engines (the property
+    // suite drills this with the seat-entry attribution).
+    for shards in [2usize, 4] {
+        let (res, stats, _) = stale_collect_chaos(
+            shards,
+            Placement::Steal,
+            1,
+            FaultPlan::at_entry("decode").sticky(),
+        );
+        assert_eq!(res.len(), stale::N_TASKS);
+        assert_eq!(stats.shard_failures, 1, "shards={shards}");
+        assert!(
+            stats.requeued_tasks > 0,
+            "shards={shards}: a mid-decode death strands seated rows ({stats:?})"
+        );
     }
 }
 
