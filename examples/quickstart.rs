@@ -55,9 +55,15 @@ fn sharded_mock_demo() -> Result<()> {
     // budget can bind on a 20-sequence demo — size a real run from the
     // `cache_tokens` CSV column (ARCHITECTURE.md §10). `with_group` keys
     // the trie by prompt so the group's samples intern one shared spine.
+    // `rollout.predict_len` (config) / `with_predict` (API) turns on
+    // predicted-length LPT seating: epoch 1 teaches the per-task EWMA
+    // each row's realized length, so epoch 2's queue seats the predicted
+    // stragglers first (ARCHITECTURE.md §14). Prediction only reorders
+    // work — outputs are byte-identical either way.
     let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.5))
         .with_cache_budget(Some(48))
-        .with_group(group);
+        .with_group(group)
+        .with_predict(true);
     let mut rng = Rng::new(42);
     let mut timer = StageTimer::new();
 
@@ -127,6 +133,20 @@ fn sharded_mock_demo() -> Result<()> {
     println!(
         "  trie: {} interned runs, {} tokens deduplicated by prefix sharing",
         s1.cache_nodes, s1.cache_shared_tokens
+    );
+    // §14 telemetry (the `predict_err` / `draft_len_mean` / `draft_len_max`
+    // / `draft_trunc` CSV columns): the error gauge is the mean
+    // |predicted − realized| length over rows that had an estimate when
+    // the step was scheduled, measured *before* this step's lengths fold
+    // into the EWMA; the draft-length columns summarize what the (here
+    // uncapped) draft clamp actually offered for verification.
+    println!(
+        "  predictor: mean |err|={:.2} tokens over {} scored rows",
+        s1.mean_predict_err, s1.predict_rows
+    );
+    println!(
+        "  drafts offered: mean len={:.1} max={} truncated-by-cap={}",
+        s1.mean_draft_len, s1.draft_len_hi, s1.draft_trunc
     );
     Ok(())
 }

@@ -1,0 +1,152 @@
+//! Long-tail scheduling bench: predicted-length LPT vs raw LPT on the
+//! heavy-tail workload (`benchkit::longtail`, ARCHITECTURE.md §14).
+//!
+//! Every draft spans the full generation region, so the raw LPT key
+//! (`draft_len`) is uninformative and the queue degenerates to id order —
+//! which on this workload seats the cheap suite blocks first and leaves
+//! the expensive last block straggling (a shortest-first schedule). The
+//! predicted run seeds a [`spec_rl::rollout::LenPredictor`] from the raw
+//! run's realized lengths/acceptances — exactly the prior-epoch signal
+//! the trainer has — which recovers true longest-remaining-first order.
+//!
+//! Asserts, on shared-virtual-clock replicas at `shards ∈ {2, 4}`:
+//! byte-identical outputs between the two runs (prediction only reorders
+//! seating; §6 RNG streams never see it) and a strictly lower
+//! `overlap_makespan` for the predicted run. One shard still asserts
+//! identity; its makespan win is not required (with few slots the drain
+//! order barely moves the critical path). Writes `BENCH_longtail.json`
+//! for machine diffing / the CI smoke run.
+
+use spec_rl::benchkit::{fmt_secs, longtail, Bench, JsonReport};
+use spec_rl::rollout::{EnginePool, SampleCfg, SeqResult};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::util::{Rng, StageTimer};
+
+fn main() {
+    let gen_len = longtail::T - longtail::P;
+    println!(
+        "== longtail bench (mock replicas: B={}/shard T={}, {} drafts, alpha={}, log l={}) ==",
+        longtail::B,
+        longtail::T,
+        longtail::N_TASKS,
+        longtail::ALPHA,
+        longtail::LOG_LENIENCE,
+    );
+    let bench = Bench::new(1, 8);
+    let mut j = JsonReport::new();
+    j.int("batch_per_shard", longtail::B)
+        .int("tasks", longtail::N_TASKS)
+        .int("gen_len", gen_len)
+        .num("alpha", longtail::ALPHA)
+        .num("log_lenience", longtail::LOG_LENIENCE as f64);
+
+    let mut baseline: Option<Vec<SeqResult>> = None;
+    println!("\nshards  raw makespan  predicted makespan  predict_err  wall-clock (median)");
+    for shards in [1usize, 2, 4] {
+        let mut mocks = MockEngine::clocked_replicas(
+            shards,
+            longtail::B,
+            longtail::P,
+            longtail::T,
+            longtail::V,
+        );
+        for m in &mut mocks {
+            // Deterministic full-length tails: every cut row decodes
+            // exactly to the cap, so remaining work is the crafted r_i.
+            m.eos_bias = 0.0;
+        }
+        let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        let cfg = SampleCfg::default();
+        let mut timer = StageTimer::new();
+
+        let mut run = |predict: bool, seed_from: Option<&[SeqResult]>| {
+            let mut spec = longtail::warmed(longtail::ALPHA, longtail::SEED, gen_len, longtail::V)
+                .with_predict(predict);
+            if let Some(prior) = seed_from {
+                // The prior-epoch feedback the trainer would have folded
+                // in: realized totals + per-draft acceptance.
+                for r in prior {
+                    spec.predictor.observe_len(r.id, r.response.len());
+                    spec.predictor.observe_acceptance(r.id, r.reused, gen_len);
+                }
+            }
+            let mut rng = Rng::new(longtail::SEED);
+            let reqs = longtail::requests(longtail::V);
+            spec.collect(&mut pool, &blob_refs, &reqs, cfg, &mut rng, &mut timer).unwrap()
+        };
+
+        let (raw_res, raw_stats) = run(false, None);
+        let (pred_res, pred_stats) = run(true, Some(&raw_res));
+
+        // outputs must be byte-identical across predictor settings AND
+        // shard counts (length first: zip alone would pass on a
+        // truncated result set)
+        assert_eq!(raw_res.len(), longtail::N_TASKS, "raw run dropped results");
+        assert_eq!(pred_res.len(), longtail::N_TASKS, "predicted run dropped results");
+        for (a, b) in raw_res.iter().zip(&pred_res) {
+            assert_eq!((a.id, &a.response), (b.id, &b.response), "prediction changed outputs");
+            assert_eq!(a.logps, b.logps, "prediction changed logps");
+        }
+        match &baseline {
+            None => baseline = Some(pred_res),
+            Some(base) => {
+                assert_eq!(base.len(), pred_res.len(), "shard count changed result count");
+                for (a, b) in base.iter().zip(&pred_res) {
+                    assert_eq!((a.id, &a.response), (b.id, &b.response), "shard count leaked");
+                    assert_eq!(a.logps, b.logps, "shard count leaked into logps");
+                }
+            }
+        }
+
+        // the seeded estimates are exact on this workload (every row
+        // realizes the cap), so the predictor-error gauge must read 0
+        assert_eq!(pred_stats.predict_rows, longtail::N_TASKS, "every row must be scored");
+        assert!(
+            pred_stats.mean_predict_err.abs() < 1e-9,
+            "seeded estimates should be exact, err={}",
+            pred_stats.mean_predict_err
+        );
+
+        let raw_mk = raw_stats.overlap_makespan;
+        let pred_mk = pred_stats.overlap_makespan;
+        assert!(raw_mk > 0.0 && pred_mk > 0.0, "clocked replicas must report makespans");
+        if shards > 1 {
+            assert!(
+                pred_mk < raw_mk,
+                "{shards} shards: predicted LPT must strictly tighten the makespan \
+                 ({pred_mk} !< {raw_mk})"
+            );
+        }
+
+        let r_time = bench.run(&format!("predicted pipeline over {shards} shard(s)"), || {
+            let mut spec = longtail::warmed(longtail::ALPHA, longtail::SEED, gen_len, longtail::V)
+                .with_predict(true);
+            for r in &raw_res {
+                spec.predictor.observe_len(r.id, r.response.len());
+                spec.predictor.observe_acceptance(r.id, r.reused, gen_len);
+            }
+            let mut rng = Rng::new(longtail::SEED);
+            let reqs = longtail::requests(longtail::V);
+            spec.collect(&mut pool, &blob_refs, &reqs, cfg, &mut rng, &mut timer).unwrap()
+        });
+
+        println!(
+            "{shards:>6}  {raw_mk:>12.3}  {pred_mk:>18.3}  {:>11.3}  {:>19}",
+            pred_stats.mean_predict_err,
+            fmt_secs(r_time.median_secs)
+        );
+        j.num(&format!("s{shards}_raw_makespan"), raw_mk)
+            .num(&format!("s{shards}_predicted_makespan"), pred_mk)
+            .num(&format!("s{shards}_makespan_ratio"), pred_mk / raw_mk)
+            .num(&format!("s{shards}_predict_err"), pred_stats.mean_predict_err)
+            .num(&format!("s{shards}_mean_draft_len"), pred_stats.mean_draft_len)
+            .bench(&format!("s{shards}"), &r_time);
+    }
+
+    println!("\n{}", j.render());
+    if let Err(e) = j.save("BENCH_longtail.json") {
+        eprintln!("could not write BENCH_longtail.json: {e}");
+    }
+}

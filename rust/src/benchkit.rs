@@ -258,6 +258,122 @@ pub mod grouped {
     }
 }
 
+/// The **heavy-tail** workload: drafted steps whose *remaining* decode
+/// work follows a Pareto-ish distribution with a controllable tail
+/// index, the regime long-tail-aware scheduling targets
+/// (ARCHITECTURE.md §14).
+///
+/// Every draft spans the full generation region; its leading tokens are
+/// **accepting** (`logps = -50.0`, lenient verification keeps them) and
+/// its last `r_i` tokens are **rejecting** (`logps = 0.0` claims
+/// `p_prev = 1`, so verification cuts there). On `eos_bias = 0` replicas
+/// a cut row decodes back to the cap, so row `i`'s remaining work is
+/// exactly `r_i` — drawn from `scale · (1-u)^(-1/alpha)` (smaller
+/// `alpha` ⇒ heavier tail). Ids are grouped into [`N_SUITES`] contiguous
+/// "suite" blocks with growing Pareto scales (the trainer's
+/// prompt-block id layout), giving zero-history rows meaningful
+/// per-suite length priors. Raw LPT cannot see any of this — every
+/// draft has the same length, so its id tie-break seats the cheap early
+/// suites first and the expensive last block straggles (a
+/// shortest-first schedule, the classic long-tail trap). A seeded
+/// length predictor reverses exactly that.
+pub mod longtail {
+    use crate::spec::{CacheEntry, Lenience, ReuseVariant, RolloutRequest, SpecRollout};
+    use crate::tokenizer::BOS;
+    use crate::util::Rng;
+
+    /// Slot rows per engine.
+    pub const B: usize = 4;
+    /// Prompt region length.
+    pub const P: usize = 16;
+    /// Total sequence length.
+    pub const T: usize = 64;
+    /// Vocabulary size.
+    pub const V: usize = 51;
+    /// Drafted tasks per step (well over the slot count, so ordering
+    /// decides which tail rows straggle).
+    pub const N_TASKS: usize = 48;
+    /// Workload seed.
+    pub const SEED: u64 = 0x7A11;
+    /// Default tail index (heavy; the makespan gap grows as it drops).
+    pub const ALPHA: f64 = 1.1;
+    /// Minimum remaining tokens per row.
+    pub const R_MIN: usize = 2;
+    /// Contiguous suite blocks; suite `s` scales the Pareto draw by `s+1`.
+    pub const N_SUITES: usize = 3;
+    /// Accepting-prefix / rejecting-tail recorded log-probs (same
+    /// mechanism as [`super::stale`], here applied per token).
+    pub const LOG_LENIENCE: f32 = -0.25;
+
+    /// Which length-prior suite an id belongs to: contiguous
+    /// [`N_TASKS`]`/`[`N_SUITES`] blocks, cheapest scale first.
+    pub fn suite_of(id: usize) -> usize {
+        (id * N_SUITES / N_TASKS).min(N_SUITES - 1)
+    }
+
+    /// Remaining-work lengths `r_i`, deterministic per `(alpha, seed)`.
+    /// Pointwise monotone in `alpha`: for every draw, a smaller tail
+    /// index yields an equal-or-longer tail.
+    pub fn remaining_lens(alpha: f64, seed: u64, gen_len: usize) -> Vec<usize> {
+        assert!(alpha > 0.0 && gen_len > R_MIN);
+        let mut rng = Rng::new(seed);
+        (0..N_TASKS)
+            .map(|i| {
+                let u = rng.f64();
+                let scale = (R_MIN * (suite_of(i) + 1)) as f64;
+                let r = (scale * (1.0 - u).powf(-1.0 / alpha)).round() as usize;
+                r.clamp(R_MIN, gen_len - 1)
+            })
+            .collect()
+    }
+
+    /// Per-suite mean remaining work — the zero-history length priors a
+    /// scheduler may assume for fresh rows of each suite.
+    pub fn suite_priors(alpha: f64, seed: u64, gen_len: usize) -> Vec<f64> {
+        let lens = remaining_lens(alpha, seed, gen_len);
+        let mut sums = vec![(0.0f64, 0usize); N_SUITES];
+        for (i, r) in lens.iter().enumerate() {
+            sums[suite_of(i)].0 += *r as f64;
+            sums[suite_of(i)].1 += 1;
+        }
+        sums.into_iter().map(|(s, c)| s / c.max(1) as f64).collect()
+    }
+
+    /// One step's request batch (prompts stay inside `vocab`).
+    pub fn requests(vocab: usize) -> Vec<RolloutRequest> {
+        (0..N_TASKS)
+            .map(|i| RolloutRequest {
+                id: i,
+                prompt: vec![BOS, 3 + (i % (vocab - 3)) as i32, 4 + (i % 7) as i32],
+            })
+            .collect()
+    }
+
+    /// The crafted drafts: full-`gen_len` responses, accepting for the
+    /// first `gen_len - r_i` tokens, rejecting for the last `r_i`.
+    pub fn entries(alpha: f64, seed: u64, gen_len: usize, vocab: usize) -> Vec<(usize, CacheEntry)> {
+        remaining_lens(alpha, seed, gen_len)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let response: Vec<i32> =
+                    (0..gen_len).map(|j| 3 + ((i + j) % (vocab - 3)) as i32).collect();
+                let logps: Vec<f32> =
+                    (0..gen_len).map(|j| if j < gen_len - r { -50.0 } else { 0.0 }).collect();
+                (i, CacheEntry { response, logps, version: 0, finished: false })
+            })
+            .collect()
+    }
+
+    /// A [`SpecRollout`] whose cache holds one heavy-tail drafted step.
+    pub fn warmed(alpha: f64, seed: u64, gen_len: usize, vocab: usize) -> SpecRollout {
+        let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(LOG_LENIENCE));
+        spec.cache.insert_batch(entries(alpha, seed, gen_len, vocab));
+        spec.step = 1;
+        spec
+    }
+}
+
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -429,5 +545,62 @@ mod tests {
         assert!(fmt_secs(2.5).ends_with('s'));
         assert!(fmt_secs(0.002).ends_with("ms"));
         assert!(fmt_secs(0.000002).ends_with("µs"));
+    }
+
+    #[test]
+    fn longtail_lengths_are_deterministic_per_seed() {
+        let gen_len = longtail::T - longtail::P;
+        let a = longtail::remaining_lens(longtail::ALPHA, longtail::SEED, gen_len);
+        let b = longtail::remaining_lens(longtail::ALPHA, longtail::SEED, gen_len);
+        assert_eq!(a, b, "same (alpha, seed) must reproduce the distribution");
+        assert_eq!(a.len(), longtail::N_TASKS);
+        assert!(a.iter().all(|&r| (longtail::R_MIN..gen_len).contains(&r)));
+        let c = longtail::remaining_lens(longtail::ALPHA, longtail::SEED + 1, gen_len);
+        assert_ne!(a, c, "a different seed must reshuffle the tail");
+    }
+
+    #[test]
+    fn longtail_tail_index_controls_heaviness() {
+        let gen_len = longtail::T - longtail::P;
+        let heavy = longtail::remaining_lens(0.8, longtail::SEED, gen_len);
+        let light = longtail::remaining_lens(3.0, longtail::SEED, gen_len);
+        // pointwise monotone: every draw grows as alpha drops
+        for (h, l) in heavy.iter().zip(&light) {
+            assert!(h >= l, "heavy {h} < light {l}");
+        }
+        assert!(
+            heavy.iter().sum::<usize>() > light.iter().sum::<usize>(),
+            "a lower tail index must add remaining work somewhere"
+        );
+        // genuinely skewed at the default index: the longest straggler
+        // dwarfs the median row
+        let mut sorted = longtail::remaining_lens(longtail::ALPHA, longtail::SEED, gen_len);
+        sorted.sort_unstable();
+        assert!(sorted[sorted.len() - 1] >= 2 * sorted[sorted.len() / 2]);
+    }
+
+    #[test]
+    fn longtail_entries_split_accepting_prefix_and_rejecting_tail() {
+        let gen_len = longtail::T - longtail::P;
+        let lens = longtail::remaining_lens(longtail::ALPHA, longtail::SEED, gen_len);
+        let entries = longtail::entries(longtail::ALPHA, longtail::SEED, gen_len, longtail::V);
+        assert_eq!(entries.len(), longtail::N_TASKS);
+        for (i, e) in &entries {
+            assert_eq!(e.response.len(), gen_len, "every draft spans the region");
+            assert!(!e.finished);
+            let tail = lens[*i];
+            assert!(e.logps[..gen_len - tail].iter().all(|&p| p == -50.0));
+            assert!(e.logps[gen_len - tail..].iter().all(|&p| p == 0.0));
+        }
+    }
+
+    #[test]
+    fn longtail_suite_priors_track_their_scales() {
+        let gen_len = longtail::T - longtail::P;
+        let p = longtail::suite_priors(longtail::ALPHA, longtail::SEED, gen_len);
+        assert_eq!(p.len(), longtail::N_SUITES);
+        // suite scales grow with the index, and the clamp only ever pulls
+        // draws down, so the first suite stays the cheapest prior
+        assert!(p[0] < p[longtail::N_SUITES - 1], "{p:?}");
     }
 }

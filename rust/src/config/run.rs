@@ -61,6 +61,21 @@ pub struct RunConfig {
     /// values trade verify latency for fuller sub-batches. Results are
     /// identical for every value.
     pub verify_seat_min: usize,
+    /// Predicted-length scheduling (`rollout.predict_len`, default off):
+    /// per-task EWMA length estimates replace the raw prefix/draft
+    /// lengths as the work queue's LPT keys (`ARCHITECTURE.md` §14).
+    /// Pure reordering — results are byte-identical either way.
+    pub predict_len: bool,
+    /// Adaptive draft-length floor (`spec.draft_len_min`, default 1,
+    /// must be >= 1): shrinking never clamps a draft below this.
+    pub draft_len_min: usize,
+    /// Static draft-length ceiling (`spec.draft_len_max`, default 0 =
+    /// uncapped): no materialized draft exceeds this many tokens.
+    pub draft_len_max: usize,
+    /// Per-row adaptive draft-length control (`spec.draft_len_adapt`,
+    /// default off): halve a row's draft cap when its acceptance
+    /// collapses, double it back on high-acceptance steps (§14).
+    pub draft_len_adapt: bool,
 
     // -- evaluation ---------------------------------------------------------------
     pub eval_every: usize,
@@ -99,6 +114,10 @@ impl Default for RunConfig {
             lenience: Lenience::Fixed(0.5),
             cache_budget_tokens: 0,
             verify_seat_min: 1,
+            predict_len: false,
+            draft_len_min: 1,
+            draft_len_max: 0,
+            draft_len_adapt: false,
             eval_every: 5,
             eval_n: 32,
             eval_samples_hard: 4,
@@ -155,6 +174,10 @@ impl RunConfig {
         }
         c.cache_budget_tokens = doc.usize_or("spec.cache_budget", c.cache_budget_tokens);
         c.verify_seat_min = doc.usize_or("spec.verify_seat_min", c.verify_seat_min);
+        c.predict_len = doc.bool_or("rollout.predict_len", c.predict_len);
+        c.draft_len_min = doc.usize_or("spec.draft_len_min", c.draft_len_min);
+        c.draft_len_max = doc.usize_or("spec.draft_len_max", c.draft_len_max);
+        c.draft_len_adapt = doc.bool_or("spec.draft_len_adapt", c.draft_len_adapt);
         c.params.lr = doc.f64_or("train.lr", c.params.lr as f64) as f32;
         c.params.critic_lr = doc.f64_or("train.critic_lr", c.params.critic_lr as f64) as f32;
         c.params.kl_coef = doc.f64_or("train.kl_coef", c.params.kl_coef as f64) as f32;
@@ -185,6 +208,11 @@ impl RunConfig {
         anyhow::ensure!(self.rpc_timeout_ms >= 1, "rollout.rpc_timeout_ms must be >= 1");
         anyhow::ensure!(self.rpc_max_retries <= 64, "rollout.max_retries must be <= 64");
         anyhow::ensure!(self.verify_seat_min >= 1, "spec.verify_seat_min must be >= 1");
+        anyhow::ensure!(self.draft_len_min >= 1, "spec.draft_len_min must be >= 1");
+        anyhow::ensure!(
+            self.draft_len_max == 0 || self.draft_len_max >= self.draft_len_min,
+            "spec.draft_len_max must be 0 (uncapped) or >= spec.draft_len_min"
+        );
         Ok(())
     }
 }
@@ -264,6 +292,36 @@ mod tests {
         assert_eq!(RunConfig::default().verify_seat_min, 1, "eager seating by default");
         let doc = ConfigDoc::parse("[spec]\nverify_seat_min = 0").unwrap();
         assert!(RunConfig::from_doc(&doc).is_err(), "zero seat-min rejected");
+    }
+
+    #[test]
+    fn predict_len_parses_and_defaults_off() {
+        assert!(!RunConfig::default().predict_len, "raw LPT keys by default");
+        let doc = ConfigDoc::parse("[rollout]\npredict_len = true").unwrap();
+        assert!(RunConfig::from_doc(&doc).unwrap().predict_len);
+        let doc = ConfigDoc::parse("[rollout]\npredict_len = false").unwrap();
+        assert!(!RunConfig::from_doc(&doc).unwrap().predict_len);
+    }
+
+    #[test]
+    fn draft_len_knobs_parse_and_validate() {
+        let d = RunConfig::default();
+        assert_eq!((d.draft_len_min, d.draft_len_max, d.draft_len_adapt), (1, 0, false));
+        let doc = ConfigDoc::parse(
+            "[spec]\ndraft_len_min = 2\ndraft_len_max = 32\ndraft_len_adapt = true",
+        )
+        .unwrap();
+        let c = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!((c.draft_len_min, c.draft_len_max, c.draft_len_adapt), (2, 32, true));
+        // floor must stay >= 1
+        let doc = ConfigDoc::parse("[spec]\ndraft_len_min = 0").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err(), "zero floor rejected");
+        // a non-zero ceiling below the floor is contradictory
+        let doc = ConfigDoc::parse("[spec]\ndraft_len_min = 8\ndraft_len_max = 4").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err(), "ceiling below floor rejected");
+        // 0 ceiling always means uncapped, whatever the floor
+        let doc = ConfigDoc::parse("[spec]\ndraft_len_min = 8\ndraft_len_max = 0").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_ok());
     }
 
     #[test]

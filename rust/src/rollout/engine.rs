@@ -61,6 +61,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::batch::{BatchLayout, SeqResult, SeqTask};
+use super::predict::LenEstimates;
 use super::sched::{SlotScheduler, WorkQueue};
 use crate::runtime::{Backend, Engine};
 use crate::spec::cache::CacheEntry;
@@ -156,6 +157,30 @@ pub struct PipelineStats {
     /// ctrl rows). One-time cached scalars (temperature, log-lenience,
     /// top-p, nonce) are excluded — they are not per-step traffic.
     pub upload_bytes: usize,
+    /// Sum over predicted rows of `|predicted - realized|` total response
+    /// length (`ARCHITECTURE.md` §14). Raw accumulator; the gauge is
+    /// [`PipelineStats::mean_predict_err`]. 0 with the predictor off.
+    pub predict_err_sum: f64,
+    /// Rows that carried a length prediction this step.
+    pub predict_rows: usize,
+    /// Mean absolute predicted-vs-actual length error (derived; see
+    /// `finalize_draft_means`).
+    pub mean_predict_err: f64,
+    /// Sum of materialized (post-clip) draft lengths this step.
+    pub draft_len_sum: usize,
+    /// Drafted rows contributing to [`PipelineStats::draft_len_sum`].
+    pub draft_len_rows: usize,
+    /// Shortest materialized draft this step (histogram floor; 0 when no
+    /// draft was offered).
+    pub draft_len_lo: usize,
+    /// Longest materialized draft this step (histogram ceiling).
+    pub draft_len_hi: usize,
+    /// Drafts the adaptive controller truncated below their cached length
+    /// this step (`spec.draft_len_{min,max,adapt}`).
+    pub draft_trunc: usize,
+    /// Mean materialized draft length (derived; see
+    /// `finalize_draft_means`).
+    pub mean_draft_len: f64,
 }
 
 impl PipelineStats {
@@ -174,6 +199,8 @@ impl PipelineStats {
         let d = self.drafts.max(1) as f64;
         self.mean_prefix_len = self.prefix_tokens as f64 / d;
         self.full_reuse_ratio = self.full_reuses as f64 / d;
+        self.mean_predict_err = self.predict_err_sum / self.predict_rows.max(1) as f64;
+        self.mean_draft_len = self.draft_len_sum as f64 / self.draft_len_rows.max(1) as f64;
     }
 
     /// Total verify + decode + refill executable invocations — the
@@ -211,12 +238,35 @@ impl PipelineStats {
         self.serial_makespan += o.serial_makespan;
         self.readback_bytes += o.readback_bytes;
         self.upload_bytes += o.upload_bytes;
+        self.predict_err_sum += o.predict_err_sum;
+        self.predict_rows += o.predict_rows;
+        self.absorb_draft_lens(o);
         if self.shard_device_calls.len() < o.shard_device_calls.len() {
             self.shard_device_calls.resize(o.shard_device_calls.len(), 0);
         }
         for (a, b) in self.shard_device_calls.iter_mut().zip(&o.shard_device_calls) {
             *a += b;
         }
+    }
+
+    /// Merge another report's draft-length histogram summary
+    /// (`draft_len_*`, `draft_trunc`) into this one. Split out of
+    /// [`PipelineStats::absorb`] because the coordinator records these in
+    /// its prepare pass, outside the engines' own reports. Histogram
+    /// bounds only merge from sides that saw a draft — a draft-free
+    /// report's 0 floor must not clobber a real minimum.
+    pub fn absorb_draft_lens(&mut self, o: &PipelineStats) {
+        if o.draft_len_rows > 0 {
+            self.draft_len_lo = if self.draft_len_rows > 0 {
+                self.draft_len_lo.min(o.draft_len_lo)
+            } else {
+                o.draft_len_lo
+            };
+            self.draft_len_hi = self.draft_len_hi.max(o.draft_len_hi);
+        }
+        self.draft_len_sum += o.draft_len_sum;
+        self.draft_len_rows += o.draft_len_rows;
+        self.draft_trunc += o.draft_trunc;
     }
 }
 
@@ -1115,6 +1165,36 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
         rnonce: u64,
         timer: &mut StageTimer,
     ) -> Result<(Vec<SeqResult>, PipelineStats)> {
+        self.run_pipeline_est(
+            blob,
+            tasks,
+            drafts,
+            loglen,
+            cfg,
+            vnonce,
+            rnonce,
+            LenEstimates::off(),
+            timer,
+        )
+    }
+
+    /// [`RolloutEngine::run_pipeline`] with an explicit length-estimate
+    /// table ordering the private queue (`ARCHITECTURE.md` §14).
+    /// Estimates only reorder seating — outputs are byte-identical for
+    /// any table; [`LenEstimates::off`] reproduces the raw LPT keys.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_pipeline_est(
+        &mut self,
+        blob: &B::Buf,
+        tasks: Vec<SeqTask>,
+        drafts: Vec<VerifyTask>,
+        loglen: f32,
+        cfg: SampleCfg,
+        vnonce: u64,
+        rnonce: u64,
+        est: LenEstimates,
+        timer: &mut StageTimer,
+    ) -> Result<(Vec<SeqResult>, PipelineStats)> {
         let mut stats = PipelineStats::default();
         let mut results: Vec<SeqResult> = Vec::with_capacity(tasks.len() + drafts.len());
         let pending = self.split_terminal(tasks, &mut results, &mut stats);
@@ -1123,7 +1203,7 @@ impl<'e, B: Backend> RolloutEngine<'e, B> {
             return Ok((results, stats));
         }
 
-        let mut queue = WorkQueue::new(pending, drafts);
+        let mut queue = WorkQueue::with_estimates(pending, drafts, est);
         let mut run = self.pipeline_start(blob, &mut queue, loglen, cfg, vnonce, rnonce, timer)?;
         while !run.done() {
             self.pipeline_step(&mut run, blob, &mut queue, timer)?;

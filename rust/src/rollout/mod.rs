@@ -53,6 +53,7 @@
 pub mod batch;
 pub mod engine;
 pub mod pool;
+pub mod predict;
 pub mod sched;
 
 pub use batch::{BatchLayout, SeqResult, SeqTask};
@@ -60,4 +61,5 @@ pub use engine::{
     PipelineRun, PipelineStats, RolloutEngine, RolloutStats, SampleCfg, StepTicket,
 };
 pub use pool::{EnginePool, Placement};
+pub use predict::{LenEstimates, LenPredictor};
 pub use sched::{SlotPhase, SlotScheduler, WorkQueue};

@@ -98,6 +98,7 @@ use anyhow::{ensure, Result};
 
 use super::batch::{SeqResult, SeqTask};
 use super::engine::{PipelineRun, PipelineStats, RolloutEngine, SampleCfg, StepTicket};
+use super::predict::LenEstimates;
 use super::sched::WorkQueue;
 use crate::runtime::{Backend, Engine};
 use crate::spec::verifier::VerifyTask;
@@ -247,18 +248,21 @@ impl<'e, B: Backend> EnginePool<'e, B> {
     /// engine it was pinned to, which is exactly the imbalance the
     /// steal-queue exists to drain.
     fn place(&self, tasks: Vec<SeqTask>, drafts: Vec<VerifyTask>) -> Vec<ShardWork> {
-        self.place_on(tasks, drafts, &vec![true; self.shards.len()])
+        self.place_on(tasks, drafts, &vec![true; self.shards.len()], &LenEstimates::off())
     }
 
     /// [`EnginePool::place`] restricted to the shards still alive: the
     /// static-placement recovery path re-places a dead shard's recovered
     /// work over the survivors only (`ARCHITECTURE.md` §13). Dead shards
     /// get empty work lists. At least one entry of `alive` must be true.
+    /// Per-item costs come from `est` (`ARCHITECTURE.md` §14); the empty
+    /// table reproduces the raw `gen_len - known_len` estimates exactly.
     fn place_on(
         &self,
         tasks: Vec<SeqTask>,
         drafts: Vec<VerifyTask>,
         alive: &[bool],
+        est: &LenEstimates,
     ) -> Vec<ShardWork> {
         enum Item {
             Task(SeqTask),
@@ -271,15 +275,12 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         for t in tasks {
             // Terminal full-reuse prefixes never occupy a slot (the engine
             // routes them straight to results), so they carry zero load.
-            let cost = if t.prefix_is_terminal(gen_len) {
-                0
-            } else {
-                gen_len.saturating_sub(t.prefix.len())
-            };
+            let cost =
+                if t.prefix_is_terminal(gen_len) { 0 } else { est.task_cost(&t, gen_len) };
             work.push((cost, t.id, Item::Task(t)));
         }
         for d in drafts {
-            work.push((gen_len.saturating_sub(d.draft_len()), d.id, Item::Draft(d)));
+            work.push((est.draft_cost(&d, gen_len), d.id, Item::Draft(d)));
         }
         work.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
 
@@ -366,7 +367,16 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         timer: &mut StageTimer,
     ) -> Result<(Vec<SeqResult>, PipelineStats)> {
         self.run_pipeline_with(
-            Placement::Steal, blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, timer,
+            Placement::Steal,
+            blobs,
+            tasks,
+            drafts,
+            loglen,
+            cfg,
+            vnonce,
+            rnonce,
+            &LenEstimates::off(),
+            timer,
         )
     }
 
@@ -380,6 +390,13 @@ impl<'e, B: Backend> EnginePool<'e, B> {
     /// they do not). The merged [`PipelineStats`] sums the raw counters,
     /// records each shard's `device_calls()` in `shard_device_calls`, and
     /// (under `Steal`) reports mid-step pulls in `steal_count`.
+    ///
+    /// `est` carries the step's frozen length estimates (`ARCHITECTURE.md`
+    /// §14): the queue's LPT keys and the static placement's cost model
+    /// both consult it. Estimates only reorder work, so the merged
+    /// results are byte-identical for *any* estimate table, including an
+    /// adversarially wrong one — pass [`LenEstimates::off`] for the raw
+    /// keys.
     #[allow(clippy::too_many_arguments)]
     pub fn run_pipeline_with(
         &mut self,
@@ -391,6 +408,7 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         cfg: SampleCfg,
         vnonce: u64,
         rnonce: u64,
+        est: &LenEstimates,
         timer: &mut StageTimer,
     ) -> Result<(Vec<SeqResult>, PipelineStats)> {
         ensure!(
@@ -401,18 +419,27 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         );
         if self.shards.len() == 1 {
             let (t0, busy0) = self.clock_begin();
-            let (results, mut stats) = self.shards[0]
-                .run_pipeline(blobs[0], tasks, drafts, loglen, cfg, vnonce, rnonce, timer)?;
+            let (results, mut stats) = self.shards[0].run_pipeline_est(
+                blobs[0],
+                tasks,
+                drafts,
+                loglen,
+                cfg,
+                vnonce,
+                rnonce,
+                est.clone(),
+                timer,
+            )?;
             stats.shard_device_calls = vec![stats.device_calls()];
             self.clock_end(&mut stats, t0, &busy0);
             return Ok((results, stats));
         }
         match placement {
             Placement::Static => {
-                self.run_static(blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, timer)
+                self.run_static(blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, est, timer)
             }
             Placement::Steal => {
-                self.run_steal(blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, timer)
+                self.run_steal(blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, est, timer)
             }
         }
     }
@@ -437,6 +464,7 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         cfg: SampleCfg,
         vnonce: u64,
         rnonce: u64,
+        est: &LenEstimates,
         timer: &mut StageTimer,
     ) -> Result<(Vec<SeqResult>, PipelineStats)> {
         let n = self.shards.len();
@@ -447,7 +475,7 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         let (t0, busy0) = self.clock_begin();
         let (mut work_t, mut work_d) = (tasks, drafts);
         loop {
-            let placed = self.place_on(work_t, work_d, &rec.alive);
+            let placed = self.place_on(work_t, work_d, &rec.alive, est);
             let mut spill_t: Vec<SeqTask> = Vec::new();
             let mut spill_d: Vec<VerifyTask> = Vec::new();
             for (i, (t, d)) in placed.into_iter().enumerate() {
@@ -455,7 +483,7 @@ impl<'e, B: Backend> EnginePool<'e, B> {
                 if pending.is_empty() && d.is_empty() {
                     continue;
                 }
-                let mut queue = WorkQueue::new(pending, d);
+                let mut queue = WorkQueue::with_estimates(pending, d, est.clone());
                 let mut failed = false;
                 let (mut run, ticket) = self.shards[i].start_submit(
                     blobs[i], &mut queue, loglen, cfg, vnonce, rnonce, timer,
@@ -525,6 +553,7 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         cfg: SampleCfg,
         vnonce: u64,
         rnonce: u64,
+        est: &LenEstimates,
         timer: &mut StageTimer,
     ) -> Result<(Vec<SeqResult>, PipelineStats)> {
         let n = self.shards.len();
@@ -535,7 +564,7 @@ impl<'e, B: Backend> EnginePool<'e, B> {
         let pending = self.shards[0].split_terminal(tasks, &mut results, &mut agg);
 
         let (t0, busy0) = self.clock_begin();
-        let mut queue = WorkQueue::new(pending, drafts);
+        let mut queue = WorkQueue::with_estimates(pending, drafts, est.clone());
         let mut rec = Recovery::new(n);
         let mut per_shard = vec![0usize; n];
         // Recovery cycles (`ARCHITECTURE.md` §13): a failure-free cycle
@@ -745,6 +774,7 @@ mod tests {
                 SampleCfg::default(),
                 11,
                 12,
+                &LenEstimates::off(),
                 &mut timer,
             )
             .unwrap();
@@ -758,6 +788,7 @@ mod tests {
                 SampleCfg::default(),
                 11,
                 12,
+                &LenEstimates::off(),
                 &mut timer,
             )
             .unwrap();

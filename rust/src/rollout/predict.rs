@@ -1,0 +1,379 @@
+//! Predicted-length scheduling (`ARCHITECTURE.md` §14).
+//!
+//! The LPT [`super::sched::WorkQueue`] has always ordered by what it can
+//! *see*: a task's verified-prefix length, a draft's materialized length.
+//! Both are proxies for the quantity LPT actually wants — the **remaining
+//! decode work** — and both go blind exactly where stragglers live: a
+//! fresh prompt carries no estimate at all, and a stale draft's length
+//! says nothing about how much of it will survive verification ("Beat the
+//! Long Tail", PAPERS.md).
+//!
+//! [`LenPredictor`] closes that gap with the cheapest signal available:
+//! a per-task EWMA of realized total response lengths, seeded from the
+//! prior epoch's accepted rollouts already resident in the prefix-trie
+//! cache (`spec/cache.rs` — the leaf length is O(1), no materialization),
+//! falling back to per-suite priors (`tasks/suites.rs`) for prompts with
+//! no history, plus a per-task acceptance-rate EWMA that discounts a
+//! draft's length by how much of it is actually expected to settle.
+//!
+//! [`LenEstimates`] is the per-step snapshot handed to the queue: an
+//! id → predicted-total map plus an id → expected-settled map for drafts.
+//! The encoding is chosen so that a **missing estimate degrades to the
+//! raw key exactly**: ranks are `usize::MAX - expected_remaining`, and an
+//! absent total is treated as `usize::MAX`, which algebraically collapses
+//! the rank back to `prefix.len()` / `draft_len()`. An empty
+//! [`LenEstimates`] therefore reproduces the historical LPT order
+//! bit-for-bit — predictor-off is not a separate code path, it is the
+//! empty estimate table.
+//!
+//! Prediction only ever reorders the queue. It never touches the per-task
+//! RNG streams of `ARCHITECTURE.md` §6, so outputs are byte-identical for
+//! every predictor/placement/shard combination — even under an
+//! adversarially wrong predictor, which can only cost makespan
+//! (`rust/tests/prop_invariants.rs` pins both properties).
+
+use std::collections::HashMap;
+
+use super::batch::SeqTask;
+use crate::spec::cache::RolloutCache;
+use crate::spec::verifier::VerifyTask;
+
+/// EWMA smoothing factor for both the length and acceptance trackers:
+/// `new = alpha * observed + (1 - alpha) * old`.
+pub const EWMA_ALPHA: f64 = 0.5;
+
+/// Default prior for a task with no history and no suite prior: "assume
+/// the longest remainder" — encoded as no estimate at all, so the queue
+/// falls back to the raw LPT key for that item. This constant is the
+/// *numeric* fallback used only when a caller asks [`LenPredictor::predict`]
+/// for a number.
+pub const DEFAULT_PRIOR: f64 = 0.0;
+
+/// Per-task length predictor: total-response-length EWMA + acceptance
+/// EWMA, with suite-prior and cache-seed fallbacks for fresh ids.
+#[derive(Clone, Debug)]
+pub struct LenPredictor {
+    enabled: bool,
+    alpha: f64,
+    /// Per-id EWMA of realized total response length.
+    ewma: HashMap<usize, f64>,
+    /// Per-id EWMA of draft acceptance ratio (accepted / offered).
+    acc: HashMap<usize, f64>,
+    /// Per-id prior (suite-level mean length) for zero-history prompts.
+    priors: HashMap<usize, f64>,
+}
+
+impl Default for LenPredictor {
+    fn default() -> Self {
+        LenPredictor {
+            enabled: false,
+            alpha: EWMA_ALPHA,
+            ewma: HashMap::new(),
+            acc: HashMap::new(),
+            priors: HashMap::new(),
+        }
+    }
+}
+
+impl LenPredictor {
+    /// A predictor that is on (`enabled = true`) or off. A disabled
+    /// predictor produces only empty [`LenEstimates`] — the queue then
+    /// orders by the raw keys, exactly the pre-§14 behavior.
+    pub fn new(enabled: bool) -> Self {
+        LenPredictor { enabled, ..Self::default() }
+    }
+
+    /// Whether estimates are produced at all.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Set the suite prior for one id (mean expected total length of its
+    /// task family — `tasks::suites::family_length_priors`). Used only
+    /// while the id has no observed history.
+    pub fn set_prior(&mut self, id: usize, len: f64) {
+        self.priors.insert(id, len);
+    }
+
+    /// Predicted total response length for `id`: observed EWMA, else the
+    /// suite prior, else [`DEFAULT_PRIOR`]. `None` when disabled.
+    pub fn predict(&self, id: usize) -> Option<f64> {
+        if !self.enabled {
+            return None;
+        }
+        Some(
+            self.ewma
+                .get(&id)
+                .or_else(|| self.priors.get(&id))
+                .copied()
+                .unwrap_or(DEFAULT_PRIOR),
+        )
+    }
+
+    /// Expected fraction of an offered draft that settles (is accepted).
+    /// 1.0 until observed — the optimistic default matches the raw LPT
+    /// key's implicit assumption that a draft reuses its whole length.
+    pub fn acceptance(&self, id: usize) -> f64 {
+        self.acc.get(&id).copied().unwrap_or(1.0)
+    }
+
+    /// Fold one realized total response length into the id's EWMA.
+    pub fn observe_len(&mut self, id: usize, len: usize) {
+        let a = self.alpha;
+        self.ewma
+            .entry(id)
+            .and_modify(|e| *e = a * len as f64 + (1.0 - a) * *e)
+            .or_insert(len as f64);
+    }
+
+    /// Fold one step's acceptance outcome (`accepted` of `offered` draft
+    /// tokens settled) into the id's acceptance EWMA.
+    pub fn observe_acceptance(&mut self, id: usize, accepted: usize, offered: usize) {
+        if offered == 0 {
+            return;
+        }
+        let r = (accepted as f64 / offered as f64).clamp(0.0, 1.0);
+        let a = self.alpha;
+        self.acc
+            .entry(id)
+            .and_modify(|e| *e = a * r + (1.0 - a) * *e)
+            .or_insert(r);
+    }
+
+    /// Seed a zero-history id from the prior epoch's accepted rollout
+    /// resident in the prefix trie (`cache.cached_len` reads the leaf
+    /// length in O(1)). A no-op once the id has observed history.
+    pub fn seed_from_cache(&mut self, cache: &RolloutCache, id: usize) {
+        if !self.enabled || self.ewma.contains_key(&id) {
+            return;
+        }
+        if let Some(len) = cache.cached_len(id) {
+            self.ewma.insert(id, len as f64);
+        }
+    }
+
+    /// Snapshot this step's estimates for the given work: predicted
+    /// totals for every item, plus expected-settled lengths for drafts
+    /// (`acceptance * offered`, rounded). Empty when disabled.
+    pub fn estimates(&self, tasks: &[SeqTask], drafts: &[VerifyTask]) -> LenEstimates {
+        if !self.enabled {
+            return LenEstimates::off();
+        }
+        let mut est = LenEstimates::default();
+        for t in tasks {
+            if let Some(p) = self.predict(t.id) {
+                est.set_total(t.id, p.round().max(0.0) as usize);
+            }
+        }
+        for d in drafts {
+            if let Some(p) = self.predict(d.id) {
+                est.set_total(d.id, p.round().max(0.0) as usize);
+            }
+            let settled = (self.acceptance(d.id) * d.draft_len() as f64).round() as usize;
+            est.set_settled(d.id, settled.min(d.draft_len()));
+        }
+        est
+    }
+}
+
+/// One step's frozen length estimates, owned by the
+/// [`super::sched::WorkQueue`] (and consulted by the static placement's
+/// cost model). Cloneable and cheap; an **empty** table reproduces the
+/// raw LPT keys exactly (see the module docs), so `off()` is just
+/// `default()`.
+#[derive(Clone, Debug, Default)]
+pub struct LenEstimates {
+    /// id → predicted total response length.
+    totals: HashMap<usize, usize>,
+    /// id → expected settled (accepted) draft tokens.
+    settled: HashMap<usize, usize>,
+}
+
+impl LenEstimates {
+    /// The no-predictor table: every rank falls back to the raw LPT key.
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// True when no estimate is loaded (raw-key ordering).
+    pub fn is_empty(&self) -> bool {
+        self.totals.is_empty() && self.settled.is_empty()
+    }
+
+    /// Load a predicted total length for `id`.
+    pub fn set_total(&mut self, id: usize, total: usize) {
+        self.totals.insert(id, total);
+    }
+
+    /// Load an expected settled draft length for `id`.
+    pub fn set_settled(&mut self, id: usize, settled: usize) {
+        self.settled.insert(id, settled);
+    }
+
+    /// Predicted total length, if loaded.
+    pub fn total(&self, id: usize) -> Option<usize> {
+        self.totals.get(&id).copied()
+    }
+
+    /// Expected settled draft tokens, if loaded.
+    pub fn settled_of(&self, id: usize) -> Option<usize> {
+        self.settled.get(&id).copied()
+    }
+
+    /// Ascending sort key for the decode-task lane: longest expected
+    /// remaining generation first. With no estimate the key collapses to
+    /// the raw `prefix.len()` (the historical LPT key):
+    /// `MAX - (MAX - prefix_len) == prefix_len`.
+    pub fn task_rank(&self, t: &SeqTask) -> usize {
+        let total = self.total(t.id).unwrap_or(usize::MAX);
+        usize::MAX - total.saturating_sub(t.prefix.len())
+    }
+
+    /// Ascending sort key for the draft lane: longest expected remainder
+    /// first, where the remainder is the predicted total minus the
+    /// expected settled prefix. With no estimate it collapses to the raw
+    /// `draft_len()` key.
+    pub fn draft_rank(&self, d: &VerifyTask) -> usize {
+        let total = self.total(d.id).unwrap_or(usize::MAX);
+        let settled = self.settled_of(d.id).unwrap_or_else(|| d.draft_len());
+        usize::MAX - total.saturating_sub(settled)
+    }
+
+    /// Expected decode cost of a task for the static placement's
+    /// load-balance model (`gen_len` caps the prediction; with no
+    /// estimate this is exactly the historical `gen_len - prefix_len`).
+    pub fn task_cost(&self, t: &SeqTask, gen_len: usize) -> usize {
+        self.total(t.id).unwrap_or(usize::MAX).min(gen_len).saturating_sub(t.prefix.len())
+    }
+
+    /// Expected decode cost of a draft for the static placement (with no
+    /// estimate: exactly the historical `gen_len - draft_len`).
+    pub fn draft_cost(&self, d: &VerifyTask, gen_len: usize) -> usize {
+        let settled = self.settled_of(d.id).unwrap_or_else(|| d.draft_len());
+        self.total(d.id).unwrap_or(usize::MAX).min(gen_len).saturating_sub(settled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::cache::CacheEntry;
+
+    fn task(id: usize, prefix_len: usize) -> SeqTask {
+        SeqTask {
+            id,
+            prompt: vec![1],
+            prefix: vec![7; prefix_len],
+            prefix_logps: vec![-1.0; prefix_len],
+        }
+    }
+
+    fn draft(id: usize, len: usize) -> VerifyTask {
+        VerifyTask {
+            id,
+            prompt: vec![1],
+            entry: CacheEntry {
+                response: vec![7; len],
+                logps: vec![-1.0; len],
+                version: 0,
+                finished: false,
+            },
+        }
+    }
+
+    #[test]
+    fn empty_estimates_collapse_to_raw_lpt_keys() {
+        let est = LenEstimates::off();
+        assert_eq!(est.task_rank(&task(0, 5)), 5);
+        assert_eq!(est.task_rank(&task(1, 0)), 0);
+        assert_eq!(est.draft_rank(&draft(2, 7)), 7);
+        assert_eq!(est.task_cost(&task(0, 5), 48), 43);
+        assert_eq!(est.draft_cost(&draft(2, 7), 48), 41);
+        assert!(est.is_empty());
+    }
+
+    #[test]
+    fn loaded_estimates_rank_by_expected_remaining() {
+        let mut est = LenEstimates::off();
+        // id 0: total 40, prefix 5 -> remaining 35
+        // id 1: total 10, prefix 5 -> remaining 5
+        est.set_total(0, 40);
+        est.set_total(1, 10);
+        assert!(est.task_rank(&task(0, 5)) < est.task_rank(&task(1, 5)));
+        // drafts: same length, different expected settle
+        est.set_total(2, 48);
+        est.set_total(3, 48);
+        est.set_settled(2, 2); // stale: almost nothing settles -> 46 remain
+        est.set_settled(3, 40); // fresh: most settles -> 8 remain
+        assert!(est.draft_rank(&draft(2, 48)) < est.draft_rank(&draft(3, 48)));
+    }
+
+    #[test]
+    fn cost_caps_at_gen_len_and_floors_at_zero() {
+        let mut est = LenEstimates::off();
+        est.set_total(0, 500);
+        assert_eq!(est.task_cost(&task(0, 5), 48), 43, "total caps at gen_len");
+        est.set_total(1, 3);
+        assert_eq!(est.task_cost(&task(1, 5), 48), 0, "overshot prefix floors at 0");
+    }
+
+    #[test]
+    fn predictor_ewma_tracks_observations() {
+        let mut p = LenPredictor::new(true);
+        p.observe_len(3, 10);
+        assert_eq!(p.predict(3), Some(10.0), "first observation seeds the EWMA");
+        p.observe_len(3, 20);
+        assert_eq!(p.predict(3), Some(15.0), "alpha 0.5 blend");
+        assert_eq!(p.predict(99), Some(DEFAULT_PRIOR), "no history, no prior");
+    }
+
+    #[test]
+    fn zero_history_ids_fall_back_to_suite_priors() {
+        let mut p = LenPredictor::new(true);
+        p.set_prior(5, 12.5);
+        assert_eq!(p.predict(5), Some(12.5), "prior answers before any history");
+        p.observe_len(5, 40);
+        assert_eq!(p.predict(5), Some(40.0), "history beats the prior");
+    }
+
+    #[test]
+    fn disabled_predictor_emits_empty_estimates() {
+        let mut p = LenPredictor::new(false);
+        p.observe_len(0, 10);
+        p.set_prior(1, 5.0);
+        assert_eq!(p.predict(0), None);
+        let est = p.estimates(&[task(0, 0)], &[draft(1, 4)]);
+        assert!(est.is_empty(), "off-mode estimates must be the empty table");
+    }
+
+    #[test]
+    fn acceptance_ewma_discounts_settled_length() {
+        let mut p = LenPredictor::new(true);
+        assert_eq!(p.acceptance(7), 1.0, "optimistic until observed");
+        p.observe_acceptance(7, 0, 10);
+        assert_eq!(p.acceptance(7), 0.0);
+        p.observe_acceptance(7, 10, 10);
+        assert_eq!(p.acceptance(7), 0.5);
+        p.observe_len(7, 48);
+        let est = p.estimates(&[], &[draft(7, 40)]);
+        assert_eq!(est.settled_of(7), Some(20), "0.5 * 40 offered");
+        assert_eq!(est.total(7), Some(48));
+    }
+
+    #[test]
+    fn cache_seed_fills_only_zero_history_ids() {
+        let mut cache = RolloutCache::new();
+        cache.insert(
+            4,
+            CacheEntry { response: vec![7; 9], logps: vec![-1.0; 9], version: 0, finished: true },
+        );
+        let mut p = LenPredictor::new(true);
+        p.seed_from_cache(&cache, 4);
+        assert_eq!(p.predict(4), Some(9.0), "seeded from the trie leaf length");
+        p.observe_len(4, 19);
+        p.seed_from_cache(&cache, 4);
+        assert_eq!(p.predict(4), Some(14.0), "seed never overwrites history");
+        p.seed_from_cache(&cache, 12);
+        assert_eq!(p.predict(12), Some(DEFAULT_PRIOR), "no cache entry, no seed");
+    }
+}

@@ -81,7 +81,10 @@
 //! verified-prefix length** (then ascending id) — i.e. longest *remaining*
 //! generation first — and drafts sort by ascending draft length (a draft
 //! can reuse at most its own length, so short drafts have the longest
-//! expected remainder). Sampling uses per-task RNG streams and
+//! expected remainder). When per-task length estimates are loaded
+//! ([`WorkQueue::with_estimates`], `ARCHITECTURE.md` §14) both lanes order
+//! by **expected remaining work** instead, with the raw keys as the
+//! no-estimate fallback. Sampling uses per-task RNG streams and
 //! verification uses per-task uniform streams, making results invariant to
 //! slot assignment, sub-batch packing, scheduling order, **and which
 //! engine pops an item from the shared queue** — byte-identical to the
@@ -97,6 +100,7 @@
 use std::collections::VecDeque;
 
 use super::batch::SeqTask;
+use super::predict::LenEstimates;
 use crate::spec::verifier::VerifyTask;
 
 /// One step's unstarted work: decode-ready tasks and to-verify drafts in
@@ -107,6 +111,11 @@ use crate::spec::verifier::VerifyTask;
 pub struct WorkQueue {
     tasks: VecDeque<SeqTask>,
     drafts: VecDeque<VerifyTask>,
+    /// Frozen length estimates supplying both lanes' sort keys
+    /// (`ARCHITECTURE.md` §14). The empty table reproduces the raw
+    /// prefix-length / draft-length LPT keys exactly, so a queue built
+    /// with [`WorkQueue::new`] behaves as it always has.
+    est: LenEstimates,
     /// Set once every shard's initial seating pass is done; later pops are
     /// counted as steals.
     started: bool,
@@ -114,15 +123,27 @@ pub struct WorkQueue {
 }
 
 impl WorkQueue {
-    /// LPT-order both lanes: tasks by ascending verified-prefix length
-    /// (longest remaining generation first), drafts by ascending draft
-    /// length (longest expected remainder first); ties by id. Terminal
-    /// full-reuse tasks must be split out by the caller first — every
-    /// queued item is assumed to need a slot.
-    pub fn new(mut tasks: Vec<SeqTask>, mut drafts: Vec<VerifyTask>) -> Self {
-        tasks.sort_by(|a, b| a.prefix.len().cmp(&b.prefix.len()).then(a.id.cmp(&b.id)));
-        drafts.sort_by(|a, b| a.draft_len().cmp(&b.draft_len()).then(a.id.cmp(&b.id)));
-        WorkQueue { tasks: tasks.into(), drafts: drafts.into(), started: false, steals: 0 }
+    /// LPT-order both lanes with the raw keys: tasks by ascending
+    /// verified-prefix length (longest remaining generation first),
+    /// drafts by ascending draft length (longest expected remainder
+    /// first); ties by id. Terminal full-reuse tasks must be split out by
+    /// the caller first — every queued item is assumed to need a slot.
+    pub fn new(tasks: Vec<SeqTask>, drafts: Vec<VerifyTask>) -> Self {
+        Self::with_estimates(tasks, drafts, LenEstimates::off())
+    }
+
+    /// LPT-order both lanes by **expected remaining work** under `est`
+    /// (`ARCHITECTURE.md` §14): ascending [`LenEstimates::task_rank`] /
+    /// [`LenEstimates::draft_rank`], ties by id. Items without an
+    /// estimate rank exactly as [`WorkQueue::new`] would rank them.
+    pub fn with_estimates(
+        mut tasks: Vec<SeqTask>,
+        mut drafts: Vec<VerifyTask>,
+        est: LenEstimates,
+    ) -> Self {
+        tasks.sort_by(|a, b| est.task_rank(a).cmp(&est.task_rank(b)).then(a.id.cmp(&b.id)));
+        drafts.sort_by(|a, b| est.draft_rank(a).cmp(&est.draft_rank(b)).then(a.id.cmp(&b.id)));
+        WorkQueue { tasks: tasks.into(), drafts: drafts.into(), est, started: false, steals: 0 }
     }
 
     /// A decode-only queue (no drafts).
@@ -172,20 +193,22 @@ impl WorkQueue {
 
     /// Return a dead shard's recovered work to the queue, restoring the
     /// global LPT order of both lanes (`ARCHITECTURE.md` §13): the merged
-    /// lanes re-sort with the exact [`WorkQueue::new`] comparators, so a
-    /// survivor's next pull sees the same deterministic order a fresh
-    /// queue over the combined work would. Keeps the `started` flag —
+    /// lanes re-sort with this queue's own estimate-aware comparators
+    /// ([`WorkQueue::with_estimates`]), so a survivor's next pull sees the
+    /// same deterministic order a fresh queue over the combined work
+    /// would. Keeps the `started` flag —
     /// requeued items popped mid-step count as steals, like any other
     /// mid-step pull. Returns the number of items re-entered.
     pub fn requeue(&mut self, tasks: Vec<SeqTask>, drafts: Vec<VerifyTask>) -> usize {
         let n = tasks.len() + drafts.len();
+        let est = &self.est;
         let mut t: Vec<SeqTask> = std::mem::take(&mut self.tasks).into();
         t.extend(tasks);
-        t.sort_by(|a, b| a.prefix.len().cmp(&b.prefix.len()).then(a.id.cmp(&b.id)));
+        t.sort_by(|a, b| est.task_rank(a).cmp(&est.task_rank(b)).then(a.id.cmp(&b.id)));
         self.tasks = t.into();
         let mut d: Vec<VerifyTask> = std::mem::take(&mut self.drafts).into();
         d.extend(drafts);
-        d.sort_by(|a, b| a.draft_len().cmp(&b.draft_len()).then(a.id.cmp(&b.id)));
+        d.sort_by(|a, b| est.draft_rank(a).cmp(&est.draft_rank(b)).then(a.id.cmp(&b.id)));
         self.drafts = d.into();
         n
     }
@@ -550,6 +573,122 @@ mod tests {
         assert_eq!(d.len(), 1);
         assert!(q.is_empty());
         assert_eq!(q.steals(), 0, "drained items were never handed to an engine");
+    }
+
+    #[test]
+    fn with_estimates_reorders_by_expected_remaining() {
+        // Equal raw keys, different predicted totals: the predicted
+        // straggler (longest expected remaining) must pop first (§14).
+        let mut est = LenEstimates::off();
+        est.set_total(0, 10);
+        est.set_total(1, 40);
+        est.set_total(2, 20);
+        let mut q =
+            WorkQueue::with_estimates(vec![task(0, 2), task(1, 2), task(2, 2)], Vec::new(), est);
+        let mut s = SlotScheduler::new(3);
+        let ids: Vec<usize> = s.fill(&mut q).into_iter().map(|(_, t)| t.id).collect();
+        assert_eq!(ids, vec![1, 2, 0], "longest expected remaining first");
+    }
+
+    #[test]
+    fn estimate_ties_fall_back_to_id_tiebreak() {
+        // Identical estimates must preserve the documented id tie-break
+        // in both lanes, exactly like identical raw keys.
+        let mut est = LenEstimates::off();
+        for id in [1, 3, 5] {
+            est.set_total(id, 30);
+        }
+        for id in [2, 4] {
+            est.set_total(id, 30);
+            est.set_settled(id, 3);
+        }
+        let mut q = WorkQueue::with_estimates(
+            vec![task(5, 2), task(1, 2), task(3, 2)],
+            vec![draft(4, 6), draft(2, 6)],
+            est,
+        );
+        let mut s = SlotScheduler::new(5);
+        let ids: Vec<usize> = s.fill(&mut q).into_iter().map(|(_, t)| t.id).collect();
+        assert_eq!(ids, vec![1, 3, 5], "tied task estimates break by id");
+        let dids: Vec<usize> =
+            s.fill_verify(&mut q, 1).into_iter().map(|(_, d)| d.id).collect();
+        assert_eq!(dids, vec![2, 4], "tied draft estimates break by id");
+    }
+
+    #[test]
+    fn empty_estimates_queue_matches_raw_lpt_order() {
+        // `with_estimates(.., off())` is the same queue `new` builds: the
+        // empty table collapses every rank to the raw key.
+        let tasks = || vec![task(3, 1), task(0, 5), task(2, 1), task(1, 0)];
+        let drafts = || vec![draft(10, 4), draft(11, 2), draft(12, 4)];
+        let mut raw = WorkQueue::new(tasks(), drafts());
+        let mut off = WorkQueue::with_estimates(tasks(), drafts(), LenEstimates::off());
+        while !raw.is_empty() || !off.is_empty() {
+            let a = raw.pop_task().map(|t| t.id).or_else(|| raw.pop_draft().map(|d| d.id));
+            let b = off.pop_task().map(|t| t.id).or_else(|| off.pop_draft().map(|d| d.id));
+            assert_eq!(a, b, "off-estimates order must be bit-identical to raw");
+        }
+    }
+
+    #[test]
+    fn zero_history_prompts_rank_by_suite_priors() {
+        // Fresh prompts have no EWMA history; the predictor's suite prior
+        // must still separate them in the queue.
+        use super::super::predict::LenPredictor;
+        let mut p = LenPredictor::new(true);
+        p.set_prior(0, 8.0); // short-answer family
+        p.set_prior(1, 40.0); // long-answer family
+        p.set_prior(2, 16.0);
+        let tasks = vec![task(0, 0), task(1, 0), task(2, 0)];
+        let est = p.estimates(&tasks, &[]);
+        let mut q = WorkQueue::with_estimates(tasks, Vec::new(), est);
+        let mut s = SlotScheduler::new(3);
+        let ids: Vec<usize> = s.fill(&mut q).into_iter().map(|(_, t)| t.id).collect();
+        assert_eq!(ids, vec![1, 2, 0], "longest prior first among zero-history prompts");
+    }
+
+    #[test]
+    fn adversarial_inverse_estimates_lose_no_item() {
+        // A deliberately wrong predictor (shortest-first) may wreck the
+        // makespan, but the queue must still hand every item out exactly
+        // once — correctness never depends on estimate quality.
+        let mut est = LenEstimates::off();
+        for id in 0..6 {
+            // Inverse: claim the longest-prefix (shortest-remaining) tasks
+            // have the most remaining work.
+            est.set_total(id, 100 + id);
+        }
+        let tasks: Vec<SeqTask> = (0..6).map(|i| task(i, 6 - i)).collect();
+        let drafts: Vec<VerifyTask> = (0..3).map(|i| draft(10 + i, 2 + i)).collect();
+        let mut q = WorkQueue::with_estimates(tasks, drafts, est);
+        let mut popped = Vec::new();
+        while let Some(t) = q.pop_task() {
+            popped.push(t.id);
+        }
+        while let Some(d) = q.pop_draft() {
+            popped.push(d.id);
+        }
+        let mut sorted = popped.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, (0..6).chain(10..13).collect::<Vec<_>>());
+        assert_eq!(popped.len(), 9, "no item lost or duplicated");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn requeue_resorts_with_the_queue_estimates() {
+        // Fault-recovery requeue must use the queue's own estimate table,
+        // not the raw keys — otherwise a survivor's pull order would
+        // diverge from a fresh estimate-aware queue over the same work.
+        let mut est = LenEstimates::off();
+        est.set_total(0, 10);
+        est.set_total(1, 50);
+        let mut q = WorkQueue::with_estimates(vec![task(0, 2)], Vec::new(), est);
+        q.requeue(vec![task(1, 2)], Vec::new());
+        let mut s = SlotScheduler::new(2);
+        let ids: Vec<usize> = s.fill(&mut q).into_iter().map(|(_, t)| t.id).collect();
+        assert_eq!(ids, vec![1, 0], "requeued straggler jumps ahead per its estimate");
     }
 
     #[test]

@@ -197,6 +197,14 @@ impl RolloutCache {
         self.slots.get(&id).map(|(latest, _)| self.materialize(latest))
     }
 
+    /// Total response length of the latest cached rollout for `id` —
+    /// read straight off the leaf in O(1), no root-to-leaf
+    /// materialization. This is the length predictor's seed
+    /// (`ARCHITECTURE.md` §14): the prior epoch's accepted length.
+    pub fn cached_len(&self, id: usize) -> Option<usize> {
+        self.slots.get(&id).map(|(latest, _)| latest.len)
+    }
+
     /// The rollout before the latest (Delayed-Reuse ablation),
     /// materialized by the root-to-leaf walk.
     pub fn previous(&self, id: usize) -> Option<CacheEntry> {

@@ -1,0 +1,229 @@
+//! Per-row adaptive draft-length control (`ARCHITECTURE.md` §14).
+//!
+//! A stale draft is pure overhead past its rejection point: every token
+//! materialized, uploaded, and teacher-forced through `verify_seat`
+//! beyond the accepted prefix is work the verifier throws away. The
+//! `benchkit::stale` workload is the directed failure mode — rows whose
+//! acceptance collapses re-offer their full dead draft every step.
+//!
+//! [`DraftControl`] clamps how much of a cached draft is materialized,
+//! per row: when a row's acceptance ratio collapses below
+//! [`SHRINK_BELOW`], its cap halves (floored at `spec.draft_len_min`);
+//! when a capped row's acceptance recovers above [`GROW_ABOVE`], the cap
+//! doubles back (ceilinged at `spec.draft_len_max`, 0 = uncapped) until
+//! it un-caps entirely. `spec.draft_len_max` alone acts as a static
+//! global clamp with adaptation off.
+//!
+//! Truncation changes draft *content*, so unlike queue reordering it is
+//! not output-neutral across settings — the §6 identity obligation is
+//! pipeline-vs-two-phase under the *same* control settings: clipping
+//! happens in `SpecRollout::prepare`, shared verbatim by both paths, and
+//! the controller's observations come from the step's merged results,
+//! which the invariant already makes byte-identical. Two coordinators
+//! configured alike therefore evolve identical caps
+//! (`rust/tests/sched_continuous.rs` pins the sweep).
+
+use std::collections::HashMap;
+
+use super::cache::CacheEntry;
+use super::variants::clip_entry;
+
+/// Acceptance ratio below which a row's cap halves.
+pub const SHRINK_BELOW: f64 = 0.5;
+
+/// Acceptance ratio at or above which a capped row's cap doubles back.
+pub const GROW_ABOVE: f64 = 0.9;
+
+/// Per-row draft-length clamp: a static `max` ceiling plus, with `adapt`
+/// on, multiplicative-decrease / multiplicative-increase per-id caps
+/// driven by realized acceptance.
+#[derive(Clone, Debug)]
+pub struct DraftControl {
+    adapt: bool,
+    /// Floor for adaptive shrinking (`spec.draft_len_min`, >= 1).
+    min: usize,
+    /// Static ceiling (`spec.draft_len_max`; 0 = uncapped).
+    max: usize,
+    /// Per-id adaptive caps (absent = row is at the static ceiling).
+    caps: HashMap<usize, usize>,
+    /// Draft lengths actually offered this step, by id — the denominator
+    /// for the next [`DraftControl::observe`].
+    offered: HashMap<usize, usize>,
+}
+
+impl Default for DraftControl {
+    fn default() -> Self {
+        DraftControl { adapt: false, min: 1, max: 0, caps: HashMap::new(), offered: HashMap::new() }
+    }
+}
+
+impl DraftControl {
+    /// A controller with the `spec.draft_len_{min,max,adapt}` knobs.
+    /// `max == 0` means uncapped; `min` is clamped to at least 1.
+    pub fn new(min: usize, max: usize, adapt: bool) -> Self {
+        DraftControl { adapt, min: min.max(1), max, ..Self::default() }
+    }
+
+    /// True when the controller can never alter a draft (`adapt` off and
+    /// no static ceiling) — the default-config fast path.
+    pub fn is_noop(&self) -> bool {
+        !self.adapt && self.max == 0
+    }
+
+    /// Static ceiling as a usable bound (`usize::MAX` when uncapped).
+    fn ceiling(&self) -> usize {
+        if self.max == 0 {
+            usize::MAX
+        } else {
+            self.max
+        }
+    }
+
+    /// Current effective cap for `id`.
+    pub fn cap(&self, id: usize) -> usize {
+        self.caps.get(&id).copied().unwrap_or(usize::MAX).min(self.ceiling())
+    }
+
+    /// Draft length offered for `id` in the step being prepared (0 if the
+    /// row offered no draft).
+    pub fn last_offered(&self, id: usize) -> usize {
+        self.offered.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Start a step: forget the previous step's offered lengths.
+    pub fn begin_step(&mut self) {
+        self.offered.clear();
+    }
+
+    /// Clamp `entry` to `id`'s effective cap, recording the offered
+    /// length. Returns true when the draft was actually truncated (a
+    /// truncated draft cannot still claim its terminal EOS —
+    /// [`clip_entry`] clears `finished`).
+    pub fn clip(&mut self, id: usize, entry: &mut CacheEntry) -> bool {
+        let truncated = clip_entry(entry, self.cap(id));
+        self.offered.insert(id, entry.response.len());
+        truncated
+    }
+
+    /// Fold one row's realized acceptance (`accepted` of the `offered`
+    /// draft tokens survived verification) into its cap: halve below
+    /// [`SHRINK_BELOW`] (floor `min`), double back at [`GROW_ABOVE`]
+    /// (un-capping once the doubled cap clears both the offered length
+    /// and the static ceiling). No-op unless `adapt` is on.
+    pub fn observe(&mut self, id: usize, accepted: usize, offered: usize) {
+        if !self.adapt || offered == 0 {
+            return;
+        }
+        let ratio = accepted as f64 / offered as f64;
+        if ratio < SHRINK_BELOW {
+            self.caps.insert(id, (offered / 2).max(self.min));
+        } else if ratio >= GROW_ABOVE {
+            if let Some(&c) = self.caps.get(&id) {
+                let grown = c.saturating_mul(2);
+                // Doubling past the static ceiling stops binding — drop
+                // the per-row cap and let the ceiling do the clamping.
+                if grown >= self.ceiling() {
+                    self.caps.remove(&id);
+                } else {
+                    self.caps.insert(id, grown);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(len: usize) -> CacheEntry {
+        CacheEntry {
+            response: (0..len as i32).collect(),
+            logps: vec![-1.0; len],
+            version: 0,
+            finished: true,
+        }
+    }
+
+    #[test]
+    fn noop_controller_never_touches_a_draft() {
+        let mut c = DraftControl::new(1, 0, false);
+        assert!(c.is_noop());
+        let mut e = entry(10);
+        assert!(!c.clip(0, &mut e));
+        assert_eq!(e.response.len(), 10);
+        assert!(e.finished, "untouched draft keeps its terminal flag");
+        assert_eq!(c.last_offered(0), 10);
+    }
+
+    #[test]
+    fn static_ceiling_clamps_without_adaptation() {
+        let mut c = DraftControl::new(1, 4, false);
+        assert!(!c.is_noop());
+        let mut e = entry(10);
+        assert!(c.clip(0, &mut e));
+        assert_eq!(e.response.len(), 4);
+        assert_eq!(e.logps.len(), 4);
+        assert!(!e.finished, "a truncated draft cannot claim terminal EOS");
+        let mut short = entry(3);
+        assert!(!c.clip(1, &mut short), "under-ceiling drafts pass through");
+        assert!(short.finished);
+    }
+
+    #[test]
+    fn collapsing_acceptance_halves_the_cap_to_the_floor() {
+        let mut c = DraftControl::new(2, 0, true);
+        c.observe(0, 1, 16); // ratio 1/16 < 0.5 -> cap 8
+        assert_eq!(c.cap(0), 8);
+        c.observe(0, 0, 8); // -> cap 4
+        c.observe(0, 0, 4); // -> cap 2
+        c.observe(0, 0, 2); // floored at min
+        assert_eq!(c.cap(0), 2);
+        let mut e = entry(16);
+        assert!(c.clip(0, &mut e));
+        assert_eq!(e.response.len(), 2);
+    }
+
+    #[test]
+    fn high_acceptance_doubles_a_shrunk_cap_gradually() {
+        let mut c = DraftControl::new(1, 0, true);
+        c.observe(0, 0, 16); // ratio 0 -> cap 8
+        assert_eq!(c.cap(0), 8);
+        c.observe(0, 8, 8); // ratio 1.0 -> cap 16
+        assert_eq!(c.cap(0), 16);
+        c.observe(0, 15, 16); // ratio ~0.94 -> cap 32
+        assert_eq!(c.cap(0), 32, "recovery doubles, it does not jump to uncapped");
+    }
+
+    #[test]
+    fn growth_past_the_static_ceiling_uncaps_the_row() {
+        let mut c = DraftControl::new(1, 12, true);
+        c.observe(0, 0, 16); // cap 8
+        assert_eq!(c.cap(0), 8);
+        c.observe(0, 8, 8); // grown 16 >= ceiling 12 -> per-row cap dropped
+        assert_eq!(c.cap(0), 12, "effective cap falls back to the static ceiling");
+        let mut e = entry(20);
+        c.clip(0, &mut e);
+        assert_eq!(e.response.len(), 12);
+    }
+
+    #[test]
+    fn middling_acceptance_leaves_the_cap_alone() {
+        let mut c = DraftControl::new(1, 0, true);
+        c.observe(0, 0, 10); // cap 5
+        c.observe(0, 3, 5); // ratio 0.6: between thresholds
+        assert_eq!(c.cap(0), 5);
+        c.observe(0, 0, 0); // zero offer never divides by zero
+        assert_eq!(c.cap(0), 5);
+    }
+
+    #[test]
+    fn begin_step_clears_offer_bookkeeping() {
+        let mut c = DraftControl::new(1, 0, true);
+        let mut e = entry(6);
+        c.clip(3, &mut e);
+        assert_eq!(c.last_offered(3), 6);
+        c.begin_step();
+        assert_eq!(c.last_offered(3), 0);
+    }
+}

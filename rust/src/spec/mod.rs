@@ -48,6 +48,7 @@
 //! Delayed Reuse, Full Reuse, and Off == vanilla RLVR).
 
 pub mod cache;
+pub mod draft;
 pub mod lenience;
 pub mod variants;
 pub mod verifier;
@@ -55,12 +56,14 @@ pub mod verifier;
 use anyhow::Result;
 
 use crate::rollout::{
-    EnginePool, PipelineStats, Placement, RolloutEngine, SampleCfg, SeqResult, SeqTask,
+    EnginePool, LenEstimates, LenPredictor, PipelineStats, Placement, RolloutEngine, SampleCfg,
+    SeqResult, SeqTask,
 };
 use crate::runtime::Backend;
 use crate::util::{Rng, StageTimer};
 
 pub use cache::{CacheEntry, FlatCache, RolloutCache};
+pub use draft::DraftControl;
 pub use lenience::Lenience;
 pub use variants::ReuseVariant;
 pub use verifier::{VerifyPlanner, VerifyTask};
@@ -86,6 +89,14 @@ pub struct SpecRollout {
     /// ([`Placement::Steal`] by default; results are byte-identical
     /// either way, only the per-shard device-call split differs).
     pub placement: Placement,
+    /// Predicted-length scheduling (`rollout.predict_len`,
+    /// `ARCHITECTURE.md` §14): per-task total-length and acceptance
+    /// EWMAs feeding the queue's LPT keys. Disabled by default — the
+    /// queue then orders by the raw keys, bit-exactly the old behavior.
+    pub predictor: LenPredictor,
+    /// Per-row adaptive draft-length clamp
+    /// (`spec.draft_len_{min,max,adapt}`, §14). A no-op by default.
+    pub draft_ctl: DraftControl,
     /// Current step counter (cache versioning).
     pub step: u64,
 }
@@ -97,6 +108,8 @@ impl SpecRollout {
             variant,
             lenience,
             placement: Placement::Steal,
+            predictor: LenPredictor::default(),
+            draft_ctl: DraftControl::default(),
             step: 0,
         }
     }
@@ -106,6 +119,27 @@ impl SpecRollout {
     pub fn with_placement(mut self, placement: Placement) -> Self {
         self.placement = placement;
         self
+    }
+
+    /// Enable/disable predicted-length scheduling (`rollout.predict_len`).
+    /// Estimates only reorder seating, so outputs are byte-identical
+    /// either way (`ARCHITECTURE.md` §14).
+    pub fn with_predict(mut self, enabled: bool) -> Self {
+        self.predictor = LenPredictor::new(enabled);
+        self
+    }
+
+    /// Configure the draft-length clamp (`spec.draft_len_{min,max,adapt}`:
+    /// shrink floor, static ceiling with 0 = uncapped, adaptive on/off).
+    pub fn with_draft_control(mut self, min: usize, max: usize, adapt: bool) -> Self {
+        self.draft_ctl = DraftControl::new(min, max, adapt);
+        self
+    }
+
+    /// Load a per-task length prior for a zero-history prompt (the
+    /// trainer seeds these from `tasks::suites::family_length_priors`).
+    pub fn set_len_prior(&mut self, id: usize, len: f64) {
+        self.predictor.set_prior(id, len);
     }
 
     /// Vanilla RLVR (no reuse, cache still shadow-updated for overlap
@@ -133,13 +167,16 @@ impl SpecRollout {
     /// Split a step's requests into decode-ready tasks and verify tasks,
     /// drawing this step's verification/sampling nonces. Host-resolvable
     /// acceptance (Random/Full) happens here; Spec/Delayed drafts go to
-    /// the engine's Verify phase. Returns
-    /// `(vnonce, rnonce, tasks, drafts, variant-resolved draft stats)`.
+    /// the engine's Verify phase; the draft-length clamp clips each
+    /// materialized draft and the predictor freezes this step's
+    /// [`LenEstimates`] (§14 — the predictor consumes **no** RNG, so both
+    /// drive paths see identical nonce streams whatever it is set to).
+    /// Returns `(vnonce, rnonce, tasks, drafts, draft stats, estimates)`.
     fn prepare(
-        &self,
+        &mut self,
         requests: &[RolloutRequest],
         rng: &mut Rng,
-    ) -> (u64, u64, Vec<SeqTask>, Vec<VerifyTask>, PipelineStats) {
+    ) -> (u64, u64, Vec<SeqTask>, Vec<VerifyTask>, PipelineStats, LenEstimates) {
         // Both nonces are drawn unconditionally and in a fixed order, so
         // the pipeline and two-phase paths consume the caller's RNG
         // identically — a precondition for byte-identical outputs.
@@ -148,11 +185,26 @@ impl SpecRollout {
         let mut pre = PipelineStats::default();
         let mut tasks: Vec<SeqTask> = Vec::with_capacity(requests.len());
         let mut drafts: Vec<VerifyTask> = Vec::new();
+        self.draft_ctl.begin_step();
         for req in requests {
-            let Some(entry) = self.variant.draft_for(&self.cache, req.id, self.step) else {
+            self.predictor.seed_from_cache(&self.cache, req.id);
+            let Some(mut entry) = self.variant.draft_for(&self.cache, req.id, self.step)
+            else {
                 tasks.push(SeqTask::fresh(req.id, req.prompt.clone()));
                 continue;
             };
+            // Clip before acceptance resolution: Random's rejection offset
+            // and the verifier both see the same (clamped) draft, keeping
+            // the two drive paths byte-identical per settings.
+            if self.draft_ctl.clip(req.id, &mut entry) {
+                pre.draft_trunc += 1;
+            }
+            let offered = entry.response.len();
+            pre.draft_len_sum += offered;
+            pre.draft_len_lo =
+                if pre.draft_len_rows == 0 { offered } else { pre.draft_len_lo.min(offered) };
+            pre.draft_len_hi = pre.draft_len_hi.max(offered);
+            pre.draft_len_rows += 1;
             match self.variant {
                 ReuseVariant::Random | ReuseVariant::Full => {
                     let len = entry.response.len();
@@ -180,13 +232,34 @@ impl SpecRollout {
                 }),
             }
         }
-        (vnonce, rnonce, tasks, drafts, pre)
+        let est = self.predictor.estimates(&tasks, &drafts);
+        (vnonce, rnonce, tasks, drafts, pre, est)
     }
 
     /// Cache refresh (the paper's "always the most recent policy's
     /// rollouts"; the Off variant keeps a shadow cache so overlap metrics
-    /// stay measurable) + telemetry finalization.
+    /// stay measurable) + predictor/draft-control feedback + telemetry
+    /// finalization.
     fn finish(&mut self, results: &[SeqResult], mut stats: PipelineStats) -> PipelineStats {
+        // Feedback pass (§14). The prediction error is measured *before*
+        // this step's lengths fold into the EWMA — it gauges the estimate
+        // the scheduler actually used.
+        for r in results {
+            let offered = self.draft_ctl.last_offered(r.id);
+            if let Some(p) = self.predictor.predict(r.id) {
+                stats.predict_err_sum += (p - r.response.len() as f64).abs();
+                stats.predict_rows += 1;
+            }
+            if self.predictor.enabled() {
+                self.predictor.observe_len(r.id, r.response.len());
+                if offered > 0 {
+                    self.predictor.observe_acceptance(r.id, r.reused, offered);
+                }
+            }
+            if offered > 0 {
+                self.draft_ctl.observe(r.id, r.reused, offered);
+            }
+        }
         let (e0, t0) = self.cache.eviction_stats();
         let step = self.step;
         self.cache
@@ -230,13 +303,14 @@ impl SpecRollout {
         timer: &mut StageTimer,
     ) -> Result<(Vec<SeqResult>, PipelineStats)> {
         let loglen = self.lenience.log_value(self.step);
-        let (vnonce, rnonce, tasks, drafts, pre) = self.prepare(requests, rng);
+        let (vnonce, rnonce, tasks, drafts, pre, est) = self.prepare(requests, rng);
         let (results, mut stats) = pool.run_pipeline_with(
-            self.placement, blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, timer,
+            self.placement, blobs, tasks, drafts, loglen, cfg, vnonce, rnonce, &est, timer,
         )?;
         stats.drafts += pre.drafts;
         stats.prefix_tokens += pre.prefix_tokens;
         stats.full_reuses += pre.full_reuses;
+        stats.absorb_draft_lens(&pre);
         let stats = self.finish(&results, stats);
         Ok((results, stats))
     }
@@ -256,7 +330,10 @@ impl SpecRollout {
         timer: &mut StageTimer,
     ) -> Result<(Vec<SeqResult>, PipelineStats)> {
         let loglen = self.lenience.log_value(self.step);
-        let (vnonce, rnonce, mut tasks, drafts, pre) = self.prepare(requests, rng);
+        // The oracle ignores the estimate table: its decode path is
+        // order-invariant by construction, which is exactly why it can
+        // pin the predictor-on pipeline byte-identical (§14).
+        let (vnonce, rnonce, mut tasks, drafts, pre, _est) = self.prepare(requests, rng);
         let mut verified = PipelineStats::default();
         if !drafts.is_empty() {
             let span = std::time::Instant::now();
@@ -283,6 +360,7 @@ impl SpecRollout {
         stats.drafts += pre.drafts + verified.drafts;
         stats.prefix_tokens += pre.prefix_tokens + verified.prefix_tokens;
         stats.full_reuses += pre.full_reuses + verified.full_reuses;
+        stats.absorb_draft_lens(&pre);
         let stats = self.finish(&results, stats);
         Ok((results, stats))
     }

@@ -65,6 +65,23 @@ pub fn random_reject(vnonce: u64, id: usize, draft_len: usize) -> usize {
     super::verifier::verify_rng(vnonce, id).below(draft_len + 1)
 }
 
+/// Truncate a materialized draft to at most `cap` tokens (response and
+/// log-probs together). A truncated draft no longer carries its terminal
+/// EOS, so `finished` is cleared — offering a clipped prefix as "complete"
+/// would let full-reuse skip the decode the dropped tail still needs.
+/// Returns whether anything was cut. The adaptive controller
+/// (`spec::draft::DraftControl`) is the only production caller; it lives
+/// here beside the other draft-shaping rules.
+pub fn clip_entry(entry: &mut CacheEntry, cap: usize) -> bool {
+    if entry.response.len() <= cap {
+        return false;
+    }
+    entry.response.truncate(cap);
+    entry.logps.truncate(cap);
+    entry.finished = false;
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +155,26 @@ mod tests {
             (0..50).map(|n| random_reject(n, 1, 7)).collect::<Vec<_>>(),
             (0..50).map(|n| random_reject(n, 2, 7)).collect::<Vec<_>>(),
         );
+    }
+
+    #[test]
+    fn clip_entry_truncates_and_clears_terminal_flag() {
+        let mut e = CacheEntry {
+            response: vec![1, 2, 3, 4, 5],
+            logps: vec![-0.1, -0.2, -0.3, -0.4, -0.5],
+            version: 3,
+            finished: true,
+        };
+        assert!(clip_entry(&mut e, 3));
+        assert_eq!(e.response, vec![1, 2, 3]);
+        assert_eq!(e.logps.len(), 3);
+        assert!(!e.finished, "clipped drafts lose their terminal EOS claim");
+        assert_eq!(e.version, 3, "version is untouched");
+
+        let mut whole = e.clone();
+        assert!(!clip_entry(&mut whole, 3), "cap == len cuts nothing");
+        assert_eq!(whole.response, vec![1, 2, 3]);
+        assert!(!clip_entry(&mut whole, usize::MAX), "uncapped is a no-op");
     }
 
     #[test]

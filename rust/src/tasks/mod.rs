@@ -21,5 +21,5 @@ pub mod verifier;
 
 pub use dataset::{sft_corpus, train_set, DatasetSpec, SftExample};
 pub use gen::{Family, TaskInstance};
-pub use suites::{eval_suites, EvalSuite};
+pub use suites::{eval_suites, family_length_priors, EvalSuite};
 pub use verifier::{extract_answer, reward};

@@ -62,6 +62,31 @@ pub fn suite_names() -> Vec<&'static str> {
     vec!["add-easy", "add-hard", "sub", "mul", "chain", "compare", "format"]
 }
 
+/// Per-family mean canonical-response length over the eval battery — the
+/// zero-history length priors for predicted-length scheduling
+/// (`ARCHITECTURE.md` §14). Fresh prompts have no EWMA history yet; their
+/// task family's typical answer length is the cheapest unbiased guess,
+/// and the suites are seeded independently of every train set, so the
+/// prior never leaks a specific training answer. Families the battery
+/// does not cover are simply absent (the predictor then falls back to
+/// its default prior). Deterministic: same `n`, same priors.
+pub fn family_length_priors(n: usize) -> Vec<(Family, f64)> {
+    let mut sums: Vec<(Family, f64, usize)> = Vec::new();
+    for s in eval_suites(n) {
+        for t in &s.tasks {
+            let len = t.canonical.len() as f64;
+            match sums.iter_mut().find(|(f, _, _)| *f == t.family) {
+                Some((_, sum, cnt)) => {
+                    *sum += len;
+                    *cnt += 1;
+                }
+                None => sums.push((t.family, len, 1)),
+            }
+        }
+    }
+    sums.into_iter().map(|(f, sum, cnt)| (f, sum / cnt as f64)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,6 +117,35 @@ mod tests {
                 y.tasks.iter().map(|t| &t.prompt).collect::<Vec<_>>()
             );
         }
+    }
+
+    #[test]
+    fn length_priors_are_deterministic_and_positive() {
+        let a = family_length_priors(16);
+        let b = family_length_priors(16);
+        assert_eq!(a.len(), b.len());
+        for ((fa, pa), (fb, pb)) in a.iter().zip(&b) {
+            assert_eq!(fa, fb);
+            assert_eq!(pa, pb, "same n must give bit-identical priors");
+            assert!(*pa > 0.0, "{fa:?} prior must be positive");
+        }
+        // every suite family is represented
+        for fam in [
+            Family::Add2,
+            Family::Add3,
+            Family::Sub,
+            Family::Mul1,
+            Family::Chain,
+            Family::Compare,
+            Family::SortDigits,
+            Family::Format,
+        ] {
+            assert!(a.iter().any(|(f, _)| *f == fam), "{fam:?} missing");
+        }
+        // chains answer with two worked steps, so their canonical responses
+        // run longer than single-step easy addition on average
+        let of = |fam| a.iter().find(|(f, _)| *f == fam).unwrap().1;
+        assert!(of(Family::Chain) > of(Family::Add2));
     }
 
     #[test]

@@ -59,6 +59,7 @@ pub const STEP_COLUMNS: &[&str] = &[
     "shards", "device_calls", "shard_calls_max", "shard_calls_min", "steal_count",
     "shard_failures", "requeued_tasks",
     "overlap_makespan", "serial_makespan", "readback_bytes", "upload_bytes",
+    "predict_err", "draft_len_mean", "draft_len_max", "draft_trunc",
     "cache_tokens", "cache_nodes", "cache_shared_tokens",
     "cache_evictions", "cache_evicted_tokens",
     "rollout_s", "verification_s", "assembly_s", "reward_s", "old_logp_s",
@@ -130,12 +131,28 @@ impl<'e> Trainer<'e> {
             spec_variant.name(),
             cfg.bundle
         );
+        let mut spec = SpecRollout::new(spec_variant, cfg.lenience)
+            .with_cache_budget(cache_budget)
+            .with_group(cfg.group)
+            .with_predict(cfg.predict_len)
+            .with_draft_control(cfg.draft_len_min, cfg.draft_len_max, cfg.draft_len_adapt);
+        if cfg.predict_len {
+            // Zero-history prompts schedule by their family's typical
+            // canonical length (ARCHITECTURE.md §14) until the first
+            // observed rollout replaces the prior with a per-task EWMA.
+            let priors = tasks::family_length_priors(cfg.eval_n.max(8));
+            for (pi, t) in train_set.iter().enumerate() {
+                if let Some((_, prior)) = priors.iter().find(|(f, _)| *f == t.family) {
+                    for k in 0..cfg.group {
+                        spec.set_len_prior(pi * cfg.group + k, *prior);
+                    }
+                }
+            }
+        }
         Ok(Trainer {
             eng,
             rng: Rng::new(cfg.seed),
-            spec: SpecRollout::new(spec_variant, cfg.lenience)
-                .with_cache_budget(cache_budget)
-                .with_group(cfg.group),
+            spec,
             pool,
             tok,
             train_set,
@@ -442,6 +459,14 @@ impl<'e> Trainer<'e> {
         // payload the host-sampling oracle reads each decode round.
         rec.insert("readback_bytes", spec_stats_acc.readback_bytes as f64);
         rec.insert("upload_bytes", spec_stats_acc.upload_bytes as f64);
+        // Predicted-length scheduling gauges (ARCHITECTURE.md §14): mean
+        // |predicted - actual| response length over rows the predictor
+        // scored, plus the offered-draft-length summary from the adaptive
+        // controller. All stay 0/NaN-free when the features are off.
+        rec.insert("predict_err", spec_stats_acc.mean_predict_err);
+        rec.insert("draft_len_mean", spec_stats_acc.mean_draft_len);
+        rec.insert("draft_len_max", spec_stats_acc.draft_len_hi as f64);
+        rec.insert("draft_trunc", spec_stats_acc.draft_trunc as f64);
         rec.insert("cache_tokens", self.spec.cache.total_tokens() as f64);
         // Trie gauges after the step's last refresh: live interned runs
         // and the tokens prefix sharing saves over flat storage.

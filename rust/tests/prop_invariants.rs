@@ -8,10 +8,10 @@ use spec_rl::algo;
 use spec_rl::benchkit::stale;
 use spec_rl::metrics;
 use spec_rl::rollout::{
-    BatchLayout, EnginePool, PipelineStats, Placement, RolloutEngine, SampleCfg, SeqResult,
-    SeqTask,
+    BatchLayout, EnginePool, LenEstimates, PipelineStats, Placement, RolloutEngine, SampleCfg,
+    SeqResult, SeqTask, WorkQueue,
 };
-use spec_rl::spec::{CacheEntry, Lenience, RolloutCache};
+use spec_rl::spec::{CacheEntry, Lenience, RolloutCache, VerifyTask};
 use spec_rl::testing::mock::{FaultPlan, MockEngine};
 use spec_rl::testing::{forall, forall_ok, tokens};
 use spec_rl::tokenizer::{Tokenizer, BOS, EOS};
@@ -422,6 +422,200 @@ fn prop_chaos_faults_lose_nothing_and_never_double_seat() {
         live_seats.sort();
         if let Some(w) = live_seats.windows(2).find(|w| w[0] == w[1]) {
             return Err(format!("row {:?} seated on two live engines", w[0]));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// predicted-length scheduling (ARCHITECTURE.md §14)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct PredCase {
+    n_tasks: usize,
+    draft_len: usize,
+    lenience: f32,
+    /// Per-id predictor seeding: (prior, observed len, accepted, offered).
+    obs: Vec<(f64, usize, usize, usize)>,
+}
+
+fn pred_case(rng: &mut Rng) -> PredCase {
+    let n_tasks = 6 + rng.below(31); // 6..=36: stale prompts stay per-id unique
+    PredCase {
+        n_tasks,
+        draft_len: 2 + rng.below(5), // 2..=6 at gen_len 8
+        lenience: -0.8 * rng.f32(),
+        // Arbitrary — even adversarial — predictor state: identity may
+        // not depend on the estimates being any good.
+        obs: (0..n_tasks)
+            .map(|_| {
+                (rng.f64() * 20.0, rng.below(CT + 1), rng.below(7), 1 + rng.below(6))
+            })
+            .collect(),
+    }
+}
+
+/// One drafted pool step of the case's workload, predictor on or off.
+fn pred_run(
+    c: &PredCase,
+    shards: usize,
+    placement: Placement,
+    predict: bool,
+) -> Vec<SeqResult> {
+    let mocks = MockEngine::replicas(shards, CB, CP, CT, CV);
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+    let mut spec = stale::warmed(c.n_tasks, c.draft_len, CV, c.lenience)
+        .with_placement(placement)
+        .with_predict(predict);
+    if predict {
+        for (id, &(prior, len, acc, off)) in c.obs.iter().enumerate() {
+            spec.set_len_prior(id, prior);
+            spec.predictor.observe_len(id, len);
+            spec.predictor.observe_acceptance(id, acc, off);
+        }
+    }
+    let mut rng = Rng::new(CHAOS_STEP_SEED);
+    let mut timer = StageTimer::new();
+    let reqs = stale::requests(c.n_tasks, CV);
+    let (res, _) = spec
+        .collect(&mut pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        .unwrap();
+    res
+}
+
+/// §14 identity: whatever the predictor believes — including random
+/// nonsense — estimates only reorder seating, so outputs are
+/// byte-identical to the predictor-off run for every shard count and
+/// placement discipline.
+#[test]
+fn prop_predictor_identity_across_shards_and_placements() {
+    forall_ok(113, 12, pred_case, |c| {
+        let baseline = pred_run(c, 1, Placement::Steal, false);
+        for shards in [1usize, 2, 4] {
+            for placement in [Placement::Steal, Placement::Static] {
+                for predict in [false, true] {
+                    let res = pred_run(c, shards, placement, predict);
+                    if res.len() != baseline.len() {
+                        return Err(format!(
+                            "{shards} shards {placement:?} predict={predict}: \
+                             {} results, baseline has {}",
+                            res.len(),
+                            baseline.len()
+                        ));
+                    }
+                    for (x, y) in res.iter().zip(&baseline) {
+                        let same = x.id == y.id
+                            && x.response == y.response
+                            && x.logps == y.logps
+                            && (x.reused, x.new_tokens, x.finished)
+                                == (y.reused, y.new_tokens, y.finished);
+                        if !same {
+                            return Err(format!(
+                                "{shards} shards {placement:?} predict={predict}: \
+                                 id {} diverged from baseline",
+                                x.id
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug)]
+struct QueueCase {
+    tasks: Vec<SeqTask>,
+    drafts: Vec<VerifyTask>,
+    est: LenEstimates,
+}
+
+fn queue_case(rng: &mut Rng) -> QueueCase {
+    let nt = rng.below(12);
+    let nd = rng.below(12);
+    let tasks: Vec<SeqTask> = (0..nt)
+        .map(|id| {
+            let plen = rng.below(G);
+            SeqTask {
+                id,
+                prompt: vec![BOS],
+                prefix: vec![7; plen],
+                prefix_logps: vec![-1.0; plen],
+            }
+        })
+        .collect();
+    let drafts: Vec<VerifyTask> = (0..nd)
+        .map(|id| {
+            let dlen = 1 + rng.below(G);
+            VerifyTask {
+                id: nt + id,
+                prompt: vec![BOS],
+                entry: CacheEntry {
+                    response: vec![5; dlen],
+                    logps: vec![-1.0; dlen],
+                    version: 0,
+                    finished: false,
+                },
+            }
+        })
+        .collect();
+    // Partial, arbitrary estimates: some ids predicted, some not, some
+    // settled-only — every mix must still yield a lossless queue.
+    let mut est = LenEstimates::off();
+    for t in &tasks {
+        if rng.f32() < 0.6 {
+            est.set_total(t.id, rng.below(2 * G));
+        }
+    }
+    for d in &drafts {
+        if rng.f32() < 0.6 {
+            est.set_total(d.id, rng.below(2 * G));
+        }
+        if rng.f32() < 0.5 {
+            est.set_settled(d.id, rng.below(G));
+        }
+    }
+    QueueCase { tasks, drafts, est }
+}
+
+/// §14 queue soundness: under any (even partial or adversarial) estimate
+/// table, the queue's pop order is a permutation of its input — no item
+/// lost, none duplicated — and follows the estimate-aware LPT comparator
+/// with the id tie-break.
+#[test]
+fn prop_workqueue_pop_order_is_a_lossless_permutation() {
+    forall_ok(115, 300, queue_case, |c| {
+        let mut q =
+            WorkQueue::with_estimates(c.tasks.clone(), c.drafts.clone(), c.est.clone());
+        let (tasks, drafts) = q.drain();
+
+        let mut got: Vec<usize> = tasks.iter().map(|t| t.id).collect();
+        got.extend(drafts.iter().map(|d| d.id));
+        got.sort_unstable();
+        let mut want: Vec<usize> = c.tasks.iter().map(|t| t.id).collect();
+        want.extend(c.drafts.iter().map(|d| d.id));
+        want.sort_unstable();
+        if got != want {
+            return Err(format!("queue lost or duplicated items: {got:?} != {want:?}"));
+        }
+
+        for w in tasks.windows(2) {
+            let ka = (c.est.task_rank(&w[0]), w[0].id);
+            let kb = (c.est.task_rank(&w[1]), w[1].id);
+            if ka > kb {
+                return Err(format!("task lane out of LPT order at ids {}/{}", w[0].id, w[1].id));
+            }
+        }
+        for w in drafts.windows(2) {
+            let ka = (c.est.draft_rank(&w[0]), w[0].id);
+            let kb = (c.est.draft_rank(&w[1]), w[1].id);
+            if ka > kb {
+                return Err(format!("draft lane out of LPT order at ids {}/{}", w[0].id, w[1].id));
+            }
         }
         Ok(())
     });

@@ -11,7 +11,7 @@ use spec_rl::benchkit::{grouped, stale};
 use spec_rl::rollout::{
     EnginePool, PipelineStats, Placement, RolloutEngine, SampleCfg, SeqResult, SeqTask,
 };
-use spec_rl::spec::{Lenience, ReuseVariant, RolloutRequest, SpecRollout};
+use spec_rl::spec::{CacheEntry, Lenience, ReuseVariant, RolloutRequest, SpecRollout};
 use spec_rl::testing::mock::{FaultPlan, MockEngine};
 use spec_rl::tokenizer::{BOS, EOS};
 use spec_rl::util::{Rng, StageTimer};
@@ -1299,4 +1299,223 @@ fn refill_preserves_live_neighbour_state() {
     let packed_id2 = packed.iter().find(|r| r.id == 2).unwrap();
     assert_eq!(alone[0].response, packed_id2.response);
     assert_eq!(alone[0].logps, packed_id2.logps);
+}
+
+// ---------------------------------------------------------------------------
+// predicted-length scheduling + adaptive draft control (§14)
+// ---------------------------------------------------------------------------
+
+/// [`drive_placed`] with the §14 knobs on: predicted-length LPT seating
+/// plus (optionally) adaptive per-row draft caps. The knobs are set
+/// identically on both drive paths, so each pipeline run is compared to
+/// an oracle driven with the very same settings.
+fn drive_adaptive(
+    variant: ReuseVariant,
+    shards: usize,
+    epochs: usize,
+    seed: u64,
+    placement: Placement,
+    adapt: bool,
+) -> (Vec<Vec<SeqResult>>, Vec<PipelineStats>) {
+    let mocks = MockEngine::replicas(shards.max(1), 4, P, T, V);
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = (shards > 0).then(|| EnginePool::new(mocks.iter(), "mock").unwrap());
+    let mut eng = (shards == 0).then(|| RolloutEngine::new(&mocks[0], "mock").unwrap());
+    let mut spec = SpecRollout::new(variant, Lenience::Fixed(-0.4))
+        .with_placement(placement)
+        .with_predict(true)
+        .with_draft_control(1, 0, adapt);
+    let mut rng = Rng::new(seed);
+    let mut timer = StageTimer::new();
+    let mut all_results = Vec::new();
+    let mut all_stats = Vec::new();
+    for _ in 0..epochs {
+        let (r, s) = if let Some(eng) = eng.as_mut() {
+            spec.run_two_phase(eng, &blobs[0], &pipe_requests(), SampleCfg::default(), &mut rng, &mut timer)
+        } else {
+            spec.collect(pool.as_mut().unwrap(), &blob_refs, &pipe_requests(), SampleCfg::default(), &mut rng, &mut timer)
+        }
+        .unwrap();
+        all_results.push(r);
+        all_stats.push(s);
+    }
+    (all_results, all_stats)
+}
+
+#[test]
+fn predicted_and_adaptive_knobs_stay_pinned_to_the_oracle() {
+    // The §14 knobs change *which* draft lengths are offered (adaptive
+    // caps) and the order rows seat (predicted LPT) — never the verified
+    // outputs for a given setting: the predictor consumes no RNG, and
+    // clipping happens in the shared `prepare` before either drive path
+    // diverges. Every variant × adapt setting must match its own
+    // two-phase oracle byte-for-byte at 1/2/4 shards under both
+    // placement disciplines, across enough epochs for the caps to have
+    // actually moved (the EWMA warms on epoch 1, clips from epoch 2 on).
+    for adapt in [false, true] {
+        for variant in [
+            ReuseVariant::Off,
+            ReuseVariant::Spec,
+            ReuseVariant::Random,
+            ReuseVariant::Delayed,
+            ReuseVariant::Full,
+        ] {
+            let (two, _) = drive_adaptive(variant, 0, 3, 77, Placement::Steal, adapt);
+            for shards in [1usize, 2, 4] {
+                let (pipe, _) = drive_adaptive(variant, shards, 3, 77, Placement::Steal, adapt);
+                for (epoch, (ra, rb)) in pipe.iter().zip(&two).enumerate() {
+                    assert_same_results(
+                        ra,
+                        rb,
+                        &format!("{variant:?} adapt={adapt} steal {shards} epoch {epoch}"),
+                    );
+                }
+            }
+            for shards in [2usize, 4] {
+                let (pipe, _) = drive_adaptive(variant, shards, 3, 77, Placement::Static, adapt);
+                for (epoch, (ra, rb)) in pipe.iter().zip(&two).enumerate() {
+                    assert_same_results(
+                        ra,
+                        rb,
+                        &format!("{variant:?} adapt={adapt} static {shards} epoch {epoch}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Crafted drafts with a deterministic acceptance boundary: the first
+/// `accept` tokens record log-probs of -50 (the recomputed ratio
+/// saturates at 1 — certainly kept), the rest +50 (ratio ~e^-50 —
+/// certainly cut), so every row's `reused` comes out exactly `accept`.
+fn boundary_entries(n: usize, len: usize, accept: usize) -> Vec<(usize, CacheEntry)> {
+    (0..n)
+        .map(|i| {
+            let response: Vec<i32> = (0..len).map(|j| 3 + ((i + j) % (V - 3)) as i32).collect();
+            let logps: Vec<f32> =
+                (0..len).map(|j| if j < accept { -50.0 } else { 50.0 }).collect();
+            (i, CacheEntry { response, logps, version: 0, finished: false })
+        })
+        .collect()
+}
+
+#[test]
+fn adaptive_caps_shrink_on_stale_drafts_and_regrow_on_full_acceptance() {
+    // Directed walk through the §14 feedback loop, every step derived by
+    // hand. Epoch 1: uncapped 6-token drafts keep only 2 tokens (ratio
+    // 1/3 < SHRINK_BELOW), so every row's cap halves to 3. Epochs 2-3:
+    // the refreshed full-length drafts clip to the cap, the frozen mock
+    // policy accepts everything offered (ratio 1 >= GROW_ABOVE), and the
+    // cap doubles back 3 -> 6 -> 12. Epoch 4: the regrown cap clears the
+    // full 8-token draft — no truncation, pure reuse.
+    const N: usize = 4;
+    let gen_len = T - P;
+    let mut m = MockEngine::new(N, P, T, V);
+    m.eos_bias = 0.0;
+    let blob = m.blob();
+    let mut pool = EnginePool::single(&m, "mock").unwrap();
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(0.0))
+        .with_draft_control(1, 0, true);
+    spec.cache.insert_batch(boundary_entries(N, 6, 2));
+    spec.step = 1;
+    let reqs = stale::requests(N, V);
+    let mut rng = Rng::new(21);
+    let mut timer = StageTimer::new();
+    for epoch in 1..=4 {
+        let (res, stats) = spec
+            .collect(&mut pool, &[&blob], &reqs, SampleCfg::default(), &mut rng, &mut timer)
+            .unwrap();
+        assert_eq!(res.len(), N, "epoch {epoch}");
+        assert_eq!(stats.drafts, N, "epoch {epoch}: every row drafts");
+        match epoch {
+            1 => {
+                // No cap yet: the full crafted draft is offered, the +50
+                // boundary cuts it at 2 of 6.
+                assert_eq!(stats.draft_trunc, 0, "{stats:?}");
+                assert_eq!((stats.draft_len_lo, stats.draft_len_hi), (6, 6));
+                for r in &res {
+                    assert_eq!(r.reused, 2, "id {}", r.id);
+                }
+                for id in 0..N {
+                    assert_eq!(spec.draft_ctl.cap(id), 3, "id {id}: 6/2 floored at min=1");
+                }
+            }
+            2 => {
+                // Fresh 8-token drafts clip to the shrunken cap; full
+                // acceptance of the clipped draft doubles it back.
+                assert_eq!(stats.draft_trunc, N, "{stats:?}");
+                assert_eq!((stats.draft_len_lo, stats.draft_len_hi), (3, 3));
+                for r in &res {
+                    assert_eq!(r.reused, 3, "id {}", r.id);
+                }
+                for id in 0..N {
+                    assert_eq!(spec.draft_ctl.cap(id), 6, "id {id}: cap regrew 3 -> 6");
+                }
+            }
+            3 => {
+                assert_eq!(stats.draft_trunc, N, "{stats:?}");
+                assert_eq!((stats.draft_len_lo, stats.draft_len_hi), (6, 6));
+                for r in &res {
+                    assert_eq!(r.reused, 6, "id {}", r.id);
+                }
+                for id in 0..N {
+                    assert_eq!(spec.draft_ctl.cap(id), 12, "id {id}: cap regrew 6 -> 12");
+                }
+            }
+            _ => {
+                // Cap 12 no longer binds the 8-token draft: terminal
+                // full reuse, nothing left to decode.
+                assert_eq!(stats.draft_trunc, 0, "{stats:?}");
+                assert_eq!((stats.draft_len_lo, stats.draft_len_hi), (gen_len, gen_len));
+                assert_eq!(stats.full_reuses, N);
+                assert_eq!(stats.new_tokens, 0, "pure reuse decodes nothing");
+                for r in &res {
+                    assert_eq!(r.reused, gen_len, "id {}", r.id);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn adversarial_length_estimates_never_change_outputs() {
+    // Seed the predictor with *inverted* lengths — early (cheap) ids
+    // claimed long, late ids claimed short — the worst case for the
+    // predicted-LPT order. The schedule degrades toward shortest-first,
+    // but §6 RNG streams keep the outputs byte-identical to the
+    // unpredicted two-phase oracle; misprediction can only cost
+    // makespan, never correctness.
+    let oracle = stale_oracle();
+    for shards in [1usize, 2, 4] {
+        let mocks = stale_mocks(shards);
+        let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        let mut spec = stale::warmed(stale::N_TASKS, STALE_LEN, V, STALE_LENIENCE)
+            .with_predict(true);
+        for id in 0..stale::N_TASKS {
+            spec.predictor.observe_len(id, 1 + (stale::N_TASKS - id) * 7);
+            spec.predictor.observe_acceptance(id, 1, 2);
+        }
+        let mut rng = Rng::new(STALE_SEED);
+        let mut timer = StageTimer::new();
+        let (res, stats) = spec
+            .collect(
+                &mut pool,
+                &blob_refs,
+                &stale::requests(stale::N_TASKS, V),
+                SampleCfg::default(),
+                &mut rng,
+                &mut timer,
+            )
+            .unwrap();
+        assert_same_results(&res, &oracle, &format!("inverse estimates, {shards} shards"));
+        assert_eq!(stats.predict_rows, stale::N_TASKS, "every row was scored");
+        assert!(
+            stats.mean_predict_err > 0.0,
+            "inverted estimates must register as wrong ({stats:?})"
+        );
+    }
 }
