@@ -148,6 +148,14 @@ fn sharded_mock_demo() -> Result<()> {
         "  drafts offered: mean len={:.1} max={} truncated-by-cap={}",
         s1.mean_draft_len, s1.draft_len_hi, s1.draft_trunc
     );
+    // Trie-aware fallback gauges (`spec.sibling_drafts`, ARCHITECTURE.md
+    // §8): rows whose own leaf was gone but drafted from a surviving
+    // sibling spine anyway, the tokens those fallbacks offered, and how
+    // deep the drafted prompt groups agreed before diverging.
+    println!(
+        "  sibling fallbacks: {} rows, {} tokens offered, mean branch depth={:.1}",
+        s1.sibling_draft_hits, s1.sibling_draft_tokens, s1.branch_depth_mean
+    );
     Ok(())
 }
 

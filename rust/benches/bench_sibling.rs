@@ -1,0 +1,211 @@
+//! Sibling-fallback bench: trie-aware draft selection under eviction
+//! pressure (`spec.sibling_drafts`, ARCHITECTURE.md §8).
+//!
+//! The workload is the grouped pressure scenario from `benchkit`: a full
+//! warm epoch, a partial refresh that skips one rotating member per
+//! group, and a budget tightening that strands exactly those members
+//! while their siblings keep the shared spine. With the knob **off** the
+//! stranded rows re-decode their whole response from scratch; with it
+//! **on** they ride the longest surviving sibling spine through
+//! verification (fully accepted here — the crafted log-probs claim a
+//! tiny `p_prev`), so the first measured step pins, at shards {2, 4}:
+//!
+//! - **strictly fewer device calls** (verify + decode + refill forwards),
+//! - **strictly more accepted draft tokens per verify forward**,
+//!
+//! while outputs stay byte-identical to the two-phase oracle for either
+//! knob setting at shards {1, 2, 4} — the §6 per-id streams make the
+//! borrowed tokens verify under the requesting row's randomness, so
+//! shard count never leaks into results. Writes `BENCH_sibling.json`.
+
+use spec_rl::benchkit::grouped::{self, GroupedCfg};
+use spec_rl::benchkit::{Bench, JsonReport};
+use spec_rl::rollout::{EnginePool, PipelineStats, RolloutEngine, SampleCfg};
+use spec_rl::spec::{Lenience, ReuseVariant, SpecRollout};
+use spec_rl::testing::mock::MockEngine;
+use spec_rl::util::{Rng, StageTimer};
+
+/// Mock geometry: enough slots that every grouped row seats in the first
+/// wave (24 rows over 2 shards = 32 slots), so the on/off comparison is
+/// structural — same seating waves, different draft availability.
+const B: usize = 16;
+const P: usize = 16;
+const T: usize = 64;
+const V: usize = 51;
+/// Live epochs per run: epoch 0 is the analyzable pressure step the perf
+/// pins read; epoch 1 keeps churning the budgeted trie for the identity
+/// sweep.
+const EPOCHS: usize = 2;
+const LOG_LENIENCE: f32 = -0.4;
+const SEED: u64 = 21;
+
+/// `eos_bias = 0` replicas: every row decodes exactly to the cap, so the
+/// work saved by an accepted sibling prefix is deterministic.
+fn mocks_for(n: usize) -> Vec<MockEngine> {
+    let mut ms = MockEngine::replicas(n, B, P, T, V);
+    for m in &mut ms {
+        m.eos_bias = 0.0;
+    }
+    ms
+}
+
+/// The pre-stranded spec state: warm epoch 0, partial refresh at epoch 1,
+/// then tighten to the pressure budget (one stranded id per group,
+/// siblings intact — see `benchkit::grouped::pressure_budget`).
+fn stranded_spec(sibling: bool, cfg: &GroupedCfg) -> SpecRollout {
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(LOG_LENIENCE))
+        .with_group(cfg.group)
+        .with_sibling_drafts(sibling);
+    spec.cache.insert_batch(grouped::pressure_entries(cfg, 0));
+    spec.cache.insert_batch(grouped::pressure_refresh(cfg, 1));
+    spec.cache.set_token_budget(Some(grouped::pressure_budget(cfg)));
+    spec.step = 2;
+    spec
+}
+
+struct Run {
+    /// Per-epoch id-sorted `(id, response, logps)`.
+    outs: Vec<Vec<(usize, Vec<i32>, Vec<f32>)>>,
+    /// Per-epoch merged pipeline stats.
+    stats: Vec<PipelineStats>,
+}
+
+impl Run {
+    fn accepted(&self) -> usize {
+        self.stats.iter().map(|s| s.prefix_tokens).sum()
+    }
+    fn sibling_hits(&self) -> usize {
+        self.stats.iter().map(|s| s.sibling_draft_hits).sum()
+    }
+}
+
+/// One pressured run. `shards == 0` uses the two-phase oracle on a
+/// single engine; `shards > 0` the interleaved pipeline over a pool.
+fn drive(sibling: bool, shards: usize) -> Run {
+    let cfg = GroupedCfg::default();
+    let reqs = grouped::requests(&cfg);
+    let scfg = SampleCfg::default();
+    let mut spec = stranded_spec(sibling, &cfg);
+    let mut rng = Rng::new(SEED);
+    let mut timer = StageTimer::new();
+    let mocks = mocks_for(shards.max(1));
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let mut run = Run { outs: Vec::new(), stats: Vec::new() };
+    if shards == 0 {
+        let mut eng = RolloutEngine::new(&mocks[0], "mock").unwrap();
+        for _ in 0..EPOCHS {
+            let (res, stats) =
+                spec.run_two_phase(&mut eng, &blobs[0], &reqs, scfg, &mut rng, &mut timer).unwrap();
+            run.outs.push(res.into_iter().map(|r| (r.id, r.response, r.logps)).collect());
+            run.stats.push(stats);
+        }
+    } else {
+        let blob_refs: Vec<_> = blobs.iter().collect();
+        let mut pool = EnginePool::new(mocks.iter(), "mock").unwrap();
+        for _ in 0..EPOCHS {
+            let (res, stats) =
+                spec.collect(&mut pool, &blob_refs, &reqs, scfg, &mut rng, &mut timer).unwrap();
+            run.outs.push(res.into_iter().map(|r| (r.id, r.response, r.logps)).collect());
+            run.stats.push(stats);
+        }
+    }
+    spec.cache.check_invariants().expect("trie invariants after the pressured run");
+    run
+}
+
+fn main() {
+    let bench = Bench::new(2, 8);
+    let cfg = GroupedCfg::default();
+    let mut j = JsonReport::new();
+    j.int("epochs", EPOCHS)
+        .num("log_lenience", LOG_LENIENCE as f64)
+        .int("pressure_budget", grouped::pressure_budget(&cfg))
+        .int("batch", cfg.batch());
+    println!(
+        "== sibling bench ({} prompts x {} samples, budget {}, {} epochs) ==",
+        cfg.prompts,
+        cfg.group,
+        grouped::pressure_budget(&cfg),
+        EPOCHS
+    );
+
+    // -- identity sweep: knob {off, on} x shards {1, 2, 4} vs the oracle --
+    for sibling in [false, true] {
+        let oracle = drive(sibling, 0);
+        if sibling {
+            assert!(
+                oracle.sibling_hits() > 0,
+                "stranded ids must actually take sibling fallbacks"
+            );
+        } else {
+            assert_eq!(oracle.sibling_hits(), 0, "knob off must never take a fallback");
+        }
+        for shards in [1usize, 2, 4] {
+            let live = drive(sibling, shards);
+            assert_eq!(
+                oracle.outs, live.outs,
+                "sibling={sibling} shards={shards}: outputs must be byte-identical to the oracle"
+            );
+            assert_eq!(
+                oracle.accepted(),
+                live.accepted(),
+                "sibling={sibling} shards={shards}: accepted draft tokens drifted"
+            );
+            assert_eq!(
+                oracle.sibling_hits(),
+                live.sibling_hits(),
+                "sibling={sibling} shards={shards}: fallback count must be shard-invariant"
+            );
+        }
+    }
+    println!("identity sweep: sibling {{off,on}} x shards {{1,2,4}} byte-identical to the oracle");
+
+    // -- perf pins on the pressure step (epoch 0) at shards {2, 4} --------
+    for shards in [2usize, 4] {
+        let off = drive(false, shards);
+        let on = drive(true, shards);
+        let (s_off, s_on) = (&off.stats[0], &on.stats[0]);
+        assert!(
+            s_on.device_calls() < s_off.device_calls(),
+            "shards {shards}: sibling drafts must save device calls ({} vs {})",
+            s_on.device_calls(),
+            s_off.device_calls()
+        );
+        let per_off = s_off.prefix_tokens as f64 / s_off.verify_calls.max(1) as f64;
+        let per_on = s_on.prefix_tokens as f64 / s_on.verify_calls.max(1) as f64;
+        assert!(
+            per_on > per_off,
+            "shards {shards}: accepted tokens per verify forward must grow ({per_on:.1} vs {per_off:.1})"
+        );
+        println!(
+            "shards {shards}: device calls {} -> {} | accepted/verify {per_off:.1} -> {per_on:.1} \
+             | {} fallbacks, {} tokens offered, mean branch depth {:.1}",
+            s_off.device_calls(),
+            s_on.device_calls(),
+            s_on.sibling_draft_hits,
+            s_on.sibling_draft_tokens,
+            s_on.branch_depth_mean
+        );
+        j.int(&format!("device_calls_off_s{shards}"), s_off.device_calls())
+            .int(&format!("device_calls_on_s{shards}"), s_on.device_calls())
+            .num(&format!("accepted_per_verify_off_s{shards}"), per_off)
+            .num(&format!("accepted_per_verify_on_s{shards}"), per_on)
+            .int(&format!("sibling_hits_s{shards}"), s_on.sibling_draft_hits)
+            .int(&format!("sibling_tokens_s{shards}"), s_on.sibling_draft_tokens)
+            .num(&format!("branch_depth_mean_s{shards}"), s_on.branch_depth_mean);
+    }
+
+    // -- timings ----------------------------------------------------------
+    for sibling in [false, true] {
+        let label = if sibling { "on" } else { "off" };
+        let r = bench.run(&format!("pressured step sibling={label} (2 shards, {EPOCHS} epochs)"), || {
+            drive(sibling, 2).stats[0].device_calls()
+        });
+        j.bench(&format!("drive_sibling_{label}"), &r);
+    }
+
+    println!("{}", j.render());
+    if let Err(e) = j.save("BENCH_sibling.json") {
+        eprintln!("could not write BENCH_sibling.json: {e}");
+    }
+}

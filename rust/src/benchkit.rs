@@ -238,6 +238,14 @@ pub mod grouped {
     /// The crafted rollouts of one epoch as cache-insert pairs (versioned
     /// by the epoch), ready for `insert_batch` into either cache flavor.
     pub fn entries(cfg: &GroupedCfg, epoch: u64) -> Vec<(usize, CacheEntry)> {
+        entries_with_logp(cfg, epoch, LOGP)
+    }
+
+    /// [`entries`] with an explicit recorded log-prob. One constant per
+    /// workload keeps trie sharing intact (sharing requires bitwise-equal
+    /// log-probs); the eviction-pressure family records [`LOGP_ACCEPT`]
+    /// so lenient verification keeps crafted drafts wholesale.
+    fn entries_with_logp(cfg: &GroupedCfg, epoch: u64, logp: f32) -> Vec<(usize, CacheEntry)> {
         let mut out = Vec::with_capacity(cfg.batch());
         for pi in 0..cfg.prompts {
             for k in 0..cfg.group {
@@ -246,7 +254,7 @@ pub mod grouped {
                 out.push((
                     pi * cfg.group + k,
                     CacheEntry {
-                        logps: vec![LOGP; response.len()],
+                        logps: vec![logp; response.len()],
                         response,
                         version: epoch,
                         finished: true,
@@ -255,6 +263,60 @@ pub mod grouped {
             }
         }
         out
+    }
+
+    // -- eviction pressure ---------------------------------------------------
+    //
+    // The knob that exercises the sibling-spine fallback under realistic
+    // churn (`spec.sibling_drafts`, ARCHITECTURE.md §8): each epoch's
+    // refresh skips one rotating member per group, and a tightened token
+    // budget then evicts exactly the lagging leaves — previous tiers
+    // first, then the oldest latest-tier leaves (`spec::cache`) — so
+    // every group enters the next step with one stranded id whose
+    // surviving siblings still hold the shared spine.
+
+    /// Recorded log-prob of the pressure workload's crafted tokens: a
+    /// tiny claimed `p_prev`, so the lenient rule accepts crafted drafts
+    /// outright and the measured on/off delta isolates *draft
+    /// availability* (stranded rows re-decoding from scratch vs riding a
+    /// sibling spine), not acceptance noise.
+    pub const LOGP_ACCEPT: f32 = -50.0;
+
+    /// The group member sitting out the refresh at `epoch` (rotates, so
+    /// over `group` epochs every id takes a turn being stranded).
+    pub fn stale_member(cfg: &GroupedCfg, epoch: u64) -> usize {
+        epoch as usize % cfg.group
+    }
+
+    /// Full-batch pressure-workload insert for the warmup epoch: same
+    /// crafted content as [`entries`], recorded at [`LOGP_ACCEPT`].
+    pub fn pressure_entries(cfg: &GroupedCfg, epoch: u64) -> Vec<(usize, CacheEntry)> {
+        entries_with_logp(cfg, epoch, LOGP_ACCEPT)
+    }
+
+    /// The rotating partial refresh: [`pressure_entries`] minus each
+    /// group's [`stale_member`]. Inserted over a [`pressure_budget`]-bound
+    /// cache this strands exactly the skipped ids — their leaves are the
+    /// oldest surviving latest-tier entries, first in line once the
+    /// previous-tier leftovers are gone.
+    pub fn pressure_refresh(cfg: &GroupedCfg, epoch: u64) -> Vec<(usize, CacheEntry)> {
+        let stale = stale_member(cfg, epoch);
+        pressure_entries(cfg, epoch)
+            .into_iter()
+            .filter(|(id, _)| id % cfg.group != stale)
+            .collect()
+    }
+
+    /// A token budget sized to hold each prompt's shared spine plus one
+    /// private tail per *refreshed* member — and nothing else. Tighten it
+    /// **after** inserting the [`pressure_refresh`] batch (warming with
+    /// the full epoch first): the single enforce pass then reclaims every
+    /// previous-tier leaf and each group's lagging latest-tier leaf to
+    /// land exactly on the budget, stranding one id per group mid-epoch
+    /// without touching a fresh sibling. Assumes the default
+    /// `divergence_depth <= epoch_overlap <= resp_len()` ordering.
+    pub fn pressure_budget(cfg: &GroupedCfg) -> usize {
+        cfg.prompts * (cfg.divergence_depth + (cfg.group - 1) * cfg.tail)
     }
 }
 
@@ -592,6 +654,53 @@ mod tests {
             assert!(e.logps[..gen_len - tail].iter().all(|&p| p == -50.0));
             assert!(e.logps[gen_len - tail..].iter().all(|&p| p == 0.0));
         }
+    }
+
+    #[test]
+    fn pressure_refresh_rotates_the_stranded_member() {
+        let cfg = grouped::GroupedCfg::default();
+        for epoch in 0..4u64 {
+            let skip = grouped::stale_member(&cfg, epoch);
+            let refresh = grouped::pressure_refresh(&cfg, epoch);
+            assert_eq!(refresh.len(), cfg.prompts * (cfg.group - 1));
+            assert!(refresh.iter().all(|(id, e)| {
+                id % cfg.group != skip
+                    && e.logps.iter().all(|&p| p == grouped::LOGP_ACCEPT)
+            }));
+        }
+        // the sit-out rotates, so no id is stranded two epochs running
+        assert_ne!(grouped::stale_member(&cfg, 0), grouped::stale_member(&cfg, 1));
+    }
+
+    #[test]
+    fn pressure_budget_strands_one_id_per_group_with_siblings_intact() {
+        use crate::spec::RolloutCache;
+        let cfg = grouped::GroupedCfg::default();
+        let mut cache = RolloutCache::new().with_group(cfg.group);
+        cache.insert_batch(grouped::pressure_entries(&cfg, 0));
+        cache.insert_batch(grouped::pressure_refresh(&cfg, 1));
+        cache.set_token_budget(Some(grouped::pressure_budget(&cfg)));
+        cache.check_invariants().unwrap();
+        let stale = grouped::stale_member(&cfg, 1);
+        for pi in 0..cfg.prompts {
+            for k in 0..cfg.group {
+                let id = pi * cfg.group + k;
+                if k == stale {
+                    assert!(cache.latest(id).is_none(), "id {id} should be stranded");
+                    let sib = cache.sibling_spine(id).expect("fresh siblings must survive");
+                    assert_eq!(sib.response.len(), cfg.resp_len());
+                    assert_eq!(sib.version, 1, "fallback rides the refreshed epoch");
+                    assert_eq!(cache.branch_depth(id), Some(cfg.divergence_depth));
+                } else {
+                    let own = cache.latest(id).expect("refreshed ids keep their own leaves");
+                    assert_eq!(own.version, 1);
+                    assert_eq!(own.response.len(), cfg.resp_len());
+                }
+            }
+        }
+        // every previous-tier leaf plus one latest-tier leaf per group
+        let (evictions, _) = cache.eviction_stats();
+        assert_eq!(evictions as usize, cfg.prompts * (cfg.group - 1) + cfg.prompts);
     }
 
     #[test]

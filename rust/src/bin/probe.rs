@@ -2,22 +2,21 @@
 // CPU client with buffer-resident args, and read a sub-range of the flat
 // output. Validates the blob-in/blob-out runtime design end to end.
 use anyhow::Result;
+use spec_rl::runtime::manifest::Manifest;
 
 fn main() -> Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
     let client = xla::PjRtClient::cpu()?;
     println!("platform={}", client.platform_name());
 
-    // manifest says tiny_b8: blob_size, batch=8, T=24, G=16
-    let manifest = std::fs::read_to_string(format!("{dir}/manifest.json"))?;
-    let grab = |key: &str| -> i64 {
-        let i = manifest.find(key).unwrap();
-        let rest = &manifest[i + key.len()..];
-        let rest = rest.trim_start_matches([':', ' ', '"']);
-        rest.chars().take_while(|c| c.is_ascii_digit()).collect::<String>().parse().unwrap()
-    };
-    let blob_size = grab("\"blob_size\"") as usize;
-    println!("blob_size={blob_size}");
+    // The typed manifest parser replaces the old substring scrape, which
+    // silently misread any key that was a substring of another (e.g.
+    // "batch" matching inside "rollout_batch").
+    let manifest = Manifest::load(&dir)?;
+    let bundle = manifest.bundle("tiny_b8")?;
+    let blob_size = bundle.blob_size;
+    let (b, t, g) = (bundle.batch, manifest.total_len, manifest.gen_len());
+    println!("blob_size={blob_size} batch={b} total_len={t} gen_len={g}");
 
     let proto = xla::HloModuleProto::from_text_file(&format!("{dir}/tiny_b8/score.hlo.txt"))?;
     let comp = xla::XlaComputation::from_proto(&proto);
@@ -27,12 +26,11 @@ fn main() -> Result<()> {
 
     // init blob from npy
     use xla::FromRawBytes;
-    let lit = xla::Literal::read_npy(format!("{dir}/tiny_b8/init.npy"), &())?;
+    let lit = xla::Literal::read_npy(format!("{dir}/{}", bundle.init_blob), &())?;
     println!("init blob elems={}", lit.element_count());
     let blob_host = lit.to_vec::<f32>()?;
     let blob = client.buffer_from_host_buffer(&blob_host, &[blob_size], None)?;
 
-    let (b, t, g) = (8usize, 24usize, 16usize);
     let tokens: Vec<i32> = (0..b * t).map(|i| 3 + (i as i32 % 40)).collect();
     let valid: Vec<f32> = vec![1.0; b * t];
     let temp: Vec<f32> = vec![1.0];
@@ -51,7 +49,7 @@ fn main() -> Result<()> {
     let out_lit = out.to_literal_sync()?;
     println!("to_literal: {:?}", t15.elapsed());
     let all = out_lit.to_vec::<f32>()?;
-    println!("logp[0..4]={:?} ent[0..4]={:?}", &all[..4], &all[b*g..b*g+4]);
+    println!("logp[0..4]={:?} ent[0..4]={:?}", &all[..4], &all[b * g..b * g + 4]);
     // steady-state timing
     for i in 0..3 {
         let t2 = std::time::Instant::now();

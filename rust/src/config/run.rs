@@ -76,6 +76,13 @@ pub struct RunConfig {
     /// default off): halve a row's draft cap when its acceptance
     /// collapses, double it back on high-acceptance steps (§14).
     pub draft_len_adapt: bool,
+    /// Trie-aware sibling-spine fallback drafts (`spec.sibling_drafts`,
+    /// default on): a row whose own cached leaf was evicted (or whose
+    /// prompt is fresh this epoch) is offered the longest surviving
+    /// sibling leaf under the same prompt root, clamped by the group's
+    /// branch-point depth (`ARCHITECTURE.md` §8). Off = bit-exact
+    /// own-leaf-only draft selection.
+    pub sibling_drafts: bool,
 
     // -- evaluation ---------------------------------------------------------------
     pub eval_every: usize,
@@ -118,6 +125,7 @@ impl Default for RunConfig {
             draft_len_min: 1,
             draft_len_max: 0,
             draft_len_adapt: false,
+            sibling_drafts: true,
             eval_every: 5,
             eval_n: 32,
             eval_samples_hard: 4,
@@ -178,6 +186,7 @@ impl RunConfig {
         c.draft_len_min = doc.usize_or("spec.draft_len_min", c.draft_len_min);
         c.draft_len_max = doc.usize_or("spec.draft_len_max", c.draft_len_max);
         c.draft_len_adapt = doc.bool_or("spec.draft_len_adapt", c.draft_len_adapt);
+        c.sibling_drafts = doc.bool_or("spec.sibling_drafts", c.sibling_drafts);
         c.params.lr = doc.f64_or("train.lr", c.params.lr as f64) as f32;
         c.params.critic_lr = doc.f64_or("train.critic_lr", c.params.critic_lr as f64) as f32;
         c.params.kl_coef = doc.f64_or("train.kl_coef", c.params.kl_coef as f64) as f32;
@@ -322,6 +331,15 @@ mod tests {
         // 0 ceiling always means uncapped, whatever the floor
         let doc = ConfigDoc::parse("[spec]\ndraft_len_min = 8\ndraft_len_max = 0").unwrap();
         assert!(RunConfig::from_doc(&doc).is_ok());
+    }
+
+    #[test]
+    fn sibling_drafts_parses_and_defaults_on() {
+        assert!(RunConfig::default().sibling_drafts, "fallback drafts on by default");
+        let doc = ConfigDoc::parse("[spec]\nsibling_drafts = false").unwrap();
+        assert!(!RunConfig::from_doc(&doc).unwrap().sibling_drafts);
+        let doc = ConfigDoc::parse("[spec]\nsibling_drafts = true").unwrap();
+        assert!(RunConfig::from_doc(&doc).unwrap().sibling_drafts);
     }
 
     #[test]

@@ -178,9 +178,28 @@ pub struct PipelineStats {
     /// Drafts the adaptive controller truncated below their cached length
     /// this step (`spec.draft_len_{min,max,adapt}`).
     pub draft_trunc: usize,
+    /// Rows whose draft this step was a sibling-spine fallback — the
+    /// slot's own leaf was gone, so the longest surviving leaf under the
+    /// same prompt root was offered instead (`spec.sibling_drafts`,
+    /// `ARCHITECTURE.md` §8). A prepare-side counter like the
+    /// `draft_len_*` family, merged by `absorb_draft_lens`.
+    pub sibling_draft_hits: usize,
+    /// Post-clip tokens offered by those sibling fallbacks — the reuse
+    /// that was previously left on the table entirely.
+    pub sibling_draft_tokens: usize,
+    /// Sum of branch-point depths over the prompt groups drafted this
+    /// step (one observation per unique prompt root). Raw accumulator;
+    /// the gauge is [`PipelineStats::branch_depth_mean`].
+    pub branch_depth_sum: usize,
+    /// Prompt groups contributing to [`PipelineStats::branch_depth_sum`].
+    pub branch_depth_rows: usize,
     /// Mean materialized draft length (derived; see
     /// `finalize_draft_means`).
     pub mean_draft_len: f64,
+    /// Mean branch-point depth across drafted prompt groups — how far the
+    /// group's cached rollouts agree before diverging (derived; see
+    /// `finalize_draft_means`).
+    pub branch_depth_mean: f64,
 }
 
 impl PipelineStats {
@@ -201,6 +220,8 @@ impl PipelineStats {
         self.full_reuse_ratio = self.full_reuses as f64 / d;
         self.mean_predict_err = self.predict_err_sum / self.predict_rows.max(1) as f64;
         self.mean_draft_len = self.draft_len_sum as f64 / self.draft_len_rows.max(1) as f64;
+        self.branch_depth_mean =
+            self.branch_depth_sum as f64 / self.branch_depth_rows.max(1) as f64;
     }
 
     /// Total verify + decode + refill executable invocations — the
@@ -267,6 +288,10 @@ impl PipelineStats {
         self.draft_len_sum += o.draft_len_sum;
         self.draft_len_rows += o.draft_len_rows;
         self.draft_trunc += o.draft_trunc;
+        self.sibling_draft_hits += o.sibling_draft_hits;
+        self.sibling_draft_tokens += o.sibling_draft_tokens;
+        self.branch_depth_sum += o.branch_depth_sum;
+        self.branch_depth_rows += o.branch_depth_rows;
     }
 }
 

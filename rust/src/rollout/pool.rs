@@ -82,7 +82,13 @@
 //! verification uses per-task uniform streams (`verify_rng(vnonce, id)`),
 //! so a task's tokens depend only on the step nonces and its id — never on
 //! which shard, slot, or verify sub-batch it lands in, and never on *when*
-//! a shard stole it. Results are byte-identical for any shard count and
+//! a shard stole it. Draft *selection* is equally shard-blind: the
+//! coordinator's prepare pass — including the sibling-spine fallback of
+//! `spec.sibling_drafts` (`ARCHITECTURE.md` §8) — resolves every row's
+//! draft against the shared cache before any work enters the queue, so a
+//! fallback draft's content is fixed before placement and its tokens are
+//! verified under the *requesting* id's streams wherever it seats.
+//! Results are byte-identical for any shard count and
 //! either placement, pinned by `rust/tests/sched_continuous.rs`
 //! (`shards ∈ {1, 2, 4}` vs the `run_two_phase` oracle across all
 //! `ReuseVariant`s, plus the steal-vs-static and `verify_seat_min` sweeps)

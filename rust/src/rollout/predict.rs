@@ -152,6 +152,20 @@ impl LenPredictor {
         }
     }
 
+    /// Seed a zero-history id's acceptance EWMA from the trie's divergence
+    /// signal: a sibling-spine fallback draft is expected to settle about
+    /// `branch_depth / offered` of its tokens (the provably-shared prefix),
+    /// a far better opening guess than the optimistic 1.0 for a draft that
+    /// is, by construction, someone else's continuation. A no-op once the
+    /// id has observed acceptance history, and when disabled — seeding
+    /// never touches RNG, so outputs stay invariant (`ARCHITECTURE.md` §6).
+    pub fn seed_acceptance(&mut self, id: usize, frac: f64) {
+        if !self.enabled || self.acc.contains_key(&id) {
+            return;
+        }
+        self.acc.insert(id, frac.clamp(0.0, 1.0));
+    }
+
     /// Snapshot this step's estimates for the given work: predicted
     /// totals for every item, plus expected-settled lengths for drafts
     /// (`acceptance * offered`, rounded). Empty when disabled.
@@ -358,6 +372,22 @@ mod tests {
         let est = p.estimates(&[], &[draft(7, 40)]);
         assert_eq!(est.settled_of(7), Some(20), "0.5 * 40 offered");
         assert_eq!(est.total(7), Some(48));
+    }
+
+    #[test]
+    fn acceptance_seed_fills_only_zero_history_ids() {
+        let mut p = LenPredictor::new(true);
+        p.seed_acceptance(3, 0.25);
+        assert_eq!(p.acceptance(3), 0.25, "divergence seed answers first");
+        p.seed_acceptance(3, 0.9);
+        assert_eq!(p.acceptance(3), 0.25, "seed never overwrites a seed");
+        p.observe_acceptance(3, 3, 4);
+        assert_eq!(p.acceptance(3), 0.5, "EWMA blends seed with observation");
+        p.seed_acceptance(4, 7.0);
+        assert_eq!(p.acceptance(4), 1.0, "seed fraction is clamped to [0, 1]");
+        let mut off = LenPredictor::new(false);
+        off.seed_acceptance(5, 0.2);
+        assert_eq!(off.acceptance(5), 1.0, "disabled predictor stays untouched");
     }
 
     #[test]

@@ -226,6 +226,76 @@ impl RolloutCache {
         })
     }
 
+    /// The longest surviving leaf under `id`'s prompt root, materialized —
+    /// the **sibling-spine fallback draft** (`ARCHITECTURE.md` §8). When
+    /// `id`'s own leaf was evicted (or the prompt is fresh this epoch),
+    /// any leaf of the same prompt key is still a usable draft: its
+    /// cached log-probs are the verifier's `p_prev`, and the §6 uniform
+    /// stream that scores it is keyed by the *requesting* id, so the
+    /// donor's identity never leaks into verification randomness.
+    ///
+    /// Selection is deterministic and shard-count-invariant: candidates
+    /// are scanned in ascending id order over `[key*group, (key+1)*group)`
+    /// (latest tier before previous per id — never HashMap order), and
+    /// the winner maximizes `(len, version, tier)` with strict inequality
+    /// so the first-seen candidate wins ties. Empty-response leaves never
+    /// win. O(group) leaf-length reads plus one materialization.
+    pub fn sibling_spine(&self, id: usize) -> Option<CacheEntry> {
+        let key = id / self.group;
+        let lo = key * self.group;
+        // (len, version, tier): longest first, then freshest, then the
+        // latest tier over the previous tier. tier 1 = latest, 0 = prev.
+        let mut best: Option<(usize, u64, u8, Leaf)> = None;
+        for sid in lo..lo + self.group {
+            let Some((latest, prev)) = self.slots.get(&sid) else { continue };
+            for (tier, leaf) in [(1u8, Some(latest)), (0u8, prev.as_ref())] {
+                let Some(leaf) = leaf else { continue };
+                if leaf.len == 0 {
+                    continue;
+                }
+                let better = match &best {
+                    None => true,
+                    Some((l, v, t, _)) => (leaf.len, leaf.version, tier) > (*l, *v, *t),
+                };
+                if better {
+                    best = Some((leaf.len, leaf.version, tier, *leaf));
+                }
+            }
+        }
+        best.map(|(_, _, _, leaf)| self.materialize(&leaf))
+    }
+
+    /// Depth (in tokens) of the shared spine under `id`'s prompt root:
+    /// the run lengths accumulated from the root down the single-child
+    /// chain, stopping at (and including) the first node with zero or
+    /// several children. A forest root (group samples diverging from the
+    /// first token) reports 0; a prompt with nothing cached reports
+    /// `None`. This is the free per-prompt divergence signal
+    /// [`super::draft::DraftControl::sibling_cap`] turns into a draft
+    /// length before any acceptance feedback exists (`ARCHITECTURE.md`
+    /// §8): deep shared spines earn long offers, early divergence clamps
+    /// toward the floor. O(spine nodes), no materialization.
+    pub fn branch_depth(&self, id: usize) -> Option<usize> {
+        let key = id / self.group;
+        let list = self.roots.get(&key)?;
+        if list.len() != 1 {
+            return Some(0);
+        }
+        let mut depth = 0usize;
+        let mut cur = list[0];
+        loop {
+            let n = self.node(cur);
+            depth += n.tokens.len();
+            // A node with one child but terminating leaves still extends
+            // the spine: every surviving path through it shares the run.
+            if n.children.len() == 1 {
+                cur = n.children[0];
+            } else {
+                return Some(depth);
+            }
+        }
+    }
+
     /// Insert a fresh rollout, demoting the current latest to `previous`,
     /// then enforce the budget.
     pub fn insert(&mut self, id: usize, entry: CacheEntry) {
@@ -1275,6 +1345,102 @@ mod tests {
             assert_eq!(trie.flat_tokens(), flat.total_tokens(), "step {step}");
             assert!(trie.total_tokens() < flat.total_tokens(), "sharing must engage");
         }
+    }
+
+    // ---- sibling spines and branch depths --------------------------------
+
+    #[test]
+    fn sibling_spine_returns_longest_surviving_group_leaf() {
+        let mut c = RolloutCache::new().with_group(4);
+        c.insert(0, entry(&[5, 6, 7, 8, 1], 0));
+        c.insert(1, entry(&[5, 6, 9], 0));
+        // id 2 never rolled out: the fallback is id 0's longer leaf, and
+        // the materialization is byte-identical to the donor's own draft.
+        let sib = c.sibling_spine(2).expect("group has survivors");
+        let donor = c.latest(0).unwrap();
+        assert_eq!(sib.response, donor.response);
+        assert_eq!(sib.logps, donor.logps);
+        assert_eq!((sib.version, sib.finished), (donor.version, donor.finished));
+        // a prompt key with nothing cached has no fallback
+        assert!(c.sibling_spine(4).is_none());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sibling_spine_breaks_ties_by_version_then_tier_then_id() {
+        let mut c = RolloutCache::new().with_group(4);
+        // equal lengths: the fresher version wins
+        c.insert(0, entry(&[1, 2, 3], 0));
+        c.insert(1, entry(&[4, 5, 6], 1));
+        assert_eq!(c.sibling_spine(3).unwrap().response, vec![4, 5, 6]);
+        // equal length and version across tiers: latest beats previous
+        let mut c = RolloutCache::new().with_group(4);
+        c.insert(1, entry(&[9, 9, 9], 5)); // becomes id 1's previous
+        c.insert(1, entry(&[9], 6));
+        c.insert(0, entry(&[1, 2, 3], 5)); // id 0's latest, same (len, version)
+        assert_eq!(c.sibling_spine(2).unwrap().response, vec![1, 2, 3]);
+        // full tie (len, version, tier): the lowest id wins — scan order
+        // is ascending ids, never HashMap order
+        let mut c = RolloutCache::new().with_group(4);
+        c.insert(2, entry(&[7, 7], 3));
+        c.insert(1, entry(&[8, 8], 3));
+        assert_eq!(c.sibling_spine(0).unwrap().response, vec![8, 8]);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sibling_spine_never_resurrects_evicted_leaves() {
+        let mut c = RolloutCache::new().with_group(4);
+        c.insert(0, entry(&[5, 6, 10, 11, 12], 0));
+        c.insert(1, entry(&[5, 6, 20, 21], 1));
+        // budget evicts the oldest leaf (id 0): the longest candidate is
+        // gone and the fallback must come from what actually survived
+        c.set_token_budget(Some(6));
+        assert!(c.latest(0).is_none(), "id 0 evicted");
+        let sib = c.sibling_spine(0).expect("id 1 survives");
+        assert_eq!(sib.response, vec![5, 6, 20, 21]);
+        assert_eq!(sib.response, c.latest(1).unwrap().response);
+        // evicting the whole group leaves nothing to fall back on
+        c.set_token_budget(Some(0));
+        assert!(c.sibling_spine(0).is_none());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sibling_spine_skips_empty_leaves() {
+        let mut c = RolloutCache::new().with_group(2);
+        c.insert(0, entry(&[], 0));
+        assert!(c.sibling_spine(1).is_none(), "empty leaves are not drafts");
+        c.insert(1, entry(&[3, 4], 0));
+        assert_eq!(c.sibling_spine(0).unwrap().response, vec![3, 4]);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn branch_depth_tracks_shared_spine() {
+        let mut c = RolloutCache::new().with_group(4);
+        assert!(c.branch_depth(0).is_none(), "nothing cached");
+        // one trajectory: the whole path is spine
+        c.insert(0, entry(&[5, 6, 7, 8], 0));
+        assert_eq!(c.branch_depth(1), Some(4));
+        // divergence at offset 2 splits the root: spine shrinks to 2
+        c.insert(1, entry(&[5, 6, 9, 9], 0));
+        assert_eq!(c.branch_depth(0), Some(2));
+        // a first-token divergence makes the root a forest: depth 0
+        c.insert(2, entry(&[3, 3], 0));
+        assert_eq!(c.branch_depth(0), Some(0));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn branch_depth_spans_interior_terminals() {
+        // cross-epoch extension: the previous generation terminates
+        // mid-chain, but the single-child chain is still one shared spine
+        let mut c = RolloutCache::new();
+        c.insert(0, entry(&[1, 2, 3], 0));
+        c.insert(0, entry(&[1, 2, 3, 4, 5], 1));
+        assert_eq!(c.branch_depth(0), Some(5));
+        c.check_invariants().unwrap();
     }
 
     // ---- flat baseline ---------------------------------------------------

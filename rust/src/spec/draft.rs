@@ -34,6 +34,14 @@ pub const SHRINK_BELOW: f64 = 0.5;
 /// Acceptance ratio at or above which a capped row's cap doubles back.
 pub const GROW_ABOVE: f64 = 0.9;
 
+/// Tokens of sibling draft offered per token of shared spine depth
+/// (`ARCHITECTURE.md` §8). A deep branch point means the group's samples
+/// agreed that far, so a sibling's continuation is likely to survive
+/// verification well past the spine; factor 2 keeps some speculative
+/// reach beyond the provably-shared prefix without offering a stale
+/// sibling's whole tail.
+pub const DIVERGENCE_CAP_FACTOR: usize = 2;
+
 /// Per-row draft-length clamp: a static `max` ceiling plus, with `adapt`
 /// on, multiplicative-decrease / multiplicative-increase per-id caps
 /// driven by realized acceptance.
@@ -103,6 +111,19 @@ impl DraftControl {
         let truncated = clip_entry(entry, self.cap(id));
         self.offered.insert(id, entry.response.len());
         truncated
+    }
+
+    /// Divergence-guided cap for a sibling-spine fallback draft, from the
+    /// prompt's branch-point `depth` (`RolloutCache::branch_depth`): a
+    /// row with no acceptance history of its own borrows the group's
+    /// divergence signal instead. Deep shared spines earn
+    /// [`DIVERGENCE_CAP_FACTOR`] tokens of offer per spine token; early
+    /// divergence (depth 0) clamps to the `spec.draft_len_min` floor.
+    /// Never exceeds the static ceiling. A pure function of the cache
+    /// shape — no RNG, no per-row state — so it is identical on both
+    /// drive paths and across shard counts.
+    pub fn sibling_cap(&self, depth: usize) -> usize {
+        depth.saturating_mul(DIVERGENCE_CAP_FACTOR).max(self.min).min(self.ceiling())
     }
 
     /// Fold one row's realized acceptance (`accepted` of the `offered`
@@ -215,6 +236,23 @@ mod tests {
         assert_eq!(c.cap(0), 5);
         c.observe(0, 0, 0); // zero offer never divides by zero
         assert_eq!(c.cap(0), 5);
+    }
+
+    #[test]
+    fn sibling_cap_scales_with_branch_depth() {
+        let c = DraftControl::new(2, 0, false);
+        assert_eq!(c.sibling_cap(0), 2, "early divergence clamps to the floor");
+        assert_eq!(c.sibling_cap(1), 2);
+        assert_eq!(c.sibling_cap(5), 10, "deep spines earn FACTOR tokens per spine token");
+        assert_eq!(c.sibling_cap(usize::MAX), usize::MAX, "saturates, never wraps");
+    }
+
+    #[test]
+    fn sibling_cap_respects_the_static_ceiling() {
+        let c = DraftControl::new(1, 6, false);
+        assert_eq!(c.sibling_cap(0), 1);
+        assert_eq!(c.sibling_cap(2), 4);
+        assert_eq!(c.sibling_cap(50), 6, "ceiling binds before the divergence signal");
     }
 
     #[test]

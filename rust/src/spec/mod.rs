@@ -97,6 +97,16 @@ pub struct SpecRollout {
     /// Per-row adaptive draft-length clamp
     /// (`spec.draft_len_{min,max,adapt}`, §14). A no-op by default.
     pub draft_ctl: DraftControl,
+    /// Trie-aware fallback drafts (`spec.sibling_drafts`, on by default):
+    /// when a slot's own leaf was evicted or the prompt is fresh this
+    /// epoch, offer the longest surviving sibling spine under the same
+    /// prompt root instead of decoding from scratch, clamped by the
+    /// group's branch-point depth (`ARCHITECTURE.md` §8). Only variants
+    /// whose drafts pass through the verifier take the fallback
+    /// ([`ReuseVariant::verification_gated`]); with the knob off — and on
+    /// every own-leaf path regardless — behavior is bit-exact to the
+    /// pre-sibling coordinator.
+    pub sibling_drafts: bool,
     /// Current step counter (cache versioning).
     pub step: u64,
 }
@@ -110,8 +120,19 @@ impl SpecRollout {
             placement: Placement::Steal,
             predictor: LenPredictor::default(),
             draft_ctl: DraftControl::default(),
+            sibling_drafts: true,
             step: 0,
         }
+    }
+
+    /// Enable/disable sibling-spine fallback drafts
+    /// (`spec.sibling_drafts`). Off restores the own-leaf-only draft
+    /// selection bit-exactly; on only changes rows that today would start
+    /// fresh, and every offered fallback token is still verified under
+    /// the requesting id's own §6 stream.
+    pub fn with_sibling_drafts(mut self, enabled: bool) -> Self {
+        self.sibling_drafts = enabled;
+        self
     }
 
     /// Select the pool placement discipline (`bench_steal` uses this to
@@ -185,11 +206,45 @@ impl SpecRollout {
         let mut pre = PipelineStats::default();
         let mut tasks: Vec<SeqTask> = Vec::with_capacity(requests.len());
         let mut drafts: Vec<VerifyTask> = Vec::new();
+        // Branch-point depths observed once per prompt root this step
+        // (the gauge behind `branch_depth_mean`; sibling path only).
+        let mut depth_seen: std::collections::HashSet<usize> = std::collections::HashSet::new();
         self.draft_ctl.begin_step();
         for req in requests {
             self.predictor.seed_from_cache(&self.cache, req.id);
-            let Some(mut entry) = self.variant.draft_for(&self.cache, req.id, self.step)
-            else {
+            let mut own = self.variant.draft_for(&self.cache, req.id, self.step);
+            // Trie-aware fallback (§8): the slot's own leaf is gone but a
+            // sibling under the same prompt root survived. Sound only for
+            // verified variants — the fallback's every token is re-scored
+            // under the *requesting* id's verification stream (§6), so no
+            // foreign content enters unverified. Deterministic and
+            // shard-count-invariant: the selection reads only the shared
+            // cache, before any work is placed, and consumes no RNG.
+            let mut sib_depth: Option<usize> = None;
+            if own.is_none() && self.sibling_drafts && self.variant.verification_gated() {
+                if let Some(mut sib) = self.cache.sibling_spine(req.id) {
+                    let depth = self.cache.branch_depth(req.id).unwrap_or(0);
+                    // Divergence-guided cap, before any acceptance
+                    // feedback exists for this row: deep shared spines
+                    // earn longer offers, early divergence clamps toward
+                    // `draft_len_min`.
+                    variants::clip_entry(&mut sib, self.draft_ctl.sibling_cap(depth));
+                    if !sib.response.is_empty() {
+                        sib_depth = Some(depth);
+                        own = Some(sib);
+                    }
+                }
+            }
+            if self.sibling_drafts
+                && self.variant.verification_gated()
+                && depth_seen.insert(req.id / self.cache.group().max(1))
+            {
+                if let Some(d) = self.cache.branch_depth(req.id) {
+                    pre.branch_depth_sum += d;
+                    pre.branch_depth_rows += 1;
+                }
+            }
+            let Some(mut entry) = own else {
                 tasks.push(SeqTask::fresh(req.id, req.prompt.clone()));
                 continue;
             };
@@ -200,6 +255,16 @@ impl SpecRollout {
                 pre.draft_trunc += 1;
             }
             let offered = entry.response.len();
+            if let Some(depth) = sib_depth {
+                pre.sibling_draft_hits += 1;
+                pre.sibling_draft_tokens += offered;
+                // Seed the acceptance EWMA with the divergence signal:
+                // about `depth / offered` of a sibling draft is the
+                // provably-shared prefix. Seeding touches no RNG (§14).
+                if offered > 0 {
+                    self.predictor.seed_acceptance(req.id, depth as f64 / offered as f64);
+                }
+            }
             pre.draft_len_sum += offered;
             pre.draft_len_lo =
                 if pre.draft_len_rows == 0 { offered } else { pre.draft_len_lo.min(offered) };

@@ -53,6 +53,18 @@ impl ReuseVariant {
             ReuseVariant::Delayed => cache.previous(id).filter(|e| !e.response.is_empty()),
         }
     }
+
+    /// Whether this variant's drafts pass through the lenient verifier
+    /// (token-by-token acceptance against `p_prev`). Only these variants
+    /// may take the sibling-spine fallback: a cross-slot draft is sound
+    /// precisely because every offered token is *verified* under the
+    /// requesting id's §6 uniform stream. Random and Full resolve
+    /// acceptance host-side with no scoring at all, so handing them a
+    /// sibling's content would splice unverified foreign tokens into the
+    /// requesting sequence.
+    pub fn verification_gated(&self) -> bool {
+        matches!(self, ReuseVariant::Spec | ReuseVariant::Delayed)
+    }
 }
 
 /// Random-Reuse acceptance: uniform rejection offset per draft
@@ -175,6 +187,15 @@ mod tests {
         assert!(!clip_entry(&mut whole, 3), "cap == len cuts nothing");
         assert_eq!(whole.response, vec![1, 2, 3]);
         assert!(!clip_entry(&mut whole, usize::MAX), "uncapped is a no-op");
+    }
+
+    #[test]
+    fn only_verified_variants_take_sibling_fallbacks() {
+        assert!(ReuseVariant::Spec.verification_gated());
+        assert!(ReuseVariant::Delayed.verification_gated());
+        assert!(!ReuseVariant::Off.verification_gated());
+        assert!(!ReuseVariant::Random.verification_gated(), "host-resolved acceptance");
+        assert!(!ReuseVariant::Full.verification_gated(), "no verifier at all");
     }
 
     #[test]

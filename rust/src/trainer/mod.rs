@@ -60,6 +60,7 @@ pub const STEP_COLUMNS: &[&str] = &[
     "shard_failures", "requeued_tasks",
     "overlap_makespan", "serial_makespan", "readback_bytes", "upload_bytes",
     "predict_err", "draft_len_mean", "draft_len_max", "draft_trunc",
+    "sibling_hits", "sibling_tokens", "branch_depth_mean",
     "cache_tokens", "cache_nodes", "cache_shared_tokens",
     "cache_evictions", "cache_evicted_tokens",
     "rollout_s", "verification_s", "assembly_s", "reward_s", "old_logp_s",
@@ -135,7 +136,8 @@ impl<'e> Trainer<'e> {
             .with_cache_budget(cache_budget)
             .with_group(cfg.group)
             .with_predict(cfg.predict_len)
-            .with_draft_control(cfg.draft_len_min, cfg.draft_len_max, cfg.draft_len_adapt);
+            .with_draft_control(cfg.draft_len_min, cfg.draft_len_max, cfg.draft_len_adapt)
+            .with_sibling_drafts(cfg.sibling_drafts);
         if cfg.predict_len {
             // Zero-history prompts schedule by their family's typical
             // canonical length (ARCHITECTURE.md §14) until the first
@@ -467,6 +469,13 @@ impl<'e> Trainer<'e> {
         rec.insert("draft_len_mean", spec_stats_acc.mean_draft_len);
         rec.insert("draft_len_max", spec_stats_acc.draft_len_hi as f64);
         rec.insert("draft_trunc", spec_stats_acc.draft_trunc as f64);
+        // Trie-aware fallback gauges (ARCHITECTURE.md §8): rows drafted
+        // from a sibling spine, the tokens those fallbacks offered, and
+        // the mean branch-point depth of drafted prompt groups. All 0
+        // with spec.sibling_drafts off.
+        rec.insert("sibling_hits", spec_stats_acc.sibling_draft_hits as f64);
+        rec.insert("sibling_tokens", spec_stats_acc.sibling_draft_tokens as f64);
+        rec.insert("branch_depth_mean", spec_stats_acc.branch_depth_mean);
         rec.insert("cache_tokens", self.spec.cache.total_tokens() as f64);
         // Trie gauges after the step's last refresh: live interned runs
         // and the tokens prefix sharing saves over flat storage.

@@ -66,8 +66,13 @@ impl Json {
         }
     }
 
+    /// Number as a usize — `None` for non-numbers, negatives, and
+    /// non-integral values (they used to truncate silently via `as usize`,
+    /// turning `-3` into 0 and `2.5` into 2).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        self.as_f64()
+            .filter(|x| x.fract() == 0.0 && *x >= 0.0 && *x <= usize::MAX as f64)
+            .map(|x| x as usize)
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -373,6 +378,21 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let j2 = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn as_usize_rejects_negative_and_fractional() {
+        assert_eq!(Json::Num(42.0).as_usize(), Some(42));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(-3.0).as_usize(), None, "negatives used to truncate to 0");
+        assert_eq!(Json::Num(2.5).as_usize(), None, "fractions used to truncate to 2");
+        assert_eq!(Json::Num(-0.5).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Str("7".into()).as_usize(), None, "strings never coerce");
+        // usize_arr drops the rejects rather than mangling them
+        let j = Json::parse("[3, -1, 2.5, 4]").unwrap();
+        assert_eq!(j.usize_arr(), vec![3, 4]);
     }
 
     #[test]

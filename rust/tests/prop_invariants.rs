@@ -621,6 +621,127 @@ fn prop_workqueue_pop_order_is_a_lossless_permutation() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// sibling-spine fallback under eviction pressure (ARCHITECTURE.md §8)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct EvictionCase {
+    group: usize,
+    n_ids: usize,
+    /// One insert batch per epoch (ids randomly dropped — fresh prompts).
+    batches: Vec<Vec<(usize, CacheEntry)>>,
+    /// Budget tightened after each batch (`None` keeps the previous one).
+    budgets: Vec<Option<usize>>,
+}
+
+fn eviction_case(rng: &mut Rng) -> EvictionCase {
+    let group = 2 + rng.below(4); // 2..=5
+    let keys = 2 + rng.below(3); // 2..=4 prompt roots
+    let n_ids = group * keys;
+    // Per-key spine shared by the whole group. Log-probs derive from the
+    // token so equal tokens always carry bitwise-equal log-probs — the
+    // trie's sharing precondition.
+    let spines: Vec<Vec<i32>> = (0..keys)
+        .map(|k| (0..1 + rng.below(6)).map(|j| (3 + (k * 7 + j) % 40) as i32).collect())
+        .collect();
+    let logp = |t: i32| -0.01 * t as f32;
+    let mut batches = Vec::new();
+    let mut budgets = Vec::new();
+    for e in 0..1 + rng.below(3) as u64 {
+        let mut batch = Vec::new();
+        for id in 0..n_ids {
+            if rng.f32() < 0.8 {
+                let mut response = spines[id / group].clone();
+                response.extend(
+                    (0..rng.below(5)).map(|j| (10 + (id * 3 + j + e as usize) % 30) as i32),
+                );
+                batch.push((
+                    id,
+                    CacheEntry {
+                        logps: response.iter().map(|&t| logp(t)).collect(),
+                        response,
+                        version: e,
+                        finished: rng.f32() < 0.5,
+                    },
+                ));
+            }
+        }
+        batches.push(batch);
+        // 0..=59 spans everything from evict-all to no pressure at all
+        budgets.push((rng.f32() < 0.7).then(|| rng.below(60)));
+    }
+    EvictionCase { group, n_ids, batches, budgets }
+}
+
+/// §8 fallback soundness under random churn: after any mix of partial
+/// refreshes and budget tightenings, a sibling-spine fallback is always
+/// byte-identical to a *surviving* leaf of the requesting id's own prompt
+/// root (so it can never resurrect an evicted run or borrow across
+/// prompts), exists whenever any group leaf survives, reports a branch
+/// depth consistent with the survivors, and the trie invariants hold
+/// throughout.
+#[test]
+fn prop_sibling_fallback_survives_eviction_pressure() {
+    forall_ok(116, 150, eviction_case, |c| {
+        let mut cache = RolloutCache::new().with_group(c.group);
+        for (batch, budget) in c.batches.iter().zip(&c.budgets) {
+            cache.insert_batch(batch.clone());
+            if let Some(b) = budget {
+                cache.set_token_budget(Some(*b));
+            }
+            cache.check_invariants().map_err(|e| format!("invariants: {e}"))?;
+            for id in 0..c.n_ids {
+                let key = id / c.group;
+                let survivors: Vec<CacheEntry> = (key * c.group..(key + 1) * c.group)
+                    .flat_map(|sid| [cache.latest(sid), cache.previous(sid)])
+                    .flatten()
+                    .filter(|e| !e.response.is_empty())
+                    .collect();
+                match cache.sibling_spine(id) {
+                    Some(s) => {
+                        let alive = survivors.iter().any(|e| {
+                            e.response == s.response
+                                && e.logps == s.logps
+                                && e.version == s.version
+                                && e.finished == s.finished
+                        });
+                        if !alive {
+                            return Err(format!(
+                                "id {id}: fallback is not a surviving leaf of its root"
+                            ));
+                        }
+                    }
+                    None => {
+                        if !survivors.is_empty() {
+                            return Err(format!(
+                                "id {id}: no fallback despite {} surviving siblings",
+                                survivors.len()
+                            ));
+                        }
+                    }
+                }
+                let depth = cache.branch_depth(id);
+                if depth.is_some() != !survivors.is_empty() {
+                    return Err(format!(
+                        "id {id}: branch depth {depth:?} vs {} survivors",
+                        survivors.len()
+                    ));
+                }
+                if let Some(d) = depth {
+                    let longest = survivors.iter().map(|e| e.response.len()).max().unwrap();
+                    if d > longest {
+                        return Err(format!(
+                            "id {id}: branch depth {d} exceeds longest survivor {longest}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Terminal prefixes (EOS-ended or full-length) never enter decoding.
 #[test]
 fn prop_terminal_prefix_detection() {

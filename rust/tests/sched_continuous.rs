@@ -785,6 +785,119 @@ fn grouped_trie_budget_is_global_and_shard_count_invariant() {
 }
 
 // ---------------------------------------------------------------------------
+// sibling-spine fallback drafts (ARCHITECTURE.md §8, `spec.sibling_drafts`)
+// ---------------------------------------------------------------------------
+
+/// Pressure geometry scaled to this file's envelope (gen_len = 8): the
+/// crafted 7-token spines fit inside the generation region and the
+/// `pressure_budget` accounting lands exactly (warm epoch, partial
+/// refresh, tighten — one stranded id per group, siblings intact).
+fn sibling_cfg() -> grouped::GroupedCfg {
+    grouped::GroupedCfg {
+        prompts: 3,
+        group: 4,
+        divergence_depth: 4,
+        epoch_overlap: 6,
+        tail: 3,
+        vocab: V,
+    }
+}
+
+/// Drive `epochs` live grouped steps from a pre-stranded trie: every
+/// group starts one leaf short under a binding budget, so the sibling
+/// fallback (when enabled) has real work from the first step on.
+/// `shards == 0` selects the two-phase oracle.
+fn drive_sibling(
+    sibling: bool,
+    shards: usize,
+    epochs: usize,
+) -> (Vec<Vec<SeqResult>>, Vec<PipelineStats>) {
+    let cfg = sibling_cfg();
+    let mocks = MockEngine::replicas(shards.max(1), 4, P, T, V);
+    let blobs: Vec<_> = mocks.iter().map(|m| m.blob()).collect();
+    let blob_refs: Vec<_> = blobs.iter().collect();
+    let mut pool = (shards > 0).then(|| EnginePool::new(mocks.iter(), "mock").unwrap());
+    let mut eng = (shards == 0).then(|| RolloutEngine::new(&mocks[0], "mock").unwrap());
+    let mut spec = SpecRollout::new(ReuseVariant::Spec, Lenience::Fixed(-0.4))
+        .with_group(cfg.group)
+        .with_sibling_drafts(sibling);
+    spec.cache.insert_batch(grouped::pressure_entries(&cfg, 0));
+    spec.cache.insert_batch(grouped::pressure_refresh(&cfg, 1));
+    spec.cache.set_token_budget(Some(grouped::pressure_budget(&cfg)));
+    spec.step = 2;
+    let reqs = grouped::requests(&cfg);
+    let mut rng = Rng::new(29);
+    let mut timer = StageTimer::new();
+    let mut results = Vec::new();
+    let mut stats = Vec::new();
+    for epoch in 0..epochs {
+        let (r, s) = if let Some(eng) = eng.as_mut() {
+            spec.run_two_phase(eng, &blobs[0], &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        } else {
+            let pool = pool.as_mut().unwrap();
+            spec.collect(pool, &blob_refs, &reqs, SampleCfg::default(), &mut rng, &mut timer)
+        }
+        .unwrap();
+        spec.cache
+            .check_invariants()
+            .unwrap_or_else(|e| panic!("sibling={sibling} shards {shards} epoch {epoch}: {e}"));
+        results.push(r);
+        stats.push(s);
+    }
+    (results, stats)
+}
+
+#[test]
+fn sibling_fallback_sweep_is_deterministic_and_pinned_to_the_oracle() {
+    // The §6 contract survives cross-slot drafts: sibling selection reads
+    // only the shared trie before placement and the borrowed tokens are
+    // verified under the *requesting* id's streams, so for either knob
+    // setting the pipeline stays byte-identical to the two-phase oracle
+    // at every shard count, and the fallback hit counts are
+    // shard-count-invariant. Knob off takes zero fallbacks (own-leaf
+    // behavior is exactly today's); knob on must actually exercise the
+    // fallback from the stranded start.
+    for sibling in [false, true] {
+        let (oracle, ostats) = drive_sibling(sibling, 0, 3);
+        let hits: usize = ostats.iter().map(|s| s.sibling_draft_hits).sum();
+        if sibling {
+            assert!(hits > 0, "stranded ids must ride sibling spines");
+            assert!(
+                ostats[0].branch_depth_rows > 0,
+                "divergence gauge must see the stranded groups"
+            );
+        } else {
+            assert_eq!(hits, 0, "knob off must never take a fallback");
+            assert_eq!(ostats[0].branch_depth_rows, 0, "gauge is knob-gated");
+        }
+        for shards in [1usize, 2, 4] {
+            let (pipe, pstats) = drive_sibling(sibling, shards, 3);
+            assert_eq!(pipe.len(), oracle.len());
+            for (epoch, (ra, rb)) in pipe.iter().zip(&oracle).enumerate() {
+                let tag = format!("sibling={sibling} shards {shards} epoch {epoch}");
+                assert_eq!(ra.len(), rb.len(), "{tag}");
+                for (x, y) in ra.iter().zip(rb) {
+                    assert_eq!(x.id, y.id, "{tag}");
+                    assert_eq!(x.response, y.response, "{tag} id {}", x.id);
+                    assert_eq!(x.logps, y.logps, "{tag} id {}", x.id);
+                    assert_eq!(
+                        (x.reused, x.new_tokens, x.finished),
+                        (y.reused, y.new_tokens, y.finished),
+                        "{tag} id {}",
+                        x.id
+                    );
+                }
+            }
+            let phits: usize = pstats.iter().map(|s| s.sibling_draft_hits).sum();
+            assert_eq!(
+                phits, hits,
+                "sibling={sibling} shards {shards}: fallback count must be shard-invariant"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // mid-step work stealing + adaptive verify seating (PR 4)
 // ---------------------------------------------------------------------------
 
